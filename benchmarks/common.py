@@ -1,0 +1,63 @@
+"""Shared helpers for the benchmark harness (one module per paper exp)."""
+
+from __future__ import annotations
+
+import random
+
+from repro.core.pool import PoolLayout
+from repro.serving.request import Request
+
+
+def emit(rows: list[tuple]) -> None:
+    """CSV rows: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+def qwen32b_layout(block_tokens: int = 16) -> PoolLayout:
+    from repro.configs.registry import get_config
+
+    return PoolLayout.for_model(get_config("qwen3-32b"), block_tokens)
+
+
+def lveval_requests(
+    n: int,
+    in_len: int = 15000,
+    out_len: int = 64,
+    prefix_frac: float = 0.3,
+    rate: float | None = None,
+    tag: str = "r",
+    arrival0: float = 0.0,
+    seed: int = 1,
+) -> list[Request]:
+    """LV-Eval-like workload: long contexts, ~prefix_frac shared prefix."""
+    base = [random.Random(seed).randrange(1000) for _ in range(in_len)]
+    reqs, t = [], arrival0
+    arr_rng = random.Random(seed + 7)
+    for i in range(n):
+        rng2 = random.Random(1000 + i)
+        tokens = base[: int(in_len * prefix_frac)] + [
+            rng2.randrange(1000) for _ in range(in_len - int(in_len * prefix_frac))
+        ]
+        reqs.append(Request(req_id=f"{tag}{i}", tokens=tokens, n_output=out_len, arrival=t))
+        if rate:
+            t += arr_rng.expovariate(rate)
+    return reqs
+
+
+def run_populate_then_hit(cluster_cfg, layout, n=256, in_len=15000, out_len=64):
+    """Two-phase LV-Eval protocol from Exp #5; returns (populate, hit) stats."""
+    from repro.serving.request import summarize
+    from repro.serving.scheduler import Cluster
+
+    c = Cluster(cluster_cfg, layout)
+    for r in lveval_requests(n, in_len, out_len):
+        c.dispatch(r)
+    s1 = c.run()
+    t0 = max(e.clock for e in c.engines)
+    for r in lveval_requests(n, in_len, out_len, tag="h", arrival0=t0):
+        c.dispatch(r)
+    c.run()
+    hits = [r for r in c.requests if r.req_id.startswith("h")]
+    s2 = summarize(hits, max(x.t_done for x in hits) - t0)
+    return s1, s2, c

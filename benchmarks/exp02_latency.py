@@ -1,0 +1,47 @@
+"""Exp #2 (Fig. 5): latency vs I/O size for every CPU/GPU x pool path.
+
+Checks the paper's two crossovers: CPU load/store beats DSA below ~4 KB
+(O4), and the custom fused kernel beats per-fragment cudaMemcpy for small
+transfers on UC memory (O6, <24 KB pathology).
+"""
+
+from repro.core import fabric
+
+
+SIZES = [256, 1024, 4096, 16384, 65536, 262144, 1048576]
+
+
+def run() -> list[tuple]:
+    rows = []
+    cross_cpu = None
+    for s in SIZES:
+        cpu_direct = fabric.cpu_write_latency(s, "ntstore") * 1e6
+        cpu_dsa = fabric.cpu_write_latency(s, "dsa") * 1e6
+        gpu_fused = fabric.gpu_transfer_latency(s, 1, "fused_kernel") * 1e6
+        gpu_memcpy = fabric.gpu_transfer_latency(s, 1, "cudamemcpy") * 1e6
+        rdma = fabric.rdma_transfer_latency(s, 1) * 1e6
+        dram = fabric.local_dram_latency(s) * 1e6
+        rows.append(
+            (f"exp02.write_{s}B", f"{cpu_direct:.2f}",
+             f"dsa={cpu_dsa:.2f};gpu_fused={gpu_fused:.2f};"
+             f"gpu_memcpy={gpu_memcpy:.2f};rdma={rdma:.2f};dram={dram:.2f}")
+        )
+        if cross_cpu is None and cpu_dsa < cpu_direct:
+            cross_cpu = s
+    rows.append(
+        ("exp02.dsa_crossover_bytes", str(cross_cpu),
+         "paper: DSA wins above ~4-16KB (O4)")
+    )
+    small = fabric.gpu_transfer_latency(16384, 1, "cudamemcpy", "read") * 1e6
+    fused = fabric.gpu_transfer_latency(16384, 1, "fused_kernel", "read") * 1e6
+    rows.append(
+        ("exp02.gpu_16k_uc_memcpy_vs_fused", f"{small:.1f}",
+         f"fused={fused:.1f}us; paper: memcpy ~1230us <24KB on UC (O6)")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

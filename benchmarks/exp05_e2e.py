@@ -1,0 +1,59 @@
+"""Exp #5 (Table 5): end-to-end LV-Eval — vLLM / +MoonCake(RDMA) / +Beluga.
+
+Closed-loop 256 clients, 16 instances, Qwen3-32B layout. Two phases:
+cache-populate (first run) then cache-hit (second run), per the paper.
+"""
+
+from benchmarks.common import qwen32b_layout, run_populate_then_hit
+from repro.serving.scheduler import ClusterConfig
+
+
+PAPER = {  # Table 5 (s / req/s)
+    "vllm": {"pop_ttft": 18.76, "pop_qps": 0.96, "hit_ttft": 18.23, "hit_qps": 0.96},
+    "rdma": {"pop_ttft": 19.66, "pop_qps": 1.02, "hit_ttft": 13.00, "hit_qps": 1.54},
+    "beluga": {"pop_ttft": 17.22, "pop_qps": 1.24, "hit_ttft": 1.36, "hit_qps": 11.32},
+}
+
+
+def run(n: int = 256, in_len: int = 15000) -> list[tuple]:
+    layout = qwen32b_layout()
+    rows = []
+    res = {}
+    for name, mode, sbt in [
+        ("vllm", "none", 0),
+        ("rdma", "rdma", 256),
+        ("beluga", "beluga", 0),
+    ]:
+        cfg = ClusterConfig(
+            n_engines=16, transfer_mode=mode, pool_blocks=262144,
+            super_block_tokens=sbt,
+        )
+        s1, s2, _ = run_populate_then_hit(cfg, layout, n=n, in_len=in_len)
+        res[name] = (s1, s2)
+        p = PAPER[name]
+        rows.append(
+            (f"exp05.{name}.populate", f"{s1['avg_ttft_s']*1e6:.0f}",
+             f"ttft={s1['avg_ttft_s']:.2f}s;p99={s1['p99_ttft_s']:.2f};"
+             f"tpot={s1['avg_tpot_s']:.3f};qps={s1['qps']:.2f};"
+             f"paper_ttft={p['pop_ttft']};paper_qps={p['pop_qps']}")
+        )
+        rows.append(
+            (f"exp05.{name}.cache_hit", f"{s2['avg_ttft_s']*1e6:.0f}",
+             f"ttft={s2['avg_ttft_s']:.2f}s;p99={s2['p99_ttft_s']:.2f};"
+             f"tpot={s2['avg_tpot_s']:.3f};qps={s2['qps']:.2f};"
+             f"paper_ttft={p['hit_ttft']};paper_qps={p['hit_qps']}")
+        )
+    qps_ratio = res["beluga"][1]["qps"] / res["rdma"][1]["qps"]
+    ttft_cut = 1 - res["beluga"][1]["avg_ttft_s"] / res["rdma"][1]["avg_ttft_s"]
+    rows.append(
+        ("exp05.beluga_vs_rdma", f"{qps_ratio:.2f}",
+         f"qps_ratio={qps_ratio:.2f}x(paper 7.35x);"
+         f"ttft_cut={100*ttft_cut:.1f}%(paper 89.6%)")
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

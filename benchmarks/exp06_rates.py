@@ -1,0 +1,43 @@
+"""Exp #6 (Fig. 11): TTFT/TPOT sensitivity to request arrival rates.
+
+Open-loop Poisson arrivals on a pre-populated pool (all requests hit);
+sweeps 0.3..9.0 QPS offered load, Beluga vs MoonCake-RDMA.
+"""
+
+from benchmarks.common import emit, lveval_requests, qwen32b_layout
+from repro.serving.request import summarize
+from repro.serving.scheduler import Cluster, ClusterConfig
+
+
+def run() -> list[tuple]:
+    layout = qwen32b_layout()
+    rows = []
+    for mode, sbt in [("rdma", 256), ("beluga", 0)]:
+        for rate in (0.3, 1.0, 3.0, 6.0, 9.0):
+            cfg = ClusterConfig(
+                n_engines=16, transfer_mode=mode, pool_blocks=262144,
+                super_block_tokens=sbt,
+            )
+            c = Cluster(cfg, layout)
+            # phase 1: populate (warm pool) with the same prompt set
+            for r in lveval_requests(96, 15000, 16):
+                c.dispatch(r)
+            c.run()
+            t0 = max(e.clock for e in c.engines)
+            # phase 2: open-loop arrivals, all cache hits
+            reqs = lveval_requests(96, 15000, 64, rate=rate, tag="h", arrival0=t0)
+            for r in reqs:
+                c.dispatch(r)
+            c.run()
+            hits = [r for r in c.requests if r.req_id.startswith("h")]
+            s = summarize(hits, max(x.t_done for x in hits) - t0)
+            rows.append(
+                (f"exp06.{mode}.rate_{rate}", f"{s['avg_ttft_s']*1e6:.0f}",
+                 f"ttft={s['avg_ttft_s']:.2f}s;tpot={s['avg_tpot_s']:.3f}s;"
+                 f"qps={s['qps']:.2f}")
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

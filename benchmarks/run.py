@@ -1,0 +1,80 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only exp05,exp11] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV per row, then a roofline summary
+derived from the dry-run artifacts (if present in results/dryrun).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+MODULES = [
+    ("exp01", "benchmarks.exp01_coherence"),
+    ("exp02", "benchmarks.exp02_latency"),
+    ("exp03", "benchmarks.exp03_skew"),
+    ("exp04", "benchmarks.exp04_background"),
+    ("exp05", "benchmarks.exp05_e2e"),
+    ("exp06", "benchmarks.exp06_rates"),
+    ("exp07", "benchmarks.exp07_context"),
+    ("exp08", "benchmarks.exp08_software"),
+    ("exp09", "benchmarks.exp09_dense_transfer"),
+    ("exp10", "benchmarks.exp10_sparse"),
+    ("exp11", "benchmarks.exp11_rpc"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated exp ids")
+    ap.add_argument("--fast", action="store_true", help="smaller exp05")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+
+    print("name,us_per_call,derived")
+    failures = []
+    for exp_id, mod_name in MODULES:
+        if only and exp_id not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            if args.fast and exp_id == "exp05":
+                rows = mod.run(n=64, in_len=4096)
+            else:
+                rows = mod.run()
+            for name, us, derived in rows:
+                print(f"{name},{us},{derived}")
+            print(f"# {exp_id} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures.append((exp_id, repr(e)))
+            print(f"{exp_id}.FAILED,0,{e!r}")
+
+    # roofline summary (from dry-run artifacts, if present)
+    try:
+        from repro.launch.roofline import load_records, roofline_terms
+
+        rows = [t for r in load_records("results/dryrun") if (t := roofline_terms(r))]
+        for r in sorted(rows, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+            bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            print(
+                f"roofline.{r['cell']},{bound*1e6:.0f},"
+                f"dominant={r['dominant']};frac={r['roofline_frac']:.3f};"
+                f"useful/HLO={r['model_flops_ratio']:.2f}"
+            )
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline.SKIPPED,0,{e!r}")
+
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Beluga pool walkthrough: allocator, coherence epochs, CXL-RPC, transfers.
+
+    PYTHONPATH=src python examples/pool_demo.py
+"""
+
+import numpy as np
+
+from repro.core.coherence import CoherenceError, CoherentReader, CoherentWriter
+from repro.core.index import GlobalIndex
+from repro.core.pool import BelugaPool, PoolLayout
+from repro.core.rpc import CxlRpcClient, CxlRpcServer, ShmRing
+from repro.core.transfer import TransferEngine
+
+
+def main():
+    layout = PoolLayout(block_tokens=16, n_layers_kv=8, n_kv_heads=4, head_dim=32)
+    pool = BelugaPool(layout, n_blocks=128, n_shards=16, backing="numpy")
+    index = GlobalIndex(pool)
+    xfer = TransferEngine(pool, mode="beluga")
+    print(f"pool: 128 blocks x {layout.block_bytes//1024} KiB over 16 shards "
+          f"({layout.n_fragments} fragments/block)")
+
+    # writer: gather-write two prompt blocks, publish in the index
+    prompt = list(range(32))
+    blocks = pool.allocate(2)
+    kv = np.random.default_rng(0).normal(
+        size=(2, layout.n_fragments, 16, 4, 32)).astype(np.float16)
+    epochs = xfer.gather_write(blocks, kv)
+    for key, b, e in zip(index.keys_for(prompt), blocks, epochs):
+        index.publish(key, b, e, 16)
+    print(f"writer: packed 2 blocks ({2*layout.n_fragments} fragments) in "
+          f"{xfer.stats.requests_issued} fused transfer; published")
+    print(f"shard occupancy (interleaved): {pool.shard_occupancy()}")
+
+    # reader: prefix match + epoch-validated scatter-read
+    hits = index.match_prefix(prompt + [99] * 16)
+    got = xfer.scatter_read([b for _, b, _ in hits], [e for _, _, e in hits])
+    assert np.array_equal(got, kv)
+    print(f"reader: matched {len(hits)} blocks, payload bit-exact")
+
+    # coherence: recycling a block invalidates readers holding its epoch
+    w, r = CoherentWriter(pool), CoherentReader(pool)
+    key, bid, epoch = hits[0]
+    pool.retain([bid])
+    pool.release([bid])
+    pool.release([bid])  # refcount 0: recycled, epoch bumped
+    try:
+        r.read_block(bid, epoch)
+        print("ERROR: stale read went undetected")
+    except CoherenceError as e:
+        print(f"coherence: stale read rejected ({e})")
+
+    # CXL-RPC: the metadata service behind a shared-memory ring
+    ring = ShmRing(n_slots=32, payload_bytes=64)
+
+    def handler(payload: bytes) -> bytes:
+        token_hash = payload.rstrip(b"\0")
+        e = index.lookup(token_hash) if token_hash else None
+        return (str(e.block_id).encode() if e else b"MISS").ljust(64, b"\0")
+
+    server = CxlRpcServer(ring, handler).start()
+    client = CxlRpcClient(ring)
+    resp = client.call(index.keys_for(prompt)[1])
+    server.stop()
+    print(f"CXL-RPC lookup -> block {resp.rstrip(b'\\0').decode()} "
+          f"(modeled RTT {client.modeled_rtt()*1e6:.2f} us vs RDMA-RC 8.39 us)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: build an assigned arch, train a step, prefill+decode.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch olmo-1b]
+"""
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RuntimeConfig
+from repro.configs.registry import reduced_config
+from repro.models import Model
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    args = ap.parse_args()
+
+    # reduced config: same topology as the full arch, CPU-sized
+    cfg = reduced_config(args.arch)
+    model = Model(cfg, RuntimeConfig(remat="none", attn_chunk_q=32, attn_chunk_kv=32,
+                                     decode_kv="replicated"))
+    params = model.init(jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    from repro.configs.registry import get_config
+
+    full = get_config(args.arch)
+    print(f"arch={cfg.name}: {n/1e6:.2f}M params "
+          f"(full config: {full.param_count()/1e9:.1f}B)")
+
+    # --- one training step ---
+    tokens = jax.random.randint(jax.random.key(1), (2, 64), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    opt_cfg = OptimizerConfig(warmup_steps=2, total_steps=100)
+    opt_state = init_opt_state(opt_cfg, params)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    params, opt_state, metrics = step(params, opt_state, batch)
+    print(f"train step: loss={float(metrics['loss']):.3f} "
+          f"grad_norm={float(metrics['grad_norm']):.3f}")
+
+    # --- prefill + decode ---
+    prompt = tokens[:, :48]
+    logits, cache = jax.jit(functools.partial(model.prefill_fn, max_len=96))(
+        params, {"tokens": prompt}
+    )
+    out = [int(jnp.argmax(logits[0]))]
+    pos = prompt.shape[1]
+    dec = jax.jit(model.decode_fn)
+    for _ in range(8):
+        logits, cache = dec(params, cache,
+                            jnp.asarray([out[-1], out[-1]]),
+                            jnp.asarray([pos, pos]))
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    print(f"greedy decode: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Train a reduced model for a few hundred steps with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_tiny.py [--steps 300] [--kill-at 150]
+
+``--kill-at`` simulates a crash mid-run: the script then restarts from the
+latest committed checkpoint and verifies the loss curve continues.
+"""
+
+import argparse
+import os
+import shutil
+
+import jax
+
+from repro.configs.base import RuntimeConfig
+from repro.configs.registry import reduced_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import Model
+from repro.training import optimizer as opt_lib
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import TrainLoopConfig, run_train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--kill-at", type=int, default=0)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_tiny_ckpt")
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+    cfg = reduced_config(args.arch)
+    model = Model(cfg, RuntimeConfig(remat="none", attn_chunk_q=32, attn_chunk_kv=32))
+    opt_cfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    data_cfg = DataConfig(seq_len=64, global_batch=4, vocab_size=cfg.vocab_size)
+
+    def log(step, m):
+        print(f"step {step:4d}  loss {m['loss']:.4f}  lr {m['lr']:.2e}")
+
+    loop = TrainLoopConfig(steps=args.kill_at or args.steps, log_every=25,
+                           checkpoint_every=50, checkpoint_dir=args.ckpt)
+    data = SyntheticLM(data_cfg)
+    params, opt_state, hist = run_train_loop(
+        model, opt_cfg, loop, iter(data), on_metrics=log
+    )
+
+    if args.kill_at:
+        print(f"\n--- simulated crash at step {args.kill_at}; restarting ---")
+        from repro.checkpoint.checkpointer import Checkpointer
+
+        ck = Checkpointer(args.ckpt)
+        step = ck.latest_step()
+        print(f"latest committed checkpoint: step {step}")
+        params0 = model.init(jax.random.key(0))
+        opt0 = opt_lib.init_opt_state(opt_cfg, params0)
+        tree = ck.restore(step, {"params": params0, "opt_state": opt0})
+        data2 = SyntheticLM(data_cfg)
+        data2.load_state_dict(ck.load_extra(step)["data_state"])
+        loop2 = TrainLoopConfig(steps=args.steps, log_every=25,
+                                checkpoint_every=50, checkpoint_dir=args.ckpt)
+        run_train_loop(model, opt_cfg, loop2, iter(data2),
+                       params=tree["params"], opt_state=tree["opt_state"],
+                       start_step=step, on_metrics=log)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

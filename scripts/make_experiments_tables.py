@@ -1,0 +1,103 @@
+"""Emit the EXPERIMENTS.md tables from dry-run artifacts.
+
+Usage: PYTHONPATH=src python scripts/make_experiments_tables.py > results/tables.md
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.mesh import HBM_PER_CHIP  # noqa: E402
+from repro.launch.roofline import load_records, roofline_terms  # noqa: E402
+
+
+def dryrun_table() -> str:
+    rows = []
+    for r in load_records("results/dryrun", tag="baseline"):
+        if r.get("status") == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped | — | — | — |"
+            )
+            continue
+        if r.get("status") != "ok":
+            continue
+        ma = r.get("memory_analysis", {})
+        live = ma.get("live_bytes_per_device")
+        ha = r["hlo_analysis"]
+        coll = ha.get("collective_counts", {})
+        coll_s = " ".join(f"{k.replace('all-','a')}:{int(v)}" for k, v in sorted(coll.items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"({r['t_compile_s']}s) | {live/2**30:.1f} | "
+            f"{ha['flops']:.2e} | {coll_s} |"
+        )
+    hdr = (
+        "| arch | shape | mesh | compile | live GiB/chip | HLO flops/chip | collectives (count) |\n"
+        "|---|---|---|---|---|---|---|\n"
+    )
+    return hdr + "\n".join(sorted(rows)) + "\n"
+
+
+def roofline_table(tag="baseline", mesh="pod16x16") -> str:
+    rows = [
+        t
+        for r in load_records("results/dryrun", tag=tag)
+        if (t := roofline_terms(r)) and t["mesh"] == mesh
+    ]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| cell | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO flops | roofline frac | fits 16GiB | one-line fix |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    from repro.launch.roofline import HINTS
+
+    for r in rows:
+        out.append(
+            f"| {r['arch']}.{r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['model_flops_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} | {HINTS[r['dominant']][:60]}… |"
+        )
+    return "\n".join(out) + "\n"
+
+
+def variants_table() -> str:
+    out = [
+        "| cell | variant | flops/chip | bytes/chip | coll bytes/chip |",
+        "|---|---|---|---|---|",
+    ]
+    for f in sorted(glob.glob("results/dryrun/*.json")):
+        r = json.load(open(f))
+        if r.get("status") != "ok" or r.get("tag", "baseline") == "baseline":
+            continue
+        base_f = f"results/dryrun/{r['arch']}.{r['shape']}.{r['mesh']}.json"
+        if not os.path.exists(base_f):
+            continue
+        b = json.load(open(base_f))["hlo_analysis"]
+        ha = r["hlo_analysis"]
+        out.append(
+            f"| {r['arch']}.{r['shape']} | {r['tag']} | "
+            f"{ha['flops']:.2e} ({b['flops']/max(ha['flops'],1):.2f}x) | "
+            f"{ha['bytes_fused']:.2e} ({b['bytes_fused']/max(ha['bytes_fused'],1):.2f}x) | "
+            f"{ha['collective_bytes']:.2e} ({b['collective_bytes']/max(ha['collective_bytes'],1):.2f}x) |"
+        )
+    return "\n".join(out) + "\n"
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single-pod 16x16)\n")
+        print(roofline_table())
+        print("\n### Roofline (multi-pod 2x16x16)\n")
+        print(roofline_table(mesh="pod2x16x16"))
+    if which in ("all", "variants"):
+        print("\n### Variant cells (vs baseline, ratio = baseline/variant)\n")
+        print(variants_table())

@@ -1,0 +1,40 @@
+"""Re-run the HLO analyzer over saved .hlo.gz artifacts (no recompiles).
+
+Usage: PYTHONPATH=src python scripts/reanalyze.py [results/dryrun]
+"""
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+
+
+def main(out_dir: str = "results/dryrun") -> None:
+    for jf in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(jf) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        hf = os.path.join(out_dir, "hlo", rec["cell"] + ".hlo.gz")
+        if not os.path.exists(hf):
+            print("missing hlo for", rec["cell"])
+            continue
+        with gzip.open(hf, "rt") as f:
+            hlo = f.read()
+        rec["hlo_analysis"] = analyze_hlo(hlo)
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        ha = rec["hlo_analysis"]
+        print(
+            f"{rec['cell']}: flops={ha['flops']:.3e} bytes={ha['bytes_accessed']:.3e} "
+            f"coll={ha['collective_bytes']:.3e}"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

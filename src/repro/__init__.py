@@ -1,0 +1,3 @@
+"""repro: Beluga (CXL pooled-memory KVCache) reproduced as a TPU/JAX framework."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,226 @@
+"""Sharded checkpointing: per-process shard files + manifest, async save.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json          tree structure, shapes, dtypes, shardings
+        extra.json             user metadata (data-iterator state, ...)
+        proc_<k>.npz           addressable shards owned by process k
+        _COMMITTED             atomic commit marker (written last)
+
+Fault-tolerance contract:
+  * a checkpoint without ``_COMMITTED`` is ignored by ``latest_step`` /
+    ``restore`` (partial writes from a crashed host are harmless);
+  * saves can run asynchronously (``async_save=True``) on a worker thread —
+    the training loop keeps stepping while the previous step serializes;
+  * each process writes only shards it owns (``addressable_shards``), so
+    N-host saves scale without a coordinator; restore re-assembles arrays
+    from any process count as long as the mesh can address all shards.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 2, async_save: bool = False):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def latest_step(self) -> int | None:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "_COMMITTED")):
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> None:
+        if self.async_save:
+            self.wait()
+            # device_get before handing to the thread
+            host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+            self._thread = threading.Thread(
+                target=self._save_sync, args=(step, host_tree, extra, True)
+            )
+            self._thread.start()
+        else:
+            self._save_sync(step, tree, extra, False)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _save_sync(self, step, tree, extra, already_host: bool) -> None:
+        d = self.step_dir(step)
+        tmp = d + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+
+        flat, _ = _flatten_with_paths(tree)
+        proc = jax.process_index()
+        manifest = {"leaves": {}, "nprocs": jax.process_count()}
+        shard_payload: dict[str, np.ndarray] = {}
+        for key, leaf in flat:
+            arr = leaf
+            manifest["leaves"][key] = {
+                "shape": list(np.shape(arr)),
+                "dtype": str(np.asarray(jax.tree.leaves(arr)[0]).dtype)
+                if not hasattr(arr, "dtype")
+                else str(arr.dtype),
+            }
+            if already_host or not isinstance(arr, jax.Array):
+                shard_payload[f"{key}||full"] = _to_savable(np.asarray(arr))
+            else:
+                for sh in arr.addressable_shards:
+                    if sh.replica_id == 0:
+                        idx = _index_str(sh.index, arr.shape)
+                        shard_payload[f"{key}||{idx}"] = _to_savable(
+                            np.asarray(sh.data)
+                        )
+
+        np.savez(os.path.join(tmp, f"proc_{proc}.npz"), **shard_payload)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "extra.json"), "w") as f:
+            json.dump(extra or {}, f)
+        with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+            f.write("ok")
+        if os.path.exists(d):
+            shutil.rmtree(d)
+        os.replace(tmp, d)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1))
+            for name in os.listdir(self.dir)
+            if (m := re.fullmatch(r"step_(\d+)", name))
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, step: int, target_tree: Any, shardings: Any | None = None):
+        """Restore into the structure of ``target_tree`` (shapes/dtypes)."""
+        d = self.step_dir(step)
+        if not os.path.exists(os.path.join(d, "_COMMITTED")):
+            raise FileNotFoundError(f"no committed checkpoint at {d}")
+        payload: dict[str, np.ndarray] = {}
+        for name in os.listdir(d):
+            if name.startswith("proc_") and name.endswith(".npz"):
+                with np.load(os.path.join(d, name)) as z:
+                    for k in z.files:
+                        payload[k] = z[k]
+
+        flat, treedef = _flatten_with_paths(target_tree)
+        sh_flat = (
+            jax.tree.leaves(shardings) if shardings is not None else [None] * len(flat)
+        )
+        out = []
+        for (key, leaf), sh in zip(flat, sh_flat):
+            shape = tuple(np.shape(leaf))
+            dt = _np_dtype(leaf)
+            full_key = f"{key}||full"
+            if full_key in payload:
+                arr = _from_savable(payload[full_key], dt)
+            else:
+                arr = np.zeros(shape, dtype=dt)
+                found = False
+                for pk, val in payload.items():
+                    if pk.startswith(key + "||"):
+                        idx = _parse_index(pk.split("||")[1], shape)
+                        arr[idx] = _from_savable(val, dt)
+                        found = True
+                if not found:
+                    raise KeyError(f"checkpoint missing leaf {key}")
+            if sh is not None:
+                out.append(jax.device_put(arr.astype(dt), sh))
+            else:
+                out.append(arr.astype(dt))
+        return jax.tree.unflatten(treedef, out)
+
+    def load_extra(self, step: int) -> dict:
+        with open(os.path.join(self.step_dir(step), "extra.json")) as f:
+            return json.load(f)
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """npz can't serialize ml_dtypes (bf16/fp8): store as a uint view; the
+    true dtype is restored from the target tree on load."""
+    if arr.dtype.kind == "V" or str(arr.dtype) in (
+        "bfloat16", "float8_e4m3fn", "float8_e5m2"
+    ):
+        return arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
+    return arr
+
+
+def _from_savable(arr: np.ndarray, target_dtype) -> np.ndarray:
+    td = np.dtype(target_dtype)
+    if arr.dtype != td and arr.dtype in (np.uint16, np.uint8) and td.itemsize == arr.dtype.itemsize:
+        return arr.view(td)
+    return arr
+
+
+def _np_dtype(leaf) -> np.dtype:
+    try:
+        import jax.numpy as jnp
+
+        return np.dtype(leaf.dtype)
+    except Exception:
+        return np.asarray(leaf).dtype
+
+
+def _index_str(index, shape) -> str:
+    parts = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else sl.start
+        stop = dim if sl.stop is None else sl.stop
+        parts.append(f"{start}:{stop}")
+    return ",".join(parts)
+
+
+def _parse_index(s: str, shape) -> tuple:
+    if not s:
+        return tuple(slice(None) for _ in shape)
+    out = []
+    for part in s.split(","):
+        a, b = part.split(":")
+        out.append(slice(int(a), int(b)))
+    return tuple(out)

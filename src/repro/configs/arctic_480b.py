@@ -1,0 +1,13 @@
+"""arctic-480b - exact assigned config.
+
+[moe] 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128e top-2 + dense residual [hf:Snowflake/snowflake-arctic-base; hf]
+
+Single source of truth lives in ``repro.configs.registry.ARCTIC_480B``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch arctic-480b`` selector.
+"""
+
+from repro.configs.registry import ARCTIC_480B as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("arctic-480b")

@@ -1,0 +1,13 @@
+"""command-r-35b - exact assigned config.
+
+[dense] 40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000 - GQA, no-bias [hf:CohereForAI/c4ai-command-r-v01; unverified]
+
+Single source of truth lives in ``repro.configs.registry.COMMAND_R_35B``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch command-r-35b`` selector.
+"""
+
+from repro.configs.registry import COMMAND_R_35B as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("command-r-35b")

@@ -1,0 +1,13 @@
+"""internlm2-1.8b - exact assigned config.
+
+[dense] 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92544 - GQA [arXiv:2403.17297; hf]
+
+Single source of truth lives in ``repro.configs.registry.INTERNLM2_1_8B``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch internlm2-1.8b`` selector.
+"""
+
+from repro.configs.registry import INTERNLM2_1_8B as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("internlm2-1.8b")

@@ -1,0 +1,13 @@
+"""internvl2-26b - exact assigned config.
+
+[vlm] 48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553 - InternViT + InternLM2 [arXiv:2404.16821; hf]
+
+Single source of truth lives in ``repro.configs.registry.INTERNVL2_26B``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch internvl2-26b`` selector.
+"""
+
+from repro.configs.registry import INTERNVL2_26B as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("internvl2-26b")

@@ -1,0 +1,13 @@
+"""jamba-1.5-large-398b - exact assigned config.
+
+[hybrid] 72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16e top-2 - Mamba+attn 1:7 interleave, MoE [arXiv:2403.19887; hf]
+
+Single source of truth lives in ``repro.configs.registry.JAMBA_1_5_LARGE``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch jamba-1.5-large-398b`` selector.
+"""
+
+from repro.configs.registry import JAMBA_1_5_LARGE as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("jamba-1.5-large-398b")

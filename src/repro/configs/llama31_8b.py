@@ -1,0 +1,13 @@
+"""llama3.1-8b - exact assigned config.
+
+paper's transfer-bench model: 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256 [arXiv:2407.21783]
+
+Single source of truth lives in ``repro.configs.registry.LLAMA31_8B``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch llama3.1-8b`` selector.
+"""
+
+from repro.configs.registry import LLAMA31_8B as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("llama3.1-8b")

@@ -1,0 +1,13 @@
+"""llama4-maverick-400b-a17b - exact assigned config.
+
+[moe] 48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128e top-1 - MoE, early fusion [hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+Single source of truth lives in ``repro.configs.registry.LLAMA4_MAVERICK``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch llama4-maverick-400b-a17b`` selector.
+"""
+
+from repro.configs.registry import LLAMA4_MAVERICK as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("llama4-maverick-400b-a17b")

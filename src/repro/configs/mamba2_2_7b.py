@@ -1,0 +1,13 @@
+"""mamba2-2.7b - exact assigned config.
+
+[ssm] 64L d_model=2560 (attn-free) d_ff=0 vocab=50280, ssm_state=128 - SSD (state-space duality) [arXiv:2405.21060; unverified]
+
+Single source of truth lives in ``repro.configs.registry.MAMBA2_2_7B``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch mamba2-2.7b`` selector.
+"""
+
+from repro.configs.registry import MAMBA2_2_7B as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("mamba2-2.7b")

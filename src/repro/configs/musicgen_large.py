@@ -1,0 +1,13 @@
+"""musicgen-large - exact assigned config.
+
+[audio] 48L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=2048 - decoder-only over EnCodec tokens [arXiv:2306.05284; hf]
+
+Single source of truth lives in ``repro.configs.registry.MUSICGEN_LARGE``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch musicgen-large`` selector.
+"""
+
+from repro.configs.registry import MUSICGEN_LARGE as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("musicgen-large")

@@ -1,0 +1,13 @@
+"""olmo-1b - exact assigned config.
+
+[dense] 16L d_model=2048 16H (GQA kv=16) d_ff=8192 vocab=50304 - non-parametric LN [arXiv:2402.00838; hf]
+
+Single source of truth lives in ``repro.configs.registry.OLMO_1B``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch olmo-1b`` selector.
+"""
+
+from repro.configs.registry import OLMO_1B as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("olmo-1b")

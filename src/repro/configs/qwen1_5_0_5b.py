@@ -1,0 +1,13 @@
+"""qwen1.5-0.5b - exact assigned config.
+
+[dense] 24L d_model=1024 16H (GQA kv=16) d_ff=2816 vocab=151936 - QKV bias [hf:Qwen/Qwen1.5-0.5B; hf]
+
+Single source of truth lives in ``repro.configs.registry.QWEN1_5_0_5B``;
+this module exposes it as ``CONFIG`` (and a reduced smoke config) for the
+``--arch qwen1.5-0.5b`` selector.
+"""
+
+from repro.configs.registry import QWEN1_5_0_5B as CONFIG  # noqa: F401
+from repro.configs.registry import reduced_config
+
+SMOKE_CONFIG = reduced_config("qwen1.5-0.5b")

@@ -1,0 +1,9 @@
+"""Beluga core: the paper's contribution as composable modules.
+
+fabric     — CXL/RDMA memory-fabric cost model (paper-calibrated constants)
+pool       — BelugaPool: interleaved, paged, shared KV block pool (O9)
+index      — global prefix index (chain-hash -> pool block, epoch-validated)
+rpc        — CXL-RPC shared-memory ring (real) + modeled RDMA RPC baselines
+coherence  — software single-writer/multi-reader publication protocol (O1-O3)
+transfer   — gather-write / scatter-read engine: beluga vs rdma paths (§6.1)
+"""

@@ -1,0 +1,209 @@
+"""Memory-fabric cost model, calibrated to the paper's measured hardware.
+
+The container is CPU-only, so the *performance* of CXL vs RDMA paths is
+modeled (latency/bandwidth/queueing) while the *functionality* (actual data
+movement, allocator, index, coherence) is executed for real.  Every constant
+below is traceable to a paper measurement:
+
+  Table 4 (Exp #1)  — 16 KB coherence-method latencies
+  Fig. 5  (Exp #2)  — latency vs I/O size for all paths
+  §2.3              — XConn switch: ~750 ns 64 B port-to-port
+  §5.3              — device BW 22.5 GB/s; adapter 46.2 GB/s read / 33 GB/s
+                      write; GPU⇄CXL 26 GB/s via root complex
+  Fig. 15 (Exp #11) — CXL-RPC 2.11 µs RTT vs RDMA-RC 8.39 µs / UD 8.83 µs
+
+All times in **seconds**, sizes in **bytes**.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+US = 1e-6
+KB = 1024
+MB = 1024 * 1024
+GB = 1024**3
+
+
+@dataclass(frozen=True)
+class FabricConstants:
+    # --- CXL path (Beluga) ---
+    cxl_64b_latency: float = 0.75 * US  # switch port-to-port, §2.3
+    cxl_dev_bw: float = 22.5 * GB  # per memory device, §5.3
+    cxl_adapter_read_bw: float = 46.2 * GB  # per PCIe5 x16 adapter, §5.3
+    cxl_adapter_write_bw: float = 33.0 * GB  # RC write bottleneck, §5.3
+    gpu_cxl_bw: float = 26.0 * GB  # GPU⇄CXL through root complex, §5.3
+    n_devices: int = 32  # memory devices in the pool (Table 2)
+    n_adapters: int = 2  # PCIe/CXL adapters per server (Table 2)
+    interleave_bytes: int = 2 * MB  # software interleaving granularity §5.3
+
+    # CPU instruction-path costs (Exp #1, 16 KB points)
+    ntstore_16k: float = 2.41 * US
+    store_clflush_16k: float = 8.50 * US
+    store_uc_16k: float = 281.56 * US
+    load_clflush_16k: float = 5.98 * US
+    load_uc_16k: float = 166.49 * US
+    dsa_write_16k: float = 1.69 * US  # uncacheable/bypass
+    dsa_read_16k: float = 2.12 * US
+    dsa_setup: float = 0.9 * US  # DMA descriptor setup (crossover @~4KB, Fig5)
+    clflush_per_line: float = 0.03 * US  # 64B line flush amortized
+
+    # GPU path (Exp #1/#2)
+    kernel_launch: float = 7.9 * US  # CUDA kernel launch+sync overhead (§3.2:
+    # 10.55us total - 2.68us transfer for 16 KB)
+    gpu_copy_16k: float = 2.68 * US  # in-kernel data movement, 16 KB
+    cudamemcpy_uc_small: float = 1230 * US  # <24KB H2D from UC memory (§5.2)
+
+    # --- RDMA path (MoonCake-style baseline) ---
+    rdma_base_latency: float = 3.2 * US  # one-sided verb, QD=1 small msg
+    rdma_bw: float = 50.0 * GB  # 400 Gbps NIC
+    rdma_request_overhead: float = 1.0 * US  # WQE prep + doorbell + CQ poll
+    rdma_sgl_max: int = 30  # ConnectX-7 sglist entries (§6.1)
+    # CPU-side allocation + staging per (super-)block transfer in the
+    # MoonCake/LMCache path — calibrated to Fig. 13c block-size sweep
+    rdma_sw_per_superblock: float = 25.0 * US * 1000
+    rdma_rc_rpc_rtt: float = 8.39 * US  # Exp #11
+    rdma_ud_rpc_rtt: float = 8.83 * US
+    bounce_copy_bw: float = 40.0 * GB  # GPU->host bounce buffer copy
+    host_sync_overhead: float = 8.0 * US  # CPU<->GPU coordination (§3.2)
+
+    # --- local DRAM baseline ---
+    dram_latency: float = 0.09 * US
+    dram_bw: float = 80.0 * GB
+
+    # CXL-RPC (Exp #11)
+    cxl_rpc_rtt: float = 2.11 * US
+
+
+DEFAULT = FabricConstants()
+
+
+# ---------------------------------------------------------------------------
+# Point latency models (QD=1), one per data path in Fig. 4 / Fig. 5
+# ---------------------------------------------------------------------------
+
+
+def cpu_write_latency(size: int, method: str = "ntstore", c: FabricConstants = DEFAULT) -> float:
+    """CPU -> CXL pool write."""
+    lines = max(1, size // 64)
+    if method == "ntstore":  # O1 — bypass cache, no flush
+        return c.cxl_64b_latency + size / c.cxl_adapter_write_bw + lines * 0.004 * US
+    if method == "clflush":  # store + CLFLUSH per line
+        return c.cxl_64b_latency + size / c.cxl_adapter_write_bw + lines * c.clflush_per_line
+    if method == "uncacheable":  # each store stalls the pipeline
+        return lines * (c.store_uc_16k / 256)
+    if method == "dsa":  # O2 — DSA with cache bypass
+        return c.dsa_setup + c.cxl_64b_latency + size / c.cxl_adapter_write_bw
+    raise ValueError(method)
+
+
+def cpu_read_latency(size: int, method: str = "clflush", c: FabricConstants = DEFAULT) -> float:
+    """CPU <- CXL pool read."""
+    lines = max(1, size // 64)
+    if method == "clflush":  # O1 — invalidate then load
+        return c.cxl_64b_latency + size / c.cxl_adapter_read_bw + lines * c.clflush_per_line
+    if method == "uncacheable":
+        return lines * (c.load_uc_16k / 256)
+    if method == "dsa":  # O2
+        return c.dsa_setup + c.cxl_64b_latency + size / c.cxl_adapter_read_bw
+    raise ValueError(method)
+
+
+def gpu_transfer_latency(
+    size: int,
+    n_fragments: int = 1,
+    method: str = "fused_kernel",
+    direction: str = "read",
+    c: FabricConstants = DEFAULT,
+) -> float:
+    """GPU <-> CXL pool transfer (O3/O5/O6 paths).
+
+    ``fused_kernel`` — one custom copy kernel moves all fragments (Beluga):
+    single launch, fine-grained gather/scatter at memory semantics.
+    ``cudamemcpy``  — one cudaMemcpy per contiguous fragment.
+    """
+    bw = c.gpu_cxl_bw
+    if method == "fused_kernel":
+        return c.kernel_launch + c.cxl_64b_latency + size / bw
+    if method == "cudamemcpy":
+        per = c.kernel_launch + c.cxl_64b_latency + (size / n_fragments) / bw
+        if direction == "read" and size / n_fragments < 24 * KB:
+            per = c.cudamemcpy_uc_small  # §5.2 UC-small-pathology
+        return n_fragments * per
+    raise ValueError(method)
+
+
+def rdma_transfer_latency(
+    size: int,
+    n_fragments: int = 1,
+    gpu_side: bool = True,
+    c: FabricConstants = DEFAULT,
+) -> float:
+    """CPU-driven RDMA path (MoonCake): bounce buffer + sglist batching.
+
+    GPU -> host bounce copy (D2H), then ceil(frags/30) RDMA requests, plus
+    host<->GPU synchronization. Reads are the mirror path.
+    """
+    t = 0.0
+    if gpu_side:
+        t += c.host_sync_overhead  # CPU<->GPU coordination (§3.2 microbench)
+        t += c.kernel_launch + size / c.bounce_copy_bw  # staging copy
+    n_req = math.ceil(n_fragments / c.rdma_sgl_max)
+    t += n_req * (c.rdma_base_latency + c.rdma_request_overhead)
+    t += size / c.rdma_bw
+    return t
+
+
+def local_dram_latency(size: int, c: FabricConstants = DEFAULT) -> float:
+    return c.dram_latency + size / c.dram_bw
+
+
+# ---------------------------------------------------------------------------
+# Pool-device queueing model (Exp #3/#4: skew + background pressure)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DeviceQueues:
+    """Per-memory-device FIFO queues; models O9 interleaving benefits.
+
+    Service time = bytes / dev_bw. Requests target a device either by
+    interleaved round-robin (``interleave=True``) or by address hash of the
+    block (hot blocks collide on one device when interleaving is off).
+    """
+
+    n_devices: int = 32
+    dev_bw: float = DEFAULT.cxl_dev_bw
+    interleave_bytes: int = DEFAULT.interleave_bytes
+    total_bytes: int = 8 * (1024**4)  # 8 TB pool (Table 2)
+    busy_until: list[float] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.busy_until:
+            self.busy_until = [0.0] * self.n_devices
+
+    def submit(self, now: float, addr: int, size: int, interleave: bool) -> float:
+        """Returns completion time of the request."""
+        if interleave:
+            # split across devices at interleave granularity
+            n_chunks = max(1, math.ceil(size / self.interleave_bytes))
+            per_chunk = size / n_chunks
+            done = now
+            start_dev = (addr // self.interleave_bytes) % self.n_devices
+            for i in range(n_chunks):
+                d = (start_dev + i) % self.n_devices
+                svc = per_chunk / self.dev_bw
+                start = max(now, self.busy_until[d])
+                self.busy_until[d] = start + svc
+                done = max(done, start + svc)
+            return done
+        # no interleaving: contiguous address partition — hot (zipf) regions
+        # all land on the first device(s) (the paper's §5.3 bottleneck)
+        region = max(1, self.total_bytes // self.n_devices)
+        d = min(self.n_devices - 1, addr // region)
+        svc = size / self.dev_bw
+        start = max(now, self.busy_until[d])
+        self.busy_until[d] = start + svc
+        return start + svc

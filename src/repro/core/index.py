@@ -1,0 +1,119 @@
+"""Global prefix index: token-block hash chain -> pool block (paper §6).
+
+The index is the metadata service that every LLM instance queries before
+prefill ("which prefix blocks are already in the pool?") and updates after
+("these new blocks now hold tokens [i, i+16)").  In the paper it is a
+centralized service reached via CXL-RPC; here the same object is either
+called in-process (tests) or behind ``repro.core.rpc`` (cluster benchmarks).
+
+Key design points mirrored from MoonCake/vLLM prefix caching:
+  * chain hashing: block key = H(parent_key, tokens_in_block) so a prefix
+    match is a walk down the chain — O(n_blocks) lookups, no trie needed;
+  * entries carry (block_id, epoch); readers must validate the epoch against
+    the pool before trusting the payload (multi-host coherence, §5.1);
+  * eviction: LRU over unreferenced committed blocks.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+
+from repro.core.pool import BelugaPool
+
+
+def block_key(parent: bytes, tokens: tuple[int, ...]) -> bytes:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(parent)
+    h.update(b"|")
+    h.update(b",".join(str(t).encode() for t in tokens))
+    return h.digest()
+
+
+ROOT = b"ROOT"
+
+
+@dataclass
+class IndexEntry:
+    block_id: int
+    epoch: int
+    n_tokens: int
+    last_used: float
+
+
+class GlobalIndex:
+    def __init__(self, pool: BelugaPool):
+        self.pool = pool
+        self.block_tokens = pool.layout.block_tokens
+        self._lock = threading.Lock()
+        self._map: OrderedDict[bytes, IndexEntry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    def keys_for(self, tokens: list[int]) -> list[bytes]:
+        bt = self.block_tokens
+        keys, parent = [], ROOT
+        for i in range(0, len(tokens) - len(tokens) % bt, bt):
+            k = block_key(parent, tuple(tokens[i : i + bt]))
+            keys.append(k)
+            parent = k
+        return keys
+
+    def match_prefix(self, tokens: list[int]) -> list[tuple[bytes, int, int]]:
+        """Longest cached prefix: [(key, block_id, epoch)] with valid epochs."""
+        out = []
+        now = time.monotonic()
+        with self._lock:
+            for k in self.keys_for(tokens):
+                e = self._map.get(k)
+                if e is None or not self.pool.validate_epoch(e.block_id, e.epoch):
+                    if e is not None:  # stale entry: drop it
+                        self._map.pop(k, None)
+                    break
+                e.last_used = now
+                self._map.move_to_end(k)
+                out.append((k, e.block_id, e.epoch))
+        with self._lock:
+            self.hits += len(out)
+            self.misses += max(
+                0, (len(tokens) // self.block_tokens) - len(out)
+            )
+        return out
+
+    def publish(self, key: bytes, block_id: int, epoch: int, n_tokens: int) -> None:
+        """Writer publishes AFTER the block payload is flushed (coherence)."""
+        with self._lock:
+            self._map[key] = IndexEntry(block_id, epoch, n_tokens, time.monotonic())
+            self._map.move_to_end(key)
+
+    def lookup(self, key: bytes) -> IndexEntry | None:
+        with self._lock:
+            return self._map.get(key)
+
+    def evict_lru(self, n: int) -> list[int]:
+        """Evict up to n unreferenced blocks; returns freed block ids."""
+        freed = []
+        with self._lock:
+            for k in list(self._map.keys()):
+                if len(freed) >= n:
+                    break
+                e = self._map[k]
+                if self.pool.meta[e.block_id].refcount <= 1:
+                    freed.append(e.block_id)
+                    del self._map[k]
+        if freed:
+            self.pool.release(freed)
+        return freed
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "entries": len(self._map),
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hits / max(1, self.hits + self.misses),
+            }

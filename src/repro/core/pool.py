@@ -1,0 +1,225 @@
+"""BelugaPool: the shared, interleaved KV block pool (the paper's §4 + O9).
+
+One pool instance represents the rack-scale shared memory (8 TB behind the
+CXL switch in the paper; the sharded host/HBM capacity tier on a TPU pod).
+The pool is paged: fixed-size *blocks* of ``block_tokens`` tokens, each
+holding every layer's K and V fragments for those tokens, packed contiguous.
+
+Two backings:
+  * ``numpy`` — the serving control plane (real allocator + real copies);
+  * ``jax``   — device-side pool array used by the Pallas/XLA data path
+                (gather/scatter reads feed attention directly).
+
+Interleaving (O9): block b lives on shard ``b % n_shards``; the allocator
+balances allocation across shards and exposes per-shard occupancy so the
+benchmarks can show the skew/queueing effect of turning interleaving off.
+
+Single-writer / multi-reader coherence (§5.1) is enforced with per-block
+epochs — see ``repro.core.coherence``.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class PoolLayout:
+    """Byte layout of one pool block for a model config."""
+
+    block_tokens: int
+    n_layers_kv: int  # attention layers
+    n_kv_heads: int
+    head_dim: int
+    dtype_bytes: int = 2
+
+    @property
+    def fragment_bytes(self) -> int:
+        """One (layer, k|v) fragment for a block: the paper's 20 KB unit."""
+        return self.block_tokens * self.n_kv_heads * self.head_dim * self.dtype_bytes
+
+    @property
+    def n_fragments(self) -> int:
+        """Fragments per block: 2 * n_layers (Qwen3-32B: 128)."""
+        return 2 * self.n_layers_kv
+
+    @property
+    def block_bytes(self) -> int:
+        return self.n_fragments * self.fragment_bytes
+
+    @property
+    def token_bytes(self) -> int:
+        return self.block_bytes // self.block_tokens
+
+    @classmethod
+    def for_model(cls, cfg: ModelConfig, block_tokens: int = 16) -> "PoolLayout":
+        return cls(
+            block_tokens=block_tokens,
+            n_layers_kv=max(1, len(cfg.attn_layer_ids())),
+            n_kv_heads=max(1, cfg.n_kv_heads),
+            head_dim=max(1, cfg.head_dim),
+        )
+
+
+class OutOfPoolMemory(RuntimeError):
+    pass
+
+
+@dataclass
+class BlockMeta:
+    epoch: int = 0  # bumped on every (re)write; readers validate
+    refcount: int = 0
+    committed: bool = False
+
+
+class BelugaPool:
+    """Block allocator + storage over interleaved shards."""
+
+    def __init__(
+        self,
+        layout: PoolLayout,
+        n_blocks: int,
+        n_shards: int = 32,
+        backing: str = "numpy",
+        interleave: bool = True,
+    ):
+        assert n_blocks % n_shards == 0, (n_blocks, n_shards)
+        self.layout = layout
+        self.n_blocks = n_blocks
+        self.n_shards = n_shards
+        self.interleave = interleave
+        self.backing = backing
+        self._lock = threading.Lock()
+        self._free: list[int] = list(range(n_blocks))
+        self.meta: list[BlockMeta] = [BlockMeta() for _ in range(n_blocks)]
+        self.alloc_count = 0
+        if backing == "meta":
+            # control-plane only (cluster sim at paper scale): allocator,
+            # epochs and index run for real; payloads are not stored.
+            self.data = None
+        elif backing == "numpy":
+            # (n_blocks, block_bytes) uint8 — fragment-addressable
+            self.data = np.zeros((n_blocks, layout.block_bytes), np.uint8)
+        elif backing == "jax":
+            import jax.numpy as jnp
+
+            # (n_blocks, 2*L, block_tokens, hkv, hd) device-side pool
+            self.data = jnp.zeros(
+                (
+                    n_blocks,
+                    layout.n_fragments,
+                    layout.block_tokens,
+                    layout.n_kv_heads,
+                    layout.head_dim,
+                ),
+                jnp.bfloat16,
+            )
+        else:
+            raise ValueError(backing)
+
+    # ------------------------------------------------------------------
+    def shard_of(self, block_id: int) -> int:
+        if self.interleave:
+            return block_id % self.n_shards
+        # no interleaving: fill shard 0 first (the paper's §5.3 bottleneck)
+        return block_id // (self.n_blocks // self.n_shards)
+
+    def free_blocks(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def shard_occupancy(self) -> list[int]:
+        occ = [0] * self.n_shards
+        with self._lock:
+            free = set(self._free)
+        for b in range(self.n_blocks):
+            if b not in free:
+                occ[self.shard_of(b)] += 1
+        return occ
+
+    # ------------------------------------------------------------------
+    def allocate(self, n: int) -> list[int]:
+        """Allocate n blocks, round-robin across shards when interleaving."""
+        with self._lock:
+            if len(self._free) < n:
+                raise OutOfPoolMemory(f"need {n}, have {len(self._free)}")
+            if self.interleave:
+                # pick blocks spreading across shards
+                by_shard: dict[int, list[int]] = {}
+                for b in self._free:
+                    by_shard.setdefault(b % self.n_shards, []).append(b)
+                out: list[int] = []
+                shard_ids = sorted(by_shard, key=lambda s: -len(by_shard[s]))
+                i = 0
+                while len(out) < n:
+                    s = shard_ids[i % len(shard_ids)]
+                    if by_shard[s]:
+                        out.append(by_shard[s].pop())
+                    i += 1
+                    if i > 4 * self.n_shards + n * 2:  # degenerate fallback
+                        remaining = [b for lst in by_shard.values() for b in lst]
+                        out.extend(remaining[: n - len(out)])
+                        break
+            else:
+                out = [self._free[i] for i in range(n)]
+            free_set = set(out)
+            self._free = [b for b in self._free if b not in free_set]
+            for b in out:
+                m = self.meta[b]
+                m.refcount = 1
+                m.committed = False
+            self.alloc_count += n
+            return out
+
+    def retain(self, block_ids: list[int]) -> None:
+        with self._lock:
+            for b in block_ids:
+                assert self.meta[b].refcount > 0, f"retain of free block {b}"
+                self.meta[b].refcount += 1
+
+    def release(self, block_ids: list[int]) -> None:
+        with self._lock:
+            for b in block_ids:
+                m = self.meta[b]
+                m.refcount -= 1
+                assert m.refcount >= 0, f"double free of block {b}"
+                if m.refcount == 0:
+                    m.committed = False
+                    m.epoch += 1  # invalidate readers holding stale ids
+                    self._free.append(b)
+
+    # ------------------------------------------------------------------
+    # Data plane (numpy backing): fragment reads/writes
+    # ------------------------------------------------------------------
+    def write_block(self, block_id: int, payload: np.ndarray) -> int:
+        """Write a full block; returns the publish epoch (see coherence)."""
+        if self.data is not None:
+            assert payload.nbytes == self.layout.block_bytes
+            self.data[block_id] = payload.reshape(-1).view(np.uint8)
+        with self._lock:
+            m = self.meta[block_id]
+            m.epoch += 1
+            m.committed = True
+            return m.epoch
+
+    def read_block(self, block_id: int) -> tuple[np.ndarray, int]:
+        with self._lock:
+            e = self.meta[block_id].epoch
+        if self.data is None:
+            return np.zeros(self.layout.block_bytes, np.uint8), e
+        return self.data[block_id].copy(), e
+
+    def read_fragments(self, block_id: int, frag_ids: list[int]) -> np.ndarray:
+        fb = self.layout.fragment_bytes
+        block = self.data[block_id]
+        return np.stack([block[f * fb : (f + 1) * fb] for f in frag_ids])
+
+    def validate_epoch(self, block_id: int, epoch: int) -> bool:
+        with self._lock:
+            m = self.meta[block_id]
+            return m.committed and m.epoch == epoch

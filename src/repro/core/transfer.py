@@ -1,0 +1,185 @@
+"""KVCache transfer engine: gather-write / scatter-read (paper §6.1).
+
+The KVCache in an inference engine is fragmented: a 16-token block of
+Qwen3-32B is 128 non-contiguous (layer, K|V) fragments of ~32 KB living in
+per-layer GPU tensors, while the pool wants them packed contiguous.
+
+Two executable paths (both move real bytes; latency is fabric-modeled):
+
+  * ``beluga`` — single fused gather/scatter kernel per batch of blocks
+    (device-side twin: ``repro.kernels.kv_gather_write`` /
+    ``kv_scatter_read``): one launch, unlimited fragments, no bounce buffer.
+  * ``rdma``   — MoonCake-style CPU-driven path: GPU→host bounce copy, then
+    sglist-limited (30 entries) RDMA requests; optional super-block batching
+    (LMCache's 256-token blocks) to amortize the per-request overhead.
+
+Sparse reads (Exp #10): top-k token gather at (layer, head, token)
+granularity — thousands of ~(head_dim·dtype)-byte pieces; Beluga issues one
+kernel, RDMA needs ceil(pieces/30) requests.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import fabric
+from repro.core.fabric import DEFAULT, FabricConstants
+from repro.core.pool import BelugaPool, PoolLayout
+
+
+@dataclass
+class TransferStats:
+    writes: int = 0
+    reads: int = 0
+    bytes_written: int = 0
+    bytes_read: int = 0
+    modeled_write_s: float = 0.0
+    modeled_read_s: float = 0.0
+    requests_issued: int = 0  # RDMA request count / kernel launches
+
+
+@dataclass
+class TransferEngine:
+    pool: BelugaPool
+    mode: str = "beluga"  # beluga | rdma
+    super_block_tokens: int = 0  # rdma batching (LMCache: 256); 0 = native
+    constants: FabricConstants = DEFAULT
+    stats: TransferStats = field(default_factory=TransferStats)
+
+    # ------------------------------------------------------------------
+    # Layout helpers
+    # ------------------------------------------------------------------
+    def _pack(self, kv_block: np.ndarray) -> np.ndarray:
+        """kv_block: (2*L, block_tokens, hkv, hd) -> contiguous uint8."""
+        lay = self.pool.layout
+        assert kv_block.shape[0] == lay.n_fragments
+        return np.ascontiguousarray(kv_block).reshape(-1).view(np.uint8)
+
+    def _unpack(self, payload: np.ndarray, dtype=np.float16) -> np.ndarray:
+        lay = self.pool.layout
+        itemsize = np.dtype(dtype).itemsize
+        assert itemsize == lay.dtype_bytes
+        return payload.view(dtype).reshape(
+            lay.n_fragments, lay.block_tokens, lay.n_kv_heads, lay.head_dim
+        )
+
+    # ------------------------------------------------------------------
+    # Gather write: fragmented per-layer KV -> contiguous pool blocks
+    # ------------------------------------------------------------------
+    def gather_write(self, block_ids: list[int], kv_blocks: np.ndarray) -> list[int]:
+        """kv_blocks: (n_blocks, 2*L, block_tokens, hkv, hd). Returns epochs."""
+        lay = self.pool.layout
+        n = len(block_ids)
+        assert kv_blocks is None or kv_blocks.shape[0] == n
+        size = n * lay.block_bytes
+        nfrag = n * lay.n_fragments
+
+        if self.mode == "beluga":
+            # one fused kernel moves every fragment of every block
+            self.stats.modeled_write_s += fabric.gpu_transfer_latency(
+                size, nfrag, method="fused_kernel", direction="write",
+                c=self.constants,
+            )
+            self.stats.requests_issued += 1
+        else:
+            nfrag_eff, nreq_groups = self._rdma_batching(n, nfrag)
+            self.stats.modeled_write_s += fabric.rdma_transfer_latency(
+                size, nfrag_eff, gpu_side=True, c=self.constants
+            )
+            self.stats.requests_issued += math.ceil(
+                nfrag_eff / self.constants.rdma_sgl_max
+            )
+
+        epochs = []
+        if self.pool.data is None:  # meta backing: bump epochs only
+            epochs = [self.pool.write_block(bid, None) for bid in block_ids]
+        else:
+            for bid, kvb in zip(block_ids, kv_blocks):
+                epochs.append(self.pool.write_block(bid, self._pack(kvb)))
+        self.stats.writes += n
+        self.stats.bytes_written += size
+        return epochs
+
+    # ------------------------------------------------------------------
+    # Scatter read: contiguous pool blocks -> fragmented per-layer KV
+    # ------------------------------------------------------------------
+    def scatter_read(
+        self, block_ids: list[int], epochs: list[int] | None = None,
+        dtype=np.float16,
+    ) -> np.ndarray:
+        """Returns (n_blocks, 2*L, block_tokens, hkv, hd)."""
+        lay = self.pool.layout
+        n = len(block_ids)
+        size = n * lay.block_bytes
+        nfrag = n * lay.n_fragments
+
+        if self.mode == "beluga":
+            self.stats.modeled_read_s += fabric.gpu_transfer_latency(
+                size, nfrag, method="fused_kernel", direction="read",
+                c=self.constants,
+            )
+            self.stats.requests_issued += 1
+        else:
+            nfrag_eff, _ = self._rdma_batching(n, nfrag)
+            self.stats.modeled_read_s += fabric.rdma_transfer_latency(
+                size, nfrag_eff, gpu_side=True, c=self.constants
+            )
+            self.stats.requests_issued += math.ceil(
+                nfrag_eff / self.constants.rdma_sgl_max
+            )
+
+        shape = (n, lay.n_fragments, lay.block_tokens, lay.n_kv_heads, lay.head_dim)
+        if self.pool.data is None:  # meta backing: validate epochs only
+            for i, bid in enumerate(block_ids):
+                if epochs is not None and not self.pool.validate_epoch(bid, epochs[i]):
+                    from repro.core.coherence import CoherenceError
+
+                    raise CoherenceError(f"block {bid} epoch changed during read")
+            self.stats.reads += n
+            self.stats.bytes_read += size
+            return np.zeros(shape, dtype)
+        out = np.empty(shape, dtype)
+        for i, bid in enumerate(block_ids):
+            payload, epoch = self.pool.read_block(bid)
+            if epochs is not None and epoch != epochs[i]:
+                from repro.core.coherence import CoherenceError
+
+                raise CoherenceError(f"block {bid} epoch changed during read")
+            out[i] = self._unpack(payload, dtype)
+        self.stats.reads += n
+        self.stats.bytes_read += size
+        return out
+
+    # ------------------------------------------------------------------
+    # Sparse read: top-k token pieces (Exp #10)
+    # ------------------------------------------------------------------
+    def sparse_read_latency(self, n_tokens: int, contiguous_frac: float = 0.26) -> float:
+        """Latency to load KV for n_tokens sparsely-selected tokens.
+
+        pieces = n_layers * n_heads * 2 per token (paper: 1024 for Qwen-32B);
+        contiguous neighbors can merge (paper Table 6 measured ~26% for
+        Qwen3-32B), which only helps RDMA (fewer sgl entries).
+        """
+        lay = self.pool.layout
+        piece = lay.head_dim * lay.dtype_bytes
+        n_pieces = n_tokens * lay.n_layers_kv * lay.n_kv_heads * 2
+        size = n_pieces * piece
+        if self.mode == "beluga":
+            return fabric.gpu_transfer_latency(
+                size, n_pieces, method="fused_kernel", c=self.constants
+            )
+        merged = max(1, int(n_pieces * (1 - contiguous_frac)))
+        return fabric.rdma_transfer_latency(size, merged, gpu_side=True, c=self.constants)
+
+    # ------------------------------------------------------------------
+    def _rdma_batching(self, n_blocks: int, nfrag: int) -> tuple[int, int]:
+        """Super-block batching reduces *request* count but forces larger
+        transfer granularity (LMCache's 256-token indexing)."""
+        if self.super_block_tokens and self.super_block_tokens > self.pool.layout.block_tokens:
+            group = self.super_block_tokens // self.pool.layout.block_tokens
+            groups = math.ceil(n_blocks / group)
+            return groups * self.pool.layout.n_fragments, groups
+        return nfrag, n_blocks

@@ -1,0 +1,126 @@
+"""Fault tolerance for 1000+-node runs: failure detection, elastic re-mesh,
+straggler mitigation.
+
+The container runs one process, so the *policies* here are exercised by unit
+tests + the cluster sim while the multi-host wiring points (noted inline)
+use the standard jax.distributed primitives on a real pod.
+
+Training-side contract:
+  * ``HeartbeatMonitor``   — per-host liveness with grace windows (on a real
+    pod: backed by the coordination service barrier/KV; here: injected
+    clocks for tests);
+  * ``ElasticPlan``        — given a failed host set, compute the largest
+    valid production sub-mesh and the re-shard plan: which checkpoint shards
+    each surviving host loads (checkpointer shards are host-agnostic, so a
+    (2,16,16) run restarts as (16,16) by re-reading the manifest with the
+    smaller mesh's shardings — no per-host affinity);
+  * ``StragglerPolicy``    — per-step duration tracking; hosts slower than
+    ``k × median`` over a window are flagged for replacement (training) —
+    the serving twin is the fetch-vs-recompute cutover in KVCacheManager.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class HeartbeatMonitor:
+    n_hosts: int
+    timeout_s: float = 30.0
+    last_beat: dict[int, float] = field(default_factory=dict)
+
+    def beat(self, host: int, now: float | None = None) -> None:
+        self.last_beat[host] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: float | None = None) -> list[int]:
+        t = time.monotonic() if now is None else now
+        return [
+            h
+            for h in range(self.n_hosts)
+            if t - self.last_beat.get(h, -1e18) > self.timeout_s
+        ]
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: tuple[int, ...]
+    new_shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    restart_step: int
+    note: str
+
+    @property
+    def degraded(self) -> bool:
+        import math
+
+        return math.prod(self.new_shape) < math.prod(self.old_shape)
+
+
+def plan_elastic_remesh(
+    mesh_shape: tuple[int, ...],
+    axes: tuple[str, ...],
+    hosts_per_unit: int,
+    failed_hosts: list[int],
+    checkpoint_step: int,
+) -> ElasticPlan:
+    """Shrink along the outermost data-parallel axis.
+
+    Model sharding (the `model` axis) is never shrunk — TP degree is a
+    property of the checkpointed layout. DP (pod then data) shrinks by whole
+    slices: fail one host in a pod slice -> drop that slice, redistribute
+    batch. Checkpoints are mesh-agnostic (manifest + index ranges), so the
+    surviving mesh simply re-reads with its own shardings.
+    """
+    if not failed_hosts:
+        return ElasticPlan(mesh_shape, mesh_shape, axes, checkpoint_step, "no-op")
+    shape = list(mesh_shape)
+    # outermost DP axis: "pod" when present, else "data"
+    dp_axis = 0 if axes[0] in ("pod", "data") else None
+    assert dp_axis is not None, axes
+    units_per_slice = 1
+    for d in shape[1:]:
+        units_per_slice *= d
+    # map failed hosts to slices of the outer axis
+    failed_slices = sorted(
+        {h // max(1, (units_per_slice // hosts_per_unit) or 1) for h in failed_hosts}
+    )
+    new_outer = shape[0] - len([s for s in failed_slices if s < shape[0]])
+    if new_outer < 1:
+        raise RuntimeError("all DP slices failed; cannot re-mesh")
+    new_shape = tuple([new_outer] + shape[1:])
+    return ElasticPlan(
+        tuple(mesh_shape),
+        new_shape,
+        axes,
+        checkpoint_step,
+        f"dropped {len(failed_slices)} {axes[0]}-slice(s); restart from "
+        f"step {checkpoint_step}; global batch rescaled by "
+        f"{new_outer}/{shape[0]}",
+    )
+
+
+@dataclass
+class StragglerPolicy:
+    window: int = 20
+    slow_factor: float = 1.5
+    history: dict[int, list[float]] = field(default_factory=dict)
+
+    def record(self, host: int, step_time: float) -> None:
+        h = self.history.setdefault(host, [])
+        h.append(step_time)
+        if len(h) > self.window:
+            h.pop(0)
+
+    def stragglers(self) -> list[int]:
+        if len(self.history) < 2:
+            return []
+        medians = {h: statistics.median(v) for h, v in self.history.items() if v}
+        if not medians:
+            return []
+        global_med = statistics.median(medians.values())
+        return [
+            h for h, m in medians.items() if m > self.slow_factor * global_med
+        ]

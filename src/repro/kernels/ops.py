@@ -1,0 +1,96 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``kernel_mode``:
+  * "pallas"  — force the Pallas path (interpret=True off-TPU, so the kernel
+                body executes in Python on CPU: correctness, not speed);
+  * "jnp"     — force the pure-jnp oracle (ref.py);
+  * "auto"    — Pallas on TPU, oracle elsewhere (the dry-run/CPU default).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kv_transfer as _kv
+from repro.kernels import paged_attention as _pa
+from repro.kernels import ref as _ref
+
+
+def _use_pallas(mode: str) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)"""
+    on_tpu = jax.default_backend() == "tpu"
+    if mode == "pallas":
+        return True, not on_tpu
+    if mode == "jnp":
+        return False, False
+    return on_tpu, False
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "mode", "block_q", "block_kv"))
+def flash_attention(q, k, v, *, causal=True, mode="auto", block_q=256, block_kv=512):
+    use, interp = _use_pallas(mode)
+    if use:
+        return _fa.flash_attention(
+            q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+            interpret=interp,
+        )
+    return _ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def paged_attention(q, kv_pool, block_table, context_lens, *, mode="auto"):
+    use, interp = _use_pallas(mode)
+    if use:
+        return _pa.paged_attention(
+            q, kv_pool, block_table, context_lens, interpret=interp
+        )
+    return _ref.paged_attention_ref(q, kv_pool, block_table, context_lens)
+
+
+@functools.partial(jax.jit, static_argnames=("block_tokens", "mode"))
+def kv_gather_write(k_cache, v_cache, slot_ids, block_tokens, *, mode="auto"):
+    use, interp = _use_pallas(mode)
+    if use:
+        return _kv.kv_gather_write(
+            k_cache, v_cache, slot_ids, block_tokens, interpret=interp
+        )
+    return _ref.kv_gather_write_ref(k_cache, v_cache, slot_ids, block_tokens)
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "mode"))
+def kv_scatter_read(pool_blocks, slot_ids, n_slots, *, mode="auto"):
+    use, interp = _use_pallas(mode)
+    if use:
+        return _kv.kv_scatter_read(pool_blocks, slot_ids, n_slots, interpret=interp)
+    bt = pool_blocks.shape[2]
+    L = pool_blocks.shape[1] // 2
+    hkv, hd = pool_blocks.shape[3], pool_blocks.shape[4]
+    k0 = jnp.zeros((L, n_slots * bt, hkv, hd), pool_blocks.dtype)
+    v0 = jnp.zeros_like(k0)
+    return _ref.kv_scatter_read_ref(pool_blocks, slot_ids, k0, v0, bt)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def sparse_kv_gather(kv, token_ids, *, mode="auto"):
+    use, interp = _use_pallas(mode)
+    if use:
+        return _kv.sparse_kv_gather(kv, token_ids, interpret=interp)
+    return _ref.sparse_kv_gather_ref(kv, token_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("nh_tile", "mode"))
+def ssd_chunk(x, a_log, b_mat, c_mat, *, nh_tile=8, mode="auto"):
+    """Intra-chunk SSD + chunk states; (nb, Lc, nh, hp) tiles."""
+    use, interp = _use_pallas(mode)
+    if use:
+        from repro.kernels import ssd_chunk as _ssd
+
+        return _ssd.ssd_chunk(
+            x, a_log, b_mat, c_mat, nh_tile=nh_tile, interpret=interp
+        )
+    ys, ss = jax.vmap(_ref.ssd_chunk_ref)(x, a_log, b_mat, c_mat)
+    return ys, ss

@@ -1,0 +1,133 @@
+"""Paged decode attention over the Beluga pool — Pallas TPU kernel.
+
+This is the device-side embodiment of the paper's load/store thesis: decode
+attention reads KV **directly out of the pool at block granularity through
+the block table** — no staging copy into a contiguous cache, no per-fragment
+transfer requests.  The block table is a scalar-prefetch operand, so the
+pool block for each grid step is selected with a data-dependent BlockSpec
+index_map (the TPU analogue of pointer-chasing through the CXL switch).
+
+Layout: kv_pool (n_blocks, 2, block_tokens, hkv, d) — k/v interleaved per
+block, exactly the pool payload written by ``kv_gather_write``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar prefetch
+    block_table_ref,  # (b, max_blocks) int32
+    context_lens_ref,  # (b,) int32
+    # blocks
+    q_ref,  # (1, hq, d)
+    kv_ref,  # (1, 2, bt, hkv, d): the pool block for this grid step
+    o_ref,  # (1, hq, d)
+    m_scr,  # (hq, 1) f32
+    l_scr,  # (hq, 1) f32
+    acc_scr,  # (hq, d) f32
+    *,
+    scale: float,
+    block_tokens: int,
+    max_blocks: int,
+    n_groups: int,  # hq // hkv
+):
+    bi = pl.program_id(0)
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = context_lens_ref[bi]
+    n_active = (ctx + block_tokens - 1) // block_tokens
+
+    @pl.when(blk < n_active)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (hq, d)
+        k = kv_ref[0, 0].astype(jnp.float32)  # (bt, hkv, d)
+        v = kv_ref[0, 1].astype(jnp.float32)
+        hq, d = q.shape
+        bt, hkv, _ = k.shape
+        # repeat kv heads to q heads (contiguous GQA grouping)
+        k = jnp.repeat(k, n_groups, axis=1)  # (bt, hq, d)
+        v = jnp.repeat(v, n_groups, axis=1)
+        s = jnp.einsum("hd,thd->ht", q, k)  # (hq, bt)
+        pos = blk * block_tokens + jax.lax.broadcasted_iota(
+            jnp.int32, (hq, bt), 1
+        )
+        s = jnp.where(pos < ctx, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)[:, None]
+        acc_scr[...] = acc_scr[...] * alpha + jnp.einsum("ht,thd->hd", p, v)
+        m_scr[...] = m_new
+
+    @pl.when(blk == max_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jax.Array,  # (b, hq, d)
+    kv_pool: jax.Array,  # (n_blocks, 2, bt, hkv, d)
+    block_table: jax.Array,  # (b, max_blocks) int32 (-1 pad -> clamped)
+    context_lens: jax.Array,  # (b,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, d = q.shape
+    n_blocks, _, bt, hkv, _ = kv_pool.shape
+    max_blocks = block_table.shape[1]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    tbl = jnp.maximum(block_table, 0).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        block_tokens=bt,
+        max_blocks=max_blocks,
+        n_groups=g,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, hq, d), lambda bi, blk, tbl_ref, ctx_ref: (bi, 0, 0)),
+            pl.BlockSpec(
+                (1, 2, bt, hkv, d),
+                # data-dependent pool block selection via the block table
+                lambda bi, blk, tbl_ref, ctx_ref: (tbl_ref[bi, blk], 0, 0, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, hq, d), lambda bi, blk, tbl_ref, ctx_ref: (bi, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        interpret=interpret,
+    )(tbl, context_lens.astype(jnp.int32), q, kv_pool)

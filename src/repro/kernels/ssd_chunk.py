@@ -1,0 +1,92 @@
+"""Mamba-2 SSD intra-chunk kernel — Pallas TPU.
+
+One grid step processes one (batch, chunk) tile entirely in VMEM:
+
+    y[l]   = sum_{m<=l} C_l.B_m * exp(cum_l - cum_m) * x_m      (intra)
+    state  = sum_l exp(cum_last - cum_l) * B_l (x) x_l           (chunk out)
+
+Tiling: the (Lc, Lc) decay/score matrices live in VMEM per (nh-tile); the
+MXU sees two dots per head tile (C.B^T and the masked-decay matmul against
+x). The inter-chunk recurrence stays in jnp (`jax.lax.associative_scan`) —
+it is O(nc) tiny state math and static (counted correctly by the roofline
+analyzer), exactly the split recommended by the SSD paper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    x_ref,  # (1, Lc, nh_t, hp)   dt-scaled inputs
+    a_ref,  # (1, Lc, nh_t)       per-step log decay
+    b_ref,  # (1, Lc, nh_t, n)
+    c_ref,  # (1, Lc, nh_t, n)
+    y_ref,  # (1, Lc, nh_t, hp)
+    s_ref,  # (1, nh_t, n, hp)    chunk-final state
+    *,
+    chunk: int,
+):
+    x = x_ref[0].astype(jnp.float32)  # (Lc, nh, hp)
+    a = a_ref[0].astype(jnp.float32)  # (Lc, nh)
+    b = b_ref[0].astype(jnp.float32)  # (Lc, nh, n)
+    c = c_ref[0].astype(jnp.float32)
+
+    cum = jnp.cumsum(a, axis=0)  # (Lc, nh)
+    seg = cum[:, None, :] - cum[None, :, :]  # (Lc, Lc, nh)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    mi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = li >= mi
+    decay = jnp.where(causal[..., None], jnp.exp(seg), 0.0)  # (Lc, Lc, nh)
+
+    scores = jnp.einsum("lhn,mhn->lmh", c, b)  # (Lc, Lc, nh)
+    y = jnp.einsum("lmh,mhp->lhp", scores * decay, x)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1:, :] - cum)  # (Lc, nh)
+    state = jnp.einsum("lhn,lh,lhp->hnp", b, decay_to_end, x)
+    s_ref[0] = state.astype(s_ref.dtype)
+
+
+def ssd_chunk(
+    x: jax.Array,  # (nb, Lc, nh, hp)  (nb = batch*n_chunks tiles)
+    a_log: jax.Array,  # (nb, Lc, nh)
+    b_mat: jax.Array,  # (nb, Lc, nh, n)
+    c_mat: jax.Array,  # (nb, Lc, nh, n)
+    *,
+    nh_tile: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y_intra (nb, Lc, nh, hp), states (nb, nh, n, hp))."""
+    nb, lc, nh, hp = x.shape
+    n = b_mat.shape[-1]
+    nh_tile = min(nh_tile, nh)
+    assert nh % nh_tile == 0, (nh, nh_tile)
+    grid = (nb, nh // nh_tile)
+
+    kernel = functools.partial(_kernel, chunk=lc)
+    y, s = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, lc, nh_tile, hp), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, lc, nh_tile), lambda i, h: (i, 0, h)),
+            pl.BlockSpec((1, lc, nh_tile, n), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, lc, nh_tile, n), lambda i, h: (i, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, lc, nh_tile, hp), lambda i, h: (i, 0, h, 0)),
+            pl.BlockSpec((1, nh_tile, n, hp), lambda i, h: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, lc, nh, hp), jnp.float32),
+            jax.ShapeDtypeStruct((nb, nh, n, hp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, a_log, b_mat, c_mat)
+    return y, s

@@ -1,0 +1,95 @@
+"""Device-tier paged KV cache: block allocator + per-sequence block tables.
+
+vLLM-style PagedAttention bookkeeping for ONE engine instance:
+  * fixed pool of HBM slots (16-token blocks by default);
+  * per-sequence block tables (slot lists);
+  * refcounted intra-instance prefix sharing (copy-on-extend);
+  * LRU free-slot reuse.
+
+The actual KV payloads live in per-layer device arrays owned by the model
+runner; this class owns the *slot* arithmetic only, so the same allocator
+drives both the real CPU model runner and the simulated cluster engines.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class OutOfHbmBlocks(RuntimeError):
+    pass
+
+
+@dataclass
+class HbmBlock:
+    slot: int
+    refcount: int = 0
+    # identity of the content for intra-instance sharing
+    key: bytes | None = None
+
+
+class HbmPagedCache:
+    def __init__(self, n_slots: int, block_tokens: int = 16):
+        self.n_slots = n_slots
+        self.block_tokens = block_tokens
+        self.blocks = [HbmBlock(slot=i) for i in range(n_slots)]
+        self._free: list[int] = list(range(n_slots))
+        self._by_key: dict[bytes, int] = {}
+        self.seq_tables: dict[str, list[int]] = {}
+        self.alloc_count = 0
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def lookup_shared(self, key: bytes) -> int | None:
+        """Intra-instance prefix block reuse (no transfer needed at all)."""
+        slot = self._by_key.get(key)
+        if slot is not None:
+            self.blocks[slot].refcount += 1
+        return slot
+
+    def allocate(self, n: int, keys: list[bytes] | None = None) -> list[int]:
+        if len(self._free) < n:
+            raise OutOfHbmBlocks(f"need {n} slots, have {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        for i, slot in enumerate(out):
+            b = self.blocks[slot]
+            b.refcount = 1
+            b.key = keys[i] if keys else None
+            if b.key is not None:
+                self._by_key[b.key] = slot
+        self.alloc_count += n
+        return out
+
+    def release(self, slots: list[int]) -> None:
+        for slot in slots:
+            b = self.blocks[slot]
+            b.refcount -= 1
+            assert b.refcount >= 0, f"double free of HBM slot {slot}"
+            if b.refcount == 0:
+                if b.key is not None:
+                    self._by_key.pop(b.key, None)
+                    b.key = None
+                self._free.append(slot)
+
+    # ------------------------------------------------------------------
+    def register_sequence(self, seq_id: str, slots: list[int]) -> None:
+        self.seq_tables[seq_id] = list(slots)
+
+    def extend_sequence(self, seq_id: str, n_new_tokens: int, seq_len: int) -> list[int]:
+        """Ensure the table covers seq_len + n_new_tokens; allocate as needed."""
+        table = self.seq_tables[seq_id]
+        need = -(-(seq_len + n_new_tokens) // self.block_tokens)
+        new = []
+        if need > len(table):
+            new = self.allocate(need - len(table))
+            table.extend(new)
+        return new
+
+    def finish_sequence(self, seq_id: str) -> None:
+        table = self.seq_tables.pop(seq_id, [])
+        self.release(table)
+
+    def table(self, seq_id: str) -> list[int]:
+        return self.seq_tables[seq_id]

@@ -1,0 +1,186 @@
+"""Two-tier KVCache manager: HBM paged cache <-> Beluga pool (paper §6).
+
+Per-engine-instance object orchestrating the paper's full KVCache flow:
+
+  new request  -> GlobalIndex.match_prefix (via CXL-RPC in the cluster sim)
+               -> hit blocks: scatter-read pool -> HBM slots (TransferEngine)
+               -> miss tokens: prefill computes them -> gather-write to pool
+               -> publish (key, block, epoch) in the index
+  decode       -> paged attention over HBM slots (device kernel)
+  eviction     -> HBM slots recycled per-sequence; pool blocks LRU-evicted
+                  by the index when the pool fills
+
+Straggler mitigation (fetch-vs-recompute cutover): if the modeled fetch
+latency for the hit prefix exceeds ``recompute_cutover`` x the estimated
+recompute time, the manager *recomputes* instead of waiting on a slow/
+contended pool — bounding tail latency under pool pressure (§6.3 story).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.index import GlobalIndex
+from repro.core.pool import BelugaPool, OutOfPoolMemory
+from repro.core.transfer import TransferEngine
+from repro.kvcache.hbm_cache import HbmPagedCache, OutOfHbmBlocks
+
+
+@dataclass
+class FetchPlan:
+    n_hit_tokens: int
+    n_miss_tokens: int
+    hit_blocks: list[tuple[bytes, int, int]]  # (key, block_id, epoch)
+    fetch_latency: float  # modeled
+    recompute: bool  # cutover decision
+
+
+@dataclass
+class ManagerStats:
+    prefix_hits_tokens: int = 0
+    prefix_miss_tokens: int = 0
+    fetches: int = 0
+    writebacks: int = 0
+    recompute_cutovers: int = 0
+    pool_evictions: int = 0
+
+
+class KVCacheManager:
+    def __init__(
+        self,
+        pool: BelugaPool,
+        index: GlobalIndex,
+        hbm: HbmPagedCache,
+        transfer: TransferEngine,
+        recompute_cutover: float | None = None,
+        prefill_tok_per_s: float = 8000.0,
+    ):
+        self.pool = pool
+        self.index = index
+        self.hbm = hbm
+        self.transfer = transfer
+        self.recompute_cutover = recompute_cutover
+        self.prefill_tok_per_s = prefill_tok_per_s
+        self.stats = ManagerStats()
+
+    # ------------------------------------------------------------------
+    def plan_fetch(self, tokens: list[int]) -> FetchPlan:
+        """Prefix match + fetch-vs-recompute decision."""
+        bt = self.pool.layout.block_tokens
+        hits = self.index.match_prefix(tokens)
+        n_hit = len(hits) * bt
+        n_miss = len(tokens) - n_hit
+        # modeled fetch latency for the hit prefix (one fused kernel)
+        t0 = self.transfer.stats.modeled_read_s
+        lat = 0.0
+        if hits:
+            lat = self._fetch_latency(len(hits))
+        recompute_time = n_hit / self.prefill_tok_per_s
+        # straggler mitigation (beyond-paper): recompute instead of waiting
+        # on a fetch slower than `cutover x` the recompute time. Disabled by
+        # default so the RDMA baseline behaves like MoonCake (Fig. 13c).
+        cutover = (
+            self.recompute_cutover is not None
+            and bool(hits)
+            and lat > self.recompute_cutover * max(recompute_time, 1e-9)
+        )
+        if cutover:
+            self.stats.recompute_cutovers += 1
+            hits, n_hit, n_miss = [], 0, len(tokens)
+        self.stats.prefix_hits_tokens += n_hit
+        self.stats.prefix_miss_tokens += max(0, n_miss)
+        return FetchPlan(n_hit, max(0, n_miss), hits, lat, cutover)
+
+    def _fetch_latency(self, n_blocks: int) -> float:
+        import math
+
+        from repro.core import fabric
+
+        lay = self.pool.layout
+        size = n_blocks * lay.block_bytes
+        nfrag = n_blocks * lay.n_fragments
+        if self.transfer.mode == "beluga":
+            return fabric.gpu_transfer_latency(
+                size, nfrag, method="fused_kernel", c=self.transfer.constants
+            )
+        t = fabric.rdma_transfer_latency(
+            size, nfrag, gpu_side=True, c=self.transfer.constants
+        )
+        # LMCache-style super-block staging cost (alloc + CPU copies)
+        sbt = max(self.transfer.super_block_tokens, lay.block_tokens)
+        n_super = math.ceil(n_blocks * lay.block_tokens / sbt)
+        return t + n_super * self.transfer.constants.rdma_sw_per_superblock
+
+    # ------------------------------------------------------------------
+    def fetch_into_hbm(self, seq_id: str, plan: FetchPlan) -> list[int]:
+        """Scatter-read hit blocks into freshly allocated HBM slots."""
+        if not plan.hit_blocks:
+            self.hbm.register_sequence(seq_id, [])
+            return []
+        keys = [k for k, _, _ in plan.hit_blocks]
+        block_ids = [b for _, b, _ in plan.hit_blocks]
+        epochs = [e for _, _, e in plan.hit_blocks]
+        self.pool.retain(block_ids)
+        try:
+            slots = self.hbm.allocate(len(block_ids), keys=keys)
+        except OutOfHbmBlocks:
+            self.pool.release(block_ids)
+            raise
+        try:
+            self.transfer.scatter_read(block_ids, epochs)
+            self.stats.fetches += 1
+        finally:
+            self.pool.release(block_ids)
+        self.hbm.register_sequence(seq_id, slots)
+        return slots
+
+    def writeback(self, seq_id: str, tokens: list[int], kv_payload=None) -> int:
+        """After prefill: gather-write full blocks to the pool + publish.
+
+        Returns the number of blocks written. ``kv_payload`` optionally
+        carries real per-block KV (tests); the cluster sim passes None and
+        only the control plane + modeled latency run.
+        """
+        bt = self.pool.layout.block_tokens
+        keys = self.index.keys_for(tokens)
+        table = self.hbm.seq_tables.get(seq_id, [])
+        # only blocks not already in the pool need writing
+        new_keys = []
+        for i, key in enumerate(keys):
+            e = self.index.lookup(key)
+            if e is None or not self.pool.validate_epoch(e.block_id, e.epoch):
+                new_keys.append((i, key))
+        if not new_keys:
+            return 0
+        try:
+            block_ids = self.pool.allocate(len(new_keys))
+        except OutOfPoolMemory:
+            freed = self.index.evict_lru(len(new_keys) * 2)
+            self.stats.pool_evictions += len(freed)
+            try:
+                block_ids = self.pool.allocate(len(new_keys))
+            except OutOfPoolMemory:
+                return 0  # pool full of referenced blocks: skip offload
+        lay = self.pool.layout
+        if kv_payload is None and self.pool.data is not None:
+            kv_payload = np.zeros(
+                (
+                    len(new_keys),
+                    lay.n_fragments,
+                    lay.block_tokens,
+                    lay.n_kv_heads,
+                    lay.head_dim,
+                ),
+                np.float16,
+            )
+        epochs = self.transfer.gather_write(block_ids, kv_payload)
+        for (i, key), bid, epoch in zip(new_keys, block_ids, epochs):
+            self.index.publish(key, bid, epoch, bt)
+        self.stats.writebacks += 1
+        return len(new_keys)
+
+    # ------------------------------------------------------------------
+    def finish(self, seq_id: str) -> None:
+        self.hbm.finish_sequence(seq_id)

@@ -1,0 +1,633 @@
+"""Post-optimization HLO text analyzer for the roofline report.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts while-loop
+bodies ONCE, so any scan-over-layers model under-reports FLOPs by ~n_layers×
+(verified empirically on this container: a 10-iteration scan of matmuls
+reported 1/10th of the true flops).  This analyzer parses
+``compiled.as_text()`` (the per-device SPMD module) and:
+
+  * multiplies every while body by its ``backend_config.known_trip_count``;
+  * counts dot FLOPs exactly from shapes + contracting dims;
+  * approximates elementwise/reduce FLOPs and transcendentals;
+  * attributes HBM traffic at fusion boundaries (operands + outputs of
+    non-fused ops) — interior ops of a fusion don't touch HBM;
+  * sums collective bytes (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute, incl. async -start forms) by type;
+  * aggregates attribution by ``metadata op_name`` for the perf loop.
+
+All numbers are **per device** (the SPMD module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "not", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "clamp", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "atan2",
+    "is-finite", "popcnt", "stochastic-convert",
+}
+TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "rsqrt", "sqrt", "cbrt", "power", "sine", "cosine", "tan",
+    "erf", "real", "imag",
+}
+ZERO_COST = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "reshape", "transpose", "broadcast", "iota", "copy",
+    "convert", "slice", "dynamic-slice", "dynamic-update-slice", "pad",
+    "concatenate", "reverse", "gather", "scatter", "after-all", "domain",
+    "partition-id", "replica-id", "copy-start", "copy-done", "add-dependency",
+    "optimization-barrier", "rng-get-and-update-state", "rng-bit-generator",
+    "infeed", "outfeed", "send", "send-done", "recv", "recv-done",
+}
+
+# Ops that READ only what they produce (slices/gathers) or WRITE only their
+# update region (in-place DUS/scatter): counting full operand bytes would
+# overstate HBM traffic by the full-buffer/slice ratio (e.g. a chunked
+# attention loop would appear to re-read the whole KV cache every chunk).
+_SLICE_READS = {"slice", "dynamic-slice", "gather"}
+_SLICE_WRITES = {"dynamic-update-slice", "scatter"}
+# No data movement at all (metadata / layout-only). `convert` is free
+# because XLA:CPU's float-normalization pass inserts bf16<->f32 converts of
+# whole buffers that do not exist on TPU (native bf16) — counting them
+# would charge the roofline for a CPU-backend artifact.
+_FREE_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "reshape", "after-all", "domain", "partition-id",
+    "replica-id", "add-dependency", "optimization-barrier", "iota",
+    "convert",
+}
+_ALIAS_OPS = {"convert", "bitcast", "bitcast-convert", "reshape", "copy"}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^\)]*?\)?[\w\[\]\{\},\/ ]*?)\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+)\s*\{")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)=")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _first_shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attributes (raw tail of line)
+    operands: list[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    params: dict[str, str]  # param name -> type str
+    ops: list[Op] = field(default_factory=list)
+    symbols: dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes_accessed: float = 0.0
+    bytes_fused: float = 0.0  # fusion-ideal estimate (TPU-faithful)
+    collective_bytes: float = 0.0
+    coll_by_type: dict = field(default_factory=lambda: defaultdict(float))
+    coll_counts: dict = field(default_factory=lambda: defaultdict(float))
+    attributed_flops: dict = field(default_factory=lambda: defaultdict(float))
+    attributed_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    unknown_trip_loops: int = 0
+
+    def scaled(self, k: float) -> "Cost":
+        c = Cost(
+            self.flops * k, self.transcendentals * k, self.bytes_accessed * k,
+            self.bytes_fused * k, self.collective_bytes * k,
+        )
+        c.coll_by_type = defaultdict(float, {t: v * k for t, v in self.coll_by_type.items()})
+        c.coll_counts = defaultdict(float, {t: v * k for t, v in self.coll_counts.items()})
+        c.attributed_flops = defaultdict(float, {t: v * k for t, v in self.attributed_flops.items()})
+        c.attributed_bytes = defaultdict(float, {t: v * k for t, v in self.attributed_bytes.items()})
+        c.unknown_trip_loops = self.unknown_trip_loops
+        return c
+
+    def add(self, o: "Cost") -> None:
+        self.flops += o.flops
+        self.transcendentals += o.transcendentals
+        self.bytes_accessed += o.bytes_accessed
+        self.bytes_fused += o.bytes_fused
+        self.collective_bytes += o.collective_bytes
+        for t, v in o.coll_by_type.items():
+            self.coll_by_type[t] += v
+        for t, v in o.coll_counts.items():
+            self.coll_counts[t] += v
+        for t, v in o.attributed_flops.items():
+            self.attributed_flops[t] += v
+        for t, v in o.attributed_bytes.items():
+            self.attributed_bytes[t] += v
+        self.unknown_trip_loops += o.unknown_trip_loops
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, Computation] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._fused: set[str] = set()
+        self._applied: set[str] = set()
+        self._classify()
+        self._cache: dict[tuple[str, str], Cost] = {}
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Computation | None = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR_RE.match(line.strip())
+            if hdr and "=" not in line.split("(")[0]:
+                params = {}
+                for pm in re.finditer(r"([\w\.\-]+):\s*([^,\)]+(?:\)[^,]*)?)", hdr.group(3)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(
+                    name=hdr.group(2), is_entry=bool(hdr.group(1)), params=params
+                )
+                cur.symbols.update(params)
+                self.computations[cur.name] = cur
+                if cur.is_entry:
+                    self.entry = cur.name
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                # parameter lines look like ops; also tolerate unparsed lines
+                pm = re.match(
+                    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+parameter\(", line
+                )
+                if pm:
+                    cur.symbols[pm.group(1)] = pm.group(2)
+                continue
+            name, type_str, opcode, rest = m.groups()
+            op = Op(name=name, type_str=type_str, opcode=opcode, rest=rest)
+            # operand names: inside the first balanced paren region
+            depth, end = 1, 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operand_str = rest[:end]
+            op.operands = _OPERAND_RE.findall(operand_str)
+            cur.ops.append(op)
+            cur.symbols[name] = type_str
+
+    def _classify(self) -> None:
+        for comp in self.computations.values():
+            for op in comp.ops:
+                if op.opcode == "fusion":
+                    for cm in re.finditer(r"calls=%?([\w\.\-]+)", op.rest):
+                        self._fused.add(cm.group(1))
+                elif op.opcode in (
+                    "reduce", "reduce-window", "scatter", "sort", "map",
+                    "select-and-scatter", "all-reduce", "reduce-scatter",
+                    "all-reduce-start",
+                ):
+                    for cm in re.finditer(r"(?:to_apply|called_computations)=\{?%?([\w\.\-]+)", op.rest):
+                        self._applied.add(cm.group(1))
+
+    # ------------------------------------------------------------------
+    def analyze(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self._comp_cost(self.entry, traffic=True)
+
+    def _comp_cost(self, comp_name: str, traffic: bool) -> Cost:
+        key = (comp_name, "t" if traffic else "f")
+        if key in self._cache:
+            return self._cache[key]
+        comp = self.computations.get(comp_name)
+        cost = Cost()
+        if comp is None:
+            return cost
+        for op in comp.ops:
+            cost.add(self._op_cost(comp, op, traffic))
+        self._cache[key] = cost
+        return cost
+
+    def _fusion_traffic(self, comp: Computation, op: Op, inner_name: str | None) -> float:
+        """HBM traffic of one fusion op: per-parameter effective reads +
+        effective output write (update-size for DUS-rooted fusions)."""
+        out_b = _shape_bytes(op.type_str)
+        inner = self.computations.get(inner_name) if inner_name else None
+        if inner is not None and all(
+            o.opcode == "parameter" or o.opcode in _ALIAS_OPS for o in inner.ops
+        ):
+            return 0.0  # pure dtype-normalization fusion (CPU bf16 artifact)
+        if inner is None:
+            total = out_b
+            for o in op.operands:
+                t = comp.symbols.get(o)
+                if t:
+                    total += _shape_bytes(t)
+            return total
+        key = ("fparams", inner_name)
+        if key not in self._cache:
+            self._cache[key] = _fusion_param_read_bytes(inner)
+        reads, full = self._cache[key]
+        total = 0.0
+        for i, o in enumerate(op.operands):
+            t = comp.symbols.get(o)
+            if not t:
+                continue
+            if i in full:
+                total += _shape_bytes(t)
+            else:
+                total += reads.get(i, 0.0)
+        # DUS-rooted fusion writes only the update region; walk alias ops
+        # (convert/bitcast/reshape) from the root to find the true producer
+        # (XLA:CPU roots these fusions in a convert of the DUS).
+        by_name = {o.name: o for o in inner.ops}
+        root = inner.ops[-1] if inner.ops else None
+        seen = set()
+        while (
+            root is not None
+            and root.opcode in _ALIAS_OPS
+            and root.operands
+            and root.name not in seen
+        ):
+            seen.add(root.name)
+            root = by_name.get(root.operands[0])
+        if root is not None and root.opcode in _SLICE_WRITES:
+            upd = inner.symbols.get(root.operands[1]) if len(root.operands) > 1 else None
+            total += _shape_bytes(upd) if upd else out_b
+        else:
+            total += out_b
+        return total
+
+    def _collective_operand_bytes(self, comp: Computation, op: Op) -> float:
+        """Collective bytes at the PRE-float-normalization dtype.
+
+        XLA:CPU rewrites every bf16 reduction to f32 (convert -> all-reduce
+        -> convert); TPU reduces native bf16. Counting the f32 operand would
+        double-charge the roofline for a CPU-backend artifact, so when the
+        operand is a convert (or convert-only fusion) of a narrower value we
+        count the narrower width.
+        """
+        total = 0.0
+        defs = {o.name: o for o in comp.ops}
+        for name in op.operands:
+            t = comp.symbols.get(name)
+            if not t:
+                continue
+            b = _shape_bytes(t)
+            producer = defs.get(name)
+            if producer is not None:
+                src = None
+                if producer.opcode == "convert" and producer.operands:
+                    src = comp.symbols.get(producer.operands[0])
+                elif producer.opcode == "fusion":
+                    cm = re.search(r"calls=%?([\w\.\-]+)", producer.rest)
+                    inner = self.computations.get(cm.group(1)) if cm else None
+                    if inner is not None and all(
+                        o.opcode == "parameter" or o.opcode in _ALIAS_OPS
+                        for o in inner.ops
+                    ) and producer.operands:
+                        src = comp.symbols.get(producer.operands[0])
+                if src:
+                    b = min(b, _shape_bytes(src))
+            total += b
+        # consumer side: dot accumulators are f32 on CPU with the convert
+        # AFTER the reduce; if every consumer of this collective immediately
+        # converts to a narrower dtype, the semantic width is the narrower one
+        consumers = [
+            o for o in comp.ops
+            if op.name in o.operands and o.name != op.name
+        ]
+        gte = [o for o in consumers if o.opcode == "get-tuple-element"]
+        if gte:
+            names = {o.name for o in gte}
+            consumers = [
+                o for o in comp.ops if names & set(o.operands)
+            ] or consumers
+        conv_bytes = []
+        for o in consumers:
+            if o.opcode == "convert":
+                conv_bytes.append(_shape_bytes(o.type_str))
+            elif o.opcode == "fusion":
+                cm = re.search(r"calls=%?([\w\.\-]+)", o.rest)
+                inner = self.computations.get(cm.group(1)) if cm else None
+                if inner is not None and all(
+                    x.opcode == "parameter" or x.opcode in _ALIAS_OPS
+                    for x in inner.ops
+                ):
+                    conv_bytes.append(_shape_bytes(o.type_str))
+                else:
+                    conv_bytes = []
+                    break
+            else:
+                conv_bytes = []
+                break
+        if consumers and conv_bytes:
+            total = min(total, float(sum(conv_bytes) / max(len(conv_bytes), 1)))
+        return total
+
+    def _op_cost(self, comp: Computation, op: Op, traffic: bool) -> Cost:
+        c = Cost()
+        oc = op.opcode
+        meta = _op_label(op)
+
+        def operand_bytes() -> int:
+            total = 0
+            for o in op.operands:
+                t = comp.symbols.get(o)
+                if t:
+                    total += _shape_bytes(t)
+            return total
+
+        if oc == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", op.rest)
+            cond = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+            trip_m = _TRIP_RE.search(op.rest)
+            trip = int(trip_m.group(1)) if trip_m else 1
+            if trip_m is None:
+                c.unknown_trip_loops += 1
+            if body:
+                c.add(self._comp_cost(body.group(1), traffic=True).scaled(trip))
+            if cond:
+                c.add(self._comp_cost(cond.group(1), traffic=True).scaled(trip + 1))
+            return c
+
+        if oc == "conditional":
+            branches = re.search(r"branch_computations=\{([^\}]*)\}", op.rest)
+            names = []
+            if branches:
+                names = _OPERAND_RE.findall(branches.group(1))
+            else:
+                tb = re.search(r"true_computation=%?([\w\.\-]+)", op.rest)
+                fb = re.search(r"false_computation=%?([\w\.\-]+)", op.rest)
+                names = [x.group(1) for x in (tb, fb) if x]
+            costs = [self._comp_cost(n, traffic=True) for n in names]
+            if costs:
+                # one branch executes; take the max-flops branch
+                c.add(max(costs, key=lambda x: x.flops))
+            return c
+
+        if oc == "fusion":
+            called = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+            inner_name = called.group(1) if called else None
+            if inner_name:
+                inner = self._comp_cost(inner_name, traffic=False)
+                c.flops += inner.flops
+                c.transcendentals += inner.transcendentals
+                for t, v in inner.attributed_flops.items():
+                    c.attributed_flops[t] += v
+            if traffic:
+                b = self._fusion_traffic(comp, op, inner_name)
+                c.bytes_accessed += b
+                c.bytes_fused += b
+                c.attributed_bytes[meta] += b
+            return c
+
+        if oc == "call":
+            called = re.search(r"to_apply=%?([\w\.\-]+)", op.rest)
+            if called:
+                c.add(self._comp_cost(called.group(1), traffic=traffic))
+            return c
+
+        base = oc.replace("-start", "") if oc.endswith("-start") else oc
+        if base in COLLECTIVES:
+            b = self._collective_operand_bytes(comp, op)
+            c.collective_bytes += b
+            c.coll_by_type[base] += b
+            c.coll_counts[base] += 1
+            if traffic:
+                bb = b + _shape_bytes(op.type_str)
+                c.bytes_accessed += bb
+                c.bytes_fused += bb
+                c.attributed_bytes[meta] += bb
+            # all-reduce applies a reduction computation: count flops ~ elems
+            if base in ("all-reduce", "reduce-scatter"):
+                c.flops += _shape_elems(op.type_str)
+            return c
+        if oc.endswith("-done"):
+            return c
+
+        if oc == "dot":
+            out_elems = _shape_elems(op.type_str)
+            lhs = comp.symbols.get(op.operands[0]) if op.operands else None
+            kdim = 1
+            lcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+            if lhs and lcd and lcd.group(1):
+                dims = _first_shape_dims(lhs)
+                for d in lcd.group(1).split(","):
+                    di = int(d)
+                    if di < len(dims):
+                        kdim *= dims[di]
+            f = 2.0 * out_elems * kdim
+            c.flops += f
+            c.attributed_flops[meta] += f
+        elif oc == "convolution":
+            out_elems = _shape_elems(op.type_str)
+            rhs = comp.symbols.get(op.operands[1]) if len(op.operands) > 1 else None
+            k = 1
+            if rhs:
+                dims = _first_shape_dims(rhs)
+                if dims:
+                    k = 1
+                    for d in dims:
+                        k *= d
+                    # divide by output features (last dim heuristic)
+                    k = max(1, k // max(1, dims[-1]))
+            f = 2.0 * out_elems * k
+            c.flops += f
+            c.attributed_flops[meta] += f
+        elif oc in ("reduce", "reduce-window"):
+            in_elems = 0
+            for o in op.operands[: max(1, len(op.operands) // 2)]:
+                t = comp.symbols.get(o)
+                if t:
+                    in_elems += _shape_elems(t)
+            c.flops += in_elems
+            c.attributed_flops[meta] += in_elems
+        elif oc == "sort":
+            import math as _math
+
+            n = _shape_elems(op.type_str)
+            c.flops += n * max(1.0, _math.log2(max(n, 2)))
+        elif oc in TRANSCENDENTAL:
+            c.transcendentals += _shape_elems(op.type_str)
+        elif oc in ELEMENTWISE:
+            c.flops += _shape_elems(op.type_str)
+        elif oc in ZERO_COST or oc == "custom-call":
+            pass
+        # unknown opcodes: ignore (counted as zero) — keep analyzer robust
+
+        if traffic and oc not in _FREE_BYTES:
+            out_b = _shape_bytes(op.type_str)
+            fusable = oc in ELEMENTWISE or oc in TRANSCENDENTAL or oc in (
+                "broadcast", "transpose",
+            )
+            if oc in _SLICE_READS:
+                b = 2 * out_b  # read slice + write result
+            elif oc in _SLICE_WRITES:
+                # in-place update: traffic ~ the update operand (2nd arg),
+                # not the full buffer
+                upd = 0
+                if len(op.operands) > 1:
+                    t = comp.symbols.get(op.operands[1])
+                    upd = _shape_bytes(t) if t else 0
+                b = 2 * max(upd, 1)
+            else:
+                b = operand_bytes() + out_b
+            c.bytes_accessed += b
+            # fusion-ideal: standalone elementwise chains fuse to zero
+            # incremental HBM traffic on TPU; count everything else
+            if not fusable:
+                c.bytes_fused += b
+            c.attributed_bytes[meta] += b
+        return c
+
+
+def _fusion_param_read_bytes(comp: Computation) -> dict[int, float]:
+    """Effective read bytes per parameter index of a fused computation.
+
+    A parameter consumed ONLY by slice-like ops contributes the slice
+    output sizes (what the fusion actually reads), not its full extent —
+    this is what makes chunked-attention loops and scan-carried caches
+    cost what the hardware would pay, not |buffer| per iteration.
+    """
+    param_idx: dict[str, int] = {}
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            # _OP_RE leaves rest = "<idx>)..." after consuming "parameter("
+            m = re.match(r"\s*(\d+)\)", op.rest)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+    # alias map: convert/bitcast/reshape/copy of a param is still the param
+    alias: dict[str, str] = {}
+
+    def resolve(name: str) -> str | None:
+        seen = set()
+        while name in alias and name not in seen:
+            seen.add(name)
+            name = alias[name]
+        return name if name in param_idx else None
+
+    for op in comp.ops:
+        if op.opcode in _ALIAS_OPS and op.operands:
+            alias[op.name] = op.operands[0]
+
+    reads: dict[int, float] = {i: 0.0 for i in param_idx.values()}
+    full: set[int] = set()
+    for op in comp.ops:
+        if op.opcode == "parameter" or op.opcode in _ALIAS_OPS:
+            continue
+        for pos, operand in enumerate(op.operands):
+            root = resolve(operand)
+            if root is None:
+                continue
+            i = param_idx[root]
+            if op.opcode in _SLICE_READS and pos == 0:
+                reads[i] += _shape_bytes(op.type_str)
+            elif op.opcode in _SLICE_WRITES and pos == 0:
+                # pass-through buffer being updated in place: reads ~ update
+                upd = comp.symbols.get(op.operands[1]) if len(op.operands) > 1 else None
+                reads[i] += _shape_bytes(upd) if upd else 0.0
+            elif op.opcode in ("dynamic-slice", "dynamic-update-slice", "gather", "scatter"):
+                pass  # index operands: negligible
+            else:
+                full.add(i)
+    return reads, full
+
+
+def _op_label(op: Op) -> str:
+    m = re.search(r'op_name="([^"]*)"', op.rest)
+    if m:
+        label = m.group(1)
+        # strip jit wrapper + trailing uniquifiers for aggregation
+        label = re.sub(r"^jit\([^)]*\)/", "", label)
+        parts = label.split("/")
+        return "/".join(parts[:4])
+    return op.opcode
+
+
+# ---------------------------------------------------------------------------
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    a = HloAnalyzer(hlo_text)
+    c = a.analyze()
+    top_f = sorted(c.attributed_flops.items(), key=lambda kv: -kv[1])[:15]
+    top_b = sorted(c.attributed_bytes.items(), key=lambda kv: -kv[1])[:15]
+    return {
+        "flops": c.flops,
+        "transcendentals": c.transcendentals,
+        "bytes_accessed": c.bytes_accessed,
+        "bytes_fused": c.bytes_fused,
+        "collective_bytes": c.collective_bytes,
+        "collectives_by_type": dict(c.coll_by_type),
+        "collective_counts": dict(c.coll_counts),
+        "top_flops": top_f,
+        "top_bytes": top_b,
+        "unknown_trip_loops": c.unknown_trip_loops,
+    }

@@ -1,0 +1,186 @@
+"""Roofline report from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell:
+    compute term    = flops_per_dev / PEAK_FLOPS_BF16
+    memory term     = bytes_per_dev / HBM_BW
+    collective term = collective_bytes_per_dev / ICI_BW
+(all per-chip — the SPMD HLO module analyzed is the per-device program).
+
+Also: MODEL_FLOPS / HLO_FLOPS usefulness ratio, dominant bottleneck, and a
+one-line "what would move the dominant term" note per cell.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_PER_CHIP, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def load_records(out_dir: str = "results/dryrun", tag: str | None = "baseline"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if tag is not None and r.get("tag", "baseline") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def useful_bytes_per_dev(rec: dict) -> float:
+    """Minimal HBM traffic the step fundamentally requires, per chip.
+
+    train:   read+write params (bf16) + read+write adam moments (fp32) +
+             grads (bf16) — activation traffic excluded (optimizable).
+    prefill: read params once + write the KV/SSM cache.
+    decode:  read params once + read the full KV cache (+SSM states).
+    """
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n = rec["n_chips"]
+    n_params_loc = cfg.param_count() / n
+    b, s = shape.global_batch, shape.seq_len
+    kv_loc = cfg.kv_bytes_per_token() * b * s / n
+    ssm_loc = cfg.ssm_state_bytes() * b / n
+    if shape.kind == "train":
+        return n_params_loc * (2 + 2 + 2 + 16)  # w r/w, grads, m+v r/w
+    if shape.kind == "prefill":
+        return n_params_loc * 2 + kv_loc + ssm_loc
+    return n_params_loc * 2 + kv_loc + ssm_loc  # decode reads the cache
+
+
+def roofline_terms(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    ha = rec["hlo_analysis"]
+    n = rec["n_chips"]
+    compute = ha["flops"] / PEAK_FLOPS_BF16
+    # fusion-ideal bytes when present (TPU-faithful); raw as-compiled kept too
+    mem_bytes = ha.get("bytes_fused", ha["bytes_accessed"])
+    memory = mem_bytes / HBM_BW
+    collective = ha["collective_bytes"] / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+    model_flops_dev = rec["model_flops_total"] / n
+    useful_ratio = model_flops_dev / max(ha["flops"], 1.0)
+    # roofline fraction: time the step fundamentally needs (max of useful
+    # compute and useful memory) / modeled bottleneck time — the score.
+    useful_time = max(
+        model_flops_dev / PEAK_FLOPS_BF16,
+        useful_bytes_per_dev(rec) / HBM_BW,
+    )
+    frac = useful_time / max(bound, 1e-12)
+    live = rec.get("memory_analysis", {}).get("live_bytes_per_device")
+    return {
+        "cell": rec["cell"],
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+        "model_flops_ratio": useful_ratio,
+        "roofline_frac": frac,
+        "bytes_per_dev": mem_bytes,
+        "bytes_as_compiled_per_dev": ha["bytes_accessed"],
+        "flops_per_dev": ha["flops"],
+        "coll_bytes_per_dev": ha["collective_bytes"],
+        "coll_by_type": ha.get("collectives_by_type", {}),
+        "live_bytes_per_dev": live,
+        "fits_hbm": (live is not None and live <= HBM_PER_CHIP),
+        "top_flops": ha.get("top_flops", [])[:5],
+        "top_bytes": ha.get("top_bytes", [])[:5],
+    }
+
+
+HINTS = {
+    "compute": "shave non-model FLOPs: causal block-skip in attention "
+    "(Pallas kernel), cheaper remat policy, leaner MoE dispatch",
+    "memory": "shrink HBM traffic: fuse/flash attention tiles, narrower "
+    "remat, KV in fp8, avoid staging copies of the cache",
+    "collective": "re-shard to cut collective bytes: overlap DP all-reduce, "
+    "reduce-scatter grads, keep activations model-sharded longer",
+}
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = (
+        "| cell | compute (s) | memory (s) | collective (s) | dominant | "
+        "useful/HLO | roofline frac | live GiB/chip |\n"
+        "|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in rows:
+        live = (
+            f"{r['live_bytes_per_dev']/2**30:.2f}"
+            if r["live_bytes_per_dev"] is not None
+            else "?"
+        )
+        lines.append(
+            f"| {r['cell']} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | **{r['dominant']}** | "
+            f"{r['model_flops_ratio']:.2f} | {r['roofline_frac']:.3f} | {live} |"
+        )
+    return hdr + "\n".join(lines) + "\n"
+
+
+def pick_hillclimb_cells(rows: list[dict]) -> dict:
+    """worst roofline fraction, most collective-bound, most paper-representative.
+
+    Worst-fraction is restricted to >=90B-param cells: tiny archs at frac~0
+    are bounded by fixed overheads, not by anything a sharding/kernel change
+    can move, so hillclimbing them wastes the budget (see EXPERIMENTS.md).
+    """
+    from repro.configs.registry import get_config
+
+    single = [r for r in rows if r["mesh"] == "pod16x16"]
+    big = [r for r in single if get_config(r["arch"]).param_count() > 9e10]
+    worst = min(big or single, key=lambda r: r["roofline_frac"])
+    coll = max(
+        single,
+        key=lambda r: r["collective_s"]
+        / max(r["compute_s"], r["memory_s"], 1e-12),
+    )
+    # paper-representative: decode with a big KV cache (the KVCache read path
+    # Beluga optimizes) on the paper-scale dense GQA arch
+    reps = [
+        r
+        for r in single
+        if r["shape"] == "decode_32k" and r["arch"] in ("command-r-35b", "internvl2-26b")
+    ]
+    rep = reps[0] if reps else min(
+        (r for r in single if r["shape"] == "decode_32k"),
+        key=lambda r: r["roofline_frac"],
+    )
+    return {"worst_fraction": worst, "most_collective": coll, "paper_representative": rep}
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    rows = [t for r in load_records(args.out, args.tag) if (t := roofline_terms(r))]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    print(render_markdown(rows))
+    picks = pick_hillclimb_cells(rows)
+    print("hillclimb picks:")
+    for k, v in picks.items():
+        print(
+            f"  {k}: {v['cell']} (dominant={v['dominant']}, frac={v['roofline_frac']:.3f})"
+        )
+        print(f"    hint: {HINTS[v['dominant']]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Serving launcher: real tokens on CPU with the full Beluga KVCache stack.
+
+``python -m repro.launch.serve --arch olmo-1b --requests 8``
+
+Runs a reduced-config model end to end: prompts -> prefix-index lookup ->
+pool fetch (kv_scatter_read) or prefill -> pool writeback (kv_gather_write)
+-> batched greedy decode. Demonstrates real cross-request KV reuse through
+the shared pool: the second batch of identical prompts skips prefill.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.serving.real_runner import RealEngine
+
+    eng = RealEngine.create(args.arch)
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    shared_prefix = rng.integers(0, eng.cfg.vocab_size, size=32).tolist()
+    prompts = [
+        shared_prefix + rng.integers(0, eng.cfg.vocab_size,
+                                     size=args.prompt_len - 32).tolist()
+        for _ in range(args.requests)
+    ]
+    # duplicate a couple of prompts to exercise full-prefix hits
+    prompts += prompts[:2]
+
+    t0 = time.time()
+    for i, p in enumerate(prompts):
+        out, info = eng.generate(p, max_new=args.gen)
+        print(
+            f"req {i}: hit {info['hit_tokens']}/{len(p)} prompt tokens, "
+            f"ttft {info['ttft_s']*1e3:.1f} ms, {len(out)} tokens -> {out[:8]}..."
+        )
+    print(f"total {time.time()-t0:.1f}s; index: {eng.index.stats()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Cell builders: (arch × shape × mesh) -> jittable fn + input specs/shardings.
+
+Shared by the multi-pod dry-run (lower+compile only) and the real launchers.
+A "cell" lowers one of:
+
+  train_4k     -> train_step  (loss + grad + AdamW update, remat, bf16 grads)
+  prefill_32k  -> prefill_fn  (full prefill, emits populated KV/SSM cache)
+  decode_32k   -> decode_fn   (one token, KV cache of seq_len)
+  long_500k    -> decode_fn   (sub-quadratic archs only)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ModelConfig,
+    RuntimeConfig,
+    ShapeConfig,
+    shape_applicable,
+)
+from repro.distributed import sharding as shlib
+from repro.distributed.sharding import AxisRules
+from repro.models.model import Model
+from repro.training import optimizer as opt_lib
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import make_train_step
+
+
+@dataclass
+class Cell:
+    name: str
+    fn: Callable
+    args_sds: tuple  # ShapeDtypeStructs to lower against
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    notes: str = ""
+
+
+def batch_shardings(model: Model, shape: ShapeConfig) -> dict:
+    return model.input_shardings(shape)
+
+
+def _decode_axes(rules: AxisRules, shape: ShapeConfig, runtime: RuntimeConfig):
+    """(cache kv logical axes, shard_map kv axes, shard_map batch axes)."""
+    multi_pod = "pod" in rules.mesh.axis_names
+    if runtime.decode_kv == "replicated":
+        return ("batch", None), (), ("pod", "data") if multi_pod else ("data",)
+    if shape.name == "long_500k" or shape.global_batch < rules.dp:
+        # batch unshardable: interleave KV seq across every mesh axis
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return (None, "kv_seq_long"), axes, ()
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return ("batch", "kv_seq"), ("model",), batch_axes
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    rules: AxisRules,
+    runtime: RuntimeConfig | None = None,
+    opt_cfg: OptimizerConfig | None = None,
+) -> Cell:
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell not applicable: {why}")
+    runtime = runtime or RuntimeConfig()
+    opt_cfg = opt_cfg or OptimizerConfig()
+    if "pod" in rules.mesh.axis_names:
+        # extend long-decode interleaving across the pod axis on multi-pod
+        rules = dataclasses.replace(
+            rules, rules={**rules.rules, "kv_seq_long": ("pod", "data", "model")}
+        )
+    if runtime.rowp_bf16_psum:
+        rules = dataclasses.replace(rules, rowp_bf16=True)
+    model = Model(cfg, runtime, rules)
+
+    param_specs = model.param_specs()
+    params_sds = shlib.tree_shape_dtype(param_specs)
+    params_sh = shlib.tree_shardings(param_specs, rules)
+    batch_sds = model.input_specs(shape)
+    batch_sh = batch_shardings(model, shape)
+
+    if shape.kind == "train":
+        opt_specs = opt_lib.opt_state_specs(opt_cfg, param_specs)
+        opt_sds = shlib.tree_shape_dtype(opt_specs)
+        opt_sh = shlib.tree_shardings(opt_specs, rules)
+        fn = make_train_step(model, opt_cfg)
+        return Cell(
+            name=f"{cfg.name}.{shape.name}",
+            fn=fn,
+            args_sds=(params_sds, opt_sds, batch_sds),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+            notes=f"train_step remat={runtime.remat} "
+            f"grad_compression={opt_cfg.grad_compression}",
+        )
+
+    if shape.kind == "prefill":
+        fn = functools.partial(model.prefill_fn, max_len=shape.seq_len)
+        return Cell(
+            name=f"{cfg.name}.{shape.name}",
+            fn=fn,
+            args_sds=(params_sds, batch_sds),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=None,
+            notes="prefill_fn -> (last logits, populated cache)",
+        )
+
+    # decode
+    kv_axes, shard_axes, b_axes = _decode_axes(rules, shape, runtime)
+    cache_specs = model.cache_specs(shape.global_batch, shape.seq_len, kv_axes)
+    cache_sds = shlib.tree_shape_dtype(cache_specs)
+    cache_sh = shlib.tree_shardings(cache_specs, rules)
+    tok_sh = batch_sh["tokens"]
+    pos_sh = batch_sh["pos"]
+    fn = functools.partial(
+        model.decode_fn, kv_shard_axes=shard_axes, kv_batch_axes=b_axes
+    )
+    return Cell(
+        name=f"{cfg.name}.{shape.name}",
+        fn=fn,
+        args_sds=(params_sds, cache_sds, batch_sds["tokens"], batch_sds["pos"]),
+        in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+        notes=f"decode_fn kv={runtime.decode_kv} shard_axes={shard_axes}",
+    )
+
+
+def lower_cell(cell: Cell, mesh) -> Any:
+    with mesh:
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        )
+        return jitted.lower(*cell.args_sds)

@@ -1,0 +1,270 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked scan + decode step.
+
+Follows the minimal SSD formulation of arXiv:2405.21060:
+  h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t h_t + D x_t
+computed chunkwise: intra-chunk quadratic attention-like term + inter-chunk
+state recurrence via ``jax.lax.associative_scan`` (static tree — counted
+correctly by the roofline HLO analyzer, unlike data-dependent while loops).
+
+TP sharding (Megatron-Mamba style): z/x/dt projections and heads sharded over
+``model``; B/C (n_groups=1) replicated; out_proj row-parallel (+psum).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import AxisRules, ParamSpec, constrain
+from repro.models.layers import rms_norm
+
+
+def ssm_dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    di = ssm.d_inner(cfg.d_model)
+    nh = ssm.n_heads(cfg.d_model)
+    conv_dim = di + 2 * ssm.n_groups * ssm.d_state
+    return di, nh, conv_dim
+
+
+def mamba_params(cfg: ModelConfig, tp: int) -> dict:
+    d = cfg.d_model
+    ssm = cfg.ssm
+    di, nh, conv_dim = ssm_dims(cfg)
+    g, n, ker = ssm.n_groups, ssm.d_state, ssm.d_conv
+    dt = cfg.dtype
+    return {
+        "wz": ParamSpec((d, di), dt, ("embed", "ssm_inner")),
+        "wx": ParamSpec((d, di), dt, ("embed", "ssm_inner")),
+        "wBC": ParamSpec((d, 2 * g * n), dt, ("embed", "conv_dim")),
+        "wdt": ParamSpec((d, nh), dt, ("embed", "ssm_inner")),
+        "conv_x": ParamSpec((ker, di), dt, (None, "ssm_inner")),
+        "conv_BC": ParamSpec((ker, 2 * g * n), dt, (None, "conv_dim")),
+        "conv_bias_x": ParamSpec((di,), dt, ("ssm_inner",), init="zeros"),
+        "conv_bias_BC": ParamSpec((2 * g * n,), dt, ("conv_dim",), init="zeros"),
+        "A_log": ParamSpec((nh,), "float32", ("ssm_inner",), init="ssm_a"),
+        "D": ParamSpec((nh,), "float32", ("ssm_inner",), init="ones"),
+        "dt_bias": ParamSpec((nh,), "float32", ("ssm_inner",), init="ssm_dt"),
+        "norm_w": ParamSpec((di,), dt, ("ssm_inner",), init="ones"),
+        "out": ParamSpec((di, d), dt, ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (b, s, c); w: (k, c)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum of shifted slices — small k (4), avoids conv lowering issues
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for i in range(k):
+        out = out + xp[:, i : i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssd_chunked(x, a_log, b_mat, c_mat, chunk: int):
+    """Chunked SSD.
+
+    x:     (b, s, nh, hp)   already multiplied by dt
+    a_log: (b, s, nh)       log decay per step (dt * A, <= 0)
+    b_mat: (b, s, g, n)
+    c_mat: (b, s, g, n)
+    returns y: (b, s, nh, hp)
+    """
+    bsz, s_in, nh, hp = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = nh // g
+    s = -(-s_in // chunk) * chunk
+    if s != s_in:
+        # pad with zero dt-scaled inputs and zero log-decay (a=1): the padded
+        # tail neither contributes to nor decays the running state.
+        pad = ((0, 0), (0, s - s_in), (0, 0), (0, 0))
+        x = jnp.pad(x, pad)
+        a_log = jnp.pad(a_log, ((0, 0), (0, s - s_in), (0, 0)))
+        b_mat = jnp.pad(b_mat, pad)
+        c_mat = jnp.pad(c_mat, pad)
+    nc = s // chunk
+
+    xr = x.reshape(bsz, nc, chunk, nh, hp)
+    ar = a_log.reshape(bsz, nc, chunk, nh).astype(jnp.float32)
+    br = b_mat.reshape(bsz, nc, chunk, g, n)
+    cr = c_mat.reshape(bsz, nc, chunk, g, n)
+    # broadcast groups to heads
+    bh = jnp.broadcast_to(
+        br[:, :, :, :, None, :], (bsz, nc, chunk, g, rep, n)
+    ).reshape(bsz, nc, chunk, nh, n)
+    ch = jnp.broadcast_to(
+        cr[:, :, :, :, None, :], (bsz, nc, chunk, g, rep, n)
+    ).reshape(bsz, nc, chunk, nh, n)
+
+    cum = jnp.cumsum(ar, axis=2)  # (b, nc, L, nh) prefix log-decay incl. self
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # L[i, j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b, nc, L, L, nh)
+    li = jnp.arange(chunk)
+    causal = li[:, None] >= li[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bzlhn,bzmhn->bzlmh", ch, bh,
+                        preferred_element_type=jnp.float32)
+    y_intra = jnp.einsum(
+        "bzlmh,bzlmh,bzmhp->bzlhp", scores, decay,
+        xr.astype(jnp.float32),
+    )
+
+    # ---- chunk-final states ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b, nc, L, nh)
+    states = jnp.einsum(
+        "bzlhn,bzlh,bzlhp->bzhnp", bh.astype(jnp.float32), decay_to_end,
+        xr.astype(jnp.float32),
+    )  # (b, nc, nh, n, hp)
+
+    # ---- inter-chunk recurrence over nc (associative scan) ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b, nc, nh) total decay per chunk
+
+    def combine(lhs, rhs):
+        d1, s1 = lhs
+        d2, s2 = rhs
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    run_decay, run_states = jax.lax.associative_scan(
+        combine, (chunk_decay, states), axis=1
+    )
+    # state entering chunk z = running state after chunk z-1
+    prev_states = jnp.concatenate(
+        [jnp.zeros_like(run_states[:, :1]), run_states[:, :-1]], axis=1
+    )
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(cum)  # decay from chunk start to position (incl. self)
+    y_inter = jnp.einsum(
+        "bzlhn,bzlh,bzhnp->bzlhp", ch.astype(jnp.float32), in_decay, prev_states
+    )
+
+    y = (y_intra + y_inter).reshape(bsz, s, nh, hp)[:, :s_in]
+    final_state = run_states[:, -1]  # (b, nh, n, hp)
+    return y, final_state
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,  # (b, s, d)
+    cfg: ModelConfig,
+    rules: AxisRules | None,
+    return_state: bool = False,
+):
+    """Full-sequence SSD pass (train / prefill)."""
+    ssm = cfg.ssm
+    di, nh, conv_dim = ssm_dims(cfg)
+    g, n = ssm.n_groups, ssm.d_state
+    hp = ssm.head_dim
+    bsz, s, d = x.shape
+
+    z = x @ p["wz"]  # (b, s, di)
+    xi = x @ p["wx"]
+    bc = x @ p["wBC"]  # (b, s, 2gn)
+    dt_raw = x @ p["wdt"]  # (b, s, nh)
+    if rules is not None:
+        z = constrain(z, rules, ("batch", "seq", "act_mlp"))
+        xi = constrain(xi, rules, ("batch", "seq", "act_mlp"))
+
+    # raw pre-conv tail -> decode conv state (last d_conv-1 inputs)
+    if return_state:
+        xbc_raw = jnp.concatenate([xi, bc], axis=-1)
+        conv_tail = xbc_raw[:, s - (ssm.d_conv - 1) :, :]  # (b, k-1, conv_dim)
+
+    xi = _causal_conv(xi, p["conv_x"], p["conv_bias_x"])
+    bc = _causal_conv(bc, p["conv_BC"], p["conv_bias_BC"])
+    xi = jax.nn.silu(xi)
+    bc = jax.nn.silu(bc)
+    b_mat = bc[..., : g * n].reshape(bsz, s, g, n)
+    c_mat = bc[..., g * n :].reshape(bsz, s, g, n)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b,s,nh)
+    a = -jnp.exp(p["A_log"])  # (nh,) negative
+    a_log_step = dt * a  # (b, s, nh)
+
+    xh = xi.reshape(bsz, s, nh, hp)
+    y, final_state = _ssd_chunked(
+        xh.astype(jnp.float32) * dt[..., None], a_log_step, b_mat, c_mat,
+        chunk=min(ssm.chunk_size, s),
+    )
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+
+    # gated RMSNorm then out projection (row-parallel)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    if rules is not None and rules.rowp_bf16:
+        from repro.distributed.collectives import row_parallel_matmul
+
+        out = row_parallel_matmul(y, p["out"], rules)
+    else:
+        out = y @ p["out"]
+    if rules is not None:
+        out = constrain(out, rules, ("batch", "seq", "act_embed"))
+    if return_state:
+        return out, final_state, conv_tail
+    return out
+
+
+def mamba_decode(
+    p: dict,
+    x: jax.Array,  # (b, 1, d)
+    state: jax.Array,  # (b, nh, n, hp)
+    conv_state: jax.Array,  # (b, k-1, conv_dim)
+    cfg: ModelConfig,
+    rules: AxisRules | None,
+):
+    """Single-token recurrent step."""
+    ssm = cfg.ssm
+    di, nh, conv_dim = ssm_dims(cfg)
+    g, n = ssm.n_groups, ssm.d_state
+    hp = ssm.head_dim
+    bsz = x.shape[0]
+    xt = x[:, 0]  # (b, d)
+
+    z = xt @ p["wz"]
+    xi = xt @ p["wx"]
+    bc = xt @ p["wBC"]
+    dt_raw = xt @ p["wdt"]
+
+    # conv via cached window
+    xbc = jnp.concatenate([xi, bc], axis=-1)  # (b, conv_dim)
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (b,k,cd)
+    w_full = jnp.concatenate([p["conv_x"], p["conv_BC"]], axis=1)  # (k, cd)
+    bias_full = jnp.concatenate([p["conv_bias_x"], p["conv_bias_BC"]], axis=0)
+    conv_out = (
+        jnp.sum(window.astype(jnp.float32) * w_full[None].astype(jnp.float32), axis=1)
+        + bias_full.astype(jnp.float32)
+    )
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:]
+
+    xi = conv_out[:, :di]
+    bc = conv_out[:, di:]
+    b_vec = bc[:, : g * n].reshape(bsz, g, n)
+    c_vec = bc[:, g * n :].reshape(bsz, g, n)
+    rep = nh // g
+    b_h = jnp.repeat(b_vec, rep, axis=1)  # (b, nh, n)
+    c_h = jnp.repeat(c_vec, rep, axis=1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b, nh)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)  # (b, nh)
+
+    xh = xi.reshape(bsz, nh, hp).astype(jnp.float32)
+    # state: (b, nh, n, hp)
+    new_state = state * decay[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", b_h.astype(jnp.float32) * dt[..., None], xh
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", c_h.astype(jnp.float32), new_state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = (y @ p["out"])[:, None, :]  # (b, 1, d)
+    if rules is not None:
+        out = constrain(out, rules, ("batch", "seq", "act_embed"))
+    return out, new_state, new_conv_state

@@ -1,0 +1,176 @@
+"""RealEngine: actual token generation through the Beluga KVCache stack.
+
+CPU-runnable end-to-end driver (reduced configs): prompts are served with
+real numerics and REAL pool reuse —
+
+  miss: prefill -> per-layer KV packed into pool blocks (kv_gather_write
+        kernel) -> blocks published in the GlobalIndex;
+  hit : pool blocks fetched (kv_scatter_read kernel) straight into a decode
+        cache — prefill for the hit prefix is SKIPPED; only the tail tokens
+        (not covering a full block) are stepped through decode.
+
+Restricted to homogeneous attention stacks (period-1 archs: olmo, qwen,
+command-r, internlm2, musicgen, internvl2 backbones) — hybrid/ssm archs
+pool their recurrent state snapshots instead (see DESIGN.md §5) and are
+exercised via the simulated cluster.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RuntimeConfig
+from repro.configs.registry import reduced_config
+from repro.core.index import GlobalIndex
+from repro.core.pool import BelugaPool, PoolLayout
+from repro.kernels import ops
+from repro.models import Model
+from repro.models import transformer as stack_lib
+
+
+@dataclass
+class RealEngine:
+    cfg: object
+    model: Model
+    pool: BelugaPool
+    index: GlobalIndex
+    params: dict
+    max_len: int
+    kernel_mode: str = "auto"
+
+    @classmethod
+    def create(
+        cls,
+        arch: str = "olmo-1b",
+        max_len: int = 128,
+        pool_blocks: int = 256,
+        seed: int = 0,
+        kernel_mode: str = "auto",
+    ) -> "RealEngine":
+        cfg = reduced_config(arch)
+        assert stack_lib.period_length(cfg) == 1 and cfg.n_heads > 0, (
+            "RealEngine needs a homogeneous attention stack"
+        )
+        runtime = RuntimeConfig(
+            remat="none", attn_chunk_q=32, attn_chunk_kv=32, decode_kv="replicated"
+        )
+        model = Model(cfg, runtime)
+        params = model.init(jax.random.key(seed))
+        layout = PoolLayout(
+            block_tokens=16,
+            n_layers_kv=cfg.n_layers,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+        )
+        pool = BelugaPool(layout, n_blocks=pool_blocks, n_shards=8, backing="jax")
+        return cls(
+            cfg=cfg,
+            model=model,
+            pool=pool,
+            index=GlobalIndex(pool),
+            params=params,
+            max_len=max_len,
+            kernel_mode=kernel_mode,
+        )
+
+    # ------------------------------------------------------------------
+    def _cache_to_layers(self, cache: dict) -> tuple[jax.Array, jax.Array]:
+        """(L, 1, T, hkv, hd) stacked cache -> (L, T, hkv, hd)."""
+        k = cache["pos_0"]["k"][:, 0]
+        v = cache["pos_0"]["v"][:, 0]
+        return k, v
+
+    def _layers_to_cache(self, k: jax.Array, v: jax.Array) -> dict:
+        return {"pos_0": {"k": k[:, None], "v": v[:, None]}}
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt: list[int], max_new: int = 16) -> tuple[list[int], dict]:
+        t_start = time.time()
+        bt = self.pool.layout.block_tokens
+        hits = self.index.match_prefix(prompt)
+        n_hit = len(hits) * bt
+        info = {"hit_tokens": n_hit}
+
+        if n_hit:
+            # --- pool fetch path: scatter-read hit blocks, skip prefill ---
+            block_ids = [b for _, b, _ in hits]
+            blocks = self.pool.data[jnp.asarray(block_ids)]
+            n_slots = self.max_len // bt
+            k_cache, v_cache = ops.kv_scatter_read(
+                blocks, jnp.arange(len(block_ids), dtype=jnp.int32), n_slots,
+                mode=self.kernel_mode,
+            )
+            cache = self._layers_to_cache(
+                k_cache.astype(jnp.dtype(self.cfg.dtype)),
+                v_cache.astype(jnp.dtype(self.cfg.dtype)),
+            )
+            # pad cache seq dim up to max_len if needed
+            pad = self.max_len - cache["pos_0"]["k"].shape[2]
+            if pad > 0:
+                cache = jax.tree.map(
+                    lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                    cache,
+                )
+            # step the tail through decode; if the prompt is fully covered,
+            # re-feed the last token (overwrites identical KV, yields logits)
+            start = min(n_hit, len(prompt) - 1)
+            logits = None
+            for t in range(start, len(prompt)):
+                logits, cache = self._decode(
+                    cache, jnp.asarray([prompt[t]]), jnp.asarray([t])
+                )
+        else:
+            # --- prefill path + pool writeback ---
+            batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+            logits, cache = self._prefill(batch)
+            self._writeback(prompt, cache)
+
+        info["ttft_s"] = time.time() - t_start
+        out = [int(jnp.argmax(logits[0]))]
+        pos = len(prompt)
+        while len(out) < max_new and pos + 1 < self.max_len:
+            logits, cache = self._decode(
+                cache, jnp.asarray([out[-1]]), jnp.asarray([pos])
+            )
+            out.append(int(jnp.argmax(logits[0])))
+            pos += 1
+        info["total_s"] = time.time() - t_start
+        return out, info
+
+    # ------------------------------------------------------------------
+    @functools.cached_property
+    def _prefill(self):
+        return jax.jit(functools.partial(self.model.prefill_fn, self.params,
+                                         max_len=self.max_len))
+
+    @functools.cached_property
+    def _decode(self):
+        return jax.jit(functools.partial(self.model.decode_fn, self.params))
+
+    def _writeback(self, prompt: list[int], cache: dict) -> None:
+        bt = self.pool.layout.block_tokens
+        n_blocks = len(prompt) // bt
+        if not n_blocks:
+            return
+        k, v = self._cache_to_layers(cache)
+        blocks = ops.kv_gather_write(
+            k, v, jnp.arange(n_blocks, dtype=jnp.int32), bt, mode=self.kernel_mode
+        )
+        block_ids = self.pool.allocate(n_blocks)
+        self.pool.data = self.pool.data.at[jnp.asarray(block_ids)].set(
+            blocks.astype(self.pool.data.dtype)
+        )
+        keys = self.index.keys_for(prompt)
+        for key, bid in zip(keys, block_ids):
+            with self.pool._lock:  # publish AFTER the payload write (§5.1)
+                m = self.pool.meta[bid]
+                m.epoch += 1
+                m.committed = True
+                epoch = m.epoch
+            self.index.publish(key, bid, epoch, bt)

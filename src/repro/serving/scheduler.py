@@ -1,0 +1,156 @@
+"""Cluster scheduler: cache-oblivious (Beluga §6.3) vs cache-aware (MoonCake).
+
+The paper's §6.3 claim: with a pool at near-local latency, the scheduler can
+ignore KV locality and pure load balancing wins — no skewed KV distribution,
+no rebalancing on elastic scale in/out. The cache-aware baseline routes
+requests toward the instance whose HBM already holds the prefix (locality
+first, load second), which is what RDMA-latency systems are forced to do.
+
+Both policies share the SAME pool + global index; elastic add/remove of
+engines needs no KV migration in either mode (the pool is shared), which is
+the serving-side fault-tolerance story.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.index import GlobalIndex
+from repro.core.pool import BelugaPool, PoolLayout
+from repro.core.transfer import TransferEngine
+from repro.kvcache.hbm_cache import HbmPagedCache
+from repro.kvcache.manager import KVCacheManager
+from repro.serving.engine import EngineInstance, SimRunner, SimRunnerConfig
+from repro.serving.request import Request, summarize
+
+
+@dataclass
+class ClusterConfig:
+    n_engines: int = 16
+    policy: str = "cache_oblivious"  # cache_oblivious | cache_aware | round_robin
+    transfer_mode: str = "beluga"  # beluga | rdma | none (no offload)
+    super_block_tokens: int = 0  # rdma batching granularity (LMCache: 256)
+    pool_blocks: int = 65536
+    pool_shards: int = 32
+    interleave: bool = True
+    # H20 (96 GB): 60 GB model -> ~28.3 GB usable KV (paper §7.1) at ~262
+    # KB/token for Qwen3-32B = ~6750 16-token slots
+    hbm_slots_per_engine: int = 6750
+    block_tokens: int = 16
+    straggler_cutover: float | None = None  # fetch-vs-recompute ratio
+    runner: SimRunnerConfig = field(default_factory=SimRunnerConfig)
+
+
+class Cluster:
+    def __init__(self, cfg: ClusterConfig, layout: PoolLayout, backing: str = "meta"):
+        self.cfg = cfg
+        self.pool = BelugaPool(
+            layout,
+            n_blocks=cfg.pool_blocks,
+            n_shards=cfg.pool_shards,
+            interleave=cfg.interleave,
+            backing=backing,
+        )
+        self.index = GlobalIndex(self.pool)
+        self.engines: list[EngineInstance] = []
+        self._rr = 0
+        for i in range(cfg.n_engines):
+            transfer = TransferEngine(
+                self.pool,
+                mode="beluga" if cfg.transfer_mode == "none" else cfg.transfer_mode,
+                super_block_tokens=cfg.super_block_tokens,
+            )
+            hbm = HbmPagedCache(cfg.hbm_slots_per_engine, cfg.block_tokens)
+            mgr = KVCacheManager(
+                self.pool, self.index, hbm, transfer,
+                recompute_cutover=cfg.straggler_cutover,
+                prefill_tok_per_s=cfg.runner.prefill_tok_per_s,
+            )
+            if cfg.transfer_mode == "none":
+                # no pool offload: disable prefix reuse entirely
+                mgr.plan_fetch_orig = mgr.plan_fetch
+                mgr.plan_fetch = _no_offload_plan(mgr)
+                mgr.writeback = lambda *a, **k: 0
+            self.engines.append(
+                EngineInstance(i, mgr, SimRunner(cfg.runner))
+            )
+        self.requests: list[Request] = []
+
+    # ------------------------------------------------------------------
+    def dispatch(self, req: Request) -> EngineInstance:
+        policy = self.cfg.policy
+        if policy == "round_robin":
+            eng = self.engines[self._rr % len(self.engines)]
+            self._rr += 1
+        elif policy == "cache_oblivious":
+            eng = min(self.engines, key=lambda e: (e.load(), e.clock))
+        elif policy == "cache_aware":
+            local = [e for e in self.engines if e.has_prefix_locally(req)]
+            pool_hit = bool(self.index.keys_for(req.tokens)) and bool(
+                self.index.match_prefix(req.tokens)
+            )
+            if local:
+                eng = min(local, key=lambda e: (e.load(), e.clock))
+            else:
+                eng = min(self.engines, key=lambda e: (e.load(), e.clock))
+        else:
+            raise ValueError(policy)
+        eng.submit(req, req.arrival)
+        self.requests.append(req)
+        return eng
+
+    # ------------------------------------------------------------------
+    def run(self, until: float | None = None) -> dict:
+        if until is None:
+            end = max(e.drain() for e in self.engines)
+        else:
+            for e in self.engines:
+                e.advance(until)
+            end = until
+        start = min((r.arrival for r in self.requests), default=0.0)
+        stats = summarize(self.requests, end - start)
+        stats["index"] = self.index.stats()
+        stats["pool_free"] = self.pool.free_blocks()
+        stats["shard_occupancy_max"] = max(self.pool.shard_occupancy() or [0])
+        return stats
+
+    # ------------------------------------------------------------------
+    # Elastic scaling (serving-side fault tolerance): engines join/leave
+    # with NO KV rebalancing — the pool is shared (paper §6.3).
+    # ------------------------------------------------------------------
+    def remove_engine(self, engine_id: int) -> list[Request]:
+        """Simulate an instance failure: requeue its in-flight requests."""
+        eng = self.engines[engine_id]
+        orphans = list(eng.waiting) + list(eng.running)
+        for r in orphans:
+            r.state = "queued"
+            r.t_admitted = r.t_first_token = None
+            r.tokens_out = 0
+        self.engines.pop(engine_id)
+        for i, e in enumerate(self.engines):
+            e.engine_id = i
+        for r in orphans:
+            self.dispatch(r)
+            self.requests.remove(r)  # re-added by dispatch
+        return orphans
+
+    def add_engine(self) -> EngineInstance:
+        i = len(self.engines)
+        transfer = TransferEngine(self.pool, mode=self.cfg.transfer_mode
+                                  if self.cfg.transfer_mode != "none" else "beluga")
+        hbm = HbmPagedCache(self.cfg.hbm_slots_per_engine, self.cfg.block_tokens)
+        mgr = KVCacheManager(self.pool, self.index, hbm, transfer,
+                             prefill_tok_per_s=self.cfg.runner.prefill_tok_per_s)
+        eng = EngineInstance(i, mgr, SimRunner(self.cfg.runner))
+        eng.clock = max((e.clock for e in self.engines), default=0.0)
+        self.engines.append(eng)
+        return eng
+
+
+def _no_offload_plan(mgr):
+    from repro.kvcache.manager import FetchPlan
+
+    def plan(tokens):
+        return FetchPlan(0, len(tokens), [], 0.0, False)
+
+    return plan

@@ -1,0 +1,163 @@
+"""Optimizers from scratch (no optax): AdamW, Lion, SGD + schedules + clipping.
+
+Optimizer state mirrors the parameter tree (and therefore its sharding);
+moments are fp32 regardless of param dtype. Update math runs in fp32 and
+casts back — master-weight-free mixed precision, chosen to keep optimizer
+bytes/chip at 8·N/shards (documented in EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # gradient compression for DP all-reduce (distributed-optimization trick):
+    # "none" | "bf16" — grads cast before the reduction, error feedback off.
+    grad_compression: str = "bf16"
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def init_opt_state(cfg: OptimizerConfig, params: Any) -> dict:
+    def zeros_like_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
+    state = {"step": jnp.zeros((), jnp.int32)}
+    if cfg.name in ("adamw",):
+        state["m"] = jax.tree.map(zeros_like_f32, params)
+        state["v"] = jax.tree.map(zeros_like_f32, params)
+    elif cfg.name == "lion":
+        state["m"] = jax.tree.map(zeros_like_f32, params)
+    elif cfg.name == "sgd":
+        pass
+    else:
+        raise ValueError(cfg.name)
+    return state
+
+
+def opt_state_specs(cfg: OptimizerConfig, param_specs: Any) -> dict:
+    """ParamSpec tree for the optimizer state (same logical axes, fp32)."""
+    from repro.distributed.sharding import ParamSpec, is_param_spec
+
+    def f32(p):
+        return ParamSpec(p.shape, "float32", p.logical_axes, init="zeros")
+
+    state = {"step": ParamSpec((), "int32", (), init="zeros")}
+    if cfg.name == "adamw":
+        state["m"] = jax.tree.map(f32, param_specs, is_leaf=is_param_spec)
+        state["v"] = jax.tree.map(f32, param_specs, is_leaf=is_param_spec)
+    elif cfg.name == "lion":
+        state["m"] = jax.tree.map(f32, param_specs, is_leaf=is_param_spec)
+    return state
+
+
+def apply_updates(
+    cfg: OptimizerConfig, params: Any, grads: Any, state: dict
+) -> tuple[Any, dict]:
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+
+    if cfg.name == "adamw":
+        bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, td = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        new_p, new_m, new_v = [], [], []
+        for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+            a, b, c = upd(p, g, m, v)
+            new_p.append(a)
+            new_m.append(b)
+            new_v.append(c)
+        return jax.tree.unflatten(td, new_p), {
+            "step": step,
+            "m": jax.tree.unflatten(td, new_m),
+            "v": jax.tree.unflatten(td, new_v),
+        }
+
+    if cfg.name == "lion":
+        def upd(p, g, m):
+            g = g.astype(jnp.float32)
+            u = jnp.sign(cfg.b1 * m + (1 - cfg.b1) * g)
+            if p.ndim >= 2:
+                u = u + cfg.weight_decay * p.astype(jnp.float32)
+            m = cfg.b2 * m + (1 - cfg.b2) * g
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m
+
+        flat_p, td = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        new_p, new_m = [], []
+        for p, g, m in zip(flat_p, flat_g, flat_m):
+            a, b = upd(p, g, m)
+            new_p.append(a)
+            new_m.append(b)
+        return jax.tree.unflatten(td, new_p), {
+            "step": step,
+            "m": jax.tree.unflatten(td, new_m),
+        }
+
+    if cfg.name == "sgd":
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(
+                p.dtype
+            ),
+            params,
+            grads,
+        )
+        return new_p, {"step": step}
+
+    raise ValueError(cfg.name)

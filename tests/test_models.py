@@ -1,0 +1,183 @@
+"""Per-arch smoke tests (REQUIRED): every assigned architecture instantiates
+a reduced config of the same family and runs one forward/train step on CPU,
+asserting output shapes + no NaNs. Plus prefill/decode consistency."""
+
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RuntimeConfig, SHAPES, shape_applicable
+from repro.configs.registry import ASSIGNED, get_config, reduced_config
+from repro.models import Model
+from repro.models import transformer as stack_lib
+from repro.models.layers import norm_apply, unembed_apply
+
+RT = RuntimeConfig(remat="none", attn_chunk_q=16, attn_chunk_kv=16,
+                   decode_kv="replicated")
+
+
+def _batch(cfg, b=2, s=32):
+    key = jax.random.key(9)
+    if cfg.frontend == "audio_stub":
+        return {
+            "frame_embeds": jax.random.normal(key, (b, s, cfg.d_model), jnp.bfloat16),
+            "labels": jnp.ones((b, s), jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        npat = cfg.n_frontend_tokens
+        return {
+            "tokens": jnp.ones((b, s - npat), jnp.int32),
+            "patch_embeds": jax.random.normal(key, (b, npat, cfg.d_model), jnp.bfloat16),
+            "labels": jnp.ones((b, s - npat), jnp.int32),
+        }
+    return {
+        "tokens": jnp.ones((b, s), jnp.int32),
+        "labels": jnp.ones((b, s), jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = reduced_config(arch)
+    m = Model(cfg, RT)
+    params = m.init(jax.random.key(0))
+    batch = _batch(cfg)
+
+    loss, aux = jax.jit(m.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    # one full train step (grad + adamw)
+    from repro.training.optimizer import OptimizerConfig, init_opt_state
+    from repro.training.train_loop import make_train_step
+
+    opt_cfg = OptimizerConfig(warmup_steps=1, total_steps=10)
+    opt_state = init_opt_state(opt_cfg, params)
+    step = jax.jit(make_train_step(m, opt_cfg))
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    delta = sum(
+        float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).sum())
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert delta > 0, f"{arch}: train step was a no-op"
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_arch_smoke_decode_shapes(arch):
+    cfg = reduced_config(arch)
+    m = Model(cfg, RT)
+    params = m.init(jax.random.key(0))
+    b, max_len = 2, 32
+    cache = m.init_cache(b, max_len)
+    logits, cache2 = jax.jit(m.decode_fn)(
+        params, cache, jnp.ones((b,), jnp.int32), jnp.zeros((b,), jnp.int32)
+    )
+    assert logits.shape == (b, cfg.padded_vocab(1))
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite decode logits"
+
+
+@pytest.mark.parametrize(
+    "arch", ["olmo-1b", "command-r-35b", "mamba2-2.7b", "jamba-1.5-large-398b"]
+)
+def test_prefill_decode_matches_full_forward(arch):
+    import dataclasses
+
+    cfg = reduced_config(arch)
+    if cfg.moe.enabled:  # avoid capacity-drop divergence
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    m = Model(cfg, RT)
+    params = m.init(jax.random.key(1))
+    b, s = 2, 31
+    tokens = jax.random.randint(jax.random.key(2), (b, s + 1), 0, cfg.vocab_size)
+    x, positions = m.embed(params, {"tokens": tokens})
+    h, _, _ = stack_lib.forward_full(params, x, positions, cfg, m.runtime, None)
+    h = norm_apply(params["final_ln"], h, cfg)
+    want = unembed_apply(params["embed"], h[:, s - 1 : s, :], None)[:, 0]
+
+    logits_pre, cache = jax.jit(functools.partial(m.prefill_fn, max_len=32))(
+        params, {"tokens": tokens[:, : s - 1]}
+    )
+    got, _ = jax.jit(m.decode_fn)(
+        params, cache, tokens[:, s - 1], jnp.full((b,), s - 1, jnp.int32)
+    )
+    rel = float(jnp.max(jnp.abs(want - got))) / (
+        float(jnp.max(jnp.abs(want))) + 1e-9
+    )
+    assert rel < 2e-2, f"{arch}: prefill+decode diverges from full forward ({rel})"
+
+
+def test_long_500k_applicability_matrix():
+    """The skip matrix in DESIGN.md §5 must match shape_applicable."""
+    runnable = {
+        a for a in ASSIGNED
+        if shape_applicable(get_config(a), SHAPES["long_500k"])[0]
+    }
+    assert runnable == {"jamba-1.5-large-398b", "mamba2-2.7b"}
+
+
+def test_param_counts_match_published():
+    expect = {
+        "jamba-1.5-large-398b": 398e9,
+        "arctic-480b": 480e9,
+        "mamba2-2.7b": 2.7e9,
+        "olmo-1b": 1.2e9,
+        "command-r-35b": 35e9,
+    }
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < 0.15, (arch, got, n)
+
+
+def test_fp8_kv_cache_decode_parity():
+    """fp8-e4m3 KV cache (RuntimeConfig.use_fp8_kv) halves cache bytes and
+    stays within quantization tolerance of the bf16 cache decode."""
+    import dataclasses
+
+    cfg = reduced_config("command-r-35b")
+    outs = {}
+    for fp8 in (False, True):
+        rt = dataclasses.replace(RT, use_fp8_kv=fp8)
+        m = Model(cfg, rt)
+        params = m.init(jax.random.key(1))
+        cache = m.init_cache(2, 32)
+        if fp8:
+            assert jax.tree.leaves(cache)[0].dtype == jnp.float8_e4m3fn
+        dec = jax.jit(m.decode_fn)
+        logits = None
+        for t in range(6):
+            logits, cache = dec(params, cache,
+                                jnp.full((2,), t % 5, jnp.int32),
+                                jnp.full((2,), t, jnp.int32))
+        outs[fp8] = logits
+    a = np.asarray(outs[False], np.float32)
+    b = np.asarray(outs[True], np.float32)
+    rel = np.max(np.abs(a - b)) / (np.max(np.abs(a)) + 1e-9)
+    assert rel < 0.1, rel
+
+
+def test_fp8_kv_prefill_then_decode():
+    import dataclasses
+    import functools
+
+    cfg = reduced_config("olmo-1b")
+    rt = dataclasses.replace(RT, use_fp8_kv=True)
+    m = Model(cfg, rt)
+    params = m.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(2), (2, 24), 0, cfg.vocab_size)
+    logits, cache = jax.jit(functools.partial(m.prefill_fn, max_len=32))(
+        params, {"tokens": tokens}
+    )
+    assert jax.tree.leaves(cache)[0].dtype == jnp.float8_e4m3fn
+    out, _ = jax.jit(m.decode_fn)(
+        params, cache, tokens[:, -1], jnp.full((2,), 24, jnp.int32)
+    )
+    assert bool(jnp.isfinite(out).all())

@@ -1,0 +1,187 @@
+"""Serving runtime: engine/scheduler behavior, elastic scaling, real e2e."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pool import PoolLayout
+from repro.kvcache.hbm_cache import HbmPagedCache, OutOfHbmBlocks
+from repro.serving.request import Request, summarize
+from repro.serving.scheduler import Cluster, ClusterConfig
+
+
+LAYOUT = PoolLayout(block_tokens=16, n_layers_kv=4, n_kv_heads=2, head_dim=8)
+
+
+def _reqs(n, in_len=512, out_len=8, tag="r", arrival=0.0, shared_frac=0.5):
+    base = list(range(in_len))
+    reqs = []
+    for i in range(n):
+        cut = int(in_len * shared_frac)
+        toks = base[:cut] + [10_000 + i] * (in_len - cut)
+        reqs.append(Request(f"{tag}{i}", toks, out_len, arrival))
+    return reqs
+
+
+def _cluster(**kw):
+    kw.setdefault("n_engines", 4)
+    kw.setdefault("pool_blocks", 8192)
+    kw.setdefault("hbm_slots_per_engine", 512)
+    return Cluster(ClusterConfig(**kw), LAYOUT)
+
+
+# ---------------------------------------------------------------------------
+# hbm paged cache
+# ---------------------------------------------------------------------------
+
+
+def test_hbm_cache_lifecycle():
+    h = HbmPagedCache(16, 16)
+    slots = h.allocate(4, keys=[b"a", b"b", b"c", b"d"])
+    h.register_sequence("s1", slots)
+    new = h.extend_sequence("s1", 16, 64)
+    assert len(h.table("s1")) == 5 and len(new) == 1
+    h.finish_sequence("s1")
+    assert h.free_slots() == 16
+    with pytest.raises(OutOfHbmBlocks):
+        h.allocate(17)
+
+
+def test_hbm_shared_key_refcount():
+    h = HbmPagedCache(8, 16)
+    [s] = h.allocate(1, keys=[b"k"])
+    assert h.lookup_shared(b"k") == s  # refcount 2 now
+    h.release([s])
+    assert h.lookup_shared(b"k") == s  # still alive
+    h.release([s])
+    h.release([s])
+    assert h.lookup_shared(b"k") is None
+    assert h.free_slots() == 8
+
+
+# ---------------------------------------------------------------------------
+# engine / cluster
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_all_requests_complete():
+    c = _cluster()
+    for r in _reqs(24):
+        c.dispatch(r)
+    stats = c.run()
+    assert stats["n_done"] == 24
+    assert stats["avg_ttft_s"] > 0
+
+
+def test_cache_hit_run_is_faster_and_hits():
+    c = _cluster(transfer_mode="beluga")
+    for r in _reqs(16):
+        c.dispatch(r)
+    s1 = c.run()
+    t0 = max(e.clock for e in c.engines)
+    for r in _reqs(16, tag="h", arrival=t0):
+        c.dispatch(r)
+    c.run()
+    hits = [r for r in c.requests if r.req_id.startswith("h")]
+    s2 = summarize(hits, max(r.t_done for r in hits) - t0)
+    assert s2["hit_tokens"] > 0
+    assert s2["avg_ttft_s"] < s1["avg_ttft_s"]
+
+
+def test_beluga_beats_rdma_on_hits():
+    res = {}
+    for mode in ("beluga", "rdma"):
+        c = _cluster(transfer_mode=mode, super_block_tokens=256 if mode == "rdma" else 0)
+        for r in _reqs(16, in_len=2048):
+            c.dispatch(r)
+        c.run()
+        t0 = max(e.clock for e in c.engines)
+        for r in _reqs(16, in_len=2048, tag="h", arrival=t0):
+            c.dispatch(r)
+        c.run()
+        hits = [r for r in c.requests if r.req_id.startswith("h")]
+        res[mode] = summarize(hits, max(r.t_done for r in hits) - t0)
+    assert res["beluga"]["avg_ttft_s"] < res["rdma"]["avg_ttft_s"]
+
+
+def test_straggler_cutover_bounds_fetch():
+    """With the cutover on, a pathologically slow fetch path falls back to
+    recompute instead of waiting (paper §6.3 / beyond-paper mitigation)."""
+    c = _cluster(transfer_mode="rdma", super_block_tokens=16,
+                 straggler_cutover=1.0)
+    for r in _reqs(8, in_len=4096):
+        c.dispatch(r)
+    c.run()
+    t0 = max(e.clock for e in c.engines)
+    for r in _reqs(8, in_len=4096, tag="h", arrival=t0):
+        c.dispatch(r)
+    c.run()
+    cutovers = sum(e.manager.stats.recompute_cutovers for e in c.engines)
+    assert cutovers > 0
+
+
+def test_elastic_remove_engine_requeues_and_completes():
+    c = _cluster()
+    for r in _reqs(20, out_len=64):
+        c.dispatch(r)
+    for e in c.engines:
+        e.advance(0.5)  # partial progress
+    orphans = c.remove_engine(0)  # simulate instance failure
+    stats = c.run()
+    assert stats["n_done"] == 20  # everything still completes
+    assert len(c.engines) == 3
+
+
+def test_elastic_add_engine_no_rebalance_needed():
+    c = _cluster(transfer_mode="beluga")
+    for r in _reqs(12):
+        c.dispatch(r)
+    c.run()
+    t0 = max(e.clock for e in c.engines)
+    eng = c.add_engine()  # scale out; pool is shared -> no KV migration
+    reqs = _reqs(4, tag="h", arrival=t0)
+    for r in reqs:
+        eng.submit(r, t0)
+        c.requests.append(r)
+    c.run()
+    assert all(r.state == "done" for r in reqs)
+    assert any(r.hit_tokens > 0 for r in reqs)  # new engine reads old KV
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 20),
+    in_len=st.sampled_from([64, 256, 1024]),
+    policy=st.sampled_from(["cache_oblivious", "cache_aware", "round_robin"]),
+)
+def test_cluster_liveness_property(n, in_len, policy):
+    """Every dispatched request finishes with sane timestamps, any policy."""
+    c = _cluster(policy=policy)
+    for r in _reqs(n, in_len=in_len, out_len=4):
+        c.dispatch(r)
+    stats = c.run()
+    assert stats["n_done"] == n
+    for r in c.requests:
+        assert r.t_done >= r.t_first_token >= r.arrival
+        assert r.tokens_out == r.n_output
+    # no leaked HBM slots
+    for e in c.engines:
+        assert e.manager.hbm.free_slots() == e.manager.hbm.n_slots
+
+
+# ---------------------------------------------------------------------------
+# real end-to-end engine (actual tokens, actual pool reuse)
+# ---------------------------------------------------------------------------
+
+
+def test_real_engine_pool_reuse_is_exact():
+    from repro.serving.real_runner import RealEngine
+
+    eng = RealEngine.create("olmo-1b", max_len=96, pool_blocks=64)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, eng.cfg.vocab_size, size=48).tolist()
+    out1, info1 = eng.generate(prompt, max_new=8)
+    assert info1["hit_tokens"] == 0
+    out2, info2 = eng.generate(prompt, max_new=8)
+    assert info2["hit_tokens"] == 48  # full-prefix pool hit
+    assert out1 == out2  # pool roundtrip preserves numerics exactly

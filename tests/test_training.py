@@ -1,0 +1,240 @@
+"""Training substrate: optimizer, data pipeline, checkpoint, fault tolerance."""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.data.pipeline import DataConfig, SyntheticLM, make_dataset
+from repro.distributed.fault_tolerance import (
+    HeartbeatMonitor,
+    StragglerPolicy,
+    plan_elastic_remesh,
+)
+from repro.training import optimizer as opt_lib
+from repro.training.optimizer import OptimizerConfig
+
+
+def test_adamw_reduces_loss_on_quadratic():
+    cfg = OptimizerConfig(peak_lr=0.1, warmup_steps=1, total_steps=100,
+                          weight_decay=0.0, grad_clip=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5])}
+    state = opt_lib.init_opt_state(cfg, params)
+
+    def loss_fn(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    losses = []
+    for _ in range(60):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt_lib.apply_updates(cfg, params, g, state)
+        losses.append(float(loss_fn(params)))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(peak_lr=1e-3, min_lr=1e-4, warmup_steps=10, total_steps=100)
+    lrs = [float(opt_lib.lr_schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1e-3) < 1e-9  # peak after warmup
+    assert lrs[-1] <= lrs[1]
+    assert lrs[-1] >= 1e-4 - 1e-9
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = opt_lib.clip_by_global_norm(g, 1.0)
+    assert abs(float(opt_lib.global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 100.0
+
+
+def test_grad_accumulation_matches_full_batch():
+    from repro.configs.base import RuntimeConfig
+    from repro.configs.registry import reduced_config
+    from repro.models import Model
+    from repro.training.train_loop import make_train_step
+
+    cfg = reduced_config("olmo-1b")
+    m = Model(cfg, RuntimeConfig(remat="none", attn_chunk_q=16, attn_chunk_kv=16))
+    params = m.init(jax.random.key(0))
+    opt_cfg = OptimizerConfig(warmup_steps=1, total_steps=10,
+                              grad_compression="none")
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab_size)
+    }
+    batch["labels"] = batch["tokens"]
+    s1 = jax.jit(make_train_step(m, opt_cfg, accum_steps=1))
+    s2 = jax.jit(make_train_step(m, opt_cfg, accum_steps=2))
+    st0 = opt_lib.init_opt_state(opt_cfg, params)
+    p1, _, m1 = s1(params, st0, batch)
+    st0 = opt_lib.init_opt_state(opt_cfg, params)
+    p2, _, m2 = s2(params, st0, batch)
+    d = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2))
+    )
+    assert d < 2e-2, d  # bf16 params: one-ulp differences allowed
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_synthetic_data_deterministic_and_restartable():
+    cfg = DataConfig(seq_len=16, global_batch=4, vocab_size=128)
+    a = SyntheticLM(cfg)
+    batches = [next(a) for _ in range(5)]
+    state = a.state_dict()
+    more = [next(a) for _ in range(3)]
+    b = SyntheticLM(cfg)
+    b.load_state_dict(state)
+    replay = [next(b) for _ in range(3)]
+    for x, y in zip(more, replay):
+        assert np.array_equal(x["tokens"], y["tokens"])
+
+
+def test_data_ranks_disjoint_union():
+    full = SyntheticLM(DataConfig(seq_len=8, global_batch=8, dp_rank=0, dp_size=1))
+    r0 = SyntheticLM(DataConfig(seq_len=8, global_batch=8, dp_rank=0, dp_size=2))
+    r1 = SyntheticLM(DataConfig(seq_len=8, global_batch=8, dp_rank=1, dp_size=2))
+    b0, b1 = next(r0), next(r1)
+    assert b0["tokens"].shape == (4, 8)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_packed_file_dataset(tmp_path):
+    path = tmp_path / "corpus.bin"
+    tokens = np.arange(16 * 32, dtype=np.int32)
+    tokens.tofile(path)
+    cfg = DataConfig(seq_len=32, global_batch=4, source="file", path=str(path))
+    ds = make_dataset(cfg)
+    b1 = next(ds)
+    assert b1["tokens"].shape == (4, 32)
+    state = ds.state_dict()
+    b2 = next(ds)
+    ds2 = make_dataset(cfg)
+    ds2.load_state_dict(state)
+    assert np.array_equal(next(ds2)["tokens"], b2["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing (incl. bf16 + commit semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    tree = {
+        "w": jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)), jnp.bfloat16),
+        "m": jnp.asarray(np.random.default_rng(1).normal(size=(4, 8)), jnp.float32),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    ck.save(10, tree, extra={"data_state": {"step": 3}})
+    assert ck.latest_step() == 10
+    got = ck.restore(10, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        assert jnp.array_equal(a, b)
+    assert ck.load_extra(10)["data_state"]["step"] == 3
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, {"x": jnp.ones((2,))})
+    os.remove(os.path.join(ck.step_dir(5), "_COMMITTED"))  # simulate crash
+    assert ck.latest_step() is None
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        ck.save(s, {"x": jnp.full((2,), float(s))})
+    assert ck.latest_step() == 3
+    assert not os.path.exists(ck.step_dir(1))
+    got = ck.restore(3, {"x": jnp.zeros((2,))})
+    assert float(got["x"][0]) == 3.0
+
+
+def test_train_resume_equivalence(tmp_path):
+    """Fault-tolerance contract: crash + resume == uninterrupted run."""
+    from repro.configs.base import RuntimeConfig
+    from repro.configs.registry import reduced_config
+    from repro.models import Model
+    from repro.training.train_loop import (
+        TrainLoopConfig,
+        make_train_step,
+        run_train_loop,
+    )
+
+    cfg = reduced_config("qwen1.5-0.5b")
+    m = Model(cfg, RuntimeConfig(remat="none", attn_chunk_q=16, attn_chunk_kv=16))
+    opt_cfg = OptimizerConfig(warmup_steps=2, total_steps=8,
+                              grad_compression="none")
+    data_cfg = DataConfig(seq_len=16, global_batch=2, vocab_size=cfg.vocab_size)
+
+    # uninterrupted 8 steps
+    p_full, _, hist = run_train_loop(
+        m, opt_cfg, TrainLoopConfig(steps=8, log_every=8), iter(SyntheticLM(data_cfg))
+    )
+
+    # 4 steps + checkpoint, then resume for 4 more
+    ckdir = str(tmp_path / "ck")
+    data = SyntheticLM(data_cfg)
+    p_half, opt_half, _ = run_train_loop(
+        m, opt_cfg,
+        TrainLoopConfig(steps=4, log_every=4, checkpoint_every=4, checkpoint_dir=ckdir),
+        iter(data),
+    )
+    ck = Checkpointer(ckdir)
+    step = ck.latest_step()
+    assert step == 4
+    params0 = m.init(jax.random.key(0))
+    opt0 = opt_lib.init_opt_state(opt_cfg, params0)
+    restored = ck.restore(step, {"params": params0, "opt_state": opt0})
+    data2 = SyntheticLM(data_cfg)
+    data2.load_state_dict(ck.load_extra(step)["data_state"])
+    p_res, _, _ = run_train_loop(
+        m, opt_cfg, TrainLoopConfig(steps=8, log_every=8), iter(data2),
+        params=restored["params"], opt_state=restored["opt_state"], start_step=4,
+    )
+    d = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res))
+    )
+    assert d < 2e-2, f"resume diverged from uninterrupted run by {d}"
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerance policies
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_detection():
+    hb = HeartbeatMonitor(n_hosts=4, timeout_s=10.0)
+    for h in range(4):
+        hb.beat(h, now=0.0)
+    hb.beat(2, now=50.0)
+    assert set(hb.dead_hosts(now=55.0)) == {0, 1, 3}
+
+
+def test_elastic_remesh_plan():
+    plan = plan_elastic_remesh(
+        (2, 16, 16), ("pod", "data", "model"), hosts_per_unit=4,
+        failed_hosts=[3], checkpoint_step=1200,
+    )
+    assert plan.new_shape == (1, 16, 16)
+    assert plan.degraded
+    assert "1200" in plan.note
+
+
+def test_straggler_policy():
+    sp = StragglerPolicy(window=5, slow_factor=1.5)
+    for step in range(5):
+        for h in range(4):
+            sp.record(h, 1.0 if h != 2 else 2.5)
+    assert sp.stragglers() == [2]
