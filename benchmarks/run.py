@@ -25,6 +25,7 @@ MODULES = [
     ("exp09", "benchmarks.exp09_dense_transfer"),
     ("exp10", "benchmarks.exp10_sparse"),
     ("exp11", "benchmarks.exp11_rpc"),
+    ("exp12", "benchmarks.exp12_control_plane"),
 ]
 
 
@@ -47,6 +48,8 @@ def main() -> None:
             mod = importlib.import_module(mod_name)
             if args.fast and exp_id == "exp05":
                 rows = mod.run(n=64, in_len=4096)
+            elif exp_id == "exp12":
+                rows = mod.run(fast=args.fast)
             else:
                 rows = mod.run()
             for name, us, derived in rows:

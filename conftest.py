@@ -1,0 +1,58 @@
+"""Root conftest: src/ on sys.path + optional-dependency shim for hypothesis.
+
+The test modules import ``hypothesis`` at module scope.  On a bare
+interpreter (no ``pip install -r requirements.txt``) that made COLLECTION
+fail for four test files.  When hypothesis is missing we install a stub
+into ``sys.modules`` whose ``@given`` marks the test as skipped — example
+tests still run, property tests skip cleanly.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import types
+
+# make `import repro` work without PYTHONPATH=src
+_SRC = os.path.join(os.path.dirname(__file__), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # build the skip-stub
+    import pytest
+
+    class _Strategy:
+        """Placeholder strategy: composable, never executed."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    def _given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed (property test)"
+            )(fn)
+
+        return deco
+
+    def _settings(*_a, **_k):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.assume = lambda *a, **k: True
+    _hyp.note = lambda *a, **k: None
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.__getattr__ = lambda name: _Strategy()
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

@@ -62,7 +62,8 @@ def main():
     client = CxlRpcClient(ring)
     resp = client.call(index.keys_for(prompt)[1])
     server.stop()
-    print(f"CXL-RPC lookup -> block {resp.rstrip(b'\\0').decode()} "
+    block_str = resp.rstrip(b"\0").decode()
+    print(f"CXL-RPC lookup -> block {block_str} "
           f"(modeled RTT {client.modeled_rtt()*1e6:.2f} us vs RDMA-RC 8.39 us)")
 
 

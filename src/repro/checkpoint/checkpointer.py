@@ -32,7 +32,9 @@ import numpy as np
 
 
 def _flatten_with_paths(tree: Any):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists in jax >= 0.4.38; go through
+    # tree_util for compatibility with the pinned 0.4.3x toolchain
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         key = "/".join(_path_str(p) for p in path)

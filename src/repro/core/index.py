@@ -12,6 +12,15 @@ Key design points mirrored from MoonCake/vLLM prefix caching:
   * entries carry (block_id, epoch); readers must validate the epoch against
     the pool before trusting the payload (multi-host coherence, §5.1);
   * eviction: LRU over unreferenced committed blocks.
+
+Control-plane cost notes (the paths every request hits):
+  * token blocks are hashed from ``np.int64`` buffers via ``tobytes()``
+    (one C-level encode per block, not one ``str()`` per token);
+  * a bounded (parent_key, block_bytes) -> key memo caches chain links, so
+    re-deriving the chain for a shared prefix is a dict walk, not blake2b;
+  * ``match_prefix`` walks the map under one lock and validates every
+    matched entry against the pool's epoch ARRAY in a single vectorized
+    check instead of a per-key pool round-trip.
 """
 
 from __future__ import annotations
@@ -22,21 +31,26 @@ import time
 from collections import OrderedDict
 from dataclasses import dataclass
 
+import numpy as np
+
 from repro.core.pool import BelugaPool
-
-
-def block_key(parent: bytes, tokens: tuple[int, ...]) -> bytes:
-    h = hashlib.blake2b(digest_size=16)
-    h.update(parent)
-    h.update(b"|")
-    h.update(b",".join(str(t).encode() for t in tokens))
-    return h.digest()
-
 
 ROOT = b"ROOT"
 
+_CHAIN_CACHE_MAX = 1 << 18
 
-@dataclass
+
+def _hash_link(parent: bytes, token_bytes: bytes) -> bytes:
+    return hashlib.blake2b(
+        parent + b"|" + token_bytes, digest_size=16
+    ).digest()
+
+
+def block_key(parent: bytes, tokens: tuple[int, ...]) -> bytes:
+    return _hash_link(parent, np.asarray(tokens, np.int64).tobytes())
+
+
+@dataclass(slots=True)
 class IndexEntry:
     block_id: int
     epoch: int
@@ -50,38 +64,83 @@ class GlobalIndex:
         self.block_tokens = pool.layout.block_tokens
         self._lock = threading.Lock()
         self._map: OrderedDict[bytes, IndexEntry] = OrderedDict()
+        # parent_key||block_token_bytes -> key chain memo (bounded FIFO)
+        self._chain_cache: OrderedDict[bytes, bytes] = OrderedDict()
+        # digest(whole token buffer) -> full key list (one hash instead of
+        # a 1000-link chain walk when the same request recurs: plan_fetch
+        # -> writeback, populate -> cache-hit phase, per-engine locality
+        # probes). Returned lists are shared — callers must not mutate.
+        self._request_cache: OrderedDict[bytes, list[bytes]] = OrderedDict()
         self.hits = 0
         self.misses = 0
 
     # ------------------------------------------------------------------
     def keys_for(self, tokens: list[int]) -> list[bytes]:
         bt = self.block_tokens
-        keys, parent = [], ROOT
-        for i in range(0, len(tokens) - len(tokens) % bt, bt):
-            k = block_key(parent, tuple(tokens[i : i + bt]))
+        n = len(tokens) // bt
+        if not n:
+            return []
+        arr = np.asarray(tokens[: n * bt], np.int64).reshape(n, bt)
+        req_key = hashlib.blake2b(arr.tobytes(), digest_size=16).digest()
+        cached = self._request_cache.get(req_key)
+        if cached is not None:
+            return cached
+        keys: list[bytes] = []
+        parent = ROOT
+        cache = self._chain_cache
+        cache_get = cache.get
+        for i in range(n):
+            tb = arr[i].tobytes()
+            ck = parent + tb
+            k = cache_get(ck)
+            if k is None:
+                k = _hash_link(parent, tb)
+                cache[ck] = k
+                if len(cache) > _CHAIN_CACHE_MAX:
+                    cache.popitem(last=False)
             keys.append(k)
             parent = k
+        self._request_cache[req_key] = keys
+        if len(self._request_cache) > 1024:
+            self._request_cache.popitem(last=False)
         return keys
 
     def match_prefix(self, tokens: list[int]) -> list[tuple[bytes, int, int]]:
         """Longest cached prefix: [(key, block_id, epoch)] with valid epochs."""
-        out = []
+        return self.match_prefix_keys(self.keys_for(tokens))
+
+    def match_prefix_keys(
+        self, keys: list[bytes]
+    ) -> list[tuple[bytes, int, int]]:
+        """``match_prefix`` over a pre-computed key chain (lets callers that
+        also need the keys — e.g. the writeback path — hash once)."""
+        out: list[tuple[bytes, int, int]] = []
         now = time.monotonic()
         with self._lock:
-            for k in self.keys_for(tokens):
+            entries: list[tuple[bytes, IndexEntry]] = []
+            for k in keys:
                 e = self._map.get(k)
-                if e is None or not self.pool.validate_epoch(e.block_id, e.epoch):
-                    if e is not None:  # stale entry: drop it
-                        self._map.pop(k, None)
+                if e is None:
                     break
-                e.last_used = now
-                self._map.move_to_end(k)
-                out.append((k, e.block_id, e.epoch))
-        with self._lock:
+                entries.append((k, e))
+            if entries:
+                ids = np.fromiter(
+                    (e.block_id for _, e in entries), np.intp, len(entries)
+                )
+                eps = np.fromiter(
+                    (e.epoch for _, e in entries), np.int64, len(entries)
+                )
+                # one vectorized epoch+committed check for ALL candidates
+                ok = self.pool.validate_epochs(ids, eps)
+                n_ok = len(entries) if ok.all() else int(np.argmin(ok))
+                for k, e in entries[:n_ok]:
+                    e.last_used = now
+                    self._map.move_to_end(k)
+                    out.append((k, e.block_id, e.epoch))
+                if n_ok < len(entries):  # stale entry: drop it
+                    self._map.pop(entries[n_ok][0], None)
             self.hits += len(out)
-            self.misses += max(
-                0, (len(tokens) // self.block_tokens) - len(out)
-            )
+            self.misses += max(0, len(keys) - len(out))
         return out
 
     def publish(self, key: bytes, block_id: int, epoch: int, n_tokens: int) -> None:
@@ -90,9 +149,34 @@ class GlobalIndex:
             self._map[key] = IndexEntry(block_id, epoch, n_tokens, time.monotonic())
             self._map.move_to_end(key)
 
+    def publish_many(
+        self,
+        keys: list[bytes],
+        block_ids: list[int],
+        epochs: list[int],
+        n_tokens: int,
+    ) -> None:
+        """Batch publish under one lock acquisition.
+
+        No per-key ``move_to_end``: a NEW key lands at the back (most
+        recent) by dict insertion order already; only a re-publish of a
+        still-present key (rare: epoch-invalidated entry not yet dropped)
+        keeps its old LRU slot, which only makes it eviction-eligible
+        sooner — safe."""
+        now = time.monotonic()
+        with self._lock:
+            m = self._map
+            for key, bid, epoch in zip(keys, block_ids, epochs):
+                m[key] = IndexEntry(bid, epoch, n_tokens, now)
+
     def lookup(self, key: bytes) -> IndexEntry | None:
         with self._lock:
             return self._map.get(key)
+
+    def lookup_many(self, keys: list[bytes]) -> list[IndexEntry | None]:
+        """Batch lookup under one lock acquisition."""
+        with self._lock:
+            return [self._map.get(k) for k in keys]
 
     def evict_lru(self, n: int) -> list[int]:
         """Evict up to n unreferenced blocks; returns freed block ids."""
@@ -102,7 +186,7 @@ class GlobalIndex:
                 if len(freed) >= n:
                     break
                 e = self._map[k]
-                if self.pool.meta[e.block_id].refcount <= 1:
+                if self.pool.refcounts[e.block_id] <= 1:
                     freed.append(e.block_id)
                     del self._map[k]
         if freed:

@@ -14,6 +14,16 @@ Interleaving (O9): block b lives on shard ``b % n_shards``; the allocator
 balances allocation across shards and exposes per-shard occupancy so the
 benchmarks can show the skew/queueing effect of turning interleaving off.
 
+Allocator design (control plane must be O(blocks touched), never O(pool)):
+  * one persistent free stack per shard — ``allocate`` pops round-robin
+    across shards (fullest-first order, as the seed allocator placed
+    blocks) without ever walking the whole free set;
+  * occupancy counters are maintained incrementally, so
+    ``shard_occupancy()`` is O(n_shards) and ``free_blocks()`` is O(1);
+  * per-block metadata (epoch / refcount / committed) lives in flat numpy
+    arrays so retain/release/validate batch under ONE lock acquisition
+    with vectorized index arithmetic.
+
 Single-writer / multi-reader coherence (§5.1) is enforced with per-block
 epochs — see ``repro.core.coherence``.
 """
@@ -21,7 +31,8 @@ epochs — see ``repro.core.coherence``.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -70,13 +81,6 @@ class OutOfPoolMemory(RuntimeError):
     pass
 
 
-@dataclass
-class BlockMeta:
-    epoch: int = 0  # bumped on every (re)write; readers validate
-    refcount: int = 0
-    committed: bool = False
-
-
 class BelugaPool:
     """Block allocator + storage over interleaved shards."""
 
@@ -95,8 +99,27 @@ class BelugaPool:
         self.interleave = interleave
         self.backing = backing
         self._lock = threading.Lock()
-        self._free: list[int] = list(range(n_blocks))
-        self.meta: list[BlockMeta] = [BlockMeta() for _ in range(n_blocks)]
+        # vectorized per-block metadata
+        self.epochs = np.zeros(n_blocks, np.int64)
+        self.refcounts = np.zeros(n_blocks, np.int32)
+        self.committed = np.zeros(n_blocks, bool)
+        # free structures: per-shard LIFO stacks (interleave) or one FIFO
+        # queue (no interleave: fill shard 0 first, the §5.3 bottleneck)
+        if interleave:
+            self._free_by_shard: list[list[int]] = [
+                list(range(s, n_blocks, n_shards)) for s in range(n_shards)
+            ]
+            self._free_fifo: deque[int] | None = None
+        else:
+            self._free_by_shard = []
+            self._free_fifo = deque(range(n_blocks))
+        # free-age stamps: ties between equally-full shards resolve toward
+        # the shard whose oldest free block has been free longest — the
+        # order the seed allocator's by-shard rebuild produced implicitly
+        self._age = np.arange(n_blocks, dtype=np.int64)
+        self._stamp = n_blocks
+        self._n_free = n_blocks
+        self._occ = [0] * n_shards  # allocated (non-free) blocks per shard
         self.alloc_count = 0
         if backing == "meta":
             # control-plane only (cluster sim at paper scale): allocator,
@@ -131,95 +154,191 @@ class BelugaPool:
 
     def free_blocks(self) -> int:
         with self._lock:
-            return len(self._free)
+            return self._n_free
 
     def shard_occupancy(self) -> list[int]:
-        occ = [0] * self.n_shards
         with self._lock:
-            free = set(self._free)
-        for b in range(self.n_blocks):
-            if b not in free:
-                occ[self.shard_of(b)] += 1
-        return occ
+            return list(self._occ)
 
     # ------------------------------------------------------------------
     def allocate(self, n: int) -> list[int]:
         """Allocate n blocks, round-robin across shards when interleaving."""
         with self._lock:
-            if len(self._free) < n:
-                raise OutOfPoolMemory(f"need {n}, have {len(self._free)}")
+            if self._n_free < n:
+                raise OutOfPoolMemory(f"need {n}, have {self._n_free}")
+            out: list[int] = []
             if self.interleave:
-                # pick blocks spreading across shards
-                by_shard: dict[int, list[int]] = {}
-                for b in self._free:
-                    by_shard.setdefault(b % self.n_shards, []).append(b)
-                out: list[int] = []
-                shard_ids = sorted(by_shard, key=lambda s: -len(by_shard[s]))
+                stacks = self._free_by_shard
+                # fullest shards first, then round-robin over that order —
+                # the same placement policy as the seed allocator, but over
+                # persistent stacks instead of a per-call full-list rebuild
+                age = self._age
+                order = sorted(
+                    (s for s in range(self.n_shards) if stacks[s]),
+                    key=lambda s: (-len(stacks[s]), age[stacks[s][0]]),
+                )
                 i = 0
                 while len(out) < n:
-                    s = shard_ids[i % len(shard_ids)]
-                    if by_shard[s]:
-                        out.append(by_shard[s].pop())
+                    s = order[i % len(order)]
+                    if stacks[s]:
+                        out.append(stacks[s].pop())
+                        self._occ[s] += 1
                     i += 1
                     if i > 4 * self.n_shards + n * 2:  # degenerate fallback
-                        remaining = [b for lst in by_shard.values() for b in lst]
-                        out.extend(remaining[: n - len(out)])
+                        # seed parity: sweep the remaining free blocks in
+                        # by-shard build order (oldest free block first),
+                        # oldest-to-newest within each shard
+                        rem = sorted(
+                            (s for s in range(self.n_shards) if stacks[s]),
+                            key=lambda s: age[stacks[s][0]],
+                        )
+                        for s in rem:
+                            k = min(len(stacks[s]), n - len(out))
+                            if k <= 0:
+                                break
+                            out.extend(stacks[s][:k])
+                            del stacks[s][:k]
+                            self._occ[s] += k
                         break
             else:
-                out = [self._free[i] for i in range(n)]
-            free_set = set(out)
-            self._free = [b for b in self._free if b not in free_set]
-            for b in out:
-                m = self.meta[b]
-                m.refcount = 1
-                m.committed = False
+                fifo = self._free_fifo
+                per = self.n_blocks // self.n_shards
+                for _ in range(n):
+                    b = fifo.popleft()
+                    out.append(b)
+                    self._occ[b // per] += 1
+            self._n_free -= n
+            ids = np.asarray(out, np.intp)
+            self.refcounts[ids] = 1
+            self.committed[ids] = False
             self.alloc_count += n
             return out
 
     def retain(self, block_ids: list[int]) -> None:
+        if not len(block_ids):
+            return
+        ids = np.asarray(block_ids, np.intp)
         with self._lock:
-            for b in block_ids:
-                assert self.meta[b].refcount > 0, f"retain of free block {b}"
-                self.meta[b].refcount += 1
+            assert (self.refcounts[ids] > 0).all(), "retain of free block"
+            np.add.at(self.refcounts, ids, 1)
 
     def release(self, block_ids: list[int]) -> None:
+        if not len(block_ids):
+            return
+        ids = np.asarray(block_ids, np.intp)
         with self._lock:
-            for b in block_ids:
-                m = self.meta[b]
-                m.refcount -= 1
-                assert m.refcount >= 0, f"double free of block {b}"
-                if m.refcount == 0:
-                    m.committed = False
-                    m.epoch += 1  # invalidate readers holding stale ids
-                    self._free.append(b)
+            np.subtract.at(self.refcounts, ids, 1)
+            assert (self.refcounts[ids] >= 0).all(), "double free"
+            zero = self.refcounts[ids] == 0
+            if not zero.any():
+                return
+            # freed blocks re-enter the free structures in CALLER order
+            # (dedup'd), preserving the seed allocator's reuse order
+            seen: set[int] = set()
+            freed = [
+                b for b, z in zip(ids.tolist(), zero.tolist())
+                if z and not (b in seen or seen.add(b))
+            ]
+            farr = np.asarray(freed, np.intp)
+            self.committed[farr] = False
+            self.epochs[farr] += 1  # invalidate readers holding stale ids
+            if self.interleave:
+                for b in freed:
+                    s = b % self.n_shards
+                    self._free_by_shard[s].append(b)
+                    self._occ[s] -= 1
+                    self._age[b] = self._stamp
+                    self._stamp += 1
+            else:
+                per = self.n_blocks // self.n_shards
+                for b in freed:
+                    self._free_fifo.append(b)
+                    self._occ[b // per] -= 1
+            self._n_free += len(freed)
 
     # ------------------------------------------------------------------
     # Data plane (numpy backing): fragment reads/writes
     # ------------------------------------------------------------------
-    def write_block(self, block_id: int, payload: np.ndarray) -> int:
+    def write_block(self, block_id: int, payload: np.ndarray | None) -> int:
         """Write a full block; returns the publish epoch (see coherence)."""
-        if self.data is not None:
+        if self.data is not None and payload is not None:
             assert payload.nbytes == self.layout.block_bytes
             self.data[block_id] = payload.reshape(-1).view(np.uint8)
         with self._lock:
-            m = self.meta[block_id]
-            m.epoch += 1
-            m.committed = True
-            return m.epoch
+            self.epochs[block_id] += 1
+            self.committed[block_id] = True
+            return int(self.epochs[block_id])
+
+    def write_blocks(
+        self, block_ids: list[int], payloads: np.ndarray | None = None
+    ) -> list[int]:
+        """Batch write + publish: one fancy-indexed copy, one epoch bump.
+
+        ``payloads``: (n, block_bytes)-viewable array, or None when the
+        payload was staged elsewhere (meta backing / device-side writes).
+        Returns the publish epochs.
+        """
+        ids = np.asarray(block_ids, np.intp)
+        if self.data is not None and payloads is not None:
+            assert payloads.nbytes == len(block_ids) * self.layout.block_bytes
+            self.data[ids] = payloads.reshape(len(block_ids), -1).view(np.uint8)
+        with self._lock:
+            self.epochs[ids] += 1
+            self.committed[ids] = True
+            return self.epochs[ids].tolist()
 
     def read_block(self, block_id: int) -> tuple[np.ndarray, int]:
         with self._lock:
-            e = self.meta[block_id].epoch
+            e = int(self.epochs[block_id])
         if self.data is None:
             return np.zeros(self.layout.block_bytes, np.uint8), e
         return self.data[block_id].copy(), e
 
+    def read_blocks(
+        self, block_ids, out: np.ndarray | None = None
+    ) -> tuple[np.ndarray | None, np.ndarray]:
+        """Batch read: one batched copy + one epoch snapshot.
+
+        Returns (payloads (n, block_bytes) or None for meta backing,
+        epochs-at-read (n,)). The epoch snapshot is taken BEFORE the copy,
+        mirroring the per-block read protocol (§5.1): a caller comparing
+        the snapshot against its expected epochs detects concurrent
+        recycling the same way the scalar path did.
+
+        ``out``: optional (n, block_bytes) uint8 destination. Reading into
+        a persistent buffer (the serving steady state: pool -> fixed HBM
+        slots) skips the dominant cost of a fresh multi-hundred-MB
+        allocation — per-row C memcpy into warm pages.
+        """
+        ids = np.asarray(block_ids, np.intp)
+        with self._lock:
+            eps = self.epochs[ids].copy()
+        if self.data is None:
+            return None, eps
+        if out is None:
+            return self.data[ids], eps
+        assert out.shape == (len(ids), self.layout.block_bytes)
+        data = self.data
+        for j, b in enumerate(ids):
+            out[j] = data[b]
+        return out, eps
+
     def read_fragments(self, block_id: int, frag_ids: list[int]) -> np.ndarray:
         fb = self.layout.fragment_bytes
         block = self.data[block_id]
-        return np.stack([block[f * fb : (f + 1) * fb] for f in frag_ids])
+        return block.reshape(self.layout.n_fragments, fb)[
+            np.asarray(frag_ids, np.intp)
+        ]
 
     def validate_epoch(self, block_id: int, epoch: int) -> bool:
         with self._lock:
-            m = self.meta[block_id]
-            return m.committed and m.epoch == epoch
+            return bool(self.committed[block_id]) and int(
+                self.epochs[block_id]
+            ) == epoch
+
+    def validate_epochs(self, block_ids, epochs) -> np.ndarray:
+        """Vectorized committed+epoch check; one lock, one compare."""
+        ids = np.asarray(block_ids, np.intp)
+        exp = np.asarray(epochs)
+        with self._lock:
+            return self.committed[ids] & (self.epochs[ids] == exp)

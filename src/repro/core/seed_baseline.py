@@ -1,0 +1,200 @@
+"""Frozen seed (pre-vectorization) control-plane implementations.
+
+These are verbatim-behavior copies of the original hot paths that
+``benchmarks/exp12_control_plane.py`` times against and
+``tests/test_pool_allocator.py`` checks observable equivalence against:
+
+  * ``SeedPool``      — the single-free-list allocator whose ``allocate()``
+    rebuilt a by-shard dict of the whole free list per call, scanned all
+    ``n_blocks`` in ``shard_occupancy()``, and kept per-block metadata in
+    Python objects;
+  * ``seed_block_key`` / ``seed_keys_for`` — blake2b chain hashing over
+    per-int ``str()`` encodings;
+  * ``seed_scatter_read`` — the per-block read-copy-unpack loop.
+
+Do NOT use these in production paths; they exist so the perf trajectory
+(before/after) stays measurable from any checkout without replaying git
+history.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.pool import OutOfPoolMemory, PoolLayout
+
+
+@dataclass
+class SeedBlockMeta:
+    epoch: int = 0
+    refcount: int = 0
+    committed: bool = False
+
+
+class SeedPool:
+    """Seed allocator: one flat free list, per-call by-shard rebuild."""
+
+    def __init__(
+        self,
+        layout: PoolLayout,
+        n_blocks: int,
+        n_shards: int = 32,
+        backing: str = "meta",
+        interleave: bool = True,
+    ):
+        assert n_blocks % n_shards == 0, (n_blocks, n_shards)
+        self.layout = layout
+        self.n_blocks = n_blocks
+        self.n_shards = n_shards
+        self.interleave = interleave
+        self.backing = backing
+        self._lock = threading.Lock()
+        self._free: list[int] = list(range(n_blocks))
+        self.meta: list[SeedBlockMeta] = [SeedBlockMeta() for _ in range(n_blocks)]
+        self.alloc_count = 0
+        if backing == "numpy":
+            self.data = np.zeros((n_blocks, layout.block_bytes), np.uint8)
+        else:
+            self.data = None
+
+    def shard_of(self, block_id: int) -> int:
+        if self.interleave:
+            return block_id % self.n_shards
+        return block_id // (self.n_blocks // self.n_shards)
+
+    def free_blocks(self) -> int:
+        with self._lock:
+            return len(self._free)
+
+    def shard_occupancy(self) -> list[int]:
+        occ = [0] * self.n_shards
+        with self._lock:
+            free = set(self._free)
+        for b in range(self.n_blocks):
+            if b not in free:
+                occ[self.shard_of(b)] += 1
+        return occ
+
+    def allocate(self, n: int) -> list[int]:
+        with self._lock:
+            if len(self._free) < n:
+                raise OutOfPoolMemory(f"need {n}, have {len(self._free)}")
+            if self.interleave:
+                by_shard: dict[int, list[int]] = {}
+                for b in self._free:
+                    by_shard.setdefault(b % self.n_shards, []).append(b)
+                out: list[int] = []
+                shard_ids = sorted(by_shard, key=lambda s: -len(by_shard[s]))
+                i = 0
+                while len(out) < n:
+                    s = shard_ids[i % len(shard_ids)]
+                    if by_shard[s]:
+                        out.append(by_shard[s].pop())
+                    i += 1
+                    if i > 4 * self.n_shards + n * 2:
+                        remaining = [b for lst in by_shard.values() for b in lst]
+                        out.extend(remaining[: n - len(out)])
+                        break
+            else:
+                out = [self._free[i] for i in range(n)]
+            free_set = set(out)
+            self._free = [b for b in self._free if b not in free_set]
+            for b in out:
+                m = self.meta[b]
+                m.refcount = 1
+                m.committed = False
+            self.alloc_count += n
+            return out
+
+    def retain(self, block_ids: list[int]) -> None:
+        with self._lock:
+            for b in block_ids:
+                assert self.meta[b].refcount > 0, f"retain of free block {b}"
+                self.meta[b].refcount += 1
+
+    def release(self, block_ids: list[int]) -> None:
+        with self._lock:
+            for b in block_ids:
+                m = self.meta[b]
+                m.refcount -= 1
+                assert m.refcount >= 0, f"double free of block {b}"
+                if m.refcount == 0:
+                    m.committed = False
+                    m.epoch += 1
+                    self._free.append(b)
+
+    def write_block(self, block_id: int, payload: np.ndarray | None) -> int:
+        if self.data is not None and payload is not None:
+            assert payload.nbytes == self.layout.block_bytes
+            self.data[block_id] = payload.reshape(-1).view(np.uint8)
+        with self._lock:
+            m = self.meta[block_id]
+            m.epoch += 1
+            m.committed = True
+            return m.epoch
+
+    def read_block(self, block_id: int) -> tuple[np.ndarray, int]:
+        with self._lock:
+            e = self.meta[block_id].epoch
+        if self.data is None:
+            return np.zeros(self.layout.block_bytes, np.uint8), e
+        return self.data[block_id].copy(), e
+
+    def validate_epoch(self, block_id: int, epoch: int) -> bool:
+        with self._lock:
+            m = self.meta[block_id]
+            return m.committed and m.epoch == epoch
+
+
+# ---------------------------------------------------------------------------
+# seed chain hashing: per-int str() encoding, no memoization
+# ---------------------------------------------------------------------------
+
+SEED_ROOT = b"ROOT"
+
+
+def seed_block_key(parent: bytes, tokens: tuple[int, ...]) -> bytes:
+    h = hashlib.blake2b(digest_size=16)
+    h.update(parent)
+    h.update(b"|")
+    h.update(b",".join(str(t).encode() for t in tokens))
+    return h.digest()
+
+
+def seed_keys_for(tokens: list[int], block_tokens: int) -> list[bytes]:
+    bt = block_tokens
+    keys, parent = [], SEED_ROOT
+    for i in range(0, len(tokens) - len(tokens) % bt, bt):
+        k = seed_block_key(parent, tuple(tokens[i : i + bt]))
+        keys.append(k)
+        parent = k
+    return keys
+
+
+# ---------------------------------------------------------------------------
+# seed scatter-read: per-block read_block + copy + view/reshape loop
+# ---------------------------------------------------------------------------
+
+
+def seed_scatter_read(
+    pool, block_ids: list[int], epochs: list[int] | None = None, dtype=np.float16
+) -> np.ndarray:
+    """The seed TransferEngine data loop (latency modeling stripped)."""
+    lay = pool.layout
+    n = len(block_ids)
+    shape = (n, lay.n_fragments, lay.block_tokens, lay.n_kv_heads, lay.head_dim)
+    out = np.empty(shape, dtype)
+    for i, bid in enumerate(block_ids):
+        payload, epoch = pool.read_block(bid)
+        if epochs is not None and epoch != epochs[i]:
+            from repro.core.coherence import CoherenceError
+
+            raise CoherenceError(f"block {bid} epoch changed during read")
+        out[i] = payload.view(dtype).reshape(
+            lay.n_fragments, lay.block_tokens, lay.n_kv_heads, lay.head_dim
+        )
+    return out

@@ -50,20 +50,23 @@ class TransferEngine:
     stats: TransferStats = field(default_factory=TransferStats)
 
     # ------------------------------------------------------------------
-    # Layout helpers
+    # Layout helpers (batched: one view/reshape for ALL blocks, no
+    # per-block Python loop)
     # ------------------------------------------------------------------
-    def _pack(self, kv_block: np.ndarray) -> np.ndarray:
-        """kv_block: (2*L, block_tokens, hkv, hd) -> contiguous uint8."""
+    def _pack_batch(self, kv_blocks: np.ndarray) -> np.ndarray:
+        """kv_blocks: (n, 2*L, block_tokens, hkv, hd) -> (n, block_bytes)."""
         lay = self.pool.layout
-        assert kv_block.shape[0] == lay.n_fragments
-        return np.ascontiguousarray(kv_block).reshape(-1).view(np.uint8)
+        assert kv_blocks.shape[1] == lay.n_fragments
+        n = kv_blocks.shape[0]
+        return np.ascontiguousarray(kv_blocks).reshape(n, -1).view(np.uint8)
 
-    def _unpack(self, payload: np.ndarray, dtype=np.float16) -> np.ndarray:
+    def _unpack_batch(self, payloads: np.ndarray, dtype=np.float16) -> np.ndarray:
+        """(n, block_bytes) uint8 -> (n, 2*L, block_tokens, hkv, hd)."""
         lay = self.pool.layout
         itemsize = np.dtype(dtype).itemsize
         assert itemsize == lay.dtype_bytes
-        return payload.view(dtype).reshape(
-            lay.n_fragments, lay.block_tokens, lay.n_kv_heads, lay.head_dim
+        return payloads.view(dtype).reshape(
+            -1, lay.n_fragments, lay.block_tokens, lay.n_kv_heads, lay.head_dim
         )
 
     # ------------------------------------------------------------------
@@ -93,12 +96,11 @@ class TransferEngine:
                 nfrag_eff / self.constants.rdma_sgl_max
             )
 
-        epochs = []
         if self.pool.data is None:  # meta backing: bump epochs only
-            epochs = [self.pool.write_block(bid, None) for bid in block_ids]
+            epochs = self.pool.write_blocks(block_ids)
         else:
-            for bid, kvb in zip(block_ids, kv_blocks):
-                epochs.append(self.pool.write_block(bid, self._pack(kvb)))
+            # one fancy-indexed store for every fragment of every block
+            epochs = self.pool.write_blocks(block_ids, self._pack_batch(kv_blocks))
         self.stats.writes += n
         self.stats.bytes_written += size
         return epochs
@@ -108,9 +110,14 @@ class TransferEngine:
     # ------------------------------------------------------------------
     def scatter_read(
         self, block_ids: list[int], epochs: list[int] | None = None,
-        dtype=np.float16,
+        dtype=np.float16, out: np.ndarray | None = None,
     ) -> np.ndarray:
-        """Returns (n_blocks, 2*L, block_tokens, hkv, hd)."""
+        """Returns (n_blocks, 2*L, block_tokens, hkv, hd).
+
+        ``out``: optional preallocated destination of that shape (the
+        fused-kernel analogue of reading straight into the engine's KV
+        slots instead of a fresh buffer per fetch).
+        """
         lay = self.pool.layout
         n = len(block_ids)
         size = n * lay.block_bytes
@@ -133,25 +140,37 @@ class TransferEngine:
 
         shape = (n, lay.n_fragments, lay.block_tokens, lay.n_kv_heads, lay.head_dim)
         if self.pool.data is None:  # meta backing: validate epochs only
-            for i, bid in enumerate(block_ids):
-                if epochs is not None and not self.pool.validate_epoch(bid, epochs[i]):
+            if epochs is not None:
+                ok = self.pool.validate_epochs(block_ids, epochs)
+                if not ok.all():
                     from repro.core.coherence import CoherenceError
 
-                    raise CoherenceError(f"block {bid} epoch changed during read")
+                    bad = block_ids[int(np.argmin(ok))]
+                    raise CoherenceError(f"block {bad} epoch changed during read")
             self.stats.reads += n
             self.stats.bytes_read += size
+            if out is not None:
+                out[:] = 0
+                return out
             return np.zeros(shape, dtype)
-        out = np.empty(shape, dtype)
-        for i, bid in enumerate(block_ids):
-            payload, epoch = self.pool.read_block(bid)
-            if epochs is not None and epoch != epochs[i]:
+        # one batched gather for all blocks + one batched epoch check
+        dst = None
+        if out is not None:
+            assert out.shape == shape and out.dtype == np.dtype(dtype)
+            assert out.flags.c_contiguous
+            dst = out.reshape(n, -1).view(np.uint8)
+        payloads, eps_now = self.pool.read_blocks(block_ids, out=dst)
+        if epochs is not None:
+            mism = eps_now != np.asarray(epochs)
+            if mism.any():
                 from repro.core.coherence import CoherenceError
 
-                raise CoherenceError(f"block {bid} epoch changed during read")
-            out[i] = self._unpack(payload, dtype)
+                bad = block_ids[int(np.argmax(mism))]
+                raise CoherenceError(f"block {bad} epoch changed during read")
+        result = out if out is not None else self._unpack_batch(payloads, dtype)
         self.stats.reads += n
         self.stats.bytes_read += size
-        return out
+        return result
 
     # ------------------------------------------------------------------
     # Sparse read: top-k token pieces (Exp #10)

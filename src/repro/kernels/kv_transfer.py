@@ -13,11 +13,15 @@ fragments into ONE kernel launch; these are the TPU twins:
 Dynamic slot/block indices arrive via scalar prefetch; each grid step's
 BlockSpec index_map dereferences them — data movement at memory semantics,
 no per-fragment request list (the RDMA sglist pathology this replaces).
+
+Grid shape: ONE step per pool block. Each step moves a fused
+(L, 2, bt, hkv, hd) fragment-pair block over the collapsed layer axis —
+a single fat DMA per pool block instead of an (n_blocks, L) grid of tiny
+(1, 1, bt, hkv, hd) copies, so grid/launch overhead is O(blocks), not
+O(blocks * layers).
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +32,13 @@ from jax.experimental.pallas import tpu as pltpu
 # ---------------------------------------------------------------------------
 # gather write: cache slots -> pool blocks
 # ---------------------------------------------------------------------------
+
+
+def _gather_write_body(slot_ref, k_ref, v_ref, o_ref):
+    # k_ref/v_ref: (L, 1, bt, hkv, hd) — every layer of one cache slot;
+    # o_ref: (1, L, 2, bt, hkv, hd) — one fused pool block, (k, v) paired
+    o_ref[0, :, 0] = k_ref[:, 0]
+    o_ref[0, :, 1] = v_ref[:, 0]
 
 
 def kv_gather_write(
@@ -47,34 +58,29 @@ def kv_gather_write(
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n_blocks, L),
+        grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec(
-                (1, 1, bt, hkv, hd),
-                lambda bi, li, slot_ref: (li, slot_ref[bi], 0, 0, 0),
+                (L, 1, bt, hkv, hd),
+                lambda bi, slot_ref: (0, slot_ref[bi], 0, 0, 0),
             ),
             pl.BlockSpec(
-                (1, 1, bt, hkv, hd),
-                lambda bi, li, slot_ref: (li, slot_ref[bi], 0, 0, 0),
+                (L, 1, bt, hkv, hd),
+                lambda bi, slot_ref: (0, slot_ref[bi], 0, 0, 0),
             ),
         ],
         out_specs=pl.BlockSpec(
-            (1, 2, bt, hkv, hd), lambda bi, li, slot_ref: (bi * L + li, 0, 0, 0, 0)
+            (1, L, 2, bt, hkv, hd), lambda bi, slot_ref: (bi, 0, 0, 0, 0, 0)
         ),
     )
     out = pl.pallas_call(
         _gather_write_body,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_blocks * L, 2, bt, hkv, hd), k_cache.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, L, 2, bt, hkv, hd), k_cache.dtype),
         interpret=interpret,
     )(slot_ids.astype(jnp.int32), kc, vc)
-    # (n_blocks*L, 2, ...) -> (n_blocks, 2L, ...) fragment-interleaved
+    # (n_blocks, L, 2, ...) -> (n_blocks, 2L, ...) fragment-interleaved
     return out.reshape(n_blocks, 2 * L, bt, hkv, hd)
-
-
-def _gather_write_body(slot_ref, k_ref, v_ref, o_ref):
-    o_ref[0, 0] = k_ref[0, 0]
-    o_ref[0, 1] = v_ref[0, 0]
 
 
 # ---------------------------------------------------------------------------
@@ -83,8 +89,9 @@ def _gather_write_body(slot_ref, k_ref, v_ref, o_ref):
 
 
 def _scatter_read_body(slot_ref, pool_ref, k_ref, v_ref):
-    k_ref[0, 0] = pool_ref[0, 0]
-    v_ref[0, 0] = pool_ref[0, 1]
+    # pool_ref: (1, L, 2, bt, hkv, hd); k_ref/v_ref: (L, 1, bt, hkv, hd)
+    k_ref[:, 0] = pool_ref[0, :, 0]
+    v_ref[:, 0] = pool_ref[0, :, 1]
 
 
 def kv_scatter_read(
@@ -100,25 +107,25 @@ def kv_scatter_read(
     """
     n_blocks, twoL, bt, hkv, hd = pool_blocks.shape
     L = twoL // 2
-    pool = pool_blocks.reshape(n_blocks * L, 2, bt, hkv, hd)
+    pool = pool_blocks.reshape(n_blocks, L, 2, bt, hkv, hd)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(n_blocks, L),
+        grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec(
-                (1, 2, bt, hkv, hd),
-                lambda bi, li, slot_ref: (bi * L + li, 0, 0, 0, 0),
+                (1, L, 2, bt, hkv, hd),
+                lambda bi, slot_ref: (bi, 0, 0, 0, 0, 0),
             ),
         ],
         out_specs=[
             pl.BlockSpec(
-                (1, 1, bt, hkv, hd),
-                lambda bi, li, slot_ref: (li, slot_ref[bi], 0, 0, 0),
+                (L, 1, bt, hkv, hd),
+                lambda bi, slot_ref: (0, slot_ref[bi], 0, 0, 0),
             ),
             pl.BlockSpec(
-                (1, 1, bt, hkv, hd),
-                lambda bi, li, slot_ref: (li, slot_ref[bi], 0, 0, 0),
+                (L, 1, bt, hkv, hd),
+                lambda bi, slot_ref: (0, slot_ref[bi], 0, 0, 0),
             ),
         ],
     )

@@ -9,30 +9,25 @@ vLLM-style PagedAttention bookkeeping for ONE engine instance:
 The actual KV payloads live in per-layer device arrays owned by the model
 runner; this class owns the *slot* arithmetic only, so the same allocator
 drives both the real CPU model runner and the simulated cluster engines.
+Refcounts live in a flat numpy array (a sequence finish releases its whole
+~1000-slot table in one vectorized batch, not a per-slot object walk).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import numpy as np
 
 
 class OutOfHbmBlocks(RuntimeError):
     pass
 
 
-@dataclass
-class HbmBlock:
-    slot: int
-    refcount: int = 0
-    # identity of the content for intra-instance sharing
-    key: bytes | None = None
-
-
 class HbmPagedCache:
     def __init__(self, n_slots: int, block_tokens: int = 16):
         self.n_slots = n_slots
         self.block_tokens = block_tokens
-        self.blocks = [HbmBlock(slot=i) for i in range(n_slots)]
+        self.refcounts = np.zeros(n_slots, np.int32)
+        self._slot_key: list[bytes | None] = [None] * n_slots
         self._free: list[int] = list(range(n_slots))
         self._by_key: dict[bytes, int] = {}
         self.seq_tables: dict[str, list[int]] = {}
@@ -46,32 +41,45 @@ class HbmPagedCache:
         """Intra-instance prefix block reuse (no transfer needed at all)."""
         slot = self._by_key.get(key)
         if slot is not None:
-            self.blocks[slot].refcount += 1
+            self.refcounts[slot] += 1
         return slot
 
     def allocate(self, n: int, keys: list[bytes] | None = None) -> list[int]:
-        if len(self._free) < n:
-            raise OutOfHbmBlocks(f"need {n} slots, have {len(self._free)}")
-        out = [self._free.pop() for _ in range(n)]
-        for i, slot in enumerate(out):
-            b = self.blocks[slot]
-            b.refcount = 1
-            b.key = keys[i] if keys else None
-            if b.key is not None:
-                self._by_key[b.key] = slot
+        free = self._free
+        if len(free) < n:
+            raise OutOfHbmBlocks(f"need {n} slots, have {len(free)}")
+        out = free[len(free) - n:]
+        out.reverse()  # preserve the seed pop()-order
+        del free[len(free) - n:]
+        self.refcounts[out] = 1
+        if keys:
+            slot_key = self._slot_key
+            by_key = self._by_key
+            for slot, key in zip(out, keys):
+                slot_key[slot] = key
+                if key is not None:
+                    by_key[key] = slot
         self.alloc_count += n
         return out
 
     def release(self, slots: list[int]) -> None:
-        for slot in slots:
-            b = self.blocks[slot]
-            b.refcount -= 1
-            assert b.refcount >= 0, f"double free of HBM slot {slot}"
-            if b.refcount == 0:
-                if b.key is not None:
-                    self._by_key.pop(b.key, None)
-                    b.key = None
-                self._free.append(slot)
+        if not len(slots):
+            return
+        uniq, counts = np.unique(np.asarray(slots, np.intp), return_counts=True)
+        self.refcounts[uniq] -= counts.astype(np.int32)
+        left = self.refcounts[uniq]
+        assert (left >= 0).all(), "double free of HBM slot"
+        freed = uniq[left == 0]
+        if not len(freed):
+            return
+        slot_key = self._slot_key
+        free_append = self._free.append
+        for slot in freed.tolist():
+            key = slot_key[slot]
+            if key is not None:
+                self._by_key.pop(key, None)
+                slot_key[slot] = None
+            free_append(slot)
 
     # ------------------------------------------------------------------
     def register_sequence(self, seq_id: str, slots: list[int]) -> None:

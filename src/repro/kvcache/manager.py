@@ -35,6 +35,7 @@ class FetchPlan:
     hit_blocks: list[tuple[bytes, int, int]]  # (key, block_id, epoch)
     fetch_latency: float  # modeled
     recompute: bool  # cutover decision
+    keys: list[bytes] | None = None  # full chain (hashed once per request)
 
 
 @dataclass
@@ -69,7 +70,8 @@ class KVCacheManager:
     def plan_fetch(self, tokens: list[int]) -> FetchPlan:
         """Prefix match + fetch-vs-recompute decision."""
         bt = self.pool.layout.block_tokens
-        hits = self.index.match_prefix(tokens)
+        keys = self.index.keys_for(tokens)
+        hits = self.index.match_prefix_keys(keys)
         n_hit = len(hits) * bt
         n_miss = len(tokens) - n_hit
         # modeled fetch latency for the hit prefix (one fused kernel)
@@ -91,7 +93,7 @@ class KVCacheManager:
             hits, n_hit, n_miss = [], 0, len(tokens)
         self.stats.prefix_hits_tokens += n_hit
         self.stats.prefix_miss_tokens += max(0, n_miss)
-        return FetchPlan(n_hit, max(0, n_miss), hits, lat, cutover)
+        return FetchPlan(n_hit, max(0, n_miss), hits, lat, cutover, keys)
 
     def _fetch_latency(self, n_blocks: int) -> float:
         import math
@@ -136,22 +138,30 @@ class KVCacheManager:
         self.hbm.register_sequence(seq_id, slots)
         return slots
 
-    def writeback(self, seq_id: str, tokens: list[int], kv_payload=None) -> int:
+    def writeback(
+        self, seq_id: str, tokens: list[int], kv_payload=None, keys=None
+    ) -> int:
         """After prefill: gather-write full blocks to the pool + publish.
 
         Returns the number of blocks written. ``kv_payload`` optionally
         carries real per-block KV (tests); the cluster sim passes None and
-        only the control plane + modeled latency run.
+        only the control plane + modeled latency run. ``keys`` optionally
+        carries the chain from an earlier ``plan_fetch`` (hash once).
         """
         bt = self.pool.layout.block_tokens
-        keys = self.index.keys_for(tokens)
-        table = self.hbm.seq_tables.get(seq_id, [])
-        # only blocks not already in the pool need writing
-        new_keys = []
-        for i, key in enumerate(keys):
-            e = self.index.lookup(key)
-            if e is None or not self.pool.validate_epoch(e.block_id, e.epoch):
-                new_keys.append((i, key))
+        if keys is None:
+            keys = self.index.keys_for(tokens)
+        # only blocks not already in the pool need writing: one batched
+        # index lookup + one vectorized epoch check (no per-key round-trips)
+        entries = self.index.lookup_many(keys)
+        known = [(i, e) for i, e in enumerate(entries) if e is not None]
+        valid = set()
+        if known:
+            ok = self.pool.validate_epochs(
+                [e.block_id for _, e in known], [e.epoch for _, e in known]
+            )
+            valid = {i for (i, _), good in zip(known, ok) if good}
+        new_keys = [(i, k) for i, k in enumerate(keys) if i not in valid]
         if not new_keys:
             return 0
         try:
@@ -176,8 +186,9 @@ class KVCacheManager:
                 np.float16,
             )
         epochs = self.transfer.gather_write(block_ids, kv_payload)
-        for (i, key), bid, epoch in zip(new_keys, block_ids, epochs):
-            self.index.publish(key, bid, epoch, bt)
+        self.index.publish_many(
+            [key for _, key in new_keys], block_ids, epochs, bt
+        )
         self.stats.writebacks += 1
         return len(new_keys)
 

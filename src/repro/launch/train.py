@@ -50,10 +50,9 @@ def main() -> None:
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
     rules = None
     if d * m > 1:
-        mesh = jax.make_mesh(
-            (d, m), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        from repro.launch.mesh import axis_types_kw
+
+        mesh = jax.make_mesh((d, m), ("data", "model"), **axis_types_kw(2))
         rules = AxisRules.create(mesh)
     runtime = RuntimeConfig(
         remat="full", attn_chunk_q=64, attn_chunk_kv=64, moe_dispatch="einsum"

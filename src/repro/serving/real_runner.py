@@ -167,10 +167,7 @@ class RealEngine:
             blocks.astype(self.pool.data.dtype)
         )
         keys = self.index.keys_for(prompt)
-        for key, bid in zip(keys, block_ids):
-            with self.pool._lock:  # publish AFTER the payload write (§5.1)
-                m = self.pool.meta[bid]
-                m.epoch += 1
-                m.committed = True
-                epoch = m.epoch
+        # commit AFTER the payload write (§5.1): one batched epoch bump
+        epochs = self.pool.write_blocks(block_ids)
+        for key, bid, epoch in zip(keys, block_ids, epochs):
             self.index.publish(key, bid, epoch, bt)

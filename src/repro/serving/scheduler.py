@@ -86,9 +86,6 @@ class Cluster:
             eng = min(self.engines, key=lambda e: (e.load(), e.clock))
         elif policy == "cache_aware":
             local = [e for e in self.engines if e.has_prefix_locally(req)]
-            pool_hit = bool(self.index.keys_for(req.tokens)) and bool(
-                self.index.match_prefix(req.tokens)
-            )
             if local:
                 eng = min(local, key=lambda e: (e.load(), e.clock))
             else:

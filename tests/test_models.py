@@ -40,7 +40,18 @@ def _batch(cfg, b=2, s=32):
     }
 
 
-@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def _arch_params(archs):
+    """jamba's reduced config is by far the heaviest compile (~1 min for
+    the train-step smoke alone): keep it out of tier-1, behind -m slow."""
+    return [
+        pytest.param(a, marks=pytest.mark.slow)
+        if a == "jamba-1.5-large-398b"
+        else a
+        for a in archs
+    ]
+
+
+@pytest.mark.parametrize("arch", _arch_params(sorted(ASSIGNED)))
 def test_arch_smoke_forward_and_train_step(arch):
     cfg = reduced_config(arch)
     m = Model(cfg, RT)
@@ -84,7 +95,8 @@ def test_arch_smoke_decode_shapes(arch):
 
 
 @pytest.mark.parametrize(
-    "arch", ["olmo-1b", "command-r-35b", "mamba2-2.7b", "jamba-1.5-large-398b"]
+    "arch",
+    _arch_params(["olmo-1b", "command-r-35b", "mamba2-2.7b", "jamba-1.5-large-398b"]),
 )
 def test_prefill_decode_matches_full_forward(arch):
     import dataclasses

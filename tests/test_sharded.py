@@ -30,12 +30,13 @@ from repro.configs.registry import reduced_config
 from repro.configs.base import RuntimeConfig
 from repro.models import Model
 from repro.distributed.sharding import AxisRules
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import axis_types_kw
+mesh = jax.make_mesh((2, 4), ("data", "model"), **axis_types_kw(2))
 rules = AxisRules.create(mesh)
 """
 
 
+@pytest.mark.slow  # subprocess model compiles: minutes
 def test_sharded_train_and_interleaved_decode():
     _run(HEADER + textwrap.dedent("""
         rt = RuntimeConfig(remat="full", attn_chunk_q=16, attn_chunk_kv=16,
@@ -58,6 +59,7 @@ def test_sharded_train_and_interleaved_decode():
         """))
 
 
+@pytest.mark.slow
 def test_interleaved_decode_matches_replicated():
     """The LSE-merge distributed flash-decode must equal the single-chip
     softmax over the full cache (numerical equivalence of Beluga O9)."""
@@ -90,6 +92,7 @@ def test_interleaved_decode_matches_replicated():
         """))
 
 
+@pytest.mark.slow
 def test_a2a_moe_matches_einsum_dispatch():
     _run(HEADER + textwrap.dedent("""
         cfg = reduced_config("llama4-maverick-400b-a17b")
