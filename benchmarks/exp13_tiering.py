@@ -1,0 +1,264 @@
+"""Exp #13 (beyond-paper): tiered pool memory under capacity pressure.
+
+Sweeps pool-pressure ratios (working set / fast-tier capacity) and Zipf
+skew over a document-reuse workload, comparing:
+
+  * **baseline** — flat PR-1 pool of the same (fast) capacity: on OOM the
+    index destroys LRU prefixes (``evict_lru``) and every re-request of a
+    destroyed prefix degenerates to full recompute;
+  * **tiered**  — same fast capacity plus a spill tier (RDMA-DRAM media)
+    with the background migration engine: cold prefixes are demoted ahead
+    of pressure and stay fetchable at spill latency.
+
+Protocol per cell: populate every document once, then measure TTFT over a
+Zipf-sampled re-request stream.  Requests are dispatched *event-driven*
+(fed to the cluster as virtual time reaches their arrival, engines
+advancing in lockstep windows): pre-dispatching a spread-out stream would
+fast-forward every engine clock to its last arrival
+(``EngineInstance.submit`` is a clock barrier) and drown the latency
+signal in artificial queueing.
+
+Also runs the **zero-cost check**: a ``tiering=off`` config must reproduce
+the PR-1 exp05-small summary stats bit-identically (captured below from
+the PR-1 code on this container) — the subsystem must cost nothing when
+disabled.
+
+    PYTHONPATH=src python -m benchmarks.exp13_tiering [--fast]
+
+Writes ``BENCH_tiering.json`` (``BENCH_tiering.fast.json`` with --fast).
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import qwen32b_layout, run_populate_then_hit
+from repro.serving.request import Request, summarize
+from repro.serving.scheduler import Cluster, ClusterConfig
+from repro.tiering import TieringConfig
+
+OUT_PATH = "BENCH_tiering.json"
+OUT_PATH_FAST = "BENCH_tiering.fast.json"
+
+# PR-1 reference for the zero-cost check: run_populate_then_hit with the
+# config in zero_cost_check() below, measured on the PR-1 code (flat
+# BelugaPool, before the tiering subsystem existed). All virtual-time
+# stats — any drift means the disabled subsystem perturbed the sim.
+REFERENCE_PR1 = {
+    "populate": {
+        "n_done": 64,
+        "avg_ttft_s": 2.8039488662139376,
+        "p99_ttft_s": 7.089036169999989,
+        "avg_tpot_s": 0.045259955066344205,
+        "p99_tpot_s": 0.05249664386904753,
+        "qps": 6.937195787229816,
+        "hit_tokens": 38304,
+        "total_prompt_tokens": 131072,
+    },
+    "cache_hit": {
+        "n_done": 64,
+        "avg_ttft_s": 1.8867119865384638,
+        "p99_ttft_s": 5.383646092307693,
+        "avg_tpot_s": 0.040713094120116054,
+        "p99_tpot_s": 0.04234551245421243,
+        "qps": 8.561591044588884,
+        "hit_tokens": 131072,
+        "total_prompt_tokens": 131072,
+    },
+}
+
+
+# ---------------------------------------------------------------------------
+def _doc_tokens(d: int, in_len: int) -> list[int]:
+    return np.random.default_rng(9000 + d).integers(0, 1000, size=in_len).tolist()
+
+
+def zipf_docs(n: int, n_docs: int, skew: float, seed: int = 13) -> np.ndarray:
+    """Zipf(``skew``) document popularity: hot docs recur quickly, the
+    tail recurs slowly — the pattern where LRU destruction hurts most."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_docs + 1, dtype=np.float64)
+    p = ranks ** -skew
+    p /= p.sum()
+    return rng.choice(n_docs, size=n, p=p)
+
+
+def run_stream(cluster: Cluster, reqs: list[Request], window_s: float = 0.25) -> None:
+    """Event-driven driver: dispatch each request as virtual time reaches
+    its arrival, advancing all engines in lockstep windows."""
+    reqs = sorted(reqs, key=lambda r: r.arrival)
+    i, now = 0, min(r.arrival for r in reqs)
+    while i < len(reqs) or any(e._waiting or e.running for e in cluster.engines):
+        while i < len(reqs) and reqs[i].arrival <= now:
+            cluster.dispatch(reqs[i])
+            i += 1
+        backlog = sum(len(e._waiting) + len(e.running) for e in cluster.engines)
+        clocks = [e.clock for e in cluster.engines]
+        for e in cluster.engines:
+            e.advance(now)
+        stalled = (
+            i >= len(reqs)
+            and backlog
+            == sum(len(e._waiting) + len(e.running) for e in cluster.engines)
+            and clocks == [e.clock for e in cluster.engines]
+        )
+        if stalled and now > max(clocks):
+            # no arrivals left, the window passed every engine clock, and
+            # nothing moved: drained, or capacity-deadlocked (drain()'s
+            # stop condition) — no future event can unblock anything
+            break
+        now += window_s
+
+
+# ---------------------------------------------------------------------------
+def _round_shards(n: int, shards: int) -> int:
+    return max(shards, -(-n // shards) * shards)
+
+
+def sweep_cell(
+    oversub: float,
+    skew: float,
+    n: int,
+    n_docs: int,
+    in_len: int,
+    out_len: int = 8,
+    rate: float = 8.0,
+    n_engines: int = 4,
+) -> dict:
+    layout = qwen32b_layout()
+    bt = layout.block_tokens
+    working_set = n_docs * (in_len // bt)
+    shards = 32
+    fast_blocks = _round_shards(int(working_set / oversub), shards)
+    spill_blocks = _round_shards(4 * fast_blocks, shards)
+    base = dict(
+        n_engines=n_engines,
+        transfer_mode="beluga",
+        pool_blocks=fast_blocks,
+        pool_shards=shards,
+        hbm_slots_per_engine=6750,
+    )
+    configs = {
+        "baseline": ClusterConfig(**base),
+        "tiered": ClusterConfig(
+            **base,
+            tiering=TieringConfig(enabled=True, spill_blocks=spill_blocks),
+        ),
+    }
+    out = {
+        "oversubscription": oversub,
+        "zipf_skew": skew,
+        "working_set_blocks": working_set,
+        "fast_blocks": fast_blocks,
+        "spill_blocks": spill_blocks,
+    }
+    for name, cfg in configs.items():
+        c = Cluster(cfg, layout)
+        populate = [
+            Request(f"p{d}", _doc_tokens(d, in_len), out_len, arrival=0.1 * d)
+            for d in range(n_docs)
+        ]
+        run_stream(c, populate)
+        t0 = max(e.clock for e in c.engines)
+        rng = np.random.default_rng(17)
+        t = t0
+        stream = []
+        for i, d in enumerate(zipf_docs(n, n_docs, skew).tolist()):
+            stream.append(
+                Request(f"z{i}", _doc_tokens(d, in_len), out_len, arrival=t)
+            )
+            t += rng.exponential(1.0 / rate)
+        run_stream(c, stream)
+        finished = [r.t_done for r in stream if r.t_done is not None]
+        span = (max(finished) - t0) if finished else 0.0
+        s = summarize(stream, span)
+        out[name] = {
+            "avg_ttft_s": s["avg_ttft_s"],
+            "p99_ttft_s": s["p99_ttft_s"],
+            "qps": s["qps"],
+            "hit_tokens": s["hit_tokens"],
+        }
+        if name == "tiered":
+            out[name]["stats"] = c.pool.stats_dict()
+            out[name]["stats"]["migrator_steps"] = c.migrator.steps
+    out["ttft_ratio"] = out["baseline"]["avg_ttft_s"] / max(
+        out["tiered"]["avg_ttft_s"], 1e-12
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+def zero_cost_check() -> dict:
+    """tiering=off must reproduce the PR-1 exp05-small stats bit-exactly."""
+    layout = qwen32b_layout()
+    cfg = ClusterConfig(
+        n_engines=4,
+        transfer_mode="beluga",
+        pool_blocks=8192,
+        hbm_slots_per_engine=1024,
+        tiering=TieringConfig(enabled=False),
+    )
+    s1, s2, _ = run_populate_then_hit(cfg, layout, n=64, in_len=2048, out_len=64)
+    got = {
+        "populate": {k: s1[k] for k in REFERENCE_PR1["populate"]},
+        "cache_hit": {k: s2[k] for k in REFERENCE_PR1["cache_hit"]},
+    }
+    return {
+        "identical": got == REFERENCE_PR1,
+        "got": got,
+        "reference": REFERENCE_PR1,
+    }
+
+
+# ---------------------------------------------------------------------------
+def run(fast: bool = False) -> list[tuple]:
+    if fast:
+        cells = [(2.0, 1.1)]
+        n, n_docs, in_len = 64, 16, 1024
+    else:
+        cells = [(1.0, 1.1), (2.0, 0.8), (2.0, 1.1), (4.0, 1.1)]
+        n, n_docs, in_len = 96, 24, 2048
+
+    results: dict = {"fast": fast, "cells": []}
+    rows = []
+    for oversub, skew in cells:
+        cell = sweep_cell(oversub, skew, n=n, n_docs=n_docs, in_len=in_len)
+        results["cells"].append(cell)
+        t = cell["tiered"]["stats"]
+        rows.append(
+            (
+                f"exp13.tiering.os{oversub:g}.zipf{skew:g}",
+                f"{cell['tiered']['avg_ttft_s'] * 1e6:.0f}",
+                f"ttft_flat={cell['baseline']['avg_ttft_s'] * 1e3:.0f}ms;"
+                f"ttft_tiered={cell['tiered']['avg_ttft_s'] * 1e3:.0f}ms;"
+                f"ratio={cell['ttft_ratio']:.2f}x;"
+                f"demotions={t.get('demotions', 0)};"
+                f"promotions={t.get('promotions', 0)};"
+                f"spill_hits={t.get('spill_hit_blocks', 0)}",
+            )
+        )
+
+    zc = zero_cost_check()
+    results["zero_cost"] = zc
+    rows.append(
+        ("exp13.zero_cost_when_disabled", "0", f"identical={zc['identical']}")
+    )
+
+    out_path = OUT_PATH_FAST if fast else OUT_PATH
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from benchmarks.common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI-sized inputs")
+    args = ap.parse_args()
+    emit(run(fast=args.fast))
+    print(f"# wrote {OUT_PATH_FAST if args.fast else OUT_PATH}")

@@ -76,6 +76,18 @@ class FabricConstants:
     # CXL-RPC (Exp #11)
     cxl_rpc_rtt: float = 2.11 * US
 
+    # --- spill-tier media (tiered pool, Exp #13) ---
+    # Colder/cheaper capacity BELOW the CXL pool: far-NUMA DRAM reached
+    # over one-sided RDMA (ITME-style hybrid memory) and NVMe-SSD-class
+    # storage. Latency = media access + bandwidth term; the tiered pool
+    # pays this on every spill-tier block it touches, which is what makes
+    # demotion a *latency* trade (spill hit ≪ recompute ≪ destroy+recompute)
+    # rather than a free capacity extension.
+    spill_dram_rdma_latency: float = 4.0 * US  # far-memory one-sided read
+    spill_dram_rdma_bw: float = 20.0 * GB  # shared far-NUMA / RDMA fabric
+    spill_ssd_latency: float = 80.0 * US  # NVMe read latency class
+    spill_ssd_bw: float = 6.0 * GB  # PCIe4 x4 NVMe device
+
 
 DEFAULT = FabricConstants()
 
@@ -158,6 +170,17 @@ def rdma_transfer_latency(
 
 def local_dram_latency(size: int, c: FabricConstants = DEFAULT) -> float:
     return c.dram_latency + size / c.dram_bw
+
+
+def spill_transfer_latency(
+    size: int, media: str = "rdma_dram", c: FabricConstants = DEFAULT
+) -> float:
+    """Spill-tier (below-pool) media access: far DRAM over RDMA or SSD."""
+    if media == "rdma_dram":
+        return c.spill_dram_rdma_latency + size / c.spill_dram_rdma_bw
+    if media == "ssd":
+        return c.spill_ssd_latency + size / c.spill_ssd_bw
+    raise ValueError(media)
 
 
 # ---------------------------------------------------------------------------

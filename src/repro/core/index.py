@@ -64,6 +64,14 @@ class GlobalIndex:
         self.block_tokens = pool.layout.block_tokens
         self._lock = threading.Lock()
         self._map: OrderedDict[bytes, IndexEntry] = OrderedDict()
+        # block_id -> key reverse map: lets the tiering migrator find the
+        # owning key of a cold block in O(1) (and re-point the entry after
+        # a tier migration) without walking the whole map
+        self._by_block: dict[int, bytes] = {}
+        # optional hook fired with the keys of entries destroyed by
+        # eviction (evict_lru / evict_blocks): the tiering policy's
+        # ghost-LRU admission filter subscribes here. None = zero cost.
+        self.on_evict = None
         # parent_key||block_token_bytes -> key chain memo (bounded FIFO)
         self._chain_cache: OrderedDict[bytes, bytes] = OrderedDict()
         # digest(whole token buffer) -> full key list (one hash instead of
@@ -138,7 +146,10 @@ class GlobalIndex:
                     self._map.move_to_end(k)
                     out.append((k, e.block_id, e.epoch))
                 if n_ok < len(entries):  # stale entry: drop it
-                    self._map.pop(entries[n_ok][0], None)
+                    sk, se = entries[n_ok]
+                    self._map.pop(sk, None)
+                    if self._by_block.get(se.block_id) == sk:
+                        del self._by_block[se.block_id]
             self.hits += len(out)
             self.misses += max(0, len(keys) - len(out))
         return out
@@ -146,8 +157,12 @@ class GlobalIndex:
     def publish(self, key: bytes, block_id: int, epoch: int, n_tokens: int) -> None:
         """Writer publishes AFTER the block payload is flushed (coherence)."""
         with self._lock:
+            old = self._map.get(key)
+            if old is not None and self._by_block.get(old.block_id) == key:
+                del self._by_block[old.block_id]
             self._map[key] = IndexEntry(block_id, epoch, n_tokens, time.monotonic())
             self._map.move_to_end(key)
+            self._by_block[block_id] = key
 
     def publish_many(
         self,
@@ -166,8 +181,13 @@ class GlobalIndex:
         now = time.monotonic()
         with self._lock:
             m = self._map
+            by_block = self._by_block
             for key, bid, epoch in zip(keys, block_ids, epochs):
+                old = m.get(key)
+                if old is not None and by_block.get(old.block_id) == key:
+                    del by_block[old.block_id]
                 m[key] = IndexEntry(bid, epoch, n_tokens, now)
+                by_block[bid] = key
 
     def lookup(self, key: bytes) -> IndexEntry | None:
         with self._lock:
@@ -180,7 +200,7 @@ class GlobalIndex:
 
     def evict_lru(self, n: int) -> list[int]:
         """Evict up to n unreferenced blocks; returns freed block ids."""
-        freed = []
+        freed, dropped = [], []
         with self._lock:
             for k in list(self._map.keys()):
                 if len(freed) >= n:
@@ -188,10 +208,82 @@ class GlobalIndex:
                 e = self._map[k]
                 if self.pool.refcounts[e.block_id] <= 1:
                     freed.append(e.block_id)
+                    dropped.append(k)
                     del self._map[k]
+                    if self._by_block.get(e.block_id) == k:
+                        del self._by_block[e.block_id]
         if freed:
             self.pool.release(freed)
+        if dropped and self.on_evict is not None:
+            self.on_evict(dropped)
         return freed
+
+    def evict_blocks(self, block_ids: list[int]) -> list[int]:
+        """Evict the entries owning specific blocks (tier-local pressure
+        relief: the migrator frees cold spill blocks to make demotion
+        room). Skips blocks with in-flight references; returns freed ids."""
+        freed, dropped = [], []
+        with self._lock:
+            for b in block_ids:
+                k = self._by_block.get(b)
+                if k is None:
+                    continue
+                e = self._map.get(k)
+                if e is None or e.block_id != b:
+                    continue
+                if self.pool.refcounts[b] > 1:
+                    continue
+                freed.append(b)
+                dropped.append(k)
+                del self._map[k]
+                del self._by_block[b]
+        if freed:
+            self.pool.release(freed)
+        if dropped and self.on_evict is not None:
+            self.on_evict(dropped)
+        return freed
+
+    # ------------------------------------------------------------------
+    # Tier-migration support: the migrator moves a payload to a new block
+    # in another tier, then re-points the (key -> block, epoch) entry.
+    # ------------------------------------------------------------------
+    def keys_of_blocks(self, block_ids) -> list[bytes | None]:
+        """Owning key per block id (None for unindexed blocks)."""
+        with self._lock:
+            return [self._by_block.get(int(b)) for b in block_ids]
+
+    def remap_many(
+        self,
+        keys: list[bytes],
+        old_ids: list[int],
+        old_epochs: list[int],
+        new_ids: list[int],
+        new_epochs: list[int],
+    ) -> list[bool]:
+        """Atomically re-point entries after a tier migration.
+
+        Each remap succeeds only if the entry still maps to
+        (old_id, old_epoch) — a concurrent eviction/re-publish loses the
+        race and the caller must roll its copy back. Readers that matched
+        before the remap hold (old_id, old_epoch); once the caller
+        releases the old block its epoch bumps and their validate fails,
+        which is exactly the §5.1 recycle-detection path."""
+        out = []
+        with self._lock:
+            for key, old_id, old_epoch, new_id, new_epoch in zip(
+                keys, old_ids, old_epochs, new_ids, new_epochs
+            ):
+                e = self._map.get(key)
+                if e is None or e.block_id != old_id or e.epoch != old_epoch:
+                    out.append(False)
+                    continue
+                if self._by_block.get(old_id) == key:
+                    del self._by_block[old_id]
+                e.block_id = new_id
+                e.epoch = new_epoch
+                self._by_block[new_id] = key
+                out.append(True)
+        return out
 
     def stats(self) -> dict:
         with self._lock:

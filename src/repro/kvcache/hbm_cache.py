@@ -37,6 +37,11 @@ class HbmPagedCache:
     def free_slots(self) -> int:
         return len(self._free)
 
+    def has_key(self, key: bytes) -> bool:
+        """Whether a slot currently holds this prefix block (no refcount
+        side effects — the cache-aware scheduler's locality probe)."""
+        return key in self._by_key
+
     def lookup_shared(self, key: bytes) -> int | None:
         """Intra-instance prefix block reuse (no transfer needed at all)."""
         slot = self._by_key.get(key)

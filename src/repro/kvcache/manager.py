@@ -57,6 +57,7 @@ class KVCacheManager:
         transfer: TransferEngine,
         recompute_cutover: float | None = None,
         prefill_tok_per_s: float = 8000.0,
+        queues=None,
     ):
         self.pool = pool
         self.index = index
@@ -64,21 +65,31 @@ class KVCacheManager:
         self.transfer = transfer
         self.recompute_cutover = recompute_cutover
         self.prefill_tok_per_s = prefill_tok_per_s
+        # shared fabric.DeviceQueues (tiered mode): foreground fetches
+        # queue on the same pool devices as background migration traffic
+        self.queues = queues
         self.stats = ManagerStats()
 
     # ------------------------------------------------------------------
-    def plan_fetch(self, tokens: list[int]) -> FetchPlan:
-        """Prefix match + fetch-vs-recompute decision."""
+    def plan_fetch(self, tokens: list[int], now: float = 0.0) -> FetchPlan:
+        """Prefix match + fetch-vs-recompute decision.
+
+        ``now`` (engine virtual time) only matters in tiered mode: it
+        drives hotness decay and device-queue contention."""
         bt = self.pool.layout.block_tokens
         keys = self.index.keys_for(tokens)
         hits = self.index.match_prefix_keys(keys)
         n_hit = len(hits) * bt
         n_miss = len(tokens) - n_hit
         # modeled fetch latency for the hit prefix (one fused kernel)
-        t0 = self.transfer.stats.modeled_read_s
         lat = 0.0
         if hits:
-            lat = self._fetch_latency(len(hits))
+            if getattr(self.pool, "is_tiered", False):
+                lat = self._fetch_latency_tiered(
+                    [b for _, b, _ in hits], now
+                )
+            else:
+                lat = self._fetch_latency(len(hits))
         recompute_time = n_hit / self.prefill_tok_per_s
         # straggler mitigation (beyond-paper): recompute instead of waiting
         # on a fetch slower than `cutover x` the recompute time. Disabled by
@@ -115,9 +126,42 @@ class KVCacheManager:
         n_super = math.ceil(n_blocks * lay.block_tokens / sbt)
         return t + n_super * self.transfer.constants.rdma_sw_per_superblock
 
+    def _fetch_latency_tiered(self, block_ids: list[int], now: float) -> float:
+        """Tier-aware fetch latency: fast-tier blocks ride the normal CXL
+        path; spill-tier blocks first pay the spill media (RDMA-DRAM/SSD)
+        plus the GPU-ingest bandwidth term. The access is also recorded as
+        heat (promotion signal) and, when a shared ``DeviceQueues`` is
+        wired, the transfer queues behind in-flight migration traffic."""
+        from repro.core import fabric
+
+        pool = self.pool
+        n_fast, n_spill = pool.touch_demand(block_ids, now)
+        lay = pool.layout
+        lat = self._fetch_latency(n_fast) if n_fast else 0.0
+        if n_spill:
+            size = n_spill * lay.block_bytes
+            lat += fabric.spill_transfer_latency(
+                size, pool.spill_media, self.transfer.constants
+            ) + size / self.transfer.constants.gpu_cxl_bw
+        if self.queues is not None:
+            # migration batches occupy the pool devices (the migrator
+            # submits its copies into these queues): a fetch overlapping
+            # that backlog degrades toward half bandwidth, so it pays up
+            # to its own duration again — bounded, so out-of-sync engine
+            # clocks can't manufacture phantom multi-second waits.
+            backlog = max(self.queues.busy_until) - now
+            if backlog > 0.0:
+                lat += min(backlog, lat)
+        return lat
+
     # ------------------------------------------------------------------
     def fetch_into_hbm(self, seq_id: str, plan: FetchPlan) -> list[int]:
-        """Scatter-read hit blocks into freshly allocated HBM slots."""
+        """Scatter-read hit blocks into freshly allocated HBM slots.
+
+        On ANY failure the sequence is still registered (empty) and every
+        intermediate resource is rolled back, so the caller can always
+        fall through to full recompute with ``hbm.seq_tables[seq_id]``
+        present and no leaked pool refs or HBM slots."""
         if not plan.hit_blocks:
             self.hbm.register_sequence(seq_id, [])
             return []
@@ -129,17 +173,32 @@ class KVCacheManager:
             slots = self.hbm.allocate(len(block_ids), keys=keys)
         except OutOfHbmBlocks:
             self.pool.release(block_ids)
+            self._fetch_failed(seq_id, plan)
             raise
         try:
             self.transfer.scatter_read(block_ids, epochs)
             self.stats.fetches += 1
-        finally:
+        except BaseException:
             self.pool.release(block_ids)
+            self.hbm.release(slots)
+            self._fetch_failed(seq_id, plan)
+            raise
+        self.pool.release(block_ids)
+        if getattr(self.pool, "is_tiered", False):
+            self.pool.count_tier_hits(block_ids)
         self.hbm.register_sequence(seq_id, slots)
         return slots
 
+    def _fetch_failed(self, seq_id: str, plan: FetchPlan) -> None:
+        """Common failure bookkeeping: the caller falls back to full
+        recompute, so the planned hit tokens were in fact missed."""
+        self.hbm.register_sequence(seq_id, [])
+        self.stats.prefix_hits_tokens -= plan.n_hit_tokens
+        self.stats.prefix_miss_tokens += plan.n_hit_tokens
+
     def writeback(
-        self, seq_id: str, tokens: list[int], kv_payload=None, keys=None
+        self, seq_id: str, tokens: list[int], kv_payload=None, keys=None,
+        now: float = 0.0,
     ) -> int:
         """After prefill: gather-write full blocks to the pool + publish.
 
@@ -147,8 +206,12 @@ class KVCacheManager:
         carries real per-block KV (tests); the cluster sim passes None and
         only the control plane + modeled latency run. ``keys`` optionally
         carries the chain from an earlier ``plan_fetch`` (hash once).
+        ``now`` feeds the tiered pool's hotness clock (ignored otherwise).
         """
         bt = self.pool.layout.block_tokens
+        tiered = getattr(self.pool, "is_tiered", False)
+        if tiered:
+            self.pool.tick(now)
         if keys is None:
             keys = self.index.keys_for(tokens)
         # only blocks not already in the pool need writing: one batched
@@ -164,13 +227,21 @@ class KVCacheManager:
         new_keys = [(i, k) for i, k in enumerate(keys) if i not in valid]
         if not new_keys:
             return 0
+
+        def _alloc():
+            if tiered:  # keys feed the ghost-LRU admission filter
+                return self.pool.allocate(
+                    len(new_keys), keys=[k for _, k in new_keys]
+                )
+            return self.pool.allocate(len(new_keys))
+
         try:
-            block_ids = self.pool.allocate(len(new_keys))
+            block_ids = _alloc()
         except OutOfPoolMemory:
             freed = self.index.evict_lru(len(new_keys) * 2)
             self.stats.pool_evictions += len(freed)
             try:
-                block_ids = self.pool.allocate(len(new_keys))
+                block_ids = _alloc()
             except OutOfPoolMemory:
                 return 0  # pool full of referenced blocks: skip offload
         lay = self.pool.layout

@@ -78,11 +78,15 @@ class EngineInstance:
         manager: KVCacheManager,
         runner: SimRunner,
         max_batch: int | None = None,
+        migrator=None,
     ):
         self.engine_id = engine_id
         self.manager = manager
         self.runner = runner
         self.max_batch = max_batch or runner.cfg.max_batch
+        # optional shared tiering.MigrationEngine: driven between decode
+        # steps so background migration rides the serving virtual clock
+        self.migrator = migrator
         self.clock = 0.0
         # arrival-ordered heap of (arrival, submit_seq, req). Ties resolve
         # in submission order, so for monotone arrival streams (all the
@@ -114,7 +118,7 @@ class EngineInstance:
         keys = self.manager.index.keys_for(req.tokens)
         if not keys:
             return False
-        return self.manager.hbm._by_key.get(keys[0]) is not None
+        return self.manager.hbm.has_key(keys[0])
 
     # ------------------------------------------------------------------
     def required_slots(self, req: Request) -> int:
@@ -141,7 +145,7 @@ class EngineInstance:
     def _admit_one(self, req: Request) -> None:
         t0 = max(self.clock, req.arrival)
         req.t_admitted = t0
-        plan = self.manager.plan_fetch(req.tokens)
+        plan = self.manager.plan_fetch(req.tokens, now=t0)
         req.hit_tokens = plan.n_hit_tokens
         fetch_t = 0.0
         if plan.hit_blocks:
@@ -149,8 +153,15 @@ class EngineInstance:
             try:
                 self.manager.fetch_into_hbm(req.req_id, plan)
             except Exception:
+                # failed fetch (HBM pressure / epoch race): fall back to
+                # full recompute. The manager already rolled back and
+                # registered an empty sequence; keep a defensive register
+                # here so the table lookup below can never KeyError.
                 fetch_t = 0.0
                 plan.n_miss_tokens = len(req.tokens)
+                req.hit_tokens = 0  # nothing was actually fetched
+                if req.req_id not in self.manager.hbm.seq_tables:
+                    self.manager.hbm.register_sequence(req.req_id, [])
         else:
             self.manager.hbm.register_sequence(req.req_id, [])
         # reserve the remaining slots (miss prefix + decode growth)
@@ -164,7 +175,9 @@ class EngineInstance:
             else 0.0
         )
         wb_t = 0.0
-        n_new = self.manager.writeback(req.req_id, req.tokens, keys=plan.keys)
+        n_new = self.manager.writeback(
+            req.req_id, req.tokens, keys=plan.keys, now=t0 + fetch_t + prefill_t
+        )
         if n_new:
             wb_t = self._writeback_latency(n_new)
         self.clock = t0 + fetch_t + prefill_t + wb_t
@@ -218,10 +231,14 @@ class EngineInstance:
                     break
                 heapq.heappop(self._waiting)
                 self._admit_one(head[2])
+                if self.migrator is not None:
+                    self.migrator.run_until(self.clock)
             elif self.running:
                 if self.clock >= until:
                     break
                 self._decode_step()
+                if self.migrator is not None:
+                    self.migrator.run_until(self.clock)
             elif head is not None:
                 if ready or head[0] >= until:
                     # `ready` here means capacity-gated with nothing running:
@@ -229,6 +246,11 @@ class EngineInstance:
                     # loop would spin on this state)
                     break
                 self.clock = max(self.clock, head[0])
+                if self.migrator is not None:
+                    # idle gap: give the background engine its elapsed
+                    # budget BEFORE the next admission plans against the
+                    # tier state (demote-ahead-of-pressure)
+                    self.migrator.run_until(self.clock)
             else:
                 break  # idle: leave the clock at the last busy instant
 

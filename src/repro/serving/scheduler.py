@@ -15,6 +15,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro.core.fabric import DEFAULT, DeviceQueues
 from repro.core.index import GlobalIndex
 from repro.core.pool import BelugaPool, PoolLayout
 from repro.core.transfer import TransferEngine
@@ -22,6 +23,7 @@ from repro.kvcache.hbm_cache import HbmPagedCache
 from repro.kvcache.manager import KVCacheManager
 from repro.serving.engine import EngineInstance, SimRunner, SimRunnerConfig
 from repro.serving.request import Request, summarize
+from repro.tiering import MigrationEngine, TieredPool, TieringConfig
 
 
 @dataclass
@@ -39,45 +41,83 @@ class ClusterConfig:
     block_tokens: int = 16
     straggler_cutover: float | None = None  # fetch-vs-recompute ratio
     runner: SimRunnerConfig = field(default_factory=SimRunnerConfig)
+    # tiered pool memory (Exp #13): disabled -> flat BelugaPool, the exact
+    # PR-1 code path; enabled -> pool_blocks become the FAST tier and a
+    # spill tier (+ background migration engine) sits below it
+    tiering: TieringConfig = field(default_factory=TieringConfig)
 
 
 class Cluster:
     def __init__(self, cfg: ClusterConfig, layout: PoolLayout, backing: str = "meta"):
         self.cfg = cfg
-        self.pool = BelugaPool(
-            layout,
-            n_blocks=cfg.pool_blocks,
-            n_shards=cfg.pool_shards,
-            interleave=cfg.interleave,
-            backing=backing,
-        )
-        self.index = GlobalIndex(self.pool)
+        tcfg = cfg.tiering
+        if tcfg.enabled:
+            spill = tcfg.spill_blocks or 4 * cfg.pool_blocks
+            spill = -(-spill // cfg.pool_shards) * cfg.pool_shards
+            self.pool = TieredPool(
+                layout,
+                fast_blocks=cfg.pool_blocks,
+                spill_blocks=spill,
+                n_shards=cfg.pool_shards,
+                interleave=cfg.interleave,
+                backing=backing,
+                cfg=tcfg,
+            )
+            self.index = GlobalIndex(self.pool)
+            # destroyed keys arm the ghost-LRU admission filter
+            self.index.on_evict = self.pool.policy.ghost_add
+            self.queues = (
+                DeviceQueues(n_devices=DEFAULT.n_devices)
+                if tcfg.model_contention
+                else None
+            )
+            self.migrator = MigrationEngine(
+                self.pool, self.index, tcfg, queues=self.queues
+            )
+        else:
+            self.pool = BelugaPool(
+                layout,
+                n_blocks=cfg.pool_blocks,
+                n_shards=cfg.pool_shards,
+                interleave=cfg.interleave,
+                backing=backing,
+            )
+            self.index = GlobalIndex(self.pool)
+            self.queues = None
+            self.migrator = None
         self.engines: list[EngineInstance] = []
         self._rr = 0
         for i in range(cfg.n_engines):
-            transfer = TransferEngine(
-                self.pool,
-                mode="beluga" if cfg.transfer_mode == "none" else cfg.transfer_mode,
-                super_block_tokens=cfg.super_block_tokens,
-            )
-            hbm = HbmPagedCache(cfg.hbm_slots_per_engine, cfg.block_tokens)
-            mgr = KVCacheManager(
-                self.pool, self.index, hbm, transfer,
-                recompute_cutover=cfg.straggler_cutover,
-                prefill_tok_per_s=cfg.runner.prefill_tok_per_s,
-            )
-            if cfg.transfer_mode == "none":
-                # no pool offload: disable prefix reuse entirely
-                mgr.plan_fetch_orig = mgr.plan_fetch
-                mgr.plan_fetch = _no_offload_plan(mgr)
-                mgr.writeback = lambda *a, **k: 0
-            self.engines.append(
-                EngineInstance(i, mgr, SimRunner(cfg.runner))
-            )
+            self.engines.append(self._make_engine(i))
         self.requests: list[Request] = []
 
+    def _make_engine(self, engine_id: int) -> EngineInstance:
+        cfg = self.cfg
+        transfer = TransferEngine(
+            self.pool,
+            mode="beluga" if cfg.transfer_mode == "none" else cfg.transfer_mode,
+            super_block_tokens=cfg.super_block_tokens,
+        )
+        hbm = HbmPagedCache(cfg.hbm_slots_per_engine, cfg.block_tokens)
+        mgr = KVCacheManager(
+            self.pool, self.index, hbm, transfer,
+            recompute_cutover=cfg.straggler_cutover,
+            prefill_tok_per_s=cfg.runner.prefill_tok_per_s,
+            queues=self.queues,
+        )
+        if cfg.transfer_mode == "none":
+            # no pool offload: disable prefix reuse entirely
+            mgr.plan_fetch_orig = mgr.plan_fetch
+            mgr.plan_fetch = _no_offload_plan(mgr)
+            mgr.writeback = lambda *a, **k: 0
+        return EngineInstance(
+            engine_id, mgr, SimRunner(cfg.runner), migrator=self.migrator
+        )
+
     # ------------------------------------------------------------------
-    def dispatch(self, req: Request) -> EngineInstance:
+    def _select_engine(self, req: Request) -> EngineInstance:
+        """Routing policy only — no bookkeeping (shared by dispatch and
+        the orphan re-dispatch path, which must not re-append)."""
         policy = self.cfg.policy
         if policy == "round_robin":
             eng = self.engines[self._rr % len(self.engines)]
@@ -92,6 +132,10 @@ class Cluster:
                 eng = min(self.engines, key=lambda e: (e.load(), e.clock))
         else:
             raise ValueError(policy)
+        return eng
+
+    def dispatch(self, req: Request) -> EngineInstance:
+        eng = self._select_engine(req)
         eng.submit(req, req.arrival)
         self.requests.append(req)
         return eng
@@ -109,6 +153,9 @@ class Cluster:
         stats["index"] = self.index.stats()
         stats["pool_free"] = self.pool.free_blocks()
         stats["shard_occupancy_max"] = max(self.pool.shard_occupancy() or [0])
+        if self.migrator is not None:
+            stats["tiering"] = self.pool.stats_dict()
+            stats["tiering"]["migrator_steps"] = self.migrator.steps
         return stats
 
     # ------------------------------------------------------------------
@@ -116,7 +163,12 @@ class Cluster:
     # with NO KV rebalancing — the pool is shared (paper §6.3).
     # ------------------------------------------------------------------
     def remove_engine(self, engine_id: int) -> list[Request]:
-        """Simulate an instance failure: requeue its in-flight requests."""
+        """Simulate an instance failure: requeue its in-flight requests.
+
+        Each of the k orphans is routed and resubmitted exactly once —
+        O(k) dispatches, with no duplicate append + O(n)
+        ``requests.remove`` scan — and ``self.requests`` keeps its
+        original order."""
         eng = self.engines[engine_id]
         orphans = list(eng.waiting) + list(eng.running)
         for r in orphans:
@@ -127,18 +179,11 @@ class Cluster:
         for i, e in enumerate(self.engines):
             e.engine_id = i
         for r in orphans:
-            self.dispatch(r)
-            self.requests.remove(r)  # re-added by dispatch
+            self._select_engine(r).submit(r, r.arrival)
         return orphans
 
     def add_engine(self) -> EngineInstance:
-        i = len(self.engines)
-        transfer = TransferEngine(self.pool, mode=self.cfg.transfer_mode
-                                  if self.cfg.transfer_mode != "none" else "beluga")
-        hbm = HbmPagedCache(self.cfg.hbm_slots_per_engine, self.cfg.block_tokens)
-        mgr = KVCacheManager(self.pool, self.index, hbm, transfer,
-                             prefill_tok_per_s=self.cfg.runner.prefill_tok_per_s)
-        eng = EngineInstance(i, mgr, SimRunner(self.cfg.runner))
+        eng = self._make_engine(len(self.engines))
         eng.clock = max((e.clock for e in self.engines), default=0.0)
         self.engines.append(eng)
         return eng
@@ -147,7 +192,7 @@ class Cluster:
 def _no_offload_plan(mgr):
     from repro.kvcache.manager import FetchPlan
 
-    def plan(tokens):
+    def plan(tokens, now=0.0):
         return FetchPlan(0, len(tokens), [], 0.0, False)
 
     return plan

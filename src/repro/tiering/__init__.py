@@ -1,0 +1,29 @@
+"""Tiered pool memory: hotness-tracked HBM ↔ CXL ↔ spill hierarchy.
+
+The Beluga pool is the *middle* of a real memory hierarchy: HBM above it,
+colder/cheaper capacity (far-NUMA DRAM over RDMA, SSD) below it.  This
+package turns the flat ``BelugaPool`` into a hotness-managed hierarchy:
+
+  * ``policy``   — vectorized decayed-access hotness tracker + ghost-LRU
+                   admission filter (O(blocks touched) per update);
+  * ``tiers``    — ``TieredPool``: fast CXL tier + spill tier behind the
+                   existing allocate/retain/release/epoch API;
+  * ``migrator`` — virtual-clock background engine demoting cold blocks
+                   ahead of pressure and promoting re-hot ones in budgeted
+                   batches, contending with foreground fetches through
+                   ``fabric.DeviceQueues``;
+  * ``stats``    — per-tier occupancy / hit / demotion / promotion counters.
+"""
+
+from repro.tiering.migrator import MigrationEngine
+from repro.tiering.policy import HotnessTracker
+from repro.tiering.stats import TierStats
+from repro.tiering.tiers import TieredPool, TieringConfig
+
+__all__ = [
+    "HotnessTracker",
+    "MigrationEngine",
+    "TierStats",
+    "TieredPool",
+    "TieringConfig",
+]

@@ -1,0 +1,201 @@
+"""Background tier-migration engine (virtual clock, budgeted batches).
+
+Runs as a daemon on the cluster's virtual time line: every
+``migrate_interval_s`` it takes one step, and each step moves at most
+``migrate_batch_blocks`` blocks — a bandwidth budget, not a sweep.
+
+  * **demotion** (ahead of pressure): when fast-tier occupancy crosses the
+    high watermark, the coldest unreferenced indexed blocks migrate to the
+    spill tier until occupancy is back at ``demote_target``.  Demoted
+    prefixes stay fetchable (at spill latency) instead of being destroyed
+    and recomputed — the whole point of the hierarchy.
+  * **promotion**: spill blocks whose decayed heat crosses
+    ``promote_min_heat`` (they keep getting fetched) migrate back to fast,
+    but never above the high watermark.
+  * **spill eviction** (last resort): when the spill tier itself is full,
+    its coldest blocks are destroyed via ``GlobalIndex.evict_blocks`` and
+    their keys enter the ghost list, arming the admission filter.
+
+Migration I/O is accounted through the shared ``fabric.DeviceQueues`` so
+it contends with foreground fetches on the pool devices, and every batch's
+media time lands in ``TierStats.migration_busy_s``.
+
+The engine is driven from ``EngineInstance.advance`` between decode steps:
+each engine calls ``run_until(clock)``; steps fire once on the monotone
+max over all callers (one daemon, many clocks).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import fabric
+from repro.core.fabric import DeviceQueues
+from repro.core.index import GlobalIndex
+from repro.tiering.tiers import TieredPool, TieringConfig
+
+
+class MigrationEngine:
+    def __init__(
+        self,
+        pool: TieredPool,
+        index: GlobalIndex,
+        cfg: TieringConfig | None = None,
+        queues: DeviceQueues | None = None,
+    ):
+        self.pool = pool
+        self.index = index
+        self.cfg = cfg or pool.cfg
+        self.queues = queues
+        self.clock = 0.0
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def run_until(self, now: float) -> None:
+        """Advance the daemon's virtual clock to ``now`` (monotone)."""
+        interval = self.cfg.migrate_interval_s
+        while self.clock + interval <= now:
+            self.clock += interval
+            self._step(self.clock)
+            self.steps += 1
+
+    def _step(self, now: float) -> None:
+        self.pool.tick(now)
+        cfg = self.cfg
+        fast = self.pool.fast
+        used = fast.n_blocks - fast.free_blocks()
+        if used / fast.n_blocks >= cfg.high_watermark:
+            target = int(cfg.demote_target * fast.n_blocks)
+            k = min(cfg.migrate_batch_blocks, used - target)
+            if k > 0:
+                self._demote(k, now)
+        elif fast.free_blocks() > 0:
+            self._promote(now)
+
+    # ------------------------------------------------------------------
+    def _candidates(self, pool, offset: int) -> np.ndarray:
+        """Global ids of migration candidates in one tier: committed with
+        no in-flight reference (refcount 1 = index only). One vectorized
+        mask — the per-block key lookup happens only for the <= batch
+        blocks actually chosen (``_migrate`` skips unindexed stragglers)."""
+        return np.where((pool.refcounts == 1) & pool.committed)[0] + offset
+
+    def _demote(self, k: int, now: float) -> None:
+        pool = self.pool
+        cand = self._candidates(pool.fast, 0)
+        if not len(cand):
+            return
+        chosen = pool.policy.coldest(cand, k, now)
+        # make room in spill by destroying its coldest blocks (true
+        # eviction: keys go to the ghost list via index.on_evict)
+        short = len(chosen) - pool.spill.free_blocks()
+        if short > 0:
+            sc = self._candidates(pool.spill, pool.offset)
+            victims = pool.policy.coldest(sc, short, now)
+            freed = self.index.evict_blocks(victims.tolist())
+            pool.tier_stats.spill_evictions += len(freed)
+            if len(chosen) > pool.spill.free_blocks():
+                chosen = chosen[: pool.spill.free_blocks()]
+        if not len(chosen):
+            return
+        n = self._migrate(chosen.tolist(), to_fast=False)
+        pool.tier_stats.demotions += n
+        self._account(n, now, to_fast=False)
+
+    def _promote(self, now: float) -> None:
+        """Promote from the pending set fed by ``TieredPool.touch_demand``
+        (blocks whose heat crossed the threshold on access) — O(blocks
+        touched), never an every-step sweep of the whole spill tier."""
+        pool, cfg = self.pool, self.cfg
+        pending = pool.promote_pending
+        if not pending:
+            return
+        # promotion budget: stay STRICTLY under the high watermark — a
+        # promotion landing exactly on it would trip the >= demote
+        # trigger next step (promotion-induced demotion wave)
+        cap = int(cfg.high_watermark * pool.fast.n_blocks)
+        used = pool.fast.n_blocks - pool.fast.free_blocks()
+        budget = min(cfg.migrate_batch_blocks, cap - used - 1)
+        if budget <= 0:
+            return
+        cand = np.fromiter(pending, np.intp, len(pending))
+        local = cand - pool.offset
+        # drop stale entries (freed / re-referenced / already promoted)
+        # and entries whose heat decayed back below the threshold while
+        # they waited on budget — membership was decided at touch time
+        live = cand[
+            (pool.spill.refcounts[local] == 1) & pool.spill.committed[local]
+        ]
+        live = live[
+            pool.policy.heat_at(live, now) >= cfg.promote_min_heat
+        ]
+        chosen = pool.policy.hottest(live, budget, now)
+        pending.difference_update(cand.tolist())
+        pending.update(live.tolist())  # budget leftovers retry next step
+        pending.difference_update(chosen.tolist())
+        if not len(chosen):
+            return
+        n = self._migrate(chosen.tolist(), to_fast=True)
+        pool.tier_stats.promotions += n
+        self._account(n, now, to_fast=True)
+
+    # ------------------------------------------------------------------
+    def _migrate(self, src_ids: list[int], to_fast: bool) -> int:
+        """Copy payloads to the other tier, re-point the index, free the
+        sources. Returns the number of blocks actually migrated."""
+        pool, index = self.pool, self.index
+        keys = index.keys_of_blocks(src_ids)
+        live = [(b, k) for b, k in zip(src_ids, keys) if k is not None]
+        if not live:
+            return 0
+        src_ids = [b for b, _ in live]
+        keys = [k for _, k in live]
+        entries = index.lookup_many(keys)
+        trip = [
+            (b, k, e.epoch)
+            for (b, k), e in zip(live, entries)
+            if e is not None and e.block_id == b
+        ]
+        if not trip:
+            return 0
+        src_ids = [b for b, _, _ in trip]
+        keys = [k for _, k, _ in trip]
+        old_eps = [e for _, _, e in trip]
+        dst_pool = pool.fast if to_fast else pool.spill
+        dst_off = 0 if to_fast else pool.offset
+        src_off = pool.offset if to_fast else 0
+        src_pool = pool.spill if to_fast else pool.fast
+        local_src = [b - src_off for b in src_ids]
+        payloads, _ = src_pool.read_blocks(local_src)
+        dst_local = dst_pool.allocate(len(src_ids))
+        new_eps = dst_pool.write_blocks(dst_local, payloads)
+        dst_ids = [b + dst_off for b in dst_local]
+        ok = index.remap_many(keys, src_ids, old_eps, dst_ids, new_eps)
+        moved_src = [s for s, o in zip(src_ids, ok) if o]
+        moved_dst = [d for d, o in zip(dst_ids, ok) if o]
+        lost_dst = [d - dst_off for d, o in zip(dst_ids, ok) if not o]
+        if lost_dst:  # raced with an eviction/re-publish: roll back copies
+            dst_pool.release(lost_dst)
+        if moved_src:
+            pool.policy.move(moved_src, moved_dst)
+            # freeing the source bumps its epoch: in-flight readers that
+            # matched the old entry fail validation and re-plan (§5.1)
+            pool.release(moved_src)
+        return len(moved_src)
+
+    def _account(self, n_blocks: int, now: float, to_fast: bool) -> None:
+        if not n_blocks:
+            return
+        c = self.pool.constants
+        size = n_blocks * self.pool.layout.block_bytes
+        spill_t = fabric.spill_transfer_latency(size, self.pool.spill_media, c)
+        fast_t = c.cxl_64b_latency + size / (
+            c.cxl_adapter_write_bw if to_fast else c.cxl_adapter_read_bw
+        )
+        self.pool.tier_stats.migrated_bytes += size
+        self.pool.tier_stats.migration_busy_s += spill_t + fast_t
+        if self.queues is not None:
+            # the fast-tier side of the copy occupies pool devices:
+            # foreground fetches queue behind it (budgeted contention)
+            addr = self.steps * self.pool.layout.block_bytes
+            self.queues.submit(now, addr, size, interleave=True)

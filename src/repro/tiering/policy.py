@@ -1,0 +1,127 @@
+"""Hotness tracking + ghost-LRU admission for the tiered pool.
+
+Two signals drive placement (ITME-style hotness-driven tiering):
+
+  * **decayed access counters** — one float per block, exponentially
+    decayed with virtual time (half-life ``half_life_s``) and bumped on
+    every fetch/write touch.  Decay is applied *lazily*: each block keeps
+    the virtual time of its last update, so a touch of k blocks is O(k)
+    vectorized numpy work, never an O(pool) sweep.
+  * **ghost LRU** — a bounded recency list of keys whose blocks were
+    *destroyed* (evicted outright, not demoted).  A key that comes back
+    after destruction proves the eviction was a mistake, so the admission
+    filter routes its fresh blocks to the fast tier even under pressure
+    (and the miss is counted, which is the classic ARC-style signal).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import OrderedDict
+
+import numpy as np
+
+
+class HotnessTracker:
+    """Per-block decayed heat + ghost-LRU admission filter."""
+
+    def __init__(
+        self,
+        n_blocks: int,
+        half_life_s: float = 30.0,
+        ghost_capacity: int = 8192,
+    ):
+        self.n_blocks = n_blocks
+        self.half_life_s = half_life_s
+        self._decay_rate = math.log(2.0) / max(half_life_s, 1e-9)
+        self.heat = np.zeros(n_blocks, np.float64)
+        self._last = np.zeros(n_blocks, np.float64)
+        self.ghost_capacity = ghost_capacity
+        self._ghost: OrderedDict[bytes, None] = OrderedDict()
+        self.ghost_hits = 0
+
+    # ------------------------------------------------------------------
+    # decayed-access counters
+    # ------------------------------------------------------------------
+    def touch(self, block_ids, now: float, weight: float = 1.0) -> None:
+        """Decay-to-now then bump: O(blocks touched)."""
+        ids = np.asarray(block_ids, np.intp)
+        if not len(ids):
+            return
+        dt = np.maximum(0.0, now - self._last[ids])
+        self.heat[ids] = self.heat[ids] * np.exp(-self._decay_rate * dt) + weight
+        self._last[ids] = now
+
+    def heat_at(self, block_ids, now: float) -> np.ndarray:
+        """Decayed heat without bumping (read-only view for the migrator)."""
+        ids = np.asarray(block_ids, np.intp)
+        if not len(ids):
+            return np.zeros(0, np.float64)
+        dt = np.maximum(0.0, now - self._last[ids])
+        return self.heat[ids] * np.exp(-self._decay_rate * dt)
+
+    def reset(self, block_ids) -> None:
+        """Forget history for recycled blocks (fresh allocation)."""
+        ids = np.asarray(block_ids, np.intp)
+        if len(ids):
+            self.heat[ids] = 0.0
+
+    def move(self, src_ids, dst_ids) -> None:
+        """Carry heat across a tier migration (the block moved, not the
+        data's popularity)."""
+        src = np.asarray(src_ids, np.intp)
+        dst = np.asarray(dst_ids, np.intp)
+        if not len(src):
+            return
+        self.heat[dst] = self.heat[src]
+        self._last[dst] = self._last[src]
+        self.heat[src] = 0.0
+
+    def coldest(self, candidate_ids, k: int, now: float) -> np.ndarray:
+        """k coldest candidates, coldest first. argpartition keeps the
+        selection O(n + k log k) — the candidate set can be a whole tier."""
+        ids = np.asarray(candidate_ids, np.intp)
+        heats = self.heat_at(ids, now)
+        if len(ids) > k:
+            part = np.argpartition(heats, k)[:k]
+            ids, heats = ids[part], heats[part]
+        order = np.argsort(heats, kind="stable")
+        return ids[order]
+
+    def hottest(self, candidate_ids, k: int, now: float) -> np.ndarray:
+        ids = np.asarray(candidate_ids, np.intp)
+        heats = self.heat_at(ids, now)
+        if len(ids) > k:
+            part = np.argpartition(-heats, k)[:k]
+            ids, heats = ids[part], heats[part]
+        order = np.argsort(-heats, kind="stable")
+        return ids[order]
+
+    # ------------------------------------------------------------------
+    # ghost-LRU admission filter
+    # ------------------------------------------------------------------
+    def ghost_add(self, keys: list[bytes]) -> None:
+        """Record destroyed keys (wired to ``GlobalIndex.on_evict``)."""
+        g = self._ghost
+        for k in keys:
+            g[k] = None
+            g.move_to_end(k)
+        while len(g) > self.ghost_capacity:
+            g.popitem(last=False)
+
+    def ghost_contains(self, key: bytes | None) -> bool:
+        """Peek without consuming (placement may still clamp to spill)."""
+        return key is not None and key in self._ghost
+
+    def admit_hot(self, key: bytes | None) -> bool:
+        """True iff the key was recently destroyed and has now returned —
+        admit its fresh block to the fast tier even under pressure.
+        Consumes the ghost entry: call only when the admission is honored."""
+        if key is None or key not in self._ghost:
+            return False
+        del self._ghost[key]
+        self.ghost_hits += 1
+        return True
+
+    def ghost_len(self) -> int:
+        return len(self._ghost)

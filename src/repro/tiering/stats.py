@@ -1,0 +1,22 @@
+"""Per-tier counters surfaced in ``Cluster.run`` summaries."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass
+class TierStats:
+    fast_hit_blocks: int = 0  # prefix-hit blocks served from the fast tier
+    spill_hit_blocks: int = 0  # ... and from the spill tier
+    fast_writes: int = 0  # fresh blocks admitted to the fast tier
+    spill_writes: int = 0  # fresh blocks admitted straight to spill
+    ghost_admits: int = 0  # pressured writes forced fast by the ghost filter
+    demotions: int = 0  # blocks migrated fast -> spill
+    promotions: int = 0  # blocks migrated spill -> fast
+    spill_evictions: int = 0  # spill blocks destroyed to make demotion room
+    migrated_bytes: int = 0
+    migration_busy_s: float = 0.0  # modeled media time spent migrating
+
+    def as_dict(self) -> dict:
+        return dict(self.__dict__)

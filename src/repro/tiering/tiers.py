@@ -1,0 +1,357 @@
+"""TieredPool: fast CXL tier + spill tier behind the BelugaPool API.
+
+Composes two ``BelugaPool`` instances in one global block-id space:
+
+    fast tier (CXL pool media)     ids [0, fast_blocks)
+    spill tier (RDMA-DRAM / SSD)   ids [fast_blocks, fast_blocks + spill)
+
+so ``TransferEngine``, ``GlobalIndex``, ``KVCacheManager`` and
+``CoherentReader/Writer`` work unchanged — every operation dispatches by id
+range and merges results in caller order.  The spill tier stores real
+payloads through the same allocator/epoch machinery; only its *modeled*
+latency differs (``fabric.spill_transfer_latency``).
+
+Placement policy (write admission) lives here because allocation is where
+a block's tier is decided:
+
+  * below the high watermark every fresh block lands in the fast tier;
+  * above it, fresh blocks go straight to spill — EXCEPT keys the
+    ghost-LRU filter recognizes as recently-destroyed-and-returned, which
+    are forced fast (admission filter vs cache pollution);
+  * either tier overflows into the other before the pool reports OOM.
+
+Background demotion/promotion between the tiers is the migrator's job
+(``repro.tiering.migrator``); hotness bookkeeping is O(blocks touched).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.fabric import DEFAULT, FabricConstants
+from repro.core.pool import BelugaPool, OutOfPoolMemory, PoolLayout
+from repro.tiering.policy import HotnessTracker
+from repro.tiering.stats import TierStats
+
+
+@dataclass
+class TieringConfig:
+    """Knobs for the tiered pool (``ClusterConfig.tiering``)."""
+
+    enabled: bool = False
+    spill_blocks: int = 0  # 0 -> 4x the fast tier
+    spill_media: str = "rdma_dram"  # rdma_dram | ssd
+    high_watermark: float = 0.90  # demote when fast occupancy exceeds this
+    demote_target: float = 0.75  # ... down to this occupancy
+    migrate_interval_s: float = 0.05  # background engine step period
+    migrate_batch_blocks: int = 64  # per-step migration budget
+    half_life_s: float = 30.0  # hotness decay half-life (virtual s)
+    promote_min_heat: float = 2.0  # spill block heat to earn promotion
+    ghost_capacity: int = 8192  # admission-filter memory (keys)
+    model_contention: bool = True  # migration contends via DeviceQueues
+
+
+class _TierView:
+    """Read-only per-block metadata view over both tiers (global ids).
+
+    ``GlobalIndex`` pokes ``pool.refcounts[block_id]`` directly; this keeps
+    that O(1) without materializing a concatenated copy per access.
+    """
+
+    __slots__ = ("_fast", "_spill", "_offset")
+
+    def __init__(self, fast: np.ndarray, spill: np.ndarray, offset: int):
+        self._fast = fast
+        self._spill = spill
+        self._offset = offset
+
+    def __getitem__(self, i):
+        if isinstance(i, (int, np.integer)):
+            if i < self._offset:
+                return self._fast[i]
+            return self._spill[i - self._offset]
+        ids = np.asarray(i, np.intp)
+        out = np.empty(len(ids), self._fast.dtype)
+        fm = ids < self._offset
+        out[fm] = self._fast[ids[fm]]
+        out[~fm] = self._spill[ids[~fm] - self._offset]
+        return out
+
+    def __len__(self):
+        return len(self._fast) + len(self._spill)
+
+
+class TieredPool:
+    """Two-tier pool in one global block-id space (fast first)."""
+
+    is_tiered = True
+
+    def __init__(
+        self,
+        layout: PoolLayout,
+        fast_blocks: int,
+        spill_blocks: int,
+        n_shards: int = 32,
+        backing: str = "numpy",
+        interleave: bool = True,
+        cfg: TieringConfig | None = None,
+        constants: FabricConstants = DEFAULT,
+    ):
+        self.layout = layout
+        self.cfg = cfg or TieringConfig(enabled=True)
+        self.constants = constants
+        self.fast = BelugaPool(layout, fast_blocks, n_shards, backing, interleave)
+        self.spill = BelugaPool(layout, spill_blocks, n_shards, backing, interleave)
+        self.offset = fast_blocks
+        self.n_blocks = fast_blocks + spill_blocks
+        self.n_shards = n_shards
+        self.interleave = interleave
+        self.backing = backing
+        self.spill_media = self.cfg.spill_media
+        self.policy = HotnessTracker(
+            self.n_blocks,
+            half_life_s=self.cfg.half_life_s,
+            ghost_capacity=self.cfg.ghost_capacity,
+        )
+        self.tier_stats = TierStats()
+        self.now = 0.0  # virtual time high-water mark (hotness decay clock)
+        # spill blocks whose heat crossed the promotion threshold (fed by
+        # touch_demand, drained by the migrator): keeps promotion O(blocks
+        # touched) instead of an every-step O(spill) sweep
+        self.promote_pending: set[int] = set()
+        self.refcounts = _TierView(self.fast.refcounts, self.spill.refcounts, fast_blocks)
+        self.epochs = _TierView(self.fast.epochs, self.spill.epochs, fast_blocks)
+        self.committed = _TierView(self.fast.committed, self.spill.committed, fast_blocks)
+
+    # ------------------------------------------------------------------
+    @property
+    def data(self):
+        """Backing-kind probe only (``pool.data is None`` == meta); block
+        payloads must go through read/write methods, which dispatch."""
+        return self.fast.data
+
+    @property
+    def alloc_count(self) -> int:
+        return self.fast.alloc_count + self.spill.alloc_count
+
+    def tier_of(self, block_id: int) -> int:
+        return 0 if block_id < self.offset else 1
+
+    def tick(self, now: float) -> None:
+        self.now = max(self.now, now)
+
+    def free_blocks(self) -> int:
+        return self.fast.free_blocks() + self.spill.free_blocks()
+
+    def shard_occupancy(self) -> list[int]:
+        return self.fast.shard_occupancy() + self.spill.shard_occupancy()
+
+    def fast_occupancy(self) -> float:
+        return (self.fast.n_blocks - self.fast.free_blocks()) / self.fast.n_blocks
+
+    def _split(self, block_ids) -> tuple[np.ndarray, np.ndarray]:
+        ids = np.asarray(block_ids, np.intp)
+        return ids, ids < self.offset
+
+    # ------------------------------------------------------------------
+    # Allocation (write admission)
+    # ------------------------------------------------------------------
+    def allocate(self, n: int, keys: list[bytes] | None = None) -> list[int]:
+        """Allocate n blocks, choosing each block's tier.
+
+        ``keys`` (optional, from the writeback path) feeds the ghost-LRU
+        admission filter; without keys the policy is purely watermark-based.
+        """
+        fast_free = self.fast.free_blocks()
+        spill_free = self.spill.free_blocks()
+        if fast_free + spill_free < n:
+            raise OutOfPoolMemory(
+                f"need {n}, have {fast_free} fast + {spill_free} spill"
+            )
+        pressured = self.fast_occupancy() >= self.cfg.high_watermark
+        ghost_hot = [False] * n
+        if keys is not None and pressured:
+            # peek only: the entry is consumed below, and only for blocks
+            # the capacity clamp actually lets into the fast tier — a
+            # returning key must not lose its one-shot admission to a
+            # full fast tier it never reached
+            ghost_hot = [self.policy.ghost_contains(k) for k in keys]
+        # tier per position: fast unless pressured (ghost-hot always fast)
+        want_fast = [(not pressured) or ghost_hot[i] for i in range(n)]
+        n_fast = sum(want_fast)
+        # clamp to capacity, overflowing into the other tier (non-ghost
+        # fast-wishers yield their fast slot before ghost-hot ones do)
+        if n_fast > fast_free:
+            flip = n_fast - fast_free
+            for only_ghost in (False, True):
+                for i in range(n - 1, -1, -1):
+                    if not flip:
+                        break
+                    if want_fast[i] and ghost_hot[i] == only_ghost:
+                        want_fast[i] = False
+                        flip -= 1
+            n_fast = fast_free
+        n_spill = n - n_fast
+        if n_spill > spill_free:
+            flip = n_spill - spill_free  # overflow back into fast
+            for i in range(n):
+                if not flip:
+                    break
+                if not want_fast[i]:
+                    want_fast[i] = True
+                    flip -= 1
+            n_fast, n_spill = n - spill_free, spill_free
+        fast_ids = iter(self.fast.allocate(n_fast) if n_fast else [])
+        spill_ids = iter(
+            [b + self.offset for b in self.spill.allocate(n_spill)]
+            if n_spill
+            else []
+        )
+        out = [next(fast_ids) if wf else next(spill_ids) for wf in want_fast]
+        n_ghost = 0
+        if keys is not None:
+            for i, wf in enumerate(want_fast):
+                if wf and ghost_hot[i] and self.policy.admit_hot(keys[i]):
+                    n_ghost += 1
+        self.tier_stats.fast_writes += n_fast
+        self.tier_stats.spill_writes += n_spill
+        self.tier_stats.ghost_admits += n_ghost
+        self.policy.reset(out)  # recycled blocks start cold
+        return out
+
+    def retain(self, block_ids: list[int]) -> None:
+        if not len(block_ids):
+            return
+        ids, fm = self._split(block_ids)
+        if fm.any():
+            self.fast.retain(ids[fm].tolist())
+        if not fm.all():
+            self.spill.retain((ids[~fm] - self.offset).tolist())
+
+    def release(self, block_ids: list[int]) -> None:
+        if not len(block_ids):
+            return
+        ids, fm = self._split(block_ids)
+        if fm.any():
+            self.fast.release(ids[fm].tolist())
+        if not fm.all():
+            self.spill.release((ids[~fm] - self.offset).tolist())
+
+    # ------------------------------------------------------------------
+    # Data plane + epochs (dispatch, merge in caller order)
+    # ------------------------------------------------------------------
+    def write_block(self, block_id: int, payload: np.ndarray | None) -> int:
+        self.policy.touch([block_id], self.now)
+        if block_id < self.offset:
+            return self.fast.write_block(block_id, payload)
+        return self.spill.write_block(block_id - self.offset, payload)
+
+    def write_blocks(
+        self, block_ids: list[int], payloads: np.ndarray | None = None
+    ) -> list[int]:
+        ids, fm = self._split(block_ids)
+        self.policy.touch(ids, self.now)
+        eps = np.empty(len(ids), np.int64)
+        if fm.any():
+            sub = payloads[fm] if payloads is not None else None
+            eps[fm] = self.fast.write_blocks(ids[fm].tolist(), sub)
+        if not fm.all():
+            sub = payloads[~fm] if payloads is not None else None
+            eps[~fm] = self.spill.write_blocks(
+                (ids[~fm] - self.offset).tolist(), sub
+            )
+        return eps.tolist()
+
+    def read_block(self, block_id: int) -> tuple[np.ndarray, int]:
+        if block_id < self.offset:
+            return self.fast.read_block(block_id)
+        return self.spill.read_block(block_id - self.offset)
+
+    def read_blocks(
+        self, block_ids, out: np.ndarray | None = None
+    ) -> tuple[np.ndarray | None, np.ndarray]:
+        ids, fm = self._split(block_ids)
+        eps = np.empty(len(ids), np.int64)
+        meta = self.fast.data is None
+        dst = None
+        if not meta:
+            dst = (
+                out
+                if out is not None
+                else np.empty((len(ids), self.layout.block_bytes), np.uint8)
+            )
+        if fm.any():
+            p, e = self.fast.read_blocks(ids[fm])
+            eps[fm] = e
+            if dst is not None:
+                dst[fm] = p
+        if not fm.all():
+            p, e = self.spill.read_blocks(ids[~fm] - self.offset)
+            eps[~fm] = e
+            if dst is not None:
+                dst[~fm] = p
+        return dst, eps
+
+    def read_fragments(self, block_id: int, frag_ids: list[int]) -> np.ndarray:
+        if block_id < self.offset:
+            return self.fast.read_fragments(block_id, frag_ids)
+        return self.spill.read_fragments(block_id - self.offset, frag_ids)
+
+    def validate_epoch(self, block_id: int, epoch: int) -> bool:
+        if block_id < self.offset:
+            return self.fast.validate_epoch(block_id, epoch)
+        return self.spill.validate_epoch(block_id - self.offset, epoch)
+
+    def validate_epochs(self, block_ids, epochs) -> np.ndarray:
+        ids, fm = self._split(block_ids)
+        exp = np.asarray(epochs)
+        out = np.empty(len(ids), bool)
+        if fm.any():
+            out[fm] = self.fast.validate_epochs(ids[fm], exp[fm])
+        if not fm.all():
+            out[~fm] = self.spill.validate_epochs(ids[~fm] - self.offset, exp[~fm])
+        return out
+
+    # ------------------------------------------------------------------
+    # Hotness hooks (manager fetch path)
+    # ------------------------------------------------------------------
+    def touch_demand(self, block_ids, now: float) -> tuple[int, int]:
+        """Bump heat for a *planned* access (demand signal: fires even
+        when the cutover later recomputes, so spill blocks that keep
+        getting planned-over can still earn promotion and escape a
+        permanent-cutover loop). Spill blocks whose heat crosses the
+        promotion threshold enter ``promote_pending`` — the migrator
+        consumes that set instead of sweeping the whole tier.
+
+        Returns (n_fast, n_spill) so the caller can model latency."""
+        self.tick(now)
+        ids, fm = self._split(block_ids)
+        self.policy.touch(ids, self.now)
+        spill_ids = ids[~fm]
+        if len(spill_ids):
+            hot = spill_ids[
+                self.policy.heat[spill_ids] >= self.cfg.promote_min_heat
+            ]
+            self.promote_pending.update(hot.tolist())
+        return int(fm.sum()), len(ids) - int(fm.sum())
+
+    def count_tier_hits(self, block_ids) -> None:
+        """Account an *actual* fetch (after scatter_read succeeds) —
+        planned-but-recomputed or failed fetches don't inflate hit stats."""
+        ids, fm = self._split(block_ids)
+        n_fast = int(fm.sum())
+        self.tier_stats.fast_hit_blocks += n_fast
+        self.tier_stats.spill_hit_blocks += len(ids) - n_fast
+
+    def stats_dict(self) -> dict:
+        d = self.tier_stats.as_dict()
+        d["fast_blocks"] = self.fast.n_blocks
+        d["spill_blocks"] = self.spill.n_blocks
+        d["fast_occupancy"] = self.fast_occupancy()
+        d["spill_occupancy"] = (
+            self.spill.n_blocks - self.spill.free_blocks()
+        ) / self.spill.n_blocks
+        d["ghost_entries"] = self.policy.ghost_len()
+        return d

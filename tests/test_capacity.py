@@ -1,0 +1,133 @@
+"""Capacity-pressure paths: pool OOM -> evict -> retry, the straggler
+recompute cutover, and reader epoch-retry under concurrent recycle."""
+
+import numpy as np
+import pytest
+
+from repro.core.coherence import CoherenceError, CoherentReader
+from repro.core.index import GlobalIndex
+from repro.core.pool import BelugaPool, PoolLayout
+from repro.core.transfer import TransferEngine
+from repro.kvcache.hbm_cache import HbmPagedCache
+from repro.kvcache.manager import KVCacheManager
+
+LAYOUT = PoolLayout(block_tokens=16, n_layers_kv=4, n_kv_heads=2, head_dim=8)
+
+
+def _manager(pool_blocks=32, mode="beluga", **kw):
+    pool = BelugaPool(LAYOUT, pool_blocks, 4, backing="meta")
+    idx = GlobalIndex(pool)
+    hbm = HbmPagedCache(256, 16)
+    mgr = KVCacheManager(pool, idx, hbm, TransferEngine(pool, mode=mode), **kw)
+    return mgr, pool, idx
+
+
+def _tokens(doc, n_blocks):
+    return [doc * 100000 + i for i in range(n_blocks * 16)]
+
+
+# ---------------------------------------------------------------------------
+# pool OOM -> evict_lru -> writeback retry
+# ---------------------------------------------------------------------------
+
+
+def test_writeback_pool_oom_evicts_lru_and_retries():
+    mgr, pool, idx = _manager(pool_blocks=32)
+    assert mgr.writeback("a", _tokens(1, 32)) == 32  # pool now full
+    n = mgr.writeback("b", _tokens(2, 16))  # OOM -> evict -> retry succeeds
+    assert n == 16
+    assert mgr.stats.pool_evictions > 0
+    # doc 2 is fully indexed and fetchable; doc 1 lost its evicted prefix
+    assert mgr.plan_fetch(_tokens(2, 16)).n_hit_tokens == 16 * 16
+    assert mgr.plan_fetch(_tokens(1, 32)).n_hit_tokens < 32 * 16
+
+
+def test_writeback_skips_offload_when_pool_is_pinned():
+    mgr, pool, idx = _manager(pool_blocks=32)
+    mgr.writeback("a", _tokens(1, 32))
+    pool.retain(list(range(32)))  # everything referenced: eviction refuses
+    assert mgr.writeback("b", _tokens(2, 16)) == 0
+    pool.release(list(range(32)))
+
+
+# ---------------------------------------------------------------------------
+# straggler mitigation: fetch-vs-recompute cutover in plan_fetch
+# ---------------------------------------------------------------------------
+
+
+def test_recompute_cutover_triggers_on_slow_fetch():
+    # RDMA at native 16-token granularity pays the per-superblock staging
+    # cost on every block: fetch latency far exceeds recompute time
+    mgr, pool, idx = _manager(mode="rdma", recompute_cutover=1.0)
+    mgr.transfer.super_block_tokens = 16
+    mgr.writeback("a", _tokens(1, 16))
+    plan = mgr.plan_fetch(_tokens(1, 16))
+    assert plan.recompute
+    assert plan.hit_blocks == [] and plan.n_hit_tokens == 0
+    assert plan.n_miss_tokens == 16 * 16
+    assert mgr.stats.recompute_cutovers == 1
+
+
+def test_no_cutover_when_disabled_or_fast():
+    mgr, pool, idx = _manager(mode="beluga", recompute_cutover=1000.0)
+    mgr.writeback("a", _tokens(1, 16))
+    plan = mgr.plan_fetch(_tokens(1, 16))
+    assert not plan.recompute and plan.n_hit_tokens == 16 * 16
+    mgr2, *_ = _manager(mode="rdma", recompute_cutover=None)
+    mgr2.transfer.super_block_tokens = 16
+    mgr2.writeback("a", _tokens(1, 16))
+    assert not mgr2.plan_fetch(_tokens(1, 16)).recompute
+
+
+# ---------------------------------------------------------------------------
+# CoherentReader epoch-retry under concurrent recycle
+# ---------------------------------------------------------------------------
+
+
+def _flaky_pool(n_torn: int):
+    """Pool whose read_block observes a moved epoch n_torn times (a
+    concurrent recycle racing the copy), then settles."""
+    pool = BelugaPool(LAYOUT, 32, 4, backing="numpy")
+    real = pool.read_block
+    state = {"left": n_torn}
+
+    def flaky(block_id):
+        payload, epoch = real(block_id)
+        if state["left"] > 0:
+            state["left"] -= 1
+            return payload, epoch + 1  # torn read: epoch moved mid-copy
+        return payload, epoch
+
+    pool.read_block = flaky
+    return pool
+
+
+def test_coherent_reader_retries_on_concurrent_recycle():
+    pool = _flaky_pool(n_torn=1)
+    [b] = pool.allocate(1)
+    payload = np.arange(LAYOUT.block_bytes, dtype=np.uint8)
+    epoch = pool.write_block(b, payload)
+    reader = CoherentReader(pool)
+    out = reader.read_block(b, epoch)
+    assert (out == payload).all()
+    assert reader.stats.retries == 1
+    assert reader.stats.reads == 1
+
+
+def test_coherent_reader_gives_up_after_max_retries():
+    pool = _flaky_pool(n_torn=10)
+    [b] = pool.allocate(1)
+    epoch = pool.write_block(b, np.zeros(LAYOUT.block_bytes, np.uint8))
+    reader = CoherentReader(pool, max_retries=3)
+    with pytest.raises(CoherenceError, match="unstable epoch"):
+        reader.read_block(b, epoch)
+    assert reader.stats.retries == 3
+
+
+def test_coherent_reader_rejects_recycled_block_upfront():
+    pool = BelugaPool(LAYOUT, 32, 4, backing="numpy")
+    [b] = pool.allocate(1)
+    epoch = pool.write_block(b, np.zeros(LAYOUT.block_bytes, np.uint8))
+    pool.release([b])  # recycle bumps the epoch
+    with pytest.raises(CoherenceError, match="no longer valid"):
+        CoherentReader(pool).read_block(b, epoch)

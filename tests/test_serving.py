@@ -132,6 +132,87 @@ def test_elastic_remove_engine_requeues_and_completes():
     assert len(c.engines) == 3
 
 
+def test_remove_engine_redispatch_is_linear_and_preserves_order(monkeypatch):
+    """k orphans -> exactly k routing decisions + k submits, no duplicate
+    append to (or O(n) scan of) ``cluster.requests``, original order kept."""
+    c = _cluster()
+    for r in _reqs(20, out_len=64):
+        c.dispatch(r)
+    order_before = list(c.requests)
+    routed = []
+    orig_select = c._select_engine
+    monkeypatch.setattr(
+        c, "_select_engine", lambda r: routed.append(r) or orig_select(r)
+    )
+    monkeypatch.setattr(
+        c, "dispatch",
+        lambda r: pytest.fail("orphan re-dispatch must not re-append"),
+    )
+    orphans = c.remove_engine(0)
+    assert len(routed) == len(orphans) > 0  # O(k) dispatches
+    assert c.requests == order_before  # same objects, same order, no dupes
+    queued = [r for e in c.engines for r in e.waiting]
+    assert sum(1 for r in queued if r in orphans) == len(orphans)
+    stats = c.run()
+    assert stats["n_done"] == 20
+
+
+def test_admit_survives_fetch_failure_with_full_recompute(monkeypatch):
+    """A fetch_into_hbm failure mid-admission must fall back to recompute
+    (empty sequence registered), not KeyError on the table lookup."""
+    c = _cluster(n_engines=1)
+    for r in _reqs(2, tag="p"):
+        c.dispatch(r)
+    c.run()  # populate the pool so the next round has prefix hits
+    t0 = max(e.clock for e in c.engines)
+    eng = c.engines[0]
+
+    def boom(seq_id, plan):
+        raise RuntimeError("injected fetch failure")
+
+    monkeypatch.setattr(eng.manager, "fetch_into_hbm", boom)
+    reqs = _reqs(2, tag="h", arrival=t0)
+    for r in reqs:
+        c.dispatch(r)
+    c.run()
+    assert all(r.state == "done" for r in reqs)
+    assert all(r.tokens_out == r.n_output for r in reqs)
+    assert eng.manager.hbm.free_slots() == eng.manager.hbm.n_slots
+
+
+def test_fetch_failure_rolls_back_slots_and_registers_empty_seq():
+    """Manager-level hardening: an epoch race inside scatter_read leaks
+    neither pool refs nor HBM slots, and the sequence table exists."""
+    from repro.core.coherence import CoherenceError
+
+    c = _cluster(n_engines=1)
+    for r in _reqs(1, tag="p"):
+        c.dispatch(r)
+    c.run()
+    mgr = c.engines[0].manager
+    plan = mgr.plan_fetch(_reqs(1, tag="x")[0].tokens)
+    assert plan.hit_blocks
+    # rewrite every hit block between plan and fetch: epochs move on
+    stale = [b for _, b, _ in plan.hit_blocks]
+    mgr.pool.write_blocks(stale)
+    free_before = mgr.hbm.free_slots()
+    with pytest.raises(CoherenceError):
+        mgr.fetch_into_hbm("victim", plan)
+    assert mgr.hbm.seq_tables["victim"] == []
+    assert mgr.hbm.free_slots() == free_before
+    assert (mgr.pool.refcounts >= 0).all()
+
+
+def test_hbm_has_key_is_public_locality_probe():
+    h = HbmPagedCache(8, 16)
+    [s] = h.allocate(1, keys=[b"k"])
+    assert h.has_key(b"k")
+    assert not h.has_key(b"other")
+    assert h.refcounts[s] == 1  # no refcount side effect (vs lookup_shared)
+    h.release([s])
+    assert not h.has_key(b"k")
+
+
 def test_elastic_add_engine_no_rebalance_needed():
     c = _cluster(transfer_mode="beluga")
     for r in _reqs(12):

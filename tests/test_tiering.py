@@ -1,0 +1,239 @@
+"""Tiered pool subsystem: TieredPool, hotness policy, migration engine."""
+
+import numpy as np
+import pytest
+
+from repro.core.index import GlobalIndex
+from repro.core.pool import OutOfPoolMemory, PoolLayout
+from repro.core.transfer import TransferEngine
+from repro.kvcache.hbm_cache import HbmPagedCache
+from repro.kvcache.manager import KVCacheManager
+from repro.serving.request import Request
+from repro.serving.scheduler import Cluster, ClusterConfig
+from repro.tiering import HotnessTracker, MigrationEngine, TieredPool, TieringConfig
+
+LAYOUT = PoolLayout(block_tokens=16, n_layers_kv=4, n_kv_heads=2, head_dim=8)
+
+
+def _tiered(fast=64, spill=256, backing="meta", **cfg_kw):
+    cfg_kw.setdefault("migrate_interval_s", 0.01)
+    cfg_kw.setdefault("migrate_batch_blocks", 16)
+    cfg_kw.setdefault("high_watermark", 0.9)
+    cfg_kw.setdefault("demote_target", 0.5)
+    cfg = TieringConfig(enabled=True, **cfg_kw)
+    return TieredPool(LAYOUT, fast, spill, n_shards=32, backing=backing, cfg=cfg)
+
+
+def _manager(pool):
+    idx = GlobalIndex(pool)
+    idx.on_evict = pool.policy.ghost_add
+    hbm = HbmPagedCache(512, 16)
+    mgr = KVCacheManager(pool, idx, hbm, TransferEngine(pool))
+    return mgr, idx
+
+
+def _tokens(doc, n_blocks):
+    return [doc * 100000 + i for i in range(n_blocks * 16)]
+
+
+# ---------------------------------------------------------------------------
+# TieredPool: id space, allocation policy, data plane
+# ---------------------------------------------------------------------------
+
+
+def test_tiered_pool_allocates_fast_first_and_splits_id_space():
+    p = _tiered(fast=64, spill=256)
+    ids = p.allocate(32)
+    assert all(b < p.offset for b in ids)  # unpressured -> all fast
+    assert p.free_blocks() == 64 + 256 - 32
+    p.release(ids)
+    assert p.free_blocks() == 320
+
+
+def test_tiered_pool_overflows_into_spill_and_raises_when_full():
+    p = _tiered(fast=64, spill=64)
+    ids = p.allocate(100)  # > fast capacity: must span both tiers
+    assert sum(b < p.offset for b in ids) == 64
+    assert sum(b >= p.offset for b in ids) == 36
+    with pytest.raises(OutOfPoolMemory):
+        p.allocate(64 + 64 - 100 + 1)
+
+
+def test_tiered_pool_pressured_writes_go_to_spill_unless_ghost_hot():
+    p = _tiered(fast=64, spill=64, high_watermark=0.5)
+    held = p.allocate(40)  # fast occupancy 62% > watermark
+    p.policy.ghost_add([b"returning"])
+    ids = p.allocate(2, keys=[b"returning", b"new"])
+    assert ids[0] < p.offset  # ghost-hot key forced fast
+    assert ids[1] >= p.offset  # fresh key spilled under pressure
+    assert p.tier_stats.ghost_admits == 1
+    p.release(held + ids)
+
+
+def test_tiered_pool_numpy_roundtrip_across_tiers():
+    p = _tiered(fast=32, spill=32, backing="numpy")
+    ids = p.allocate(40)  # spans both tiers
+    payload = np.arange(
+        40 * LAYOUT.block_bytes, dtype=np.int64
+    ).astype(np.uint8).reshape(40, LAYOUT.block_bytes)
+    eps = p.write_blocks(ids, payload)
+    got, eps_now = p.read_blocks(ids)
+    assert (got == payload).all()
+    assert (eps_now == np.asarray(eps)).all()
+    assert p.validate_epochs(ids, eps).all()
+    # releasing bumps epochs in the right sub-pool (recycle detection)
+    p.release(ids)
+    assert not p.validate_epochs(ids, eps).any()
+
+
+def test_tiered_pool_refcount_view_spans_tiers():
+    p = _tiered(fast=32, spill=32)
+    ids = p.allocate(40)
+    fast_id = min(ids)
+    spill_id = max(ids)
+    assert spill_id >= p.offset
+    assert p.refcounts[fast_id] == 1 and p.refcounts[spill_id] == 1
+    p.retain([fast_id, spill_id])
+    assert p.refcounts[fast_id] == 2 and p.refcounts[spill_id] == 2
+    p.release([fast_id, spill_id])
+    p.release(ids)
+
+
+# ---------------------------------------------------------------------------
+# Hotness policy
+# ---------------------------------------------------------------------------
+
+
+def test_hotness_decay_orders_candidates():
+    h = HotnessTracker(8, half_life_s=1.0)
+    h.touch([0], now=0.0)
+    h.touch([1], now=0.0)
+    h.touch([1], now=0.5)
+    h.touch([2], now=10.0)  # one recent touch beats two decayed ones
+    cold = h.coldest([0, 1, 2], 3, now=10.0)
+    assert cold.tolist() == [0, 1, 2]
+    hot = h.hottest([0, 1, 2], 1, now=10.0)
+    assert hot.tolist() == [2]
+
+
+def test_ghost_admission_fires_once_and_is_bounded():
+    h = HotnessTracker(4, ghost_capacity=2)
+    h.ghost_add([b"a", b"b", b"c"])  # capacity 2: b"a" aged out
+    assert not h.admit_hot(b"a")
+    assert h.admit_hot(b"c")
+    assert not h.admit_hot(b"c")  # consumed
+    assert h.ghost_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# Migration engine
+# ---------------------------------------------------------------------------
+
+
+def test_migrator_demotes_cold_blocks_and_keeps_prefix_fetchable():
+    pool = _tiered(fast=64, spill=256)
+    mgr, idx = _manager(pool)
+    mig = MigrationEngine(pool, idx, pool.cfg)
+    # fill fast past the watermark with two docs
+    mgr.writeback("a", _tokens(1, 30), now=0.0)
+    mgr.writeback("b", _tokens(2, 30), now=0.0)
+    assert pool.fast_occupancy() > 0.9
+    # keep doc 2 hot; doc 1 stays cold
+    mgr.plan_fetch(_tokens(2, 30), now=0.1)
+    mig.run_until(1.0)
+    assert pool.tier_stats.demotions > 0
+    assert pool.fast_occupancy() <= 0.9
+    # the demoted prefix is still indexed (now in the spill tier) and the
+    # full manager fetch path works against its remapped entries
+    plan = mgr.plan_fetch(_tokens(1, 30), now=1.1)
+    assert plan.n_hit_tokens == 30 * 16
+    assert any(b >= pool.offset for _, b, _ in plan.hit_blocks)
+    slots = mgr.fetch_into_hbm("r1", plan)
+    assert len(slots) == 30
+    mgr.finish("r1")
+
+
+def test_migrator_promotes_rehot_spill_blocks():
+    pool = _tiered(fast=64, spill=256, promote_min_heat=2.0)
+    mgr, idx = _manager(pool)
+    mig = MigrationEngine(pool, idx, pool.cfg)
+    mgr.writeback("a", _tokens(1, 30), now=0.0)
+    mgr.writeback("b", _tokens(2, 30), now=0.0)
+    mgr.plan_fetch(_tokens(2, 30), now=0.1)  # doc 1 is the cold one
+    mig.run_until(1.0)
+    assert pool.tier_stats.demotions > 0
+    # doc 1 gets hot again: repeated fetches push heat over the threshold
+    for i in range(3):
+        mgr.plan_fetch(_tokens(1, 30), now=1.0 + 0.1 * i)
+    mig.run_until(2.0)
+    assert pool.tier_stats.promotions > 0
+    plan = mgr.plan_fetch(_tokens(1, 30), now=2.1)
+    assert plan.n_hit_tokens == 30 * 16
+    assert any(b < pool.offset for _, b, _ in plan.hit_blocks)
+
+
+def test_migrator_evicts_spill_to_ghost_when_spill_full():
+    pool = _tiered(fast=32, spill=32, migrate_batch_blocks=32)
+    mgr, idx = _manager(pool)
+    mig = MigrationEngine(pool, idx, pool.cfg)
+    mgr.writeback("a", _tokens(1, 20), now=0.0)  # fast
+    mgr.writeback("b", _tokens(2, 20), now=0.0)  # overflows into spill
+    mgr.writeback("c", _tokens(3, 20), now=0.0)  # spill nearly full
+    mig.run_until(1.0)  # demotion must destroy cold spill blocks first
+    assert pool.tier_stats.spill_evictions > 0
+    assert pool.policy.ghost_len() > 0  # destroyed keys armed the filter
+
+
+# ---------------------------------------------------------------------------
+# Cluster integration
+# ---------------------------------------------------------------------------
+
+
+def _reqs(n, in_len=256, tag="r", n_docs=6):
+    reqs = []
+    for i in range(n):
+        d = i % n_docs
+        reqs.append(
+            Request(f"{tag}{i}", _tokens(d, in_len // 16), 8, arrival=0.05 * i)
+        )
+    return reqs
+
+
+def test_tiered_cluster_completes_and_reports_stats():
+    cfg = ClusterConfig(
+        n_engines=2, pool_blocks=64, pool_shards=32, hbm_slots_per_engine=256,
+        tiering=TieringConfig(
+            enabled=True, spill_blocks=512,
+            migrate_interval_s=0.01, migrate_batch_blocks=16,
+        ),
+    )
+    c = Cluster(cfg, LAYOUT)
+    for r in _reqs(36):
+        c.dispatch(r)
+    stats = c.run()
+    assert stats["n_done"] == 36
+    t = stats["tiering"]
+    assert t["demotions"] > 0
+    assert t["fast_hit_blocks"] + t["spill_hit_blocks"] > 0
+    assert t["migrator_steps"] > 0
+    # no HBM slot leaks through the tiered fetch path
+    for e in c.engines:
+        assert e.manager.hbm.free_slots() == e.manager.hbm.n_slots
+
+
+def test_tiering_disabled_is_bit_identical_to_default_config():
+    """The subsystem must be zero-cost when off: a config that merely
+    *carries* tiering knobs (disabled) reproduces the flat-pool sim
+    exactly, stat for stat."""
+    results = []
+    for tiering in (TieringConfig(), TieringConfig(enabled=False)):
+        cfg = ClusterConfig(
+            n_engines=2, pool_blocks=256, pool_shards=32,
+            hbm_slots_per_engine=256, tiering=tiering,
+        )
+        c = Cluster(cfg, LAYOUT)
+        for r in _reqs(16):
+            c.dispatch(r)
+        results.append(c.run())
+    assert results[0] == results[1]
+    assert "tiering" not in results[0]
