@@ -13,10 +13,10 @@ skew over a document-reuse workload, comparing:
 Protocol per cell: populate every document once, then measure TTFT over a
 Zipf-sampled re-request stream.  Requests are dispatched *event-driven*
 (fed to the cluster as virtual time reaches their arrival, engines
-advancing in lockstep windows): pre-dispatching a spread-out stream would
-fast-forward every engine clock to its last arrival
-(``EngineInstance.submit`` is a clock barrier) and drown the latency
-signal in artificial queueing.
+advancing in lockstep windows) so routing sees live load signals.
+(``EngineInstance.submit`` used to be a clock barrier that would have
+fast-forwarded every engine clock to the last pre-dispatched arrival;
+PR 3 removed it, so open-loop streams no longer inflate TTFT either way.)
 
 Also runs the **zero-cost check**: a ``tiering=off`` config must reproduce
 the PR-1 exp05-small summary stats bit-identically (captured below from
@@ -90,18 +90,18 @@ def run_stream(cluster: Cluster, reqs: list[Request], window_s: float = 0.25) ->
     its arrival, advancing all engines in lockstep windows."""
     reqs = sorted(reqs, key=lambda r: r.arrival)
     i, now = 0, min(r.arrival for r in reqs)
-    while i < len(reqs) or any(e._waiting or e.running for e in cluster.engines):
+    while i < len(reqs) or any(e.has_backlog() for e in cluster.engines):
         while i < len(reqs) and reqs[i].arrival <= now:
             cluster.dispatch(reqs[i])
             i += 1
-        backlog = sum(len(e._waiting) + len(e.running) for e in cluster.engines)
+        backlog = sum(e.n_queued + len(e.running) for e in cluster.engines)
         clocks = [e.clock for e in cluster.engines]
         for e in cluster.engines:
             e.advance(now)
         stalled = (
             i >= len(reqs)
             and backlog
-            == sum(len(e._waiting) + len(e.running) for e in cluster.engines)
+            == sum(e.n_queued + len(e.running) for e in cluster.engines)
             and clocks == [e.clock for e in cluster.engines]
         )
         if stalled and now > max(clocks):

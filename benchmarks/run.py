@@ -1,11 +1,12 @@
 """Benchmark harness entry: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only exp05,exp11] [--fast]
-    PYTHONPATH=src python -m benchmarks.run --smoke   # CI: exp12+exp13 tiny
+    PYTHONPATH=src python -m benchmarks.run --smoke   # CI: exp11-13 tiny
 
-``--smoke`` runs the two artifact-emitting harnesses (exp12 control plane,
-exp13 tiering) at CI-sized inputs so the perf benchmarks can't silently
-rot; their ``BENCH_*.fast.json`` outputs are uploaded by the CI job.
+``--smoke`` runs the three artifact-emitting harnesses (exp11 CXL-RPC
+metadata plane, exp12 control plane, exp13 tiering) at CI-sized inputs so
+the perf benchmarks can't silently rot; their ``BENCH_*.fast.json``
+outputs are uploaded by the CI job.
 
 Prints ``name,us_per_call,derived`` CSV per row, then a roofline summary
 derived from the dry-run artifacts (if present in results/dryrun).
@@ -41,12 +42,12 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="smaller exp05")
     ap.add_argument(
         "--smoke", action="store_true",
-        help="CI smoke: tiny-config exp12 + exp13 only",
+        help="CI smoke: tiny-config exp11 + exp12 + exp13 only",
     )
     args = ap.parse_args()
     if args.smoke:
         args.fast = True
-        args.only = "exp12,exp13"
+        args.only = "exp11,exp12,exp13"
     only = set(args.only.split(",")) if args.only else None
 
     import importlib
@@ -61,7 +62,7 @@ def main() -> None:
             mod = importlib.import_module(mod_name)
             if args.fast and exp_id == "exp05":
                 rows = mod.run(n=64, in_len=4096)
-            elif exp_id in ("exp12", "exp13"):
+            elif exp_id in ("exp11", "exp12", "exp13"):
                 rows = mod.run(fast=args.fast)
             else:
                 rows = mod.run()

@@ -38,6 +38,22 @@ def main():
     assert np.array_equal(got, kv)
     print(f"reader: matched {len(hits)} blocks, payload bit-exact")
 
+    # CXL-RPC: the metadata service behind a shared-memory ring, speaking
+    # the repro.core.wire binary protocol (length-framed variable payloads)
+    from repro.core.wire import RpcIndexClient, make_index_handler
+
+    ring = ShmRing(n_slots=32, payload_bytes=4096)
+    server = CxlRpcServer(
+        ring, make_index_handler(index, max_reply=ring.payload_bytes)
+    ).start()
+    client = CxlRpcClient(ring)
+    remote = RpcIndexClient(client, block_tokens=16)
+    remote_hits = remote.match_prefix(prompt)  # whole chain, ONE round-trip
+    server.stop()
+    assert remote_hits == hits  # same chain, same result, over the ring
+    print(f"CXL-RPC match_prefix -> {len(remote_hits)} blocks in one trip "
+          f"(modeled RTT {client.modeled_rtt()*1e6:.2f} us vs RDMA-RC 8.39 us)")
+
     # coherence: recycling a block invalidates readers holding its epoch
     w, r = CoherentWriter(pool), CoherentReader(pool)
     key, bid, epoch = hits[0]
@@ -49,22 +65,7 @@ def main():
         print("ERROR: stale read went undetected")
     except CoherenceError as e:
         print(f"coherence: stale read rejected ({e})")
-
-    # CXL-RPC: the metadata service behind a shared-memory ring
-    ring = ShmRing(n_slots=32, payload_bytes=64)
-
-    def handler(payload: bytes) -> bytes:
-        token_hash = payload.rstrip(b"\0")
-        e = index.lookup(token_hash) if token_hash else None
-        return (str(e.block_id).encode() if e else b"MISS").ljust(64, b"\0")
-
-    server = CxlRpcServer(ring, handler).start()
-    client = CxlRpcClient(ring)
-    resp = client.call(index.keys_for(prompt)[1])
-    server.stop()
-    block_str = resp.rstrip(b"\0").decode()
-    print(f"CXL-RPC lookup -> block {block_str} "
-          f"(modeled RTT {client.modeled_rtt()*1e6:.2f} us vs RDMA-RC 8.39 us)")
+    assert len(index.match_prefix(prompt)) == 0  # stale entry dropped too
 
 
 if __name__ == "__main__":

@@ -2,8 +2,12 @@
 
 fabric     — CXL/RDMA memory-fabric cost model (paper-calibrated constants)
 pool       — BelugaPool: interleaved, paged, shared KV block pool (O9)
-index      — global prefix index (chain-hash -> pool block, epoch-validated)
+index      — global prefix index: bytes->row hash table over flat
+             structure-of-arrays metadata (chain-hash -> pool block,
+             epoch-validated, array-intrusive LRU)
 rpc        — CXL-RPC shared-memory ring (real) + modeled RDMA RPC baselines
+wire       — binary metadata wire protocol (match/publish/lookup ops, op
+             batching) + the engine-side RpcIndexClient proxy
 coherence  — software single-writer/multi-reader publication protocol (O1-O3)
 transfer   — gather-write / scatter-read engine: beluga vs rdma paths (§6.1)
 """

@@ -4,7 +4,8 @@ The index is the metadata service that every LLM instance queries before
 prefill ("which prefix blocks are already in the pool?") and updates after
 ("these new blocks now hold tokens [i, i+16)").  In the paper it is a
 centralized service reached via CXL-RPC; here the same object is either
-called in-process (tests) or behind ``repro.core.rpc`` (cluster benchmarks).
+called in-process (tests), or behind ``repro.core.rpc`` + the
+``repro.core.wire`` binary codec (cluster benchmarks, Exp #11).
 
 Key design points mirrored from MoonCake/vLLM prefix caching:
   * chain hashing: block key = H(parent_key, tokens_in_block) so a prefix
@@ -13,14 +14,31 @@ Key design points mirrored from MoonCake/vLLM prefix caching:
     the pool before trusting the payload (multi-host coherence, §5.1);
   * eviction: LRU over unreferenced committed blocks.
 
-Control-plane cost notes (the paths every request hits):
-  * token blocks are hashed from ``np.int64`` buffers via ``tobytes()``
-    (one C-level encode per block, not one ``str()`` per token);
-  * a bounded (parent_key, block_bytes) -> key memo caches chain links, so
-    re-deriving the chain for a shared prefix is a dict walk, not blake2b;
-  * ``match_prefix`` walks the map under one lock and validates every
-    matched entry against the pool's epoch ARRAY in a single vectorized
-    check instead of a per-key pool round-trip.
+Storage is a structure-of-arrays store, not a dict of entry objects:
+
+  * one ``bytes -> row`` hash table assigns each key a row in flat numpy
+    arrays (``block_id / epoch / n_tokens / last_used``), so every batch
+    operation — ``match_prefix_keys``, ``publish_many``, ``remap_many``,
+    ``evict_blocks`` — is a vectorized gather/scatter under ONE lock
+    acquisition instead of a per-entry attribute walk;
+  * LRU order is an intrusive array-linked list (``lru_prev/lru_next``
+    with head/tail sentinel rows). A batch "move to MRU" unlinks an
+    arbitrary row set with pointer-doubling (O(log run-length) vectorized
+    passes) and has an O(1) fast path for the steady state where a
+    re-matched chain is already the MRU suffix — no per-key
+    ``move_to_end`` anywhere;
+  * the block->owner reverse map is a flat ``block2row`` array (invariant:
+    ``block2row[b] == r`` implies ``block_id[r] == b``), making the
+    tiering migrator's owner lookups a single fancy-indexed gather.
+
+Hashing cost notes (the other half of the request hot path):
+  * token blocks are hashed from ``np.int64`` buffers via ``tobytes()``;
+  * a bounded (parent_key, block_bytes) -> key memo caches chain links;
+  * the request-level memo is keyed by the token tuple itself (exact
+    equality, no digest pass over the buffer): a repeat request costs one
+    tuple hash, not a 120 KB blake2b. Returned chains are TUPLES — shared
+    between callers and structurally immutable, so cache aliasing cannot
+    corrupt them.
 """
 
 from __future__ import annotations
@@ -38,6 +56,10 @@ from repro.core.pool import BelugaPool
 ROOT = b"ROOT"
 
 _CHAIN_CACHE_MAX = 1 << 18
+_REQUEST_CACHE_MAX = 256
+
+# LRU sentinel rows (data rows start at 2)
+_HEAD, _TAIL = 0, 1
 
 
 def _hash_link(parent: bytes, token_bytes: bytes) -> bytes:
@@ -52,47 +74,53 @@ def block_key(parent: bytes, tokens: tuple[int, ...]) -> bytes:
 
 @dataclass(slots=True)
 class IndexEntry:
+    """Point-in-time snapshot of one index row (API compatibility object;
+    the store itself is columnar — mutating a snapshot has no effect)."""
+
     block_id: int
     epoch: int
     n_tokens: int
     last_used: float
 
 
-class GlobalIndex:
-    def __init__(self, pool: BelugaPool):
-        self.pool = pool
-        self.block_tokens = pool.layout.block_tokens
-        self._lock = threading.Lock()
-        self._map: OrderedDict[bytes, IndexEntry] = OrderedDict()
-        # block_id -> key reverse map: lets the tiering migrator find the
-        # owning key of a cold block in O(1) (and re-point the entry after
-        # a tier migration) without walking the whole map
-        self._by_block: dict[int, bytes] = {}
-        # optional hook fired with the keys of entries destroyed by
-        # eviction (evict_lru / evict_blocks): the tiering policy's
-        # ghost-LRU admission filter subscribes here. None = zero cost.
-        self.on_evict = None
+class PrefixHasher:
+    """Chain hashing + memoization, independent of the index store.
+
+    Hashing is pure computation over the tokens, so RPC clients
+    (``repro.core.wire.RpcIndexClient``) run it locally and only ship the
+    resulting 16-byte keys over the ring.
+    """
+
+    __slots__ = ("block_tokens", "_chain_cache", "_request_cache")
+
+    def __init__(self, block_tokens: int):
+        self.block_tokens = block_tokens
         # parent_key||block_token_bytes -> key chain memo (bounded FIFO)
         self._chain_cache: OrderedDict[bytes, bytes] = OrderedDict()
-        # digest(whole token buffer) -> full key list (one hash instead of
-        # a 1000-link chain walk when the same request recurs: plan_fetch
-        # -> writeback, populate -> cache-hit phase, per-engine locality
-        # probes). Returned lists are shared — callers must not mutate.
-        self._request_cache: OrderedDict[bytes, list[bytes]] = OrderedDict()
-        self.hits = 0
-        self.misses = 0
+        # request memo: cheap signature -> (token-list copy, key chain).
+        # The signature is four sampled elements + length; a hit is then
+        # CONFIRMED by a C-level list compare against the stored copy, so
+        # a recurring request costs ~one list equality — no digest pass
+        # and no hash over 15k tokens. The stored copy also makes caller
+        # mutation of their token list safe: the compare simply misses.
+        # Memory: the copy is a pointer array sharing the caller's int
+        # objects (which outlive it in Request.tokens anyway), ~8 B/token
+        # marginal — ~30 MB worst case at 256 entries of 15k tokens,
+        # same order as the digest-keyed chain lists it replaced.
+        self._request_cache: OrderedDict[
+            tuple, tuple[list[int], tuple[bytes, ...]]
+        ] = OrderedDict()
 
-    # ------------------------------------------------------------------
-    def keys_for(self, tokens: list[int]) -> list[bytes]:
+    def keys_for(self, tokens: list[int]) -> tuple[bytes, ...]:
         bt = self.block_tokens
         n = len(tokens) // bt
         if not n:
-            return []
+            return ()
+        sig = (len(tokens), tokens[0], tokens[len(tokens) >> 1], tokens[-1])
+        hit = self._request_cache.get(sig)
+        if hit is not None and hit[0] == tokens:
+            return hit[1]
         arr = np.asarray(tokens[: n * bt], np.int64).reshape(n, bt)
-        req_key = hashlib.blake2b(arr.tobytes(), digest_size=16).digest()
-        cached = self._request_cache.get(req_key)
-        if cached is not None:
-            return cached
         keys: list[bytes] = []
         parent = ROOT
         cache = self._chain_cache
@@ -108,61 +136,205 @@ class GlobalIndex:
                     cache.popitem(last=False)
             keys.append(k)
             parent = k
-        self._request_cache[req_key] = keys
-        if len(self._request_cache) > 1024:
+        out = tuple(keys)
+        self._request_cache[sig] = (list(tokens), out)
+        if len(self._request_cache) > _REQUEST_CACHE_MAX:
             self._request_cache.popitem(last=False)
-        return keys
+        return out
 
+
+class GlobalIndex:
+    def __init__(self, pool: BelugaPool):
+        self.pool = pool
+        self.block_tokens = pool.layout.block_tokens
+        self.hasher = PrefixHasher(self.block_tokens)
+        self._lock = threading.Lock()
+        # key -> row in the flat arrays below
+        self._rows: dict[bytes, int] = {}
+        cap = 1 << 10
+        self._cap = cap
+        self._block_id = np.full(cap, -1, np.int64)
+        self._epoch = np.zeros(cap, np.int64)
+        self._n_tokens = np.zeros(cap, np.int32)
+        self._last_used = np.zeros(cap, np.float64)
+        self._lru_prev = np.zeros(cap, np.int64)
+        self._lru_next = np.zeros(cap, np.int64)
+        self._mark = np.zeros(cap, bool)  # scratch for batch LRU splices
+        self._pos = np.zeros(cap, np.int64)  # scratch: row -> batch position
+        self._keys: list[bytes | None] = [None] * cap
+        # pop() order: row 2 first (0/1 are the LRU sentinels)
+        self._free_rows: list[int] = list(range(cap - 1, 1, -1))
+        self._lru_next[_HEAD] = _TAIL
+        self._lru_prev[_TAIL] = _HEAD
+        # block_id -> owning row (-1 = unindexed): the reverse map the
+        # tiering migrator uses to find/re-point a cold block's entry
+        self._block2row = np.full(pool.n_blocks, -1, np.int64)
+        # optional hook fired with the keys of entries destroyed by
+        # eviction (evict_lru / evict_blocks): the tiering policy's
+        # ghost-LRU admission filter subscribes here. None = zero cost.
+        self.on_evict = None
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------
+    # hashing (delegates to the standalone hasher)
+    # ------------------------------------------------------------------
+    def keys_for(self, tokens: list[int]) -> tuple[bytes, ...]:
+        return self.hasher.keys_for(tokens)
+
+    # ------------------------------------------------------------------
+    # row + LRU plumbing (all called with self._lock held)
+    # ------------------------------------------------------------------
+    def _grow(self, min_free: int) -> None:
+        new_cap = self._cap
+        while new_cap - 2 - len(self._rows) < min_free:
+            new_cap *= 2
+        if new_cap == self._cap:
+            return
+        old = self._cap
+        for name in ("_block_id", "_epoch", "_n_tokens", "_last_used",
+                     "_lru_prev", "_lru_next", "_mark", "_pos"):
+            arr = getattr(self, name)
+            grown = np.zeros(new_cap, arr.dtype)
+            grown[:old] = arr
+            setattr(self, name, grown)
+        self._block_id[old:] = -1
+        self._keys.extend([None] * (new_cap - old))
+        self._free_rows.extend(range(new_cap - 1, old - 1, -1))
+        self._cap = new_cap
+
+    def _lru_append(self, rows: np.ndarray) -> None:
+        """Link ``rows`` (in order) at the MRU tail."""
+        nxt, prv = self._lru_next, self._lru_prev
+        t = int(prv[_TAIL])
+        first, last = int(rows[0]), int(rows[-1])
+        nxt[t] = first
+        prv[first] = t
+        if len(rows) > 1:
+            nxt[rows[:-1]] = rows[1:]
+            prv[rows[1:]] = rows[:-1]
+        nxt[last] = _TAIL
+        prv[_TAIL] = last
+
+    def _lru_unlink(self, rows: np.ndarray) -> None:
+        """Splice an arbitrary row set out of the list, vectorized.
+
+        Pointer-doubling computes, for every row, the first list successor
+        OUTSIDE the set (O(log max-run-length) vectorized passes); each
+        maximal run is then bridged with one scatter — no per-row Python
+        relink loop.
+        """
+        nxt, prv = self._lru_next, self._lru_prev
+        mk, pos = self._mark, self._pos
+        mk[rows] = True
+        pos[rows] = np.arange(len(rows))
+        jump = nxt[rows]  # gather copies
+        ins = mk[jump]
+        while ins.any():
+            jump[ins] = jump[pos[jump[ins]]]
+            ins = mk[jump]
+        pr = prv[rows]
+        starts = ~mk[pr]  # rows whose predecessor survives = run starts
+        left = pr[starts]
+        right = jump[starts]
+        nxt[left] = right
+        prv[right] = left
+        mk[rows] = False
+
+    def _lru_move_to_tail(self, rows: np.ndarray) -> None:
+        nxt = self._lru_next
+        last = int(rows[-1])
+        # steady-state fast path: a re-matched chain is usually already
+        # the MRU suffix in order — two gathers, no splice
+        if nxt[last] == _TAIL and (
+            len(rows) == 1 or (nxt[rows[:-1]] == rows[1:]).all()
+        ):
+            return
+        self._lru_unlink(rows)
+        self._lru_append(rows)
+
+    def _drop_rows(self, rows: np.ndarray) -> None:
+        """Destroy rows: unlink, clear reverse map, recycle row slots."""
+        self._lru_unlink(rows)
+        bids = self._block_id[rows]
+        owned = self._block2row[bids] == rows
+        self._block2row[bids[owned]] = -1
+        keys, free = self._keys, self._free_rows
+        rows_dict = self._rows
+        for r in rows.tolist():
+            del rows_dict[keys[r]]
+            keys[r] = None
+            free.append(r)
+        self._block_id[rows] = -1
+
+    # ------------------------------------------------------------------
     def match_prefix(self, tokens: list[int]) -> list[tuple[bytes, int, int]]:
         """Longest cached prefix: [(key, block_id, epoch)] with valid epochs."""
         return self.match_prefix_keys(self.keys_for(tokens))
 
     def match_prefix_keys(
-        self, keys: list[bytes]
+        self, keys: tuple[bytes, ...] | list[bytes]
     ) -> list[tuple[bytes, int, int]]:
         """``match_prefix`` over a pre-computed key chain (lets callers that
         also need the keys — e.g. the writeback path — hash once)."""
         out: list[tuple[bytes, int, int]] = []
         now = time.monotonic()
         with self._lock:
-            entries: list[tuple[bytes, IndexEntry]] = []
-            for k in keys:
-                e = self._map.get(k)
-                if e is None:
-                    break
-                entries.append((k, e))
-            if entries:
-                ids = np.fromiter(
-                    (e.block_id for _, e in entries), np.intp, len(entries)
-                )
-                eps = np.fromiter(
-                    (e.epoch for _, e in entries), np.int64, len(entries)
-                )
+            rows = list(map(self._rows.get, keys))  # C-level bulk lookup
+            try:
+                n_present = rows.index(None)
+            except ValueError:
+                n_present = len(rows)
+            if n_present:
+                ra = np.asarray(rows[:n_present], np.int64)
+                ids = self._block_id[ra]
+                eps = self._epoch[ra]
                 # one vectorized epoch+committed check for ALL candidates
                 ok = self.pool.validate_epochs(ids, eps)
-                n_ok = len(entries) if ok.all() else int(np.argmin(ok))
-                for k, e in entries[:n_ok]:
-                    e.last_used = now
-                    self._map.move_to_end(k)
-                    out.append((k, e.block_id, e.epoch))
-                if n_ok < len(entries):  # stale entry: drop it
-                    sk, se = entries[n_ok]
-                    self._map.pop(sk, None)
-                    if self._by_block.get(se.block_id) == sk:
-                        del self._by_block[se.block_id]
+                n_ok = n_present if ok.all() else int(np.argmin(ok))
+                if n_ok:
+                    ga = ra[:n_ok]
+                    self._last_used[ga] = now
+                    self._lru_move_to_tail(ga)
+                    out = list(
+                        zip(keys[:n_ok], ids[:n_ok].tolist(), eps[:n_ok].tolist())
+                    )
+                if n_ok < n_present:  # stale entry: drop it
+                    self._drop_rows(ra[n_ok : n_ok + 1])
             self.hits += len(out)
             self.misses += max(0, len(keys) - len(out))
         return out
 
     def publish(self, key: bytes, block_id: int, epoch: int, n_tokens: int) -> None:
-        """Writer publishes AFTER the block payload is flushed (coherence)."""
+        """Writer publishes AFTER the block payload is flushed (coherence).
+
+        Unlike ``publish_many``, a single publish refreshes the LRU even
+        on re-publish (the seed ``move_to_end`` semantics). One lock,
+        atomic insert-and-move."""
         with self._lock:
-            old = self._map.get(key)
-            if old is not None and self._by_block.get(old.block_id) == key:
-                del self._by_block[old.block_id]
-            self._map[key] = IndexEntry(block_id, epoch, n_tokens, time.monotonic())
-            self._map.move_to_end(key)
-            self._by_block[block_id] = key
+            if not self._free_rows:
+                self._grow(1)
+            r = self._rows.get(key)
+            if r is None:
+                r = self._free_rows.pop()
+                self._rows[key] = r
+                self._keys[r] = key
+                fresh = True
+            else:
+                ob = int(self._block_id[r])
+                if self._block2row[ob] == r:
+                    self._block2row[ob] = -1
+                fresh = False
+            self._block_id[r] = block_id
+            self._epoch[r] = epoch
+            self._n_tokens[r] = n_tokens
+            self._last_used[r] = time.monotonic()
+            self._block2row[block_id] = r
+            ra = np.asarray([r], np.int64)
+            if fresh:
+                self._lru_append(ra)
+            else:
+                self._lru_move_to_tail(ra)
 
     def publish_many(
         self,
@@ -171,47 +343,127 @@ class GlobalIndex:
         epochs: list[int],
         n_tokens: int,
     ) -> None:
-        """Batch publish under one lock acquisition.
+        """Batch publish: one lock, one scatter per column.
 
-        No per-key ``move_to_end``: a NEW key lands at the back (most
-        recent) by dict insertion order already; only a re-publish of a
-        still-present key (rare: epoch-invalidated entry not yet dropped)
-        keeps its old LRU slot, which only makes it eviction-eligible
-        sooner — safe."""
+        Fresh keys are appended to the MRU tail in batch order; a
+        re-publish of a still-present key (rare: epoch-invalidated entry
+        not yet dropped) keeps its old LRU slot, which only makes it
+        eviction-eligible sooner — safe.
+        """
+        n = len(keys)
+        if not n:
+            return
+        if n > 1:
+            # a key published twice in one batch (degenerate, but a wire
+            # OP_PUBLISH can carry it) must resolve to its LAST occurrence
+            # BEFORE the column scatters: the first occurrence would
+            # otherwise leave a stale block2row pointer at a block the
+            # row no longer owns
+            last = {k: i for i, k in enumerate(keys)}
+            if len(last) != n:
+                sel = sorted(last.values())
+                keys = [keys[i] for i in sel]
+                block_ids = [block_ids[i] for i in sel]
+                epochs = [epochs[i] for i in sel]
+                n = len(keys)
         now = time.monotonic()
         with self._lock:
-            m = self._map
-            by_block = self._by_block
-            for key, bid, epoch in zip(keys, block_ids, epochs):
-                old = m.get(key)
-                if old is not None and by_block.get(old.block_id) == key:
-                    del by_block[old.block_id]
-                m[key] = IndexEntry(bid, epoch, n_tokens, now)
-                by_block[bid] = key
+            if len(self._free_rows) < n:
+                self._grow(n)
+            rows = np.empty(n, np.int64)
+            fresh = np.zeros(n, bool)
+            get = self._rows.get
+            rows_dict, row_keys, free = self._rows, self._keys, self._free_rows
+            for i, k in enumerate(keys):
+                r = get(k)
+                if r is None:
+                    r = free.pop()
+                    rows_dict[k] = r
+                    row_keys[r] = k
+                    fresh[i] = True
+                rows[i] = r
+            bids = np.asarray(block_ids, np.int64)
+            # a re-published row abandons its old block: clear the reverse
+            # pointer it still owns before re-pointing
+            if not fresh.all():
+                ro = rows[~fresh]
+                ob = self._block_id[ro]
+                owned = self._block2row[ob] == ro
+                self._block2row[ob[owned]] = -1
+            self._block_id[rows] = bids
+            self._epoch[rows] = np.asarray(epochs, np.int64)
+            self._n_tokens[rows] = n_tokens
+            self._last_used[rows] = now
+            self._block2row[bids] = rows
+            if fresh.any():
+                self._lru_append(rows[fresh])
 
     def lookup(self, key: bytes) -> IndexEntry | None:
         with self._lock:
-            return self._map.get(key)
+            r = self._rows.get(key)
+            if r is None:
+                return None
+            return IndexEntry(
+                int(self._block_id[r]), int(self._epoch[r]),
+                int(self._n_tokens[r]), float(self._last_used[r]),
+            )
 
     def lookup_many(self, keys: list[bytes]) -> list[IndexEntry | None]:
-        """Batch lookup under one lock acquisition."""
+        """Batch lookup under one lock acquisition (snapshots)."""
         with self._lock:
-            return [self._map.get(k) for k in keys]
+            out: list[IndexEntry | None] = []
+            get = self._rows.get
+            for k in keys:
+                r = get(k)
+                out.append(
+                    None
+                    if r is None
+                    else IndexEntry(
+                        int(self._block_id[r]), int(self._epoch[r]),
+                        int(self._n_tokens[r]), float(self._last_used[r]),
+                    )
+                )
+            return out
+
+    def filter_unpublished(self, keys) -> list[int]:
+        """Positions in ``keys`` with no valid (committed, current-epoch)
+        entry — i.e. the blocks a writeback still has to write. One lock +
+        one vectorized epoch check; over RPC this folds the writeback's
+        lookup round-trip and the epoch validation into a single op."""
+        n = len(keys)
+        if not n:
+            return []
+        with self._lock:
+            rows = np.fromiter(
+                (self._rows.get(k, -1) for k in keys), np.int64, n
+            )
+            present = rows >= 0
+            ids = self._block_id[rows[present]]
+            eps = self._epoch[rows[present]]
+        ok = np.zeros(n, bool)
+        if ids.size:
+            ok[present] = self.pool.validate_epochs(ids, eps)
+        return np.nonzero(~ok)[0].tolist()
 
     def evict_lru(self, n: int) -> list[int]:
         """Evict up to n unreferenced blocks; returns freed block ids."""
-        freed, dropped = [], []
+        freed: list[int] = []
+        dropped: list[bytes] = []
         with self._lock:
-            for k in list(self._map.keys()):
-                if len(freed) >= n:
-                    break
-                e = self._map[k]
-                if self.pool.refcounts[e.block_id] <= 1:
-                    freed.append(e.block_id)
-                    dropped.append(k)
-                    del self._map[k]
-                    if self._by_block.get(e.block_id) == k:
-                        del self._by_block[e.block_id]
+            nxt = self._lru_next
+            block_id = self._block_id
+            refcounts = self.pool.refcounts
+            drop: list[int] = []
+            r = int(nxt[_HEAD])
+            while r != _TAIL and len(freed) < n:
+                b = int(block_id[r])
+                if refcounts[b] <= 1:
+                    freed.append(b)
+                    dropped.append(self._keys[r])
+                    drop.append(r)
+                r = int(nxt[r])
+            if drop:
+                self._drop_rows(np.asarray(drop, np.int64))
         if freed:
             self.pool.release(freed)
         if dropped and self.on_evict is not None:
@@ -222,21 +474,24 @@ class GlobalIndex:
         """Evict the entries owning specific blocks (tier-local pressure
         relief: the migrator frees cold spill blocks to make demotion
         room). Skips blocks with in-flight references; returns freed ids."""
-        freed, dropped = [], []
+        freed: list[int] = []
+        dropped: list[bytes] = []
         with self._lock:
-            for b in block_ids:
-                k = self._by_block.get(b)
-                if k is None:
-                    continue
-                e = self._map.get(k)
-                if e is None or e.block_id != b:
-                    continue
-                if self.pool.refcounts[b] > 1:
-                    continue
-                freed.append(b)
-                dropped.append(k)
-                del self._map[k]
-                del self._by_block[b]
+            ids = np.asarray(block_ids, np.int64)
+            if len(ids) > 1:  # dedupe, keeping first-occurrence order
+                _, first = np.unique(ids, return_index=True)
+                ids = ids[np.sort(first)]
+            rows = self._block2row[ids]
+            m = rows >= 0
+            if m.any():
+                cand_ids = ids[m]
+                evictable = self.pool.refcounts[cand_ids] <= 1
+                evictable = np.asarray(evictable, bool)
+                if evictable.any():
+                    drop = rows[m][evictable]
+                    freed = cand_ids[evictable].tolist()
+                    dropped = [self._keys[r] for r in drop.tolist()]
+                    self._drop_rows(drop)
         if freed:
             self.pool.release(freed)
         if dropped and self.on_evict is not None:
@@ -245,12 +500,28 @@ class GlobalIndex:
 
     # ------------------------------------------------------------------
     # Tier-migration support: the migrator moves a payload to a new block
-    # in another tier, then re-points the (key -> block, epoch) entry.
+    # in another tier, then re-points the (key -> block, epoch) row.
     # ------------------------------------------------------------------
     def keys_of_blocks(self, block_ids) -> list[bytes | None]:
         """Owning key per block id (None for unindexed blocks)."""
         with self._lock:
-            return [self._by_block.get(int(b)) for b in block_ids]
+            rows = self._block2row[np.asarray(block_ids, np.int64)]
+            return [self._keys[r] if r >= 0 else None for r in rows.tolist()]
+
+    def owners_of(
+        self, block_ids
+    ) -> tuple[list[bytes], list[int], list[int]]:
+        """(keys, block_ids, epochs) of the currently-indexed blocks among
+        ``block_ids`` — the migrator's pre-copy snapshot, taken under ONE
+        lock so key and epoch can't disagree (the old two-call sequence
+        could race an eviction between them)."""
+        with self._lock:
+            ids = np.asarray(block_ids, np.int64)
+            rows = self._block2row[ids]
+            m = rows >= 0
+            rows_m = rows[m]
+            keys = [self._keys[r] for r in rows_m.tolist()]
+            return keys, ids[m].tolist(), self._epoch[rows_m].tolist()
 
     def remap_many(
         self,
@@ -260,35 +531,41 @@ class GlobalIndex:
         new_ids: list[int],
         new_epochs: list[int],
     ) -> list[bool]:
-        """Atomically re-point entries after a tier migration.
+        """Atomically re-point rows after a tier migration.
 
-        Each remap succeeds only if the entry still maps to
+        Each remap succeeds only if the row still maps to
         (old_id, old_epoch) — a concurrent eviction/re-publish loses the
         race and the caller must roll its copy back. Readers that matched
         before the remap hold (old_id, old_epoch); once the caller
         releases the old block its epoch bumps and their validate fails,
         which is exactly the §5.1 recycle-detection path."""
-        out = []
+        n = len(keys)
+        if not n:
+            return []
         with self._lock:
-            for key, old_id, old_epoch, new_id, new_epoch in zip(
-                keys, old_ids, old_epochs, new_ids, new_epochs
-            ):
-                e = self._map.get(key)
-                if e is None or e.block_id != old_id or e.epoch != old_epoch:
-                    out.append(False)
-                    continue
-                if self._by_block.get(old_id) == key:
-                    del self._by_block[old_id]
-                e.block_id = new_id
-                e.epoch = new_epoch
-                self._by_block[new_id] = key
-                out.append(True)
-        return out
+            rows = np.fromiter(
+                (self._rows.get(k, -1) for k in keys), np.int64, n
+            )
+            ok = (
+                (rows >= 0)
+                & (self._block_id[rows] == np.asarray(old_ids, np.int64))
+                & (self._epoch[rows] == np.asarray(old_epochs, np.int64))
+            )
+            if ok.any():
+                ro = rows[ok]
+                old_ok = np.asarray(old_ids, np.int64)[ok]
+                owned = self._block2row[old_ok] == ro
+                self._block2row[old_ok[owned]] = -1
+                new_ok = np.asarray(new_ids, np.int64)[ok]
+                self._block_id[ro] = new_ok
+                self._epoch[ro] = np.asarray(new_epochs, np.int64)[ok]
+                self._block2row[new_ok] = ro
+            return ok.tolist()
 
     def stats(self) -> dict:
         with self._lock:
             return {
-                "entries": len(self._map),
+                "entries": len(self._rows),
                 "hits": self.hits,
                 "misses": self.misses,
                 "hit_rate": self.hits / max(1, self.hits + self.misses),

@@ -11,10 +11,29 @@ Producer/consumer protocol exactly as the paper describes:
 This implementation is REAL (numpy shared buffer + threads) so Exp #11 can
 measure genuine RTT/throughput on this host; the fabric model adds the
 CXL-vs-RDMA constants for the paper-calibrated comparison.
+
+Wire-level details carried by the ring (see ``repro.core.wire`` for the
+metadata-op codec layered on top):
+  * payloads are VARIABLE length: each slot stores ``u32 length`` + bytes
+    (the paper's variable SGL descriptor), so one round-trip carries a
+    whole request's key chain instead of a fixed 64 B token;
+  * the server drains the ring with one vectorized status scan
+    (``np.nonzero(status == REQ_READY)``) per pass — O(ready slots) of
+    Python work per batch, not O(n_slots) interpreter steps per poll;
+  * a client whose wait times out QUARANTINES the slot instead of
+    recycling it: the server may still write a stale response into it,
+    and a freed-then-reused slot would hand that stale payload to an
+    unrelated caller. Quarantined slots return to the free list only
+    after the server has answered them (observed at the next acquire),
+    closing the reuse race;
+  * a handler failure (malformed frame, oversized reply) is relayed
+    in-band as a RESP_ERROR frame and raised client-side as ``RpcError``
+    — the service thread itself never dies to a bad request.
 """
 
 from __future__ import annotations
 
+import struct
 import threading
 import time
 from dataclasses import dataclass
@@ -23,26 +42,60 @@ import numpy as np
 
 from repro.core.fabric import DEFAULT, FabricConstants
 
-IDLE, REQ_READY, RESP_READY = 0, 1, 2
+IDLE, REQ_READY, RESP_READY, RESP_ERROR = 0, 1, 2, 3
 CACHE_LINE = 64
+_LEN = struct.Struct("<I")
+
+
+class RpcError(RuntimeError):
+    """Server-side handler failure, relayed in-band (RESP_ERROR frame)."""
 
 
 @dataclass
 class RpcStats:
     requests: int = 0
     total_wait: float = 0.0
+    timeouts: int = 0
 
 
 class ShmRing:
     """One ring: n_slots request/response slot pairs in a flat buffer."""
 
     def __init__(self, n_slots: int = 128, payload_bytes: int = 64):
-        # pad payload to cache-line multiple (paper: cache-line alignment)
-        self.payload_bytes = ((payload_bytes + CACHE_LINE - 1) // CACHE_LINE) * CACHE_LINE
+        # slot = u32 length header + payload, padded to cache-line
+        # multiples (paper: cache-line alignment)
+        self.payload_bytes = payload_bytes
+        slot = 4 + payload_bytes
+        self.slot_bytes = ((slot + CACHE_LINE - 1) // CACHE_LINE) * CACHE_LINE
         self.n_slots = n_slots
         self.status = np.zeros(n_slots, np.int64)
-        self.req = np.zeros((n_slots, self.payload_bytes), np.uint8)
-        self.resp = np.zeros((n_slots, self.payload_bytes), np.uint8)
+        self.req = np.zeros((n_slots, self.slot_bytes), np.uint8)
+        self.resp = np.zeros((n_slots, self.slot_bytes), np.uint8)
+
+    # -- framed slot I/O ------------------------------------------------
+    def write_req(self, slot: int, payload: bytes) -> None:
+        self._write(self.req, slot, payload)
+
+    def write_resp(self, slot: int, payload: bytes) -> None:
+        self._write(self.resp, slot, payload)
+
+    def _write(self, buf: np.ndarray, slot: int, payload: bytes) -> None:
+        n = len(payload)
+        if n > self.payload_bytes:
+            raise ValueError(
+                f"payload {n} B exceeds slot capacity {self.payload_bytes} B"
+            )
+        buf[slot, : 4 + n] = np.frombuffer(_LEN.pack(n) + payload, np.uint8)
+
+    def read_req(self, slot: int) -> bytes:
+        return self._read(self.req, slot)
+
+    def read_resp(self, slot: int) -> bytes:
+        return self._read(self.resp, slot)
+
+    def _read(self, buf: np.ndarray, slot: int) -> bytes:
+        (n,) = _LEN.unpack(buf[slot, :4].tobytes())
+        return buf[slot, 4 : 4 + n].tobytes()
 
 
 class CxlRpcServer:
@@ -65,25 +118,31 @@ class CxlRpcServer:
 
     def _poll_loop(self):
         ring = self.ring
-        n = ring.n_slots
+        status = ring.status
         while not self._stop.is_set():
-            progressed = False
-            status = ring.status
-            for i in range(n):
-                if status[i] == REQ_READY:
-                    # paper: CLFLUSH before reading client-written data
-                    payload = ring.req[i].tobytes()
-                    reply = self.handler(payload)
-                    out = np.frombuffer(
-                        reply[: ring.payload_bytes].ljust(ring.payload_bytes, b"\0"),
-                        np.uint8,
-                    )
-                    ring.resp[i] = out
-                    status[i] = RESP_READY  # publish (ntstore semantics)
-                    self.served += 1
-                    progressed = True
-            if not progressed:
+            # one vectorized scan finds every posted request; the Python
+            # loop below only touches slots that actually have work
+            ready = np.nonzero(status == REQ_READY)[0]
+            if not len(ready):
                 time.sleep(0)  # yield GIL; real impl spins
+                continue
+            for i in ready.tolist():
+                # paper: CLFLUSH before reading client-written data
+                payload = ring.read_req(i)
+                # a failing handler (malformed frame, index error, reply
+                # larger than the slot) must never kill the service
+                # thread: the error is relayed in-band as a RESP_ERROR
+                # frame and the poll loop keeps draining
+                try:
+                    ring.write_resp(i, self.handler(payload))
+                    status[i] = RESP_READY  # publish (ntstore semantics)
+                except Exception as e:  # noqa: BLE001
+                    msg = f"{type(e).__name__}: {e}".encode()[
+                        : ring.payload_bytes
+                    ]
+                    ring.write_resp(i, msg)
+                    status[i] = RESP_ERROR
+                self.served += 1
 
 
 class CxlRpcClient:
@@ -95,32 +154,61 @@ class CxlRpcClient:
         self.stats = RpcStats()
         self._slot_lock = threading.Lock()
         self._free = list(range(ring.n_slots))
+        # slots whose caller timed out while the server still owed a
+        # response; unsafe to reuse until the server flips them
+        self._quarantined: set[int] = set()
 
-    def call(self, payload: bytes, timeout: float = 5.0) -> bytes:
+    def free_slots(self) -> int:
         with self._slot_lock:
+            return len(self._free)
+
+    def _acquire_slot(self) -> int:
+        with self._slot_lock:
+            if self._quarantined:
+                # reclaim quarantined slots the server has since answered
+                done = [
+                    s for s in self._quarantined
+                    if self.ring.status[s] in (RESP_READY, RESP_ERROR)
+                ]
+                for s in done:
+                    self.ring.status[s] = IDLE
+                    self._quarantined.discard(s)
+                    self._free.append(s)
             if not self._free:
                 raise RuntimeError("no free RPC slots (QD exceeded)")
-            slot = self._free.pop()
+            return self._free.pop()
+
+    def call(self, payload: bytes, timeout: float = 5.0) -> bytes:
+        slot = self._acquire_slot()
         ring = self.ring
+        posted = False
         try:
-            buf = payload[: ring.payload_bytes].ljust(ring.payload_bytes, b"\0")
-            ring.req[slot] = np.frombuffer(buf, np.uint8)
+            ring.write_req(slot, payload)
             t0 = time.perf_counter()
             ring.status[slot] = REQ_READY  # ntstore + fence
+            posted = True
             deadline = t0 + timeout
-            while ring.status[slot] != RESP_READY:
+            while (st := int(ring.status[slot])) not in (RESP_READY, RESP_ERROR):
                 if time.perf_counter() > deadline:
+                    self.stats.timeouts += 1
                     raise TimeoutError("RPC timeout")
                 time.sleep(0)
-            out = ring.resp[slot].tobytes()
+            out = ring.read_resp(slot)
             ring.status[slot] = IDLE
-            dt = time.perf_counter() - t0
+            posted = False  # completed: safe to recycle
+            if st == RESP_ERROR:
+                raise RpcError(out.decode("utf-8", errors="replace"))
             self.stats.requests += 1
-            self.stats.total_wait += dt
+            self.stats.total_wait += time.perf_counter() - t0
             return out
         finally:
             with self._slot_lock:
-                self._free.append(slot)
+                if posted:
+                    # the server may still write here — quarantine until
+                    # it flips the slot to RESP_READY (checked at acquire)
+                    self._quarantined.add(slot)
+                else:
+                    self._free.append(slot)
 
     def modeled_rtt(self) -> float:
         """Paper-calibrated RTT floor for this transport (Exp #11)."""

@@ -1,0 +1,444 @@
+"""Binary wire protocol for the metadata plane (paper §6, Exp #11).
+
+The centralized ``GlobalIndex`` is reached over the CXL-RPC shared-memory
+ring (``repro.core.rpc``); this module defines what actually travels in a
+slot: a compact variable-length binary codec for the index ops every
+request hits, so ONE ring round-trip carries a whole request's key chain
+instead of one RPC per key.
+
+Message layout (little-endian, keys are fixed 16-byte blake2b digests):
+
+    request  := op:u8  body
+    MATCH    := n:u32  keys[n*16]
+    PUBLISH  := n:u32  n_tokens:i32  keys[n*16]  block_ids[n*i64]  epochs[n*i64]
+    LOOKUP   := n:u32  keys[n*16]
+    FILTER   := n:u32  keys[n*16]          (writeback: lookup+validate fused)
+    EVICT    := n:u32                      (evict up to n LRU blocks)
+    BATCH    := k:u32  k * (len:u32 request)
+
+    responses:
+    MATCH    -> n_ok:u32  block_ids[n_ok*i64]  epochs[n_ok*i64]
+    PUBLISH  -> n:u32
+    LOOKUP   -> n:u32  block_ids[n*i64]  epochs[n*i64]  n_tokens[n*i32]
+                (block_id == -1 marks a missing key)
+    FILTER   -> m:u32  positions[m*u32]
+    EVICT    -> m:u32  freed_block_ids[m*i64]
+    BATCH    -> k:u32  k * (len:u32 response)
+
+``handle_request`` is the server-side dispatcher (wrap it with
+``make_index_handler`` and hand it to ``CxlRpcServer``); ``RpcIndexClient``
+is the engine-side proxy exposing the same API surface the
+``KVCacheManager`` uses in-process (``keys_for`` hashes locally — it is
+pure computation — and only the 16-byte keys cross the ring). Chains
+longer than one slot are transparently split at the op level.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from repro.core.index import IndexEntry, PrefixHasher
+
+KEY_BYTES = 16
+
+OP_MATCH = 1
+OP_PUBLISH = 2
+OP_LOOKUP = 3
+OP_FILTER = 4
+OP_EVICT = 5
+OP_BATCH = 6
+
+_HDR = struct.Struct("<BI")  # op, count
+_U32 = struct.Struct("<I")
+_PUB_HDR = struct.Struct("<BIi")  # op, count, n_tokens
+
+
+class WireError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# encode (client side)
+# ---------------------------------------------------------------------------
+def _join_keys(keys) -> bytes:
+    blob = b"".join(keys)
+    if len(blob) != KEY_BYTES * len(keys):
+        raise WireError("keys must be 16-byte digests")
+    return blob
+
+
+def encode_match(keys) -> bytes:
+    return _HDR.pack(OP_MATCH, len(keys)) + _join_keys(keys)
+
+
+def encode_publish(keys, block_ids, epochs, n_tokens: int) -> bytes:
+    n = len(keys)
+    if not (n == len(block_ids) == len(epochs)):
+        raise WireError("publish arrays disagree on length")
+    return (
+        _PUB_HDR.pack(OP_PUBLISH, n, n_tokens)
+        + _join_keys(keys)
+        + np.asarray(block_ids, np.int64).tobytes()
+        + np.asarray(epochs, np.int64).tobytes()
+    )
+
+
+def encode_lookup(keys) -> bytes:
+    return _HDR.pack(OP_LOOKUP, len(keys)) + _join_keys(keys)
+
+
+def encode_filter(keys) -> bytes:
+    return _HDR.pack(OP_FILTER, len(keys)) + _join_keys(keys)
+
+
+def encode_evict(n: int) -> bytes:
+    return _HDR.pack(OP_EVICT, n)
+
+
+def encode_batch(requests: list[bytes]) -> bytes:
+    return _HDR.pack(OP_BATCH, len(requests)) + b"".join(
+        _U32.pack(len(r)) + r for r in requests
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode helpers
+# ---------------------------------------------------------------------------
+def _need(buf: bytes, end: int) -> None:
+    if len(buf) < end:
+        raise WireError(f"truncated message: need {end} B, have {len(buf)} B")
+
+
+def _split_keys(buf: bytes, off: int, n: int) -> tuple[list[bytes], int]:
+    end = off + n * KEY_BYTES
+    _need(buf, end)
+    keys = [buf[i : i + KEY_BYTES] for i in range(off, end, KEY_BYTES)]
+    return keys, end
+
+
+def _split_i64(buf: bytes, off: int, n: int) -> tuple[np.ndarray, int]:
+    end = off + 8 * n
+    _need(buf, end)
+    return np.frombuffer(buf, np.int64, n, off), end
+
+
+def _split_i32(buf: bytes, off: int, n: int) -> tuple[np.ndarray, int]:
+    end = off + 4 * n
+    _need(buf, end)
+    return np.frombuffer(buf, np.int32, n, off), end
+
+
+def decode_match_resp(buf: bytes) -> tuple[np.ndarray, np.ndarray]:
+    _need(buf, 4)
+    (n,) = _U32.unpack_from(buf)
+    ids, off = _split_i64(buf, 4, n)
+    eps, _ = _split_i64(buf, off, n)
+    return ids, eps
+
+
+def decode_publish_resp(buf: bytes) -> int:
+    _need(buf, 4)
+    return _U32.unpack_from(buf)[0]
+
+
+def decode_lookup_resp(buf: bytes) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    _need(buf, 4)
+    (n,) = _U32.unpack_from(buf)
+    ids, off = _split_i64(buf, 4, n)
+    eps, off = _split_i64(buf, off, n)
+    ntk, _ = _split_i32(buf, off, n)
+    return ids, eps, ntk
+
+
+def decode_filter_resp(buf: bytes) -> list[int]:
+    _need(buf, 4)
+    (n,) = _U32.unpack_from(buf)
+    pos, _ = _split_i32(buf, 4, n)
+    return pos.tolist()
+
+
+def decode_evict_resp(buf: bytes) -> list[int]:
+    _need(buf, 4)
+    (n,) = _U32.unpack_from(buf)
+    ids, _ = _split_i64(buf, 4, n)
+    return ids.tolist()
+
+
+def _split_frames(buf: bytes, off: int, k: int) -> list[bytes]:
+    """k length-prefixed frames starting at ``off`` (the BATCH body)."""
+    out = []
+    for _ in range(k):
+        _need(buf, off + 4)
+        (ln,) = _U32.unpack_from(buf, off)
+        off += 4
+        _need(buf, off + ln)
+        out.append(buf[off : off + ln])
+        off += ln
+    return out
+
+
+def decode_batch_resp(buf: bytes) -> list[bytes]:
+    _need(buf, 4)
+    (k,) = _U32.unpack_from(buf)
+    return _split_frames(buf, 4, k)
+
+
+# ---------------------------------------------------------------------------
+# server-side dispatch
+# ---------------------------------------------------------------------------
+_MAX_BATCH_DEPTH = 4  # BATCH-in-BATCH nesting cap (keeps decode O(payload))
+
+
+def reply_bound(buf: bytes, _depth: int = 0) -> int:
+    """Worst-case reply size for a request, WITHOUT executing it.
+
+    Lets a transport with fixed reply capacity reject an op whose answer
+    could not be shipped BEFORE any index mutation runs — otherwise an
+    oversized EVICT would free blocks server-side while the caller only
+    ever sees a transport error. Walks (and therefore validates) the
+    whole frame structure INCLUDING each op's declared body size, so a
+    BATCH with a truncated sub-op anywhere also fails up front instead
+    of after its leading sub-ops mutated the index."""
+    _need(buf, _HDR.size)
+    op, n = _HDR.unpack_from(buf)
+    if op == OP_MATCH:
+        _need(buf, _HDR.size + KEY_BYTES * n)
+        return 4 + 16 * n
+    if op == OP_PUBLISH:
+        _need(buf, _PUB_HDR.size + (KEY_BYTES + 16) * n)
+        return 4
+    if op == OP_LOOKUP:
+        _need(buf, _HDR.size + KEY_BYTES * n)
+        return 4 + 20 * n
+    if op == OP_FILTER:
+        _need(buf, _HDR.size + KEY_BYTES * n)
+        return 4 + 4 * n
+    if op == OP_EVICT:
+        return 4 + 8 * n
+    if op == OP_BATCH:
+        if _depth >= _MAX_BATCH_DEPTH:
+            raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
+        frames = _split_frames(buf, _HDR.size, n)
+        return 4 + sum(4 + reply_bound(f, _depth + 1) for f in frames)
+    raise WireError(f"unknown op {op}")
+
+
+def prevalidate(index, buf: bytes, _depth: int = 0) -> None:
+    """Semantic validation of a request WITHOUT executing it.
+
+    ``reply_bound`` already walks the frame structure; this pass runs the
+    op-level checks (duplicate MATCH keys, out-of-range PUBLISH ids) over
+    every sub-op up front, so a BATCH whose later sub-op is invalid fails
+    BEFORE its leading mutating sub-ops commit — the batch either starts
+    clean or not at all. ``handle_request`` repeats the same checks
+    inline as defense-in-depth for direct callers."""
+    _need(buf, _HDR.size)
+    op, n = _HDR.unpack_from(buf)
+    if op == OP_MATCH:
+        keys, _ = _split_keys(buf, _HDR.size, n)
+        _check_match_keys(keys)
+    elif op == OP_PUBLISH:
+        _need(buf, _PUB_HDR.size)
+        _, n, _ = _PUB_HDR.unpack_from(buf)
+        _, off = _split_keys(buf, _PUB_HDR.size, n)
+        ids, _ = _split_i64(buf, off, n)
+        _check_publish_ids(index, ids)
+    elif op == OP_BATCH:
+        if _depth >= _MAX_BATCH_DEPTH:
+            raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
+        for f in _split_frames(buf, _HDR.size, n):
+            prevalidate(index, f, _depth + 1)
+
+
+def _check_match_keys(keys: list[bytes]) -> None:
+    if len(set(keys)) != len(keys):
+        # a chain-hashed prefix never repeats a key; a duplicate would
+        # also corrupt the index's batch LRU splice, so reject it at
+        # the trust boundary instead of walking it
+        raise WireError("duplicate keys in MATCH chain")
+
+
+def _check_publish_ids(index, ids: np.ndarray) -> None:
+    if len(ids) and (ids.min() < 0 or ids.max() >= index.pool.n_blocks):
+        # untrusted ids would scatter into block2row out of range
+        # (numpy negative indexing would silently corrupt another
+        # block's owner pointer)
+        raise WireError("PUBLISH block id out of pool range")
+
+
+def handle_request(
+    index, buf: bytes, _depth: int = 0, _validated: bool = False
+) -> bytes:
+    """Decode one wire message, run it against ``index``, encode the reply.
+
+    ``_validated`` skips the inline semantic checks when the caller
+    already ran ``prevalidate`` over the whole frame (the server path) —
+    direct callers keep them as defense-in-depth."""
+    _need(buf, _HDR.size)
+    op, n = _HDR.unpack_from(buf)
+    if op == OP_MATCH:
+        keys, _ = _split_keys(buf, _HDR.size, n)
+        if not _validated:
+            _check_match_keys(keys)
+        hits = index.match_prefix_keys(keys)
+        ids = np.fromiter((b for _, b, _ in hits), np.int64, len(hits))
+        eps = np.fromiter((e for _, _, e in hits), np.int64, len(hits))
+        return _U32.pack(len(hits)) + ids.tobytes() + eps.tobytes()
+    if op == OP_PUBLISH:
+        _need(buf, _PUB_HDR.size)
+        _, n, n_tokens = _PUB_HDR.unpack_from(buf)
+        keys, off = _split_keys(buf, _PUB_HDR.size, n)
+        ids, off = _split_i64(buf, off, n)
+        eps, _ = _split_i64(buf, off, n)
+        if not _validated:
+            _check_publish_ids(index, ids)
+        index.publish_many(keys, ids.tolist(), eps.tolist(), n_tokens)
+        return _U32.pack(n)
+    if op == OP_LOOKUP:
+        keys, _ = _split_keys(buf, _HDR.size, n)
+        entries = index.lookup_many(keys)
+        ids = np.fromiter(
+            (-1 if e is None else e.block_id for e in entries), np.int64, n
+        )
+        eps = np.fromiter(
+            (0 if e is None else e.epoch for e in entries), np.int64, n
+        )
+        ntk = np.fromiter(
+            (0 if e is None else e.n_tokens for e in entries), np.int32, n
+        )
+        return _U32.pack(n) + ids.tobytes() + eps.tobytes() + ntk.tobytes()
+    if op == OP_FILTER:
+        keys, _ = _split_keys(buf, _HDR.size, n)
+        missing = index.filter_unpublished(keys)
+        return _U32.pack(len(missing)) + np.asarray(missing, np.int32).tobytes()
+    if op == OP_EVICT:
+        freed = index.evict_lru(n)
+        return _U32.pack(len(freed)) + np.asarray(freed, np.int64).tobytes()
+    if op == OP_BATCH:
+        if _depth >= _MAX_BATCH_DEPTH:
+            raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
+        out = [
+            handle_request(index, f, _depth + 1, _validated)
+            for f in _split_frames(buf, _HDR.size, n)
+        ]
+        return _U32.pack(n) + b"".join(_U32.pack(len(r)) + r for r in out)
+    raise WireError(f"unknown op {op}")
+
+
+def make_index_handler(index, max_reply: int | None = None):
+    """Handler for ``CxlRpcServer``: the metadata service poll thread.
+
+    ``max_reply`` (usually the ring's ``payload_bytes``) makes the handler
+    verify — via ``reply_bound``, before executing anything — that the
+    reply can be shipped, so a request whose answer cannot fit never
+    half-runs a mutating op."""
+
+    def handler(payload: bytes) -> bytes:
+        if max_reply is not None and reply_bound(payload) > max_reply:
+            raise WireError(f"reply would exceed {max_reply} B slot")
+        prevalidate(index, payload)  # batch starts clean or not at all
+        return handle_request(index, payload, _validated=True)
+
+    return handler
+
+
+# ---------------------------------------------------------------------------
+# client-side proxy
+# ---------------------------------------------------------------------------
+class RpcIndexClient:
+    """``GlobalIndex`` API surface over an RPC transport.
+
+    Drop-in for the manager/engine side of the index: hashing
+    (``keys_for``) runs locally, every metadata op is one batched
+    round-trip. Ops whose chain exceeds one ring slot are split
+    transparently (match splits stop early on a short chunk, so the
+    prefix property is preserved)."""
+
+    def __init__(self, rpc, block_tokens: int, max_payload: int | None = None,
+                 hasher: PrefixHasher | None = None):
+        self.rpc = rpc
+        # hashing is pure computation, so clients on one host can share a
+        # hasher (and its request memo) instead of re-deriving the same
+        # chain once per engine
+        self.hasher = hasher if hasher is not None else PrefixHasher(block_tokens)
+        self.block_tokens = block_tokens
+        if max_payload is None:
+            max_payload = getattr(
+                getattr(rpc, "ring", None), "payload_bytes", 1 << 20
+            )
+        # per-op chain capacity of one slot (headers are <= 16 B),
+        # bounding BOTH the request and its response
+        self._max_match = max(1, (max_payload - 16) // KEY_BYTES)
+        self._max_publish = max(1, (max_payload - 16) // (KEY_BYTES + 16))
+        self._max_lookup = max(1, (max_payload - 16) // max(KEY_BYTES, 20))
+        self._max_evict = max(1, (max_payload - 16) // 8)
+
+    # -- hashing is local ------------------------------------------------
+    def keys_for(self, tokens: list[int]) -> tuple[bytes, ...]:
+        return self.hasher.keys_for(tokens)
+
+    # -- one round-trip per op ------------------------------------------
+    def match_prefix(self, tokens: list[int]) -> list[tuple[bytes, int, int]]:
+        return self.match_prefix_keys(self.keys_for(tokens))
+
+    def match_prefix_keys(self, keys) -> list[tuple[bytes, int, int]]:
+        out: list[tuple[bytes, int, int]] = []
+        for off in range(0, len(keys), self._max_match):
+            chunk = keys[off : off + self._max_match]
+            ids, eps = decode_match_resp(self.rpc.call(encode_match(chunk)))
+            out.extend(zip(chunk, ids.tolist(), eps.tolist()))
+            if len(ids) < len(chunk):
+                break  # prefix ended inside this chunk
+        return out
+
+    def publish_many(self, keys, block_ids, epochs, n_tokens: int) -> None:
+        for off in range(0, len(keys), self._max_publish):
+            end = off + self._max_publish
+            self.rpc.call(
+                encode_publish(
+                    keys[off:end], block_ids[off:end], epochs[off:end], n_tokens
+                )
+            )
+
+    def lookup_many(self, keys) -> list[IndexEntry | None]:
+        out: list[IndexEntry | None] = []
+        for off in range(0, len(keys), self._max_lookup):
+            chunk = keys[off : off + self._max_lookup]
+            ids, eps, ntk = decode_lookup_resp(self.rpc.call(encode_lookup(chunk)))
+            out.extend(
+                None if b < 0 else IndexEntry(int(b), int(e), int(t), 0.0)
+                for b, e, t in zip(ids.tolist(), eps.tolist(), ntk.tolist())
+            )
+        return out
+
+    def lookup(self, key: bytes) -> IndexEntry | None:
+        return self.lookup_many([key])[0]
+
+    def filter_unpublished(self, keys) -> list[int]:
+        out: list[int] = []
+        for off in range(0, len(keys), self._max_lookup):
+            chunk = keys[off : off + self._max_lookup]
+            out.extend(
+                off + p for p in decode_filter_resp(self.rpc.call(encode_filter(chunk)))
+            )
+        return out
+
+    def evict_lru(self, n: int) -> list[int]:
+        # chunked: the RESPONSE carries 8 B per freed block, so an
+        # unbounded n could overflow the slot even though the request
+        # always fits; a short chunk means the index ran out of victims
+        freed: list[int] = []
+        while n > 0:
+            k = min(n, self._max_evict)
+            got = decode_evict_resp(self.rpc.call(encode_evict(k)))
+            freed.extend(got)
+            if len(got) < k:
+                break
+            n -= k
+        return freed
+
+    def call_batch(self, requests: list[bytes]) -> list[bytes]:
+        """Ship k already-encoded ops in ONE ring round-trip."""
+        return decode_batch_resp(self.rpc.call(encode_batch(requests)))

@@ -214,17 +214,10 @@ class KVCacheManager:
             self.pool.tick(now)
         if keys is None:
             keys = self.index.keys_for(tokens)
-        # only blocks not already in the pool need writing: one batched
-        # index lookup + one vectorized epoch check (no per-key round-trips)
-        entries = self.index.lookup_many(keys)
-        known = [(i, e) for i, e in enumerate(entries) if e is not None]
-        valid = set()
-        if known:
-            ok = self.pool.validate_epochs(
-                [e.block_id for _, e in known], [e.epoch for _, e in known]
-            )
-            valid = {i for (i, _), good in zip(known, ok) if good}
-        new_keys = [(i, k) for i, k in enumerate(keys) if i not in valid]
+        # only blocks not already in the pool need writing: ONE metadata
+        # round-trip (lookup + vectorized epoch check fused server-side)
+        missing = self.index.filter_unpublished(keys)
+        new_keys = [(i, keys[i]) for i in missing]
         if not new_keys:
             return 0
 

@@ -102,11 +102,33 @@ class EngineInstance:
     # ------------------------------------------------------------------
     @property
     def waiting(self) -> list[Request]:
-        """Queued requests in admission order (view; the queue is a heap)."""
+        """Queued requests in admission order — an O(n log n) SORTED view
+        for tests and the orphan re-dispatch path. Hot callers that only
+        need a count or the next arrival must use ``n_queued`` /
+        ``next_arrival`` / ``has_backlog`` instead."""
         return [r for _, _, r in sorted(self._waiting, key=lambda t: t[:2])]
 
+    @property
+    def n_queued(self) -> int:
+        """Backlog size, O(1) (no sort — see ``waiting``)."""
+        return len(self._waiting)
+
+    def next_arrival(self) -> float | None:
+        """Arrival time of the next admissible request (heap peek), O(1)."""
+        return self._waiting[0][0] if self._waiting else None
+
+    def has_backlog(self) -> bool:
+        """True while any submitted work is unfinished, O(1)."""
+        return bool(self._waiting or self.running)
+
     def submit(self, req: Request, now: float) -> None:
-        self.clock = max(self.clock, now)
+        """Enqueue a request. ``now`` is accepted for call-site
+        compatibility but ignored: submission time no longer moves the
+        engine clock. The old ``clock = max(clock, now)`` barrier meant
+        pre-dispatching an open-loop stream fast-forwarded the clock to
+        the last arrival, inflating TTFT for every earlier request;
+        ``advance`` jumps an idle engine to the next arrival instead,
+        which is the only thing the barrier achieved in the closed loop."""
         req.engine_id = self.engine_id
         heapq.heappush(self._waiting, (req.arrival, next(self._seq), req))
 
@@ -259,7 +281,13 @@ class EngineInstance:
         while self._waiting or self.running:
             clock_before = self.clock
             n_before = len(self._waiting) + len(self.running)
-            self.advance(self.clock + 3600.0)
+            # the horizon must reach past the next queued arrival: with no
+            # submit clock barrier an idle engine can hold a head request
+            # arriving further out than clock+3600, and a horizon short of
+            # it would break without progress and misread as deadlock
+            na = self.next_arrival()
+            horizon = max(self.clock, na if na is not None else self.clock)
+            self.advance(horizon + 3600.0)
             if self.clock == clock_before and (
                 len(self._waiting) + len(self.running) == n_before
             ):

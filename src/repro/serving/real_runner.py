@@ -167,7 +167,7 @@ class RealEngine:
             blocks.astype(self.pool.data.dtype)
         )
         keys = self.index.keys_for(prompt)
-        # commit AFTER the payload write (§5.1): one batched epoch bump
+        # commit AFTER the payload write (§5.1): one batched epoch bump,
+        # one batched publish (single lock, one scatter per column)
         epochs = self.pool.write_blocks(block_ids)
-        for key, bid, epoch in zip(keys, block_ids, epochs):
-            self.index.publish(key, bid, epoch, bt)
+        self.index.publish_many(list(keys[: len(block_ids)]), block_ids, epochs, bt)

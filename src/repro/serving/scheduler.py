@@ -40,6 +40,14 @@ class ClusterConfig:
     hbm_slots_per_engine: int = 6750
     block_tokens: int = 16
     straggler_cutover: float | None = None  # fetch-vs-recompute ratio
+    # index-behind-RPC mode (paper deployment shape): engines reach the
+    # centralized GlobalIndex over the CXL-RPC shared-memory ring with the
+    # repro.core.wire binary codec — one batched round-trip per metadata
+    # op — instead of calling it in-process. Off by default: the in-process
+    # path is the bit-identical exp05 reference.
+    index_rpc: bool = False
+    index_rpc_slots: int = 64
+    index_rpc_payload: int = 1 << 16
     runner: SimRunnerConfig = field(default_factory=SimRunnerConfig)
     # tiered pool memory (Exp #13): disabled -> flat BelugaPool, the exact
     # PR-1 code path; enabled -> pool_blocks become the FAST tier and a
@@ -85,11 +93,40 @@ class Cluster:
             self.index = GlobalIndex(self.pool)
             self.queues = None
             self.migrator = None
+        self._rpc_server = None
+        self._rpc_client = None
+        if cfg.index_rpc:
+            from repro.core.rpc import CxlRpcClient, CxlRpcServer, ShmRing
+            from repro.core.wire import make_index_handler
+
+            ring = ShmRing(
+                n_slots=cfg.index_rpc_slots, payload_bytes=cfg.index_rpc_payload
+            )
+            self._rpc_server = CxlRpcServer(
+                ring, make_index_handler(self.index, max_reply=ring.payload_bytes)
+            ).start()
+            self._rpc_client = CxlRpcClient(ring)
         self.engines: list[EngineInstance] = []
         self._rr = 0
         for i in range(cfg.n_engines):
             self.engines.append(self._make_engine(i))
         self.requests: list[Request] = []
+
+    def close(self) -> None:
+        """Stop the metadata-service thread (index_rpc mode; no-op else).
+
+        The poll thread busy-spins (daemon, dies with the process), so an
+        index_rpc cluster left open skews any in-process measurement that
+        follows — use ``with Cluster(...) as c:`` to scope it."""
+        if self._rpc_server is not None:
+            self._rpc_server.stop()
+            self._rpc_server = None
+
+    def __enter__(self) -> "Cluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def _make_engine(self, engine_id: int) -> EngineInstance:
         cfg = self.cfg
@@ -99,8 +136,23 @@ class Cluster:
             super_block_tokens=cfg.super_block_tokens,
         )
         hbm = HbmPagedCache(cfg.hbm_slots_per_engine, cfg.block_tokens)
+        if self._rpc_client is not None:
+            from repro.core.wire import RpcIndexClient
+
+            # engine-side proxy: hashing stays local, metadata ops cross
+            # the ring as batched binary messages (the migrator and the
+            # cluster's stats keep the co-located index object). One
+            # hasher is shared by all proxies so a request is chain-hashed
+            # once per cluster, not once per engine's routing probe.
+            engine_index = RpcIndexClient(
+                self._rpc_client,
+                block_tokens=self.pool.layout.block_tokens,
+                hasher=self.index.hasher,
+            )
+        else:
+            engine_index = self.index
         mgr = KVCacheManager(
-            self.pool, self.index, hbm, transfer,
+            self.pool, engine_index, hbm, transfer,
             recompute_cutover=cfg.straggler_cutover,
             prefill_tok_per_s=cfg.runner.prefill_tok_per_s,
             queues=self.queues,

@@ -144,23 +144,11 @@ class MigrationEngine:
         """Copy payloads to the other tier, re-point the index, free the
         sources. Returns the number of blocks actually migrated."""
         pool, index = self.pool, self.index
-        keys = index.keys_of_blocks(src_ids)
-        live = [(b, k) for b, k in zip(src_ids, keys) if k is not None]
-        if not live:
+        # one-lock row snapshot: (key, block, epoch) can't disagree the way
+        # the old keys_of_blocks -> lookup_many two-call sequence could
+        keys, src_ids, old_eps = index.owners_of(src_ids)
+        if not keys:
             return 0
-        src_ids = [b for b, _ in live]
-        keys = [k for _, k in live]
-        entries = index.lookup_many(keys)
-        trip = [
-            (b, k, e.epoch)
-            for (b, k), e in zip(live, entries)
-            if e is not None and e.block_id == b
-        ]
-        if not trip:
-            return 0
-        src_ids = [b for b, _, _ in trip]
-        keys = [k for _, k, _ in trip]
-        old_eps = [e for _, _, e in trip]
         dst_pool = pool.fast if to_fast else pool.spill
         dst_off = 0 if to_fast else pool.offset
         src_off = pool.offset if to_fast else 0

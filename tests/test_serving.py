@@ -213,6 +213,42 @@ def test_hbm_has_key_is_public_locality_probe():
     assert not h.has_key(b"k")
 
 
+def test_submit_is_not_a_clock_barrier():
+    """Pre-dispatching an open-loop stream with future arrivals must not
+    fast-forward the engine clock (the old ``clock = max(clock, now)``
+    inflated TTFT for every earlier request); the clock only advances to
+    an arrival when the engine actually idles up to it."""
+    c = _cluster(n_engines=1)
+    eng = c.engines[0]
+    early = _reqs(1, in_len=256, out_len=4)[0]
+    late = _reqs(1, in_len=256, out_len=4, tag="late", arrival=100.0)[0]
+    c.dispatch(early)
+    c.dispatch(late)  # pre-dispatched, arrives at t=100
+    assert eng.clock == 0.0  # submit left the clock alone
+    eng.advance(1.0)
+    assert early.t_done is not None and early.ttft < 1.0
+    assert eng.clock < 100.0
+    assert eng.n_queued == 1 and eng.next_arrival() == 100.0
+    c.run()
+    assert late.state == "done" and late.t_first_token >= 100.0
+
+
+def test_drain_survives_arrival_gaps_beyond_advance_horizon():
+    """Without the submit clock barrier, a pre-dispatched request arriving
+    further out than one drain window (3600 s) must still be served —
+    drain's horizon has to reach the next arrival, not misread the idle
+    gap as a capacity deadlock."""
+    c = _cluster(n_engines=1)
+    a = _reqs(1, in_len=256, out_len=4)[0]
+    b = _reqs(1, in_len=256, out_len=4, tag="b", arrival=5000.0)[0]
+    c.dispatch(a)
+    c.dispatch(b)
+    stats = c.run()
+    assert stats["n_done"] == 2
+    assert a.state == "done" and b.state == "done"
+    assert b.t_first_token >= 5000.0
+
+
 def test_elastic_add_engine_no_rebalance_needed():
     c = _cluster(transfer_mode="beluga")
     for r in _reqs(12):

@@ -1,0 +1,506 @@
+"""Metadata wire protocol + RPC-ring hardening (PR 3).
+
+Covers the ISSUE-3 satellite surface:
+  * wire codec round-trip + truncation/garbage fuzz (never a crash,
+    always ``WireError`` for malformed frames);
+  * ``RpcIndexClient`` equivalence against the in-process ``GlobalIndex``,
+    including chunked ops through a tiny ring slot;
+  * timeout slot quarantine: a timed-out slot is NOT recycled while the
+    server still owes it a response, so a late response can never leak
+    into an unrelated caller;
+  * concurrent clients under slot exhaustion;
+  * ``keys_for`` aliasing: the shared cached chain is immutable and
+    mutating the caller's token list cannot poison the memo;
+  * the flat-array index internals (LRU order, growth, batch splice).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wire
+from repro.core.index import GlobalIndex, PrefixHasher
+from repro.core.pool import BelugaPool, PoolLayout
+from repro.core.rpc import (
+    IDLE,
+    REQ_READY,
+    RESP_ERROR,
+    RESP_READY,
+    CxlRpcClient,
+    CxlRpcServer,
+    RpcError,
+    ShmRing,
+)
+
+LAYOUT = PoolLayout(block_tokens=16, n_layers_kv=4, n_kv_heads=2, head_dim=8)
+
+
+def _pool(n_blocks=1024, **kw):
+    return BelugaPool(LAYOUT, n_blocks=n_blocks, n_shards=8, backing="meta", **kw)
+
+
+def _published(n_chains=3, chain_len=8):
+    pool = _pool()
+    idx = GlobalIndex(pool)
+    chains = []
+    for d in range(n_chains):
+        tokens = [d * 10_000 + i for i in range(chain_len * 16)]
+        keys = idx.keys_for(tokens)
+        blocks = pool.allocate(len(keys))
+        idx.publish_many(keys, blocks, pool.write_blocks(blocks), 16)
+        chains.append((tokens, keys, blocks))
+    return pool, idx, chains
+
+
+# ---------------------------------------------------------------------------
+# codec round-trips + fuzz
+# ---------------------------------------------------------------------------
+
+
+def test_wire_roundtrip_all_ops():
+    pool, idx, chains = _published()
+    tokens, keys, blocks = chains[0]
+    # match
+    ids, eps = wire.decode_match_resp(
+        wire.handle_request(idx, wire.encode_match(keys))
+    )
+    assert ids.tolist() == blocks
+    # lookup with a hole
+    probe = list(keys[:3]) + [b"\x99" * 16]
+    li, le, lt = wire.decode_lookup_resp(
+        wire.handle_request(idx, wire.encode_lookup(probe))
+    )
+    assert li.tolist()[:3] == blocks[:3] and li[3] == -1
+    assert lt.tolist()[:3] == [16, 16, 16]
+    # filter: everything valid -> empty; poke a hole -> position comes back
+    assert wire.decode_filter_resp(
+        wire.handle_request(idx, wire.encode_filter(keys))
+    ) == []
+    pool.release([blocks[2]])
+    assert wire.decode_filter_resp(
+        wire.handle_request(idx, wire.encode_filter(keys))
+    ) == [2]
+    # publish the hole back
+    [nb] = pool.allocate(1)
+    [ne] = pool.write_blocks([nb])
+    n = wire.decode_publish_resp(
+        wire.handle_request(idx, wire.encode_publish([keys[2]], [nb], [ne], 16))
+    )
+    assert n == 1
+    assert idx.lookup(keys[2]).block_id == nb
+    # evict
+    freed = wire.decode_evict_resp(
+        wire.handle_request(idx, wire.encode_evict(2))
+    )
+    assert len(freed) == 2
+    # batch: two ops in one envelope
+    resps = wire.decode_batch_resp(
+        wire.handle_request(
+            idx, wire.encode_batch([wire.encode_match(keys), wire.encode_evict(1)])
+        )
+    )
+    assert len(resps) == 2
+
+
+def test_wire_rejects_malformed():
+    _, idx, _ = _published(1, 2)
+    with pytest.raises(wire.WireError):
+        wire.handle_request(idx, b"")
+    with pytest.raises(wire.WireError):
+        wire.handle_request(idx, bytes([99, 0, 0, 0, 0]))  # unknown op
+    good = wire.encode_match([b"k" * 16, b"j" * 16])
+    for cut in (1, 4, len(good) - 1):
+        with pytest.raises(wire.WireError):
+            wire.handle_request(idx, good[:cut])
+    with pytest.raises(wire.WireError):
+        wire.encode_match([b"short"])  # not a 16-byte digest
+
+
+def test_publish_many_duplicate_key_resolves_to_last_occurrence():
+    """A batch carrying the same key twice (only craftable via a wire
+    OP_PUBLISH) must not leave a stale block->row reverse pointer at the
+    first occurrence's block (regression vs the per-key seed loop)."""
+    pool = _pool()
+    idx = GlobalIndex(pool)
+    [b1, b2] = pool.allocate(2)
+    [e1, e2] = pool.write_blocks([b1, b2])
+    k = b"\x42" * 16
+    wire.handle_request(idx, wire.encode_publish([k, k], [b1, b2], [e1, e2], 16))
+    assert idx.lookup(k).block_id == b2  # last occurrence wins
+    assert idx.keys_of_blocks([b1, b2]) == [None, k]
+    # evicting the orphaned first block must be a no-op, not destroy k
+    assert idx.evict_blocks([b1]) == []
+    assert idx.lookup(k) is not None
+    assert idx.evict_blocks([b2]) == [b2]
+    assert idx.lookup(k) is None
+
+
+def test_wire_publish_rejects_out_of_range_block_ids():
+    """Untrusted block ids must not scatter into block2row (negative ids
+    would silently alias another block's owner pointer)."""
+    pool, idx, chains = _published(1, 2)
+    k = b"\x07" * 16
+    for bad in (-1, pool.n_blocks, pool.n_blocks + 5):
+        with pytest.raises(wire.WireError):
+            wire.handle_request(idx, wire.encode_publish([k], [bad], [1], 16))
+    assert idx.lookup(k) is None  # nothing was inserted
+    # pre-existing entries untouched
+    assert idx.keys_of_blocks(chains[0][2]) == list(chains[0][1])
+
+
+def test_wire_reply_bound_rejects_before_mutation():
+    """An op whose REPLY cannot fit the slot is refused up front — the
+    index must not mutate server-side while the client only sees an
+    error (e.g. an oversized EVICT silently freeing blocks)."""
+    pool, idx, chains = _published(n_chains=1, chain_len=50)
+    ring = ShmRing(n_slots=4, payload_bytes=128)
+    server = CxlRpcServer(
+        ring, wire.make_index_handler(idx, max_reply=ring.payload_bytes)
+    ).start()
+    try:
+        client = CxlRpcClient(ring)
+        entries_before = idx.stats()["entries"]
+        with pytest.raises(RpcError):
+            client.call(wire.encode_evict(1000))  # reply needs 8 KB
+        assert idx.stats()["entries"] == entries_before  # NOT half-run
+        # same guard for an EVICT smuggled through OP_BATCH (which the
+        # proxy's per-op chunking does not cover)
+        with pytest.raises(RpcError):
+            client.call(wire.encode_batch([wire.encode_evict(1000)]))
+        assert idx.stats()["entries"] == entries_before
+        # a BATCH whose LATER sub-op is body-truncated must fail before
+        # its leading mutating sub-op runs
+        import struct as _struct
+
+        bad_tail = _struct.pack("<BI", wire.OP_MATCH, 100)  # claims 100 keys
+        with pytest.raises(RpcError):
+            client.call(wire.encode_batch([wire.encode_evict(3), bad_tail]))
+        assert idx.stats()["entries"] == entries_before
+        # ... and the same for a SEMANTICALLY invalid later sub-op
+        # (out-of-range publish): the batch starts clean or not at all
+        bad_pub = wire.encode_publish([b"\x01" * 16], [10**6], [1], 16)
+        with pytest.raises(RpcError):
+            client.call(wire.encode_batch([wire.encode_evict(3), bad_pub]))
+        assert idx.stats()["entries"] == entries_before
+        # a fitting evict still works
+        freed = wire.decode_evict_resp(client.call(wire.encode_evict(4)))
+        assert len(freed) == 4
+    finally:
+        server.stop()
+
+
+def test_wire_match_rejects_duplicate_keys():
+    """Duplicate keys in one MATCH chain are invalid (chain hashes never
+    repeat) and would corrupt the batch LRU splice — rejected up front."""
+    _, idx, chains = _published(1, 4)
+    k = chains[0][1][0]
+    with pytest.raises(wire.WireError):
+        wire.handle_request(idx, wire.encode_match([k, k]))
+    # the LRU list is untouched: normal traffic still works
+    assert len(idx.match_prefix(chains[0][0])) == 4
+    assert idx.evict_lru(4) == chains[0][2]
+
+
+def test_wire_batch_nesting_is_bounded():
+    """A BATCH-of-BATCH bomb must fail as WireError, not RecursionError."""
+    _, idx, chains = _published(1, 2)
+    msg = wire.encode_match(chains[0][1])
+    for _ in range(2000):
+        msg = wire.encode_batch([msg])
+    with pytest.raises(wire.WireError):
+        wire.handle_request(idx, msg)
+    # shallow nesting still works
+    shallow = wire.encode_batch([wire.encode_batch([wire.encode_evict(0)])])
+    wire.handle_request(idx, shallow)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.binary(min_size=0, max_size=200))
+def test_wire_fuzz_never_crashes(blob):
+    """Arbitrary bytes either decode to a valid op or raise WireError."""
+    pool = _pool(64)
+    idx = GlobalIndex(pool)
+    try:
+        wire.handle_request(idx, blob)
+    except wire.WireError:
+        pass
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 40),
+    n_tokens=st.integers(1, 4096),
+    seed=st.integers(0, 2**31),
+)
+def test_wire_publish_match_property(n, n_tokens, seed):
+    """encode->handle->decode publish+match round-trips arbitrary rows."""
+    rng = np.random.default_rng(seed)
+    pool = _pool()
+    idx = GlobalIndex(pool)
+    keys = [rng.bytes(16) for _ in range(n)]
+    blocks = pool.allocate(n)
+    epochs = pool.write_blocks(blocks)
+    wire.handle_request(idx, wire.encode_publish(keys, blocks, epochs, n_tokens))
+    ids, eps = wire.decode_match_resp(
+        wire.handle_request(idx, wire.encode_match(keys))
+    )
+    assert ids.tolist() == blocks and eps.tolist() == epochs
+
+
+# ---------------------------------------------------------------------------
+# RpcIndexClient over a live ring
+# ---------------------------------------------------------------------------
+
+
+def test_rpc_index_client_matches_in_process_index():
+    pool, idx, chains = _published(n_chains=2, chain_len=20)
+    ring = ShmRing(n_slots=8, payload_bytes=4096)
+    server = CxlRpcServer(ring, wire.make_index_handler(idx)).start()
+    try:
+        proxy = wire.RpcIndexClient(CxlRpcClient(ring), block_tokens=16)
+        for tokens, keys, blocks in chains:
+            assert proxy.match_prefix(tokens) == idx.match_prefix(tokens)
+            assert proxy.filter_unpublished(keys) == []
+            got = proxy.lookup_many(keys)
+            assert [e.block_id for e in got] == blocks
+        # divergent suffix matches the shared prefix only
+        tokens = chains[0][0]
+        assert len(proxy.match_prefix(tokens[:64] + [5] * 32)) == 4
+    finally:
+        server.stop()
+
+
+def test_rpc_index_client_chunks_long_chains():
+    """A chain longer than one ring slot splits without changing results."""
+    pool, idx, chains = _published(n_chains=1, chain_len=40)
+    tokens, keys, blocks = chains[0]
+    ring = ShmRing(n_slots=4, payload_bytes=256)  # ~15 keys per slot
+    server = CxlRpcServer(ring, wire.make_index_handler(idx)).start()
+    try:
+        proxy = wire.RpcIndexClient(CxlRpcClient(ring), block_tokens=16)
+        assert proxy._max_match < len(keys)
+        assert [b for _, b, _ in proxy.match_prefix(tokens)] == blocks
+        pool.release([blocks[1]])  # early stale: later chunks must not run
+        assert len(proxy.match_prefix(tokens)) == 1
+        assert proxy.filter_unpublished(keys) == [1]
+    finally:
+        server.stop()
+
+
+def test_rpc_index_client_chunks_evict_lru():
+    """The EVICT response carries 8 B per freed id, so big evictions must
+    split client-side instead of overflowing the reply slot."""
+    pool, idx, chains = _published(n_chains=1, chain_len=60)
+    ring = ShmRing(n_slots=4, payload_bytes=128)  # <= 14 ids per response
+    server = CxlRpcServer(ring, wire.make_index_handler(idx)).start()
+    try:
+        proxy = wire.RpcIndexClient(CxlRpcClient(ring), block_tokens=16)
+        assert proxy._max_evict < 60
+        freed = proxy.evict_lru(60)
+        assert sorted(freed) == sorted(chains[0][2])
+        assert idx.stats()["entries"] == 0
+    finally:
+        server.stop()
+
+
+def test_server_survives_handler_failure():
+    """A malformed frame (or any handler exception) comes back as an
+    in-band RpcError; the metadata service thread keeps serving."""
+    pool, idx, chains = _published(1, 4)
+    ring = ShmRing(n_slots=4, payload_bytes=1024)
+    server = CxlRpcServer(ring, wire.make_index_handler(idx)).start()
+    try:
+        client = CxlRpcClient(ring)
+        proxy = wire.RpcIndexClient(client, block_tokens=16)
+        with pytest.raises(RpcError):
+            client.call(wire.encode_match(chains[0][1])[:10])  # truncated
+        assert server._thread.is_alive()
+        # well-formed traffic flows normally afterwards
+        assert len(proxy.match_prefix(chains[0][0])) == 4
+        assert client.free_slots() == ring.n_slots
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# ring hardening: timeout quarantine + slot exhaustion
+# ---------------------------------------------------------------------------
+
+
+def test_timeout_quarantines_slot_until_server_responds():
+    ring = ShmRing(n_slots=1, payload_bytes=64)
+    release = threading.Event()
+
+    def slow_handler(payload: bytes) -> bytes:
+        release.wait(5)
+        return b"LATE:" + payload
+
+    server = CxlRpcServer(ring, slow_handler).start()
+    try:
+        client = CxlRpcClient(ring)
+        with pytest.raises(TimeoutError):
+            client.call(b"victim", timeout=0.05)
+        assert client.stats.timeouts == 1
+        # the slot is NOT back on the free list: the only slot is
+        # quarantined, so the next call reports exhaustion instead of
+        # reusing a slot the server may still write into
+        assert client.free_slots() == 0
+        with pytest.raises(RuntimeError):
+            client.call(b"second")
+        # server finally answers the stale request
+        release.set()
+        deadline = time.time() + 5
+        while ring.status[0] != RESP_READY and time.time() < deadline:
+            time.sleep(0.01)
+        # next acquire reclaims the slot and the late response is
+        # dropped, never handed to the new caller
+        out = client.call(b"fresh", timeout=5)
+        assert out == b"LATE:fresh"
+        assert client.free_slots() == 1
+    finally:
+        release.set()
+        server.stop()
+
+
+def test_concurrent_clients_slot_exhaustion_and_recovery():
+    ring = ShmRing(n_slots=2, payload_bytes=64)
+    gate = threading.Event()
+
+    def handler(payload: bytes) -> bytes:
+        if payload.startswith(b"block"):
+            gate.wait(5)
+        return bytes((x + 1) % 256 for x in payload)
+
+    server = CxlRpcServer(ring, handler).start()
+    try:
+        client = CxlRpcClient(ring)
+        errors, oks = [], []
+
+        def blocked():
+            try:
+                oks.append(client.call(b"block", timeout=5))
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        ts = [threading.Thread(target=blocked) for _ in range(2)]
+        for t in ts:
+            t.start()
+        deadline = time.time() + 5
+        while client.free_slots() > 0 and time.time() < deadline:
+            time.sleep(0.01)
+        # both slots in flight: an extra caller is rejected, not corrupted
+        with pytest.raises(RuntimeError):
+            client.call(b"extra")
+        gate.set()
+        for t in ts:
+            t.join()
+        assert not errors and len(oks) == 2
+        # ring fully recovered: responses flow again with correct payloads
+        for i in range(8):
+            payload = bytes([i]) * 8
+            assert client.call(payload) == bytes((x + 1) % 256 for x in payload)
+        assert client.free_slots() == 2
+    finally:
+        gate.set()
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# keys_for aliasing (shared cached chain) — regression
+# ---------------------------------------------------------------------------
+
+
+def test_keys_for_shared_cache_is_immutable_and_mutation_safe():
+    h = PrefixHasher(16)
+    tokens = list(range(160))
+    first = h.keys_for(tokens)
+    assert isinstance(first, tuple)  # structurally immutable: no aliasing bug
+    assert h.keys_for(list(tokens)) is first  # shared cached chain
+    with pytest.raises(TypeError):
+        first[0] = b"boom"  # type: ignore[index]
+    # mutating the CALLER's list must not poison the memo for other users
+    tokens[32] = -7
+    mutated = h.keys_for(tokens)
+    assert mutated is not first
+    assert mutated[:2] == first[:2] and mutated[2] != first[2]
+    assert h.keys_for(list(range(160))) == first
+
+
+def test_cluster_index_rpc_mode_end_to_end():
+    from repro.serving.request import Request
+    from repro.serving.scheduler import Cluster, ClusterConfig
+
+    c = Cluster(
+        ClusterConfig(
+            n_engines=2, pool_blocks=2048, hbm_slots_per_engine=256,
+            index_rpc=True, index_rpc_slots=8,
+        ),
+        LAYOUT,
+    )
+    try:
+        base = list(range(512))
+        for i in range(8):
+            c.dispatch(Request(f"r{i}", base, 8, 0.0))
+        s1 = c.run()
+        assert s1["n_done"] == 8
+        assert s1["index"]["hits"] > 0  # ops really reached the index
+        assert c._rpc_client.stats.requests > 0  # ... over the ring
+        t0 = max(e.clock for e in c.engines)
+        tail = [Request(f"h{i}", base, 8, t0) for i in range(4)]
+        for r in tail:
+            c.dispatch(r)
+        c.run()
+        assert all(r.hit_tokens > 0 for r in tail)  # pool hits via RPC
+    finally:
+        c.close()
+
+
+# ---------------------------------------------------------------------------
+# flat-array index internals
+# ---------------------------------------------------------------------------
+
+
+def test_index_lru_order_tracks_matches():
+    pool, idx, chains = _published(n_chains=3, chain_len=4)
+    # touch chains 2 then 0; chain 1 becomes LRU
+    idx.match_prefix(chains[2][0])
+    idx.match_prefix(chains[0][0])
+    freed = idx.evict_lru(4)
+    assert sorted(freed) == sorted(chains[1][2])
+    assert len(idx.match_prefix(chains[1][0])) == 0
+    assert len(idx.match_prefix(chains[0][0])) == 4
+    assert len(idx.match_prefix(chains[2][0])) == 4
+
+
+def test_index_grows_past_initial_capacity():
+    pool = BelugaPool(LAYOUT, n_blocks=8192, n_shards=8, backing="meta")
+    idx = GlobalIndex(pool)
+    tokens = list(range(5000 * 16))  # 5000 rows > initial 1024 capacity
+    keys = idx.keys_for(tokens)
+    blocks = pool.allocate(len(keys))
+    idx.publish_many(keys, blocks, pool.write_blocks(blocks), 16)
+    assert idx.stats()["entries"] == 5000
+    hits = idx.match_prefix(tokens)
+    assert [b for _, b, _ in hits] == blocks
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=30), st.integers(1, 6))
+def test_index_lru_eviction_matches_ordered_dict_model(touch_order, n_evict):
+    """Eviction order of the array-intrusive LRU == an OrderedDict model
+    under an arbitrary interleaving of matches (the batch-splice path)."""
+    from collections import OrderedDict
+
+    pool, idx, chains = _published(n_chains=6, chain_len=3)
+    model: OrderedDict[int, None] = OrderedDict((d, None) for d in range(6))
+    for d in touch_order:
+        assert len(idx.match_prefix(chains[d][0])) == 3
+        model.move_to_end(d)
+    freed = idx.evict_lru(3 * n_evict)
+    want: list[int] = []
+    for d in list(model)[:n_evict]:
+        want.extend(chains[d][2])
+    assert freed == want
