@@ -4,9 +4,10 @@
     PYTHONPATH=src python -m benchmarks.run --smoke   # CI: exp11-13 tiny
 
 ``--smoke`` runs the three artifact-emitting harnesses (exp11 CXL-RPC
-metadata plane, exp12 control plane, exp13 tiering) at CI-sized inputs so
-the perf benchmarks can't silently rot; their ``BENCH_*.fast.json``
-outputs are uploaded by the CI job.
+metadata plane — including the shard-scaling sweep, so ``BENCH_rpc.json``
+carries per-shard-count rows in CI — exp12 control plane, exp13 tiering)
+at CI-sized inputs so the perf benchmarks can't silently rot; their
+``BENCH_*.fast.json`` outputs are uploaded by the CI job.
 
 Prints ``name,us_per_call,derived`` CSV per row, then a roofline summary
 derived from the dry-run artifacts (if present in results/dryrun).

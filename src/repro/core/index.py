@@ -570,3 +570,282 @@ class GlobalIndex:
                 "misses": self.misses,
                 "hit_rate": self.hits / max(1, self.hits + self.misses),
             }
+
+
+# ---------------------------------------------------------------------------
+# Sharded metadata plane (paper §6 deployment shape: the metadata service
+# scales horizontally; one service thread per shard behind its own ring)
+# ---------------------------------------------------------------------------
+def shard_of_key(key: bytes, n_shards: int) -> int:
+    """Routing function of the sharded metadata plane: keys are uniform
+    blake2b digests, so a 4-byte prefix mod S balances the shards. Shared
+    by the in-process ``ShardedIndex`` and the RPC-side
+    ``repro.core.wire.ShardedRpcIndexClient`` — both MUST agree."""
+    return int.from_bytes(key[:4], "little") % n_shards
+
+
+def evict_blocks_sharded(shards, block_ids) -> list[int]:
+    """Fan ``evict_blocks`` over shard backends sequentially WITH
+    filtering: once a shard frees a block, later shards are never offered
+    it (a stale cross-shard alias row must not double-release the freed
+    id). Shared by the in-process ``ShardedIndex`` and the RPC
+    ``ShardedRpcIndexClient`` so the two planes stay in lockstep."""
+    remaining = list(block_ids)
+    freed: list[int] = []
+    for sh in shards:
+        if not remaining:
+            break
+        got = sh.evict_blocks(remaining)
+        if got:
+            freed.extend(got)
+            gs = set(got)
+            remaining = [b for b in remaining if b not in gs]
+    return freed
+
+
+def partition_keys(
+    keys, n_shards: int
+) -> tuple[list[list[bytes]], list[list[int]]]:
+    """Split a key chain by owning shard, preserving chain order inside
+    each shard. Returns (per-shard key lists, per-shard global positions).
+
+    The prefix property survives the split: the global longest all-hit
+    prefix ends at the first missing position m, and every shard's own
+    first miss sits at a position >= m, so each shard's prefix-stopping
+    ``match_prefix_keys`` over its sub-chain still reports a hit for
+    every position < m it owns — merging shard hits back by position and
+    cutting at the first hole reconstructs the exact global prefix."""
+    key_lists: list[list[bytes]] = [[] for _ in range(n_shards)]
+    pos_lists: list[list[int]] = [[] for _ in range(n_shards)]
+    for i, k in enumerate(keys):
+        s = shard_of_key(k, n_shards)
+        key_lists[s].append(k)
+        pos_lists[s].append(i)
+    return key_lists, pos_lists
+
+
+class ShardedIndex:
+    """S independent ``GlobalIndex`` partitions behind one front.
+
+    Keys route by digest hash (``shard_of_key``); each shard keeps its own
+    lock, LRU list and block ownership (a pool block is owned by exactly
+    one shard: the shard of the key that published it), so the S service
+    threads of the RPC deployment never contend on one lock. The front
+    exposes the full ``GlobalIndex`` API surface:
+
+      * chain ops (``match_prefix_keys`` / ``publish_many`` /
+        ``lookup_many`` / ``filter_unpublished`` / ``remap_many``) fan out
+        the positions each shard owns and merge replies back by position —
+        ``match_prefix_keys`` cuts the merged hits at the first hole,
+        which is exactly the global longest all-hit prefix (see
+        ``partition_keys``);
+      * block-keyed ops (``owners_of`` / ``evict_blocks`` /
+        ``keys_of_blocks``) ask every shard — only the owner answers;
+      * ``evict_lru`` approximates global LRU by round-robin proportional
+        quotas over the per-shard LRU lists (exact for S=1).
+
+    S=1 delegates every op verbatim to the single shard: bit-identical to
+    an unsharded ``GlobalIndex``. For S>1 two semantics shift slightly,
+    both benign: a shard LRU-touches (and epoch-drops) its hits past the
+    global prefix cut, and the aggregated hit/miss counters count those
+    shard-local hits — they only diverge from the unsharded numbers when
+    a chain has a hole (stale entry mid-chain), never on clean hit/miss
+    traffic.
+    """
+
+    is_sharded = True
+
+    def __init__(self, pool: BelugaPool, n_shards: int):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.pool = pool
+        self.n_shards = n_shards
+        self.block_tokens = pool.layout.block_tokens
+        self.shards = [GlobalIndex(pool) for _ in range(n_shards)]
+        # hash once at the front; shards share the memo (hashing is pure)
+        self.hasher = self.shards[0].hasher
+        for sh in self.shards[1:]:
+            sh.hasher = self.hasher
+        self._evict_rr = 0
+
+    # the ghost-LRU admission filter subscribes to evictions on EVERY
+    # shard (ring-served evictions run against the shard objects directly)
+    @property
+    def on_evict(self):
+        return self.shards[0].on_evict
+
+    @on_evict.setter
+    def on_evict(self, fn) -> None:
+        for sh in self.shards:
+            sh.on_evict = fn
+
+    # ------------------------------------------------------------------
+    def keys_for(self, tokens: list[int]) -> tuple[bytes, ...]:
+        return self.hasher.keys_for(tokens)
+
+    def match_prefix(self, tokens: list[int]) -> list[tuple[bytes, int, int]]:
+        return self.match_prefix_keys(self.keys_for(tokens))
+
+    def match_prefix_keys(
+        self, keys: tuple[bytes, ...] | list[bytes]
+    ) -> list[tuple[bytes, int, int]]:
+        if self.n_shards == 1:
+            return self.shards[0].match_prefix_keys(keys)
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        found: list[tuple[int, int] | None] = [None] * len(keys)
+        for sh, kl, pl in zip(self.shards, key_lists, pos_lists):
+            if kl:
+                for (_, b, e), i in zip(sh.match_prefix_keys(kl), pl):
+                    found[i] = (b, e)
+        out: list[tuple[bytes, int, int]] = []
+        for i, k in enumerate(keys):
+            f = found[i]
+            if f is None:
+                break  # first hole ends the global all-hit prefix
+            out.append((k, f[0], f[1]))
+        return out
+
+    def publish(self, key: bytes, block_id: int, epoch: int, n_tokens: int) -> None:
+        self.shards[shard_of_key(key, self.n_shards)].publish(
+            key, block_id, epoch, n_tokens
+        )
+
+    def publish_many(
+        self,
+        keys: list[bytes],
+        block_ids: list[int],
+        epochs: list[int],
+        n_tokens: int,
+    ) -> None:
+        if self.n_shards == 1:
+            return self.shards[0].publish_many(keys, block_ids, epochs, n_tokens)
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        for sh, kl, pl in zip(self.shards, key_lists, pos_lists):
+            if kl:
+                sh.publish_many(
+                    kl,
+                    [block_ids[i] for i in pl],
+                    [epochs[i] for i in pl],
+                    n_tokens,
+                )
+
+    def lookup(self, key: bytes) -> IndexEntry | None:
+        return self.shards[shard_of_key(key, self.n_shards)].lookup(key)
+
+    def lookup_many(self, keys: list[bytes]) -> list[IndexEntry | None]:
+        if self.n_shards == 1:
+            return self.shards[0].lookup_many(keys)
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        out: list[IndexEntry | None] = [None] * len(keys)
+        for sh, kl, pl in zip(self.shards, key_lists, pos_lists):
+            if kl:
+                for e, i in zip(sh.lookup_many(kl), pl):
+                    out[i] = e
+        return out
+
+    def filter_unpublished(self, keys) -> list[int]:
+        if self.n_shards == 1:
+            return self.shards[0].filter_unpublished(keys)
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        out: list[int] = []
+        for sh, kl, pl in zip(self.shards, key_lists, pos_lists):
+            if kl:
+                out.extend(pl[p] for p in sh.filter_unpublished(kl))
+        out.sort()
+        return out
+
+    def evict_lru(self, n: int) -> list[int]:
+        """Approximate global LRU: proportional quotas round-robin over
+        the per-shard LRU lists, then a drain pass over shards that still
+        have victims when others ran dry."""
+        if self.n_shards == 1:
+            return self.shards[0].evict_lru(n)
+        freed: list[int] = []
+        S = self.n_shards
+        start = self._evict_rr
+        self._evict_rr = (start + 1) % S
+        for pass_quota in (-(-n // S), n):  # proportional, then drain
+            for k in range(S):
+                need = n - len(freed)
+                if need <= 0:
+                    return freed
+                sh = self.shards[(start + k) % S]
+                freed.extend(sh.evict_lru(min(pass_quota, need)))
+        return freed
+
+    def evict_blocks(self, block_ids: list[int]) -> list[int]:
+        if self.n_shards == 1:
+            return self.shards[0].evict_blocks(block_ids)
+        return evict_blocks_sharded(self.shards, block_ids)
+
+    def keys_of_blocks(self, block_ids) -> list[bytes | None]:
+        if self.n_shards == 1:
+            return self.shards[0].keys_of_blocks(block_ids)
+        out: list[bytes | None] = [None] * len(block_ids)
+        for sh in self.shards:
+            for i, k in enumerate(sh.keys_of_blocks(block_ids)):
+                if k is not None:
+                    out[i] = k
+        return out
+
+    def owners_of(
+        self, block_ids
+    ) -> tuple[list[bytes], list[int], list[int]]:
+        if self.n_shards == 1:
+            return self.shards[0].owners_of(block_ids)
+        owner: dict[int, tuple[bytes, int]] = {}
+        for sh in self.shards:
+            keys, ids, eps = sh.owners_of(block_ids)
+            for k, b, e in zip(keys, ids, eps):
+                owner[b] = (k, e)
+        keys_o: list[bytes] = []
+        ids_o: list[int] = []
+        eps_o: list[int] = []
+        for b in block_ids:
+            f = owner.get(int(b))
+            if f is not None:
+                keys_o.append(f[0])
+                ids_o.append(int(b))
+                eps_o.append(f[1])
+        return keys_o, ids_o, eps_o
+
+    def remap_many(
+        self,
+        keys: list[bytes],
+        old_ids: list[int],
+        old_epochs: list[int],
+        new_ids: list[int],
+        new_epochs: list[int],
+    ) -> list[bool]:
+        if self.n_shards == 1:
+            return self.shards[0].remap_many(
+                keys, old_ids, old_epochs, new_ids, new_epochs
+            )
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        ok = [False] * len(keys)
+        for sh, kl, pl in zip(self.shards, key_lists, pos_lists):
+            if kl:
+                sub = sh.remap_many(
+                    kl,
+                    [old_ids[i] for i in pl],
+                    [old_epochs[i] for i in pl],
+                    [new_ids[i] for i in pl],
+                    [new_epochs[i] for i in pl],
+                )
+                for o, i in zip(sub, pl):
+                    ok[i] = o
+        return ok
+
+    def stats(self) -> dict:
+        per = [sh.stats() for sh in self.shards]
+        hits = sum(p["hits"] for p in per)
+        misses = sum(p["misses"] for p in per)
+        out = {
+            "entries": sum(p["entries"] for p in per),
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / max(1, hits + misses),
+        }
+        if self.n_shards > 1:
+            out["shards"] = [p["entries"] for p in per]
+        return out

@@ -28,7 +28,16 @@ metadata-op codec layered on top):
     closing the reuse race;
   * a handler failure (malformed frame, oversized reply) is relayed
     in-band as a RESP_ERROR frame and raised client-side as ``RpcError``
-    — the service thread itself never dies to a bad request.
+    — the service thread itself never dies to a bad request;
+  * ``post``/``collect`` split the round-trip so a sharded metadata
+    client (``repro.core.wire.ShardedRpcIndexClient``) can keep requests
+    to SEVERAL rings outstanding at once: post to every shard's ring,
+    then collect the replies — true parallel outstanding RPCs over the
+    same slot protocol (``call`` is just post+collect on one ring);
+  * FAILED round-trips are visible in ``RpcStats``: an in-band
+    RESP_ERROR bumps ``errors``, a timeout bumps ``timeouts``, and both
+    account their wait into ``total_wait`` BEFORE raising — so an
+    error-heavy run can't report a rosy average RTT over successes only.
 """
 
 from __future__ import annotations
@@ -53,9 +62,30 @@ class RpcError(RuntimeError):
 
 @dataclass
 class RpcStats:
-    requests: int = 0
-    total_wait: float = 0.0
+    requests: int = 0  # completed OK
+    total_wait: float = 0.0  # includes the wait of errored/timed-out calls
     timeouts: int = 0
+    errors: int = 0  # in-band RESP_ERROR frames (handler failures)
+
+    @property
+    def round_trips(self) -> int:
+        """Every round-trip that consumed ring time, failed or not."""
+        return self.requests + self.errors + self.timeouts
+
+    def avg_wait(self) -> float:
+        return self.total_wait / max(1, self.round_trips)
+
+
+def _truncate_utf8(raw: bytes, cap: int) -> bytes:
+    """Truncate to ``cap`` bytes WITHOUT splitting a multi-byte UTF-8
+    character: back the cut up while it lands on a continuation byte, so
+    the shipped frame always decodes cleanly."""
+    if len(raw) <= cap:
+        return raw
+    cut = cap
+    while cut > 0 and (raw[cut] & 0xC0) == 0x80:
+        cut -= 1
+    return raw[:cut]
 
 
 class ShmRing:
@@ -137,9 +167,11 @@ class CxlRpcServer:
                     ring.write_resp(i, self.handler(payload))
                     status[i] = RESP_READY  # publish (ntstore semantics)
                 except Exception as e:  # noqa: BLE001
-                    msg = f"{type(e).__name__}: {e}".encode()[
-                        : ring.payload_bytes
-                    ]
+                    # truncate on a CHARACTER boundary: a byte-slice could
+                    # split a multi-byte UTF-8 char and ship mojibake
+                    msg = _truncate_utf8(
+                        f"{type(e).__name__}: {e}".encode(), ring.payload_bytes
+                    )
                     ring.write_resp(i, msg)
                     status[i] = RESP_ERROR
                 self.served += 1
@@ -157,6 +189,9 @@ class CxlRpcClient:
         # slots whose caller timed out while the server still owed a
         # response; unsafe to reuse until the server flips them
         self._quarantined: set[int] = set()
+        # per-slot post timestamp: collect() accounts wait from the post,
+        # not from whenever the caller got around to collecting
+        self._t_posted = np.zeros(ring.n_slots, np.float64)
 
     def free_slots(self) -> int:
         with self._slot_lock:
@@ -178,37 +213,60 @@ class CxlRpcClient:
                 raise RuntimeError("no free RPC slots (QD exceeded)")
             return self._free.pop()
 
-    def call(self, payload: bytes, timeout: float = 5.0) -> bytes:
+    def post(self, payload: bytes) -> int:
+        """Write a request and flip its slot to REQ_READY; returns the
+        slot for a later ``collect``. Splitting the round-trip lets a
+        sharded client keep RPCs to several rings outstanding at once."""
         slot = self._acquire_slot()
-        ring = self.ring
-        posted = False
         try:
-            ring.write_req(slot, payload)
-            t0 = time.perf_counter()
-            ring.status[slot] = REQ_READY  # ntstore + fence
-            posted = True
-            deadline = t0 + timeout
+            self.ring.write_req(slot, payload)
+        except BaseException:
+            with self._slot_lock:  # nothing posted: plain recycle
+                self._free.append(slot)
+            raise
+        self._t_posted[slot] = time.perf_counter()
+        self.ring.status[slot] = REQ_READY  # ntstore + fence
+        return slot
+
+    def collect(self, slot: int, timeout: float = 5.0) -> bytes:
+        """Wait for the reply posted in ``slot``; recycle or quarantine it.
+
+        Failed round-trips are ACCOUNTED, not invisible: a timeout or an
+        in-band RESP_ERROR bumps its counter and contributes its wait to
+        ``total_wait`` before raising (the old path raised first, so
+        error-heavy runs reported averages over successes only)."""
+        ring = self.ring
+        stats = self.stats
+        t0 = float(self._t_posted[slot])
+        deadline = t0 + timeout
+        completed = False
+        try:
             while (st := int(ring.status[slot])) not in (RESP_READY, RESP_ERROR):
                 if time.perf_counter() > deadline:
-                    self.stats.timeouts += 1
+                    stats.timeouts += 1
+                    stats.total_wait += time.perf_counter() - t0
                     raise TimeoutError("RPC timeout")
                 time.sleep(0)
             out = ring.read_resp(slot)
             ring.status[slot] = IDLE
-            posted = False  # completed: safe to recycle
+            completed = True  # server answered: safe to recycle
+            stats.total_wait += time.perf_counter() - t0
             if st == RESP_ERROR:
+                stats.errors += 1
                 raise RpcError(out.decode("utf-8", errors="replace"))
-            self.stats.requests += 1
-            self.stats.total_wait += time.perf_counter() - t0
+            stats.requests += 1
             return out
         finally:
             with self._slot_lock:
-                if posted:
+                if completed:
+                    self._free.append(slot)
+                else:
                     # the server may still write here — quarantine until
                     # it flips the slot to RESP_READY (checked at acquire)
                     self._quarantined.add(slot)
-                else:
-                    self._free.append(slot)
+
+    def call(self, payload: bytes, timeout: float = 5.0) -> bytes:
+        return self.collect(self.post(payload), timeout)
 
     def modeled_rtt(self) -> float:
         """Paper-calibrated RTT floor for this transport (Exp #11)."""

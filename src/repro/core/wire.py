@@ -15,6 +15,10 @@ Message layout (little-endian, keys are fixed 16-byte blake2b digests):
     FILTER   := n:u32  keys[n*16]          (writeback: lookup+validate fused)
     EVICT    := n:u32                      (evict up to n LRU blocks)
     BATCH    := k:u32  k * (len:u32 request)
+    OWNERS   := n:u32  block_ids[n*i64]    (migrator pre-copy snapshot)
+    REMAP    := n:u32  keys[n*16]  old_ids[n*i64]  old_epochs[n*i64]
+                       new_ids[n*i64]  new_epochs[n*i64]
+    EVICT_BLOCKS := n:u32  block_ids[n*i64]
 
     responses:
     MATCH    -> n_ok:u32  block_ids[n_ok*i64]  epochs[n_ok*i64]
@@ -24,6 +28,15 @@ Message layout (little-endian, keys are fixed 16-byte blake2b digests):
     FILTER   -> m:u32  positions[m*u32]
     EVICT    -> m:u32  freed_block_ids[m*i64]
     BATCH    -> k:u32  k * (len:u32 response)
+    OWNERS   -> m:u32  keys[m*16]  block_ids[m*i64]  epochs[m*i64]
+    REMAP    -> n:u32  ok[n*u8]
+    EVICT_BLOCKS -> m:u32  freed_block_ids[m*i64]
+
+OWNERS / REMAP / EVICT_BLOCKS carry the tier-migration control plane, so
+the ``MigrationEngine`` no longer has to be co-located with the index: its
+metadata ops (pre-copy snapshot, compare-and-swap re-point, spill
+eviction) travel the same ring as everything else, while the payload
+copies stay on the shared pool.
 
 ``handle_request`` is the server-side dispatcher (wrap it with
 ``make_index_handler`` and hand it to ``CxlRpcServer``); ``RpcIndexClient``
@@ -31,6 +44,10 @@ is the engine-side proxy exposing the same API surface the
 ``KVCacheManager`` uses in-process (``keys_for`` hashes locally — it is
 pure computation — and only the 16-byte keys cross the ring). Chains
 longer than one slot are transparently split at the op level.
+``ShardedRpcIndexClient`` is the multi-ring front: keys partition by
+digest (``repro.core.index.shard_of_key``) across S rings, each serving
+one ``GlobalIndex`` shard, and every fan-out POSTS to all shards before
+collecting any reply — the S sub-requests are outstanding in parallel.
 """
 
 from __future__ import annotations
@@ -39,7 +56,13 @@ import struct
 
 import numpy as np
 
-from repro.core.index import IndexEntry, PrefixHasher
+from repro.core.index import (
+    IndexEntry,
+    PrefixHasher,
+    evict_blocks_sharded,
+    partition_keys,
+    shard_of_key,
+)
 
 KEY_BYTES = 16
 
@@ -49,6 +72,9 @@ OP_LOOKUP = 3
 OP_FILTER = 4
 OP_EVICT = 5
 OP_BATCH = 6
+OP_OWNERS = 7
+OP_REMAP = 8
+OP_EVICT_BLOCKS = 9
 
 _HDR = struct.Struct("<BI")  # op, count
 _U32 = struct.Struct("<I")
@@ -101,6 +127,32 @@ def encode_batch(requests: list[bytes]) -> bytes:
     return _HDR.pack(OP_BATCH, len(requests)) + b"".join(
         _U32.pack(len(r)) + r for r in requests
     )
+
+
+def encode_owners(block_ids) -> bytes:
+    return _HDR.pack(OP_OWNERS, len(block_ids)) + np.asarray(
+        block_ids, np.int64
+    ).tobytes()
+
+
+def encode_remap(keys, old_ids, old_epochs, new_ids, new_epochs) -> bytes:
+    n = len(keys)
+    if not (n == len(old_ids) == len(old_epochs) == len(new_ids) == len(new_epochs)):
+        raise WireError("remap arrays disagree on length")
+    return (
+        _HDR.pack(OP_REMAP, n)
+        + _join_keys(keys)
+        + np.asarray(old_ids, np.int64).tobytes()
+        + np.asarray(old_epochs, np.int64).tobytes()
+        + np.asarray(new_ids, np.int64).tobytes()
+        + np.asarray(new_epochs, np.int64).tobytes()
+    )
+
+
+def encode_evict_blocks(block_ids) -> bytes:
+    return _HDR.pack(OP_EVICT_BLOCKS, len(block_ids)) + np.asarray(
+        block_ids, np.int64
+    ).tobytes()
 
 
 # ---------------------------------------------------------------------------
@@ -166,6 +218,22 @@ def decode_evict_resp(buf: bytes) -> list[int]:
     return ids.tolist()
 
 
+def decode_owners_resp(buf: bytes) -> tuple[list[bytes], list[int], list[int]]:
+    _need(buf, 4)
+    (m,) = _U32.unpack_from(buf)
+    keys, off = _split_keys(buf, 4, m)
+    ids, off = _split_i64(buf, off, m)
+    eps, _ = _split_i64(buf, off, m)
+    return keys, ids.tolist(), eps.tolist()
+
+
+def decode_remap_resp(buf: bytes) -> list[bool]:
+    _need(buf, 4)
+    (n,) = _U32.unpack_from(buf)
+    _need(buf, 4 + n)
+    return [b != 0 for b in buf[4 : 4 + n]]
+
+
 def _split_frames(buf: bytes, off: int, k: int) -> list[bytes]:
     """k length-prefixed frames starting at ``off`` (the BATCH body)."""
     out = []
@@ -217,6 +285,15 @@ def reply_bound(buf: bytes, _depth: int = 0) -> int:
         return 4 + 4 * n
     if op == OP_EVICT:
         return 4 + 8 * n
+    if op == OP_OWNERS:
+        _need(buf, _HDR.size + 8 * n)
+        return 4 + 32 * n
+    if op == OP_REMAP:
+        _need(buf, _HDR.size + (KEY_BYTES + 32) * n)
+        return 4 + n
+    if op == OP_EVICT_BLOCKS:
+        _need(buf, _HDR.size + 8 * n)
+        return 4 + 8 * n
     if op == OP_BATCH:
         if _depth >= _MAX_BATCH_DEPTH:
             raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
@@ -244,7 +321,16 @@ def prevalidate(index, buf: bytes, _depth: int = 0) -> None:
         _, n, _ = _PUB_HDR.unpack_from(buf)
         _, off = _split_keys(buf, _PUB_HDR.size, n)
         ids, _ = _split_i64(buf, off, n)
-        _check_publish_ids(index, ids)
+        _check_block_ids(index, ids, "PUBLISH")
+    elif op in (OP_OWNERS, OP_EVICT_BLOCKS):
+        ids, _ = _split_i64(buf, _HDR.size, n)
+        _check_block_ids(index, ids, "OWNERS" if op == OP_OWNERS else "EVICT_BLOCKS")
+    elif op == OP_REMAP:
+        _, off = _split_keys(buf, _HDR.size, n)
+        old_ids, off = _split_i64(buf, off, n)
+        _check_block_ids(index, old_ids, "REMAP old")
+        new_ids, _ = _split_i64(buf, off + 8 * n, n)  # skip old_epochs
+        _check_block_ids(index, new_ids, "REMAP new")
     elif op == OP_BATCH:
         if _depth >= _MAX_BATCH_DEPTH:
             raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
@@ -260,12 +346,12 @@ def _check_match_keys(keys: list[bytes]) -> None:
         raise WireError("duplicate keys in MATCH chain")
 
 
-def _check_publish_ids(index, ids: np.ndarray) -> None:
+def _check_block_ids(index, ids: np.ndarray, what: str) -> None:
     if len(ids) and (ids.min() < 0 or ids.max() >= index.pool.n_blocks):
-        # untrusted ids would scatter into block2row out of range
-        # (numpy negative indexing would silently corrupt another
+        # untrusted ids would index block2row out of range (numpy
+        # negative indexing would silently corrupt — or leak — another
         # block's owner pointer)
-        raise WireError("PUBLISH block id out of pool range")
+        raise WireError(f"{what} block id out of pool range")
 
 
 def handle_request(
@@ -293,7 +379,7 @@ def handle_request(
         ids, off = _split_i64(buf, off, n)
         eps, _ = _split_i64(buf, off, n)
         if not _validated:
-            _check_publish_ids(index, ids)
+            _check_block_ids(index, ids, "PUBLISH")
         index.publish_many(keys, ids.tolist(), eps.tolist(), n_tokens)
         return _U32.pack(n)
     if op == OP_LOOKUP:
@@ -315,6 +401,37 @@ def handle_request(
         return _U32.pack(len(missing)) + np.asarray(missing, np.int32).tobytes()
     if op == OP_EVICT:
         freed = index.evict_lru(n)
+        return _U32.pack(len(freed)) + np.asarray(freed, np.int64).tobytes()
+    if op == OP_OWNERS:
+        ids, _ = _split_i64(buf, _HDR.size, n)
+        if not _validated:
+            _check_block_ids(index, ids, "OWNERS")
+        keys, bids, eps = index.owners_of(ids.tolist())
+        return (
+            _U32.pack(len(keys))
+            + b"".join(keys)
+            + np.asarray(bids, np.int64).tobytes()
+            + np.asarray(eps, np.int64).tobytes()
+        )
+    if op == OP_REMAP:
+        keys, off = _split_keys(buf, _HDR.size, n)
+        old_ids, off = _split_i64(buf, off, n)
+        old_eps, off = _split_i64(buf, off, n)
+        new_ids, off = _split_i64(buf, off, n)
+        new_eps, _ = _split_i64(buf, off, n)
+        if not _validated:
+            _check_block_ids(index, old_ids, "REMAP old")
+            _check_block_ids(index, new_ids, "REMAP new")
+        ok = index.remap_many(
+            keys, old_ids.tolist(), old_eps.tolist(),
+            new_ids.tolist(), new_eps.tolist(),
+        )
+        return _U32.pack(n) + bytes(bytearray(int(o) for o in ok))
+    if op == OP_EVICT_BLOCKS:
+        ids, _ = _split_i64(buf, _HDR.size, n)
+        if not _validated:
+            _check_block_ids(index, ids, "EVICT_BLOCKS")
+        freed = index.evict_blocks(ids.tolist())
         return _U32.pack(len(freed)) + np.asarray(freed, np.int64).tobytes()
     if op == OP_BATCH:
         if _depth >= _MAX_BATCH_DEPTH:
@@ -374,6 +491,8 @@ class RpcIndexClient:
         self._max_publish = max(1, (max_payload - 16) // (KEY_BYTES + 16))
         self._max_lookup = max(1, (max_payload - 16) // max(KEY_BYTES, 20))
         self._max_evict = max(1, (max_payload - 16) // 8)
+        self._max_owners = max(1, (max_payload - 16) // 32)  # reply-bound
+        self._max_remap = max(1, (max_payload - 16) // (KEY_BYTES + 32))
 
     # -- hashing is local ------------------------------------------------
     def keys_for(self, tokens: list[int]) -> tuple[bytes, ...]:
@@ -439,6 +558,349 @@ class RpcIndexClient:
             n -= k
         return freed
 
+    # -- tier-migration control plane (the migrator over the wire) ------
+    def owners_of(
+        self, block_ids
+    ) -> tuple[list[bytes], list[int], list[int]]:
+        """One-round-trip (chunked) pre-copy snapshot; same contract as
+        ``GlobalIndex.owners_of`` (indexed blocks only, input order)."""
+        keys: list[bytes] = []
+        ids: list[int] = []
+        eps: list[int] = []
+        M = self._max_owners
+        for off in range(0, len(block_ids), M):
+            k, b, e = decode_owners_resp(
+                self.rpc.call(encode_owners(block_ids[off : off + M]))
+            )
+            keys.extend(k)
+            ids.extend(b)
+            eps.extend(e)
+        return keys, ids, eps
+
+    def remap_many(
+        self, keys, old_ids, old_epochs, new_ids, new_epochs
+    ) -> list[bool]:
+        ok: list[bool] = []
+        M = self._max_remap
+        for off in range(0, len(keys), M):
+            end = off + M
+            ok.extend(
+                decode_remap_resp(
+                    self.rpc.call(
+                        encode_remap(
+                            keys[off:end], old_ids[off:end], old_epochs[off:end],
+                            new_ids[off:end], new_epochs[off:end],
+                        )
+                    )
+                )
+            )
+        return ok
+
+    def evict_blocks(self, block_ids) -> list[int]:
+        freed: list[int] = []
+        M = self._max_evict  # 8 B per id both ways: EVICT sizing applies
+        for off in range(0, len(block_ids), M):
+            freed.extend(
+                decode_evict_resp(
+                    self.rpc.call(encode_evict_blocks(block_ids[off : off + M]))
+                )
+            )
+        return freed
+
     def call_batch(self, requests: list[bytes]) -> list[bytes]:
         """Ship k already-encoded ops in ONE ring round-trip."""
         return decode_batch_resp(self.rpc.call(encode_batch(requests)))
+
+
+# ---------------------------------------------------------------------------
+# sharded client: one ring per index shard, parallel outstanding RPCs
+# ---------------------------------------------------------------------------
+class ShardedRpcIndexClient:
+    """``GlobalIndex`` API over S metadata rings (one ``GlobalIndex``
+    shard behind each), keys partitioned by digest hash.
+
+    The partition/merge semantics are identical to the in-process
+    ``repro.core.index.ShardedIndex`` (same ``shard_of_key`` routing, same
+    longest-all-hit-prefix merge) — the only difference is the transport:
+    every fan-out POSTS the per-shard requests to all rings BEFORE
+    collecting any reply, so one op keeps S RPCs outstanding in parallel
+    instead of visiting the shards one round-trip at a time. Chains longer
+    than a slot run in chunk rounds, still posting each round to every
+    still-active shard first.
+
+    S=1 degenerates to a plain ``RpcIndexClient`` over the single ring
+    (bit-identical message sequence to the unsharded ``index_rpc`` mode).
+    """
+
+    def __init__(self, rpcs, block_tokens: int, max_payload: int | None = None,
+                 hasher: PrefixHasher | None = None):
+        if not rpcs:
+            raise ValueError("need at least one rpc transport")
+        self.rpcs = list(rpcs)
+        self.n_shards = len(self.rpcs)
+        self.block_tokens = block_tokens
+        self.hasher = hasher if hasher is not None else PrefixHasher(block_tokens)
+        # per-shard proxies share the hasher (hash once per front); they
+        # also carry the per-op slot-capacity maths
+        self.shards = [
+            RpcIndexClient(r, block_tokens, max_payload, hasher=self.hasher)
+            for r in self.rpcs
+        ]
+        # rings may differ in slot size: fan-out chunks use the tightest
+        self._max_match = min(s._max_match for s in self.shards)
+        self._max_publish = min(s._max_publish for s in self.shards)
+        self._max_lookup = min(s._max_lookup for s in self.shards)
+        self._max_evict = min(s._max_evict for s in self.shards)
+        self._max_owners = min(s._max_owners for s in self.shards)
+        self._max_remap = min(s._max_remap for s in self.shards)
+
+    # -- transport: post-all, then collect-all ---------------------------
+    def _fanout(
+        self, msgs: dict[int, bytes], timeout: float = 5.0
+    ) -> dict[int, bytes]:
+        """One parallel round: post every shard's request, then collect.
+
+        A failed post stops posting (nothing else enters the rings); every
+        slot that WAS posted is still collected (or quarantined by its own
+        collect), then the first failure is re-raised — no leaked slots,
+        no reply left to alias a later caller."""
+        slots: dict[int, int] = {}
+        first_err: BaseException | None = None
+        for s, m in msgs.items():
+            try:
+                slots[s] = self.rpcs[s].post(m)
+            except BaseException as e:  # noqa: BLE001
+                first_err = e
+                break
+        out: dict[int, bytes] = {}
+        for s, slot in slots.items():
+            try:
+                out[s] = self.rpcs[s].collect(slot, timeout)
+            except BaseException as e:  # noqa: BLE001
+                if first_err is None:
+                    first_err = e
+        if first_err is not None:
+            raise first_err
+        return out
+
+    # -- hashing is local ------------------------------------------------
+    def keys_for(self, tokens: list[int]) -> tuple[bytes, ...]:
+        return self.hasher.keys_for(tokens)
+
+    # -- chain ops: partition, parallel rounds, merge by position --------
+    def match_prefix(self, tokens: list[int]) -> list[tuple[bytes, int, int]]:
+        return self.match_prefix_keys(self.keys_for(tokens))
+
+    def match_prefix_keys(self, keys) -> list[tuple[bytes, int, int]]:
+        if self.n_shards == 1:
+            return self.shards[0].match_prefix_keys(keys)
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        found: list[tuple[int, int] | None] = [None] * len(keys)
+        offs = [0] * self.n_shards
+        active = {s for s in range(self.n_shards) if key_lists[s]}
+        M = self._max_match
+        while active:
+            msgs = {
+                s: encode_match(key_lists[s][offs[s] : offs[s] + M])
+                for s in active
+            }
+            resp = self._fanout(msgs)
+            for s in list(active):
+                ids, eps = decode_match_resp(resp[s])
+                kl, pl = key_lists[s], pos_lists[s]
+                o = offs[s]
+                for j, (b, e) in enumerate(zip(ids.tolist(), eps.tolist())):
+                    found[pl[o + j]] = (b, e)
+                chunk = min(M, len(kl) - o)
+                offs[s] = o + chunk
+                if len(ids) < chunk or offs[s] >= len(kl):
+                    active.discard(s)  # shard prefix ended (or exhausted)
+        out: list[tuple[bytes, int, int]] = []
+        for i, k in enumerate(keys):
+            f = found[i]
+            if f is None:
+                break  # first hole ends the global all-hit prefix
+            out.append((k, f[0], f[1]))
+        return out
+
+    def publish_many(self, keys, block_ids, epochs, n_tokens: int) -> None:
+        if self.n_shards == 1:
+            return self.shards[0].publish_many(keys, block_ids, epochs, n_tokens)
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        parts = {
+            s: (
+                key_lists[s],
+                [block_ids[i] for i in pos_lists[s]],
+                [epochs[i] for i in pos_lists[s]],
+            )
+            for s in range(self.n_shards)
+            if key_lists[s]
+        }
+        offs = dict.fromkeys(parts, 0)
+        M = self._max_publish
+        while parts:
+            msgs = {}
+            for s, (kl, bl, el) in parts.items():
+                o = offs[s]
+                msgs[s] = encode_publish(
+                    kl[o : o + M], bl[o : o + M], el[o : o + M], n_tokens
+                )
+            self._fanout(msgs)
+            for s in list(parts):
+                offs[s] += M
+                if offs[s] >= len(parts[s][0]):
+                    del parts[s], offs[s]
+
+    def lookup_many(self, keys) -> list[IndexEntry | None]:
+        if self.n_shards == 1:
+            return self.shards[0].lookup_many(keys)
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        out: list[IndexEntry | None] = [None] * len(keys)
+        offs = [0] * self.n_shards
+        active = {s for s in range(self.n_shards) if key_lists[s]}
+        M = self._max_lookup
+        while active:
+            msgs = {
+                s: encode_lookup(key_lists[s][offs[s] : offs[s] + M])
+                for s in active
+            }
+            resp = self._fanout(msgs)
+            for s in list(active):
+                ids, eps, ntk = decode_lookup_resp(resp[s])
+                pl = pos_lists[s]
+                o = offs[s]
+                for j, (b, e, t) in enumerate(
+                    zip(ids.tolist(), eps.tolist(), ntk.tolist())
+                ):
+                    if b >= 0:
+                        out[pl[o + j]] = IndexEntry(b, e, t, 0.0)
+                offs[s] = o + len(ids)
+                if offs[s] >= len(key_lists[s]):
+                    active.discard(s)
+        return out
+
+    def lookup(self, key: bytes) -> IndexEntry | None:
+        return self.shards[shard_of_key(key, self.n_shards)].lookup(key)
+
+    def filter_unpublished(self, keys) -> list[int]:
+        if self.n_shards == 1:
+            return self.shards[0].filter_unpublished(keys)
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        out: list[int] = []
+        offs = [0] * self.n_shards
+        active = {s for s in range(self.n_shards) if key_lists[s]}
+        M = self._max_lookup
+        while active:
+            msgs = {
+                s: encode_filter(key_lists[s][offs[s] : offs[s] + M])
+                for s in active
+            }
+            resp = self._fanout(msgs)
+            for s in list(active):
+                kl, pl = key_lists[s], pos_lists[s]
+                o = offs[s]
+                out.extend(pl[o + p] for p in decode_filter_resp(resp[s]))
+                offs[s] = o + min(M, len(kl) - o)
+                if offs[s] >= len(kl):
+                    active.discard(s)
+        out.sort()
+        return out
+
+    # -- eviction + migration control plane ------------------------------
+    def evict_lru(self, n: int) -> list[int]:
+        """Approximate global LRU (same policy as ``ShardedIndex``):
+        parallel proportional rounds; shards that run dry drop out and the
+        survivors absorb the remainder."""
+        if self.n_shards == 1:
+            return self.shards[0].evict_lru(n)
+        freed: list[int] = []
+        active = set(range(self.n_shards))
+        while len(freed) < n and active:
+            need = n - len(freed)
+            alive = sorted(active)
+            base, extra = divmod(need, len(alive))
+            asks = {}
+            for j, s in enumerate(alive):
+                k = min(base + (1 if j < extra else 0), self._max_evict)
+                if k > 0:
+                    asks[s] = k
+            if not asks:
+                break
+            resp = self._fanout({s: encode_evict(k) for s, k in asks.items()})
+            for s, k in asks.items():
+                got = decode_evict_resp(resp[s])
+                freed.extend(got)
+                if len(got) < k:
+                    active.discard(s)
+        return freed
+
+    def owners_of(
+        self, block_ids
+    ) -> tuple[list[bytes], list[int], list[int]]:
+        if self.n_shards == 1:
+            return self.shards[0].owners_of(block_ids)
+        owner: dict[int, tuple[bytes, int]] = {}
+        M = self._max_owners
+        for off in range(0, len(block_ids), M):
+            chunk = block_ids[off : off + M]
+            resp = self._fanout(
+                {s: encode_owners(chunk) for s in range(self.n_shards)}
+            )
+            for r in resp.values():
+                k, b, e = decode_owners_resp(r)
+                for kk, bb, ee in zip(k, b, e):
+                    owner[bb] = (kk, ee)
+        keys_o: list[bytes] = []
+        ids_o: list[int] = []
+        eps_o: list[int] = []
+        for b in block_ids:
+            f = owner.get(int(b))
+            if f is not None:
+                keys_o.append(f[0])
+                ids_o.append(int(b))
+                eps_o.append(f[1])
+        return keys_o, ids_o, eps_o
+
+    def remap_many(
+        self, keys, old_ids, old_epochs, new_ids, new_epochs
+    ) -> list[bool]:
+        if self.n_shards == 1:
+            return self.shards[0].remap_many(
+                keys, old_ids, old_epochs, new_ids, new_epochs
+            )
+        key_lists, pos_lists = partition_keys(keys, self.n_shards)
+        ok = [False] * len(keys)
+        offs = [0] * self.n_shards
+        active = {s for s in range(self.n_shards) if key_lists[s]}
+        M = self._max_remap
+        while active:
+            msgs = {}
+            for s in active:
+                kl, pl = key_lists[s], pos_lists[s]
+                o = offs[s]
+                sel = pl[o : o + M]
+                msgs[s] = encode_remap(
+                    kl[o : o + M],
+                    [old_ids[i] for i in sel],
+                    [old_epochs[i] for i in sel],
+                    [new_ids[i] for i in sel],
+                    [new_epochs[i] for i in sel],
+                )
+            resp = self._fanout(msgs)
+            for s in list(active):
+                kl, pl = key_lists[s], pos_lists[s]
+                o = offs[s]
+                for v, i in zip(decode_remap_resp(resp[s]), pl[o : o + M]):
+                    ok[i] = v
+                offs[s] = o + min(M, len(kl) - o)
+                if offs[s] >= len(kl):
+                    active.discard(s)
+        return ok
+
+    def evict_blocks(self, block_ids) -> list[int]:
+        if self.n_shards == 1:
+            return self.shards[0].evict_blocks(block_ids)
+        # sequential per shard (each self.shards[s] chunks its own wire
+        # round-trips); this op is background-migrator traffic, so the
+        # lost parallelism is not on the request path
+        return evict_blocks_sharded(self.shards, block_ids)

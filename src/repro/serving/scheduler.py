@@ -16,7 +16,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.fabric import DEFAULT, DeviceQueues
-from repro.core.index import GlobalIndex
+from repro.core.index import GlobalIndex, ShardedIndex
 from repro.core.pool import BelugaPool, PoolLayout
 from repro.core.transfer import TransferEngine
 from repro.kvcache.hbm_cache import HbmPagedCache
@@ -48,6 +48,13 @@ class ClusterConfig:
     index_rpc: bool = False
     index_rpc_slots: int = 64
     index_rpc_payload: int = 1 << 16
+    # metadata-plane sharding (paper §6: the metadata service scales
+    # horizontally): keys partition by digest across S independent
+    # GlobalIndex shards; in index_rpc mode each shard gets its OWN
+    # ShmRing + service thread and clients keep the S sub-requests of an
+    # op outstanding in parallel. 1 (default) = today's single metadata
+    # plane, bit-identical to the unsharded path.
+    index_shards: int = 1
     runner: SimRunnerConfig = field(default_factory=SimRunnerConfig)
     # tiered pool memory (Exp #13): disabled -> flat BelugaPool, the exact
     # PR-1 code path; enabled -> pool_blocks become the FAST tier and a
@@ -71,16 +78,15 @@ class Cluster:
                 backing=backing,
                 cfg=tcfg,
             )
-            self.index = GlobalIndex(self.pool)
-            # destroyed keys arm the ghost-LRU admission filter
+            self.index = self._make_index()
+            # destroyed keys arm the ghost-LRU admission filter (on EVERY
+            # metadata shard: ring-served evictions run against the shard
+            # objects, so the hook fires for them too)
             self.index.on_evict = self.pool.policy.ghost_add
             self.queues = (
                 DeviceQueues(n_devices=DEFAULT.n_devices)
                 if tcfg.model_contention
                 else None
-            )
-            self.migrator = MigrationEngine(
-                self.pool, self.index, tcfg, queues=self.queues
             )
         else:
             self.pool = BelugaPool(
@@ -90,37 +96,87 @@ class Cluster:
                 interleave=cfg.interleave,
                 backing=backing,
             )
-            self.index = GlobalIndex(self.pool)
+            self.index = self._make_index()
             self.queues = None
-            self.migrator = None
-        self._rpc_server = None
-        self._rpc_client = None
+        self._rpc_servers = []
+        self._rpc_clients = []
         if cfg.index_rpc:
             from repro.core.rpc import CxlRpcClient, CxlRpcServer, ShmRing
             from repro.core.wire import make_index_handler
 
-            ring = ShmRing(
-                n_slots=cfg.index_rpc_slots, payload_bytes=cfg.index_rpc_payload
+            # one ring + one metadata service thread PER SHARD
+            shards = (
+                self.index.shards if cfg.index_shards > 1 else [self.index]
             )
-            self._rpc_server = CxlRpcServer(
-                ring, make_index_handler(self.index, max_reply=ring.payload_bytes)
-            ).start()
-            self._rpc_client = CxlRpcClient(ring)
+            for shard in shards:
+                ring = ShmRing(
+                    n_slots=cfg.index_rpc_slots,
+                    payload_bytes=cfg.index_rpc_payload,
+                )
+                self._rpc_servers.append(
+                    CxlRpcServer(
+                        ring,
+                        make_index_handler(shard, max_reply=ring.payload_bytes),
+                    ).start()
+                )
+                self._rpc_clients.append(CxlRpcClient(ring))
+        if tcfg.enabled:
+            # in index_rpc mode the migrator's metadata ops (owners_of /
+            # remap_many / evict_blocks) go over the ring like everything
+            # else — the migration daemon no longer has to be co-located
+            # with the index; only the payload copies touch the pool
+            self.migrator = MigrationEngine(
+                self.pool, self._index_view(), tcfg, queues=self.queues
+            )
+        else:
+            self.migrator = None
         self.engines: list[EngineInstance] = []
         self._rr = 0
         for i in range(cfg.n_engines):
             self.engines.append(self._make_engine(i))
         self.requests: list[Request] = []
 
-    def close(self) -> None:
-        """Stop the metadata-service thread (index_rpc mode; no-op else).
+    def _make_index(self):
+        if self.cfg.index_shards > 1:
+            return ShardedIndex(self.pool, self.cfg.index_shards)
+        return GlobalIndex(self.pool)
 
-        The poll thread busy-spins (daemon, dies with the process), so an
+    def _index_view(self):
+        """The metadata plane as engines/migrator must reach it: the
+        co-located object in-process, an RPC proxy in index_rpc mode.
+        Hashing stays shared cluster-wide either way (one PrefixHasher)."""
+        if not self._rpc_clients:
+            return self.index
+        from repro.core.wire import RpcIndexClient, ShardedRpcIndexClient
+
+        bt = self.pool.layout.block_tokens
+        if len(self._rpc_clients) > 1:
+            return ShardedRpcIndexClient(
+                self._rpc_clients, block_tokens=bt, hasher=self.index.hasher
+            )
+        return RpcIndexClient(
+            self._rpc_clients[0], block_tokens=bt, hasher=self.index.hasher
+        )
+
+    @property
+    def _rpc_server(self):
+        """First shard's server (compat probe; see ``_rpc_servers``)."""
+        return self._rpc_servers[0] if self._rpc_servers else None
+
+    @property
+    def _rpc_client(self):
+        """First shard's transport (compat probe; see ``_rpc_clients``)."""
+        return self._rpc_clients[0] if self._rpc_clients else None
+
+    def close(self) -> None:
+        """Stop the metadata-service threads (index_rpc mode; no-op else).
+
+        The poll threads busy-spin (daemon, die with the process), so an
         index_rpc cluster left open skews any in-process measurement that
         follows — use ``with Cluster(...) as c:`` to scope it."""
-        if self._rpc_server is not None:
-            self._rpc_server.stop()
-            self._rpc_server = None
+        for server in self._rpc_servers:
+            server.stop()
+        self._rpc_servers = []
 
     def __enter__(self) -> "Cluster":
         return self
@@ -136,21 +192,12 @@ class Cluster:
             super_block_tokens=cfg.super_block_tokens,
         )
         hbm = HbmPagedCache(cfg.hbm_slots_per_engine, cfg.block_tokens)
-        if self._rpc_client is not None:
-            from repro.core.wire import RpcIndexClient
-
-            # engine-side proxy: hashing stays local, metadata ops cross
-            # the ring as batched binary messages (the migrator and the
-            # cluster's stats keep the co-located index object). One
-            # hasher is shared by all proxies so a request is chain-hashed
-            # once per cluster, not once per engine's routing probe.
-            engine_index = RpcIndexClient(
-                self._rpc_client,
-                block_tokens=self.pool.layout.block_tokens,
-                hasher=self.index.hasher,
-            )
-        else:
-            engine_index = self.index
+        # engine-side proxy in index_rpc mode: hashing stays local,
+        # metadata ops cross the ring(s) as batched binary messages (the
+        # cluster's stats keep the co-located index object). One hasher is
+        # shared by all proxies so a request is chain-hashed once per
+        # cluster, not once per engine's routing probe.
+        engine_index = self._index_view()
         mgr = KVCacheManager(
             self.pool, engine_index, hbm, transfer,
             recompute_cutover=cfg.straggler_cutover,

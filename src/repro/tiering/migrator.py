@@ -23,6 +23,14 @@ media time lands in ``TierStats.migration_busy_s``.
 The engine is driven from ``EngineInstance.advance`` between decode steps:
 each engine calls ``run_until(clock)``; steps fire once on the monotone
 max over all callers (one daemon, many clocks).
+
+``index`` is anything speaking the ``GlobalIndex`` metadata surface the
+migrator needs (``owners_of`` / ``remap_many`` / ``evict_blocks``): the
+co-located ``GlobalIndex``/``ShardedIndex``, or — in ``index_rpc``
+clusters — an ``RpcIndexClient``/``ShardedRpcIndexClient`` proxy, so the
+migration daemon runs AGAINST THE RING (OWNERS/REMAP/EVICT_BLOCKS wire
+ops) and no longer has to live in the metadata service's process. Only
+the payload copies touch the shared pool.
 """
 
 from __future__ import annotations
@@ -31,7 +39,6 @@ import numpy as np
 
 from repro.core import fabric
 from repro.core.fabric import DeviceQueues
-from repro.core.index import GlobalIndex
 from repro.tiering.tiers import TieredPool, TieringConfig
 
 
@@ -39,7 +46,7 @@ class MigrationEngine:
     def __init__(
         self,
         pool: TieredPool,
-        index: GlobalIndex,
+        index,
         cfg: TieringConfig | None = None,
         queues: DeviceQueues | None = None,
     ):
@@ -71,6 +78,28 @@ class MigrationEngine:
                 self._demote(k, now)
         elif fast.free_blocks() > 0:
             self._promote(now)
+        # runs LAST so even a demote step (whose spill eviction can
+        # destroy enqueued ids) leaves the pending set clean
+        self._prune_pending()
+
+    def _prune_pending(self) -> None:
+        """Drop freed / re-referenced / no-longer-committed ids from
+        ``promote_pending`` EVERY step, not just on promote passes: a
+        foreground eviction can free a pending spill block between steps,
+        and a demote-only step used to leave that stale id enqueued (the
+        block-conservation property test pins the invariant that after a
+        step the pending set only names live refcount-1 spill blocks)."""
+        pool = self.pool
+        pending = pool.promote_pending
+        if not pending:
+            return
+        cand = np.fromiter(pending, np.intp, len(pending))
+        local = cand - pool.offset
+        dead = ~(
+            (pool.spill.refcounts[local] == 1) & pool.spill.committed[local]
+        )
+        if dead.any():
+            pending.difference_update(cand[dead].tolist())
 
     # ------------------------------------------------------------------
     def _candidates(self, pool, offset: int) -> np.ndarray:

@@ -1,0 +1,342 @@
+"""Sharded metadata plane (ISSUE-4 tentpole).
+
+Covers:
+  * ``ShardedIndex`` — partition/merge equivalence against an unsharded
+    ``GlobalIndex`` on clean and holed chains, per-shard LRU eviction
+    distribution, ownership fan-out;
+  * ``ShardedRpcIndexClient`` — the same ops over S live rings, including
+    chunking through tiny slots and TRUE parallel posting (a barrier
+    handler that only releases once every shard's request has arrived
+    deadlocks a sequential client, passes a post-all-first one);
+  * cluster integration — ``index_shards=1`` reproduces the unsharded
+    ``index_rpc`` summary stats bit-identically, ``index_shards=4``
+    matches the in-process stats on hole-free traffic with all rings
+    served.
+"""
+
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wire
+from repro.core.index import (
+    GlobalIndex,
+    ShardedIndex,
+    partition_keys,
+    shard_of_key,
+)
+from repro.core.pool import BelugaPool, PoolLayout
+from repro.core.rpc import CxlRpcClient, CxlRpcServer, ShmRing
+from repro.serving.request import Request
+from repro.serving.scheduler import Cluster, ClusterConfig
+
+LAYOUT = PoolLayout(block_tokens=16, n_layers_kv=4, n_kv_heads=2, head_dim=8)
+
+
+def _pool(n_blocks=2048):
+    return BelugaPool(LAYOUT, n_blocks=n_blocks, n_shards=8, backing="meta")
+
+
+def _publish_chain(pool, idx, doc, chain_len):
+    tokens = [doc * 10_000 + i for i in range(chain_len * 16)]
+    keys = idx.keys_for(tokens)
+    blocks = pool.allocate(len(keys))
+    idx.publish_many(keys, blocks, pool.write_blocks(blocks), 16)
+    return tokens, keys, blocks
+
+
+def _sharded_rpc(sidx, payload_bytes=1 << 14, n_slots=8):
+    rings = [
+        ShmRing(n_slots=n_slots, payload_bytes=payload_bytes)
+        for _ in sidx.shards
+    ]
+    servers = [
+        CxlRpcServer(r, wire.make_index_handler(sh, max_reply=r.payload_bytes)).start()
+        for r, sh in zip(rings, sidx.shards)
+    ]
+    clients = [CxlRpcClient(r) for r in rings]
+    proxy = wire.ShardedRpcIndexClient(
+        clients, LAYOUT.block_tokens, hasher=sidx.hasher
+    )
+    return proxy, servers, clients
+
+
+# ---------------------------------------------------------------------------
+# ShardedIndex (in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_routing_is_total_and_order_preserving():
+    keys = [bytes([i]) * 16 for i in range(64)]
+    key_lists, pos_lists = partition_keys(keys, 4)
+    assert sum(map(len, key_lists)) == 64
+    for s, (kl, pl) in enumerate(zip(key_lists, pos_lists)):
+        assert pl == sorted(pl)  # chain order survives the split
+        assert all(shard_of_key(k, 4) == s for k in kl)
+        assert [keys[i] for i in pl] == kl
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_shards=st.integers(1, 5),
+    chain_len=st.integers(1, 48),
+    cut=st.integers(0, 48),
+    seed=st.integers(0, 2**31),
+)
+def test_sharded_index_matches_unsharded_reference(n_shards, chain_len, cut, seed):
+    """match/lookup/filter over a sharded front == unsharded GlobalIndex,
+    including a chain whose published prefix ends mid-way (``cut``)."""
+    cut = min(cut, chain_len)
+    pool_a, pool_b = _pool(), _pool()
+    ref = GlobalIndex(pool_a)
+    sidx = ShardedIndex(pool_b, n_shards)
+    tokens = [seed % 1000 * 100 + i for i in range(chain_len * 16)]
+    keys = ref.keys_for(tokens)
+    blocks_a = pool_a.allocate(cut) if cut else []
+    ref.publish_many(list(keys[:cut]), blocks_a, pool_a.write_blocks(blocks_a), 16)
+    blocks_b = pool_b.allocate(cut) if cut else []
+    sidx.publish_many(list(keys[:cut]), blocks_b, pool_b.write_blocks(blocks_b), 16)
+
+    got = sidx.match_prefix(tokens)
+    want = ref.match_prefix(tokens)
+    assert [k for k, _, _ in got] == [k for k, _, _ in want]
+    assert len(got) == cut
+    assert [b for _, b, _ in got] == blocks_b
+    assert sidx.filter_unpublished(keys) == ref.filter_unpublished(keys)
+    assert [
+        None if e is None else e.block_id for e in sidx.lookup_many(keys[:cut])
+    ] == blocks_b
+    k_o, b_o, _ = sidx.owners_of(blocks_b)
+    assert (k_o, b_o) == (list(keys[:cut]), blocks_b)
+    assert sidx.keys_of_blocks(blocks_b) == list(keys[:cut])
+    assert sidx.stats()["entries"] == cut
+
+
+def test_sharded_match_stops_at_first_hole_not_shard_local_prefix():
+    """A stale entry mid-chain must cut the GLOBAL prefix even when the
+    owning shard's own sub-chain continues past it."""
+    pool = _pool()
+    sidx = ShardedIndex(pool, 3)
+    tokens, keys, blocks = _publish_chain(pool, sidx, 1, 24)
+    hole = 7
+    pool.release([blocks[hole]])  # epoch bump: entry goes stale
+    hits = sidx.match_prefix(tokens)
+    assert len(hits) == hole
+    assert [b for _, b, _ in hits] == blocks[:hole]
+
+
+def test_sharded_evict_lru_spreads_over_shards_and_drains():
+    pool = _pool()
+    sidx = ShardedIndex(pool, 4)
+    chains = [_publish_chain(pool, sidx, d, 8) for d in range(4)]
+    total = 32
+    freed = sidx.evict_lru(10)
+    assert len(freed) == 10
+    assert sidx.stats()["entries"] == total - 10
+    # drain pass picks up the rest even when quotas land on dry shards
+    freed2 = sidx.evict_lru(1000)
+    assert len(freed2) == total - 10
+    assert sidx.stats()["entries"] == 0
+    assert pool.free_blocks() == pool.n_blocks
+    del chains
+
+
+def test_sharded_remap_routes_by_key_and_checks_old_identity():
+    pool = _pool()
+    sidx = ShardedIndex(pool, 4)
+    _, keys, blocks = _publish_chain(pool, sidx, 2, 12)
+    _, _, eps = sidx.owners_of(blocks)
+    nb = pool.allocate(12)
+    ne = pool.write_blocks(nb)
+    stale = list(eps)
+    stale[5] += 99  # one remap must lose the compare-and-swap
+    ok = sidx.remap_many(list(keys), blocks, stale, nb, ne)
+    assert ok == [True] * 5 + [False] + [True] * 6
+    for i, k in enumerate(keys):
+        want = nb[i] if ok[i] else blocks[i]
+        assert sidx.lookup(k).block_id == want
+
+
+def test_sharded_on_evict_fires_from_every_shard():
+    pool = _pool()
+    sidx = ShardedIndex(pool, 4)
+    seen = []
+    sidx.on_evict = seen.append
+    _, keys, _ = _publish_chain(pool, sidx, 3, 16)
+    sidx.evict_lru(16)
+    assert sorted(k for batch in seen for k in batch) == sorted(keys)
+    assert len(seen) >= 2  # more than one shard contributed
+
+
+# ---------------------------------------------------------------------------
+# ShardedRpcIndexClient (live rings)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_rpc_client_matches_in_process_sharded_index():
+    pool = _pool()
+    sidx = ShardedIndex(pool, 4)
+    tokens, keys, blocks = _publish_chain(pool, sidx, 1, 30)
+    proxy, servers, _ = _sharded_rpc(sidx)
+    try:
+        assert proxy.match_prefix(tokens) == sidx.match_prefix(tokens)
+        assert proxy.filter_unpublished(keys) == []
+        assert [e.block_id for e in proxy.lookup_many(keys)] == blocks
+        assert proxy.owners_of(blocks) == sidx.owners_of(blocks)
+        # all rings actually served traffic
+        assert all(s.served > 0 for s in servers)
+        # migration over the wire: remap + evict_blocks
+        nb = pool.allocate(3)
+        ne = pool.write_blocks(nb)
+        _, _, eps = proxy.owners_of(blocks[:3])
+        assert proxy.remap_many(list(keys[:3]), blocks[:3], eps, nb, ne) == [True] * 3
+        pool.release(blocks[:3])
+        assert [b for _, b, _ in proxy.match_prefix(tokens)][:3] == nb
+        assert sorted(proxy.evict_blocks(nb)) == sorted(nb)
+        assert len(proxy.match_prefix(tokens)) == 0
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def test_sharded_rpc_client_chunks_through_tiny_slots():
+    pool = _pool()
+    sidx = ShardedIndex(pool, 3)
+    tokens, keys, blocks = _publish_chain(pool, sidx, 2, 60)
+    proxy, servers, _ = _sharded_rpc(sidx, payload_bytes=128)
+    try:
+        assert proxy._max_match == 7  # ~20-key sub-chains must split
+        assert [b for _, b, _ in proxy.match_prefix(tokens)] == blocks
+        pool.release([blocks[2]])  # early hole: later chunks can't extend
+        assert len(proxy.match_prefix(tokens)) == 2
+        assert proxy.filter_unpublished(keys) == [2]
+        freed = proxy.evict_lru(1000)
+        assert len(freed) == 59
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def test_sharded_rpc_posts_all_shards_before_collecting():
+    """TRUE parallel outstanding RPCs: every shard's handler blocks until
+    ALL shards have received this op's sub-request. A client that
+    collected shard 0 before posting to shard 1 would deadlock here."""
+    pool = _pool()
+    S = 3
+    sidx = ShardedIndex(pool, S)
+    tokens, keys, blocks = _publish_chain(pool, sidx, 1, 24)
+    barrier = threading.Barrier(S)
+    rings = [ShmRing(n_slots=4, payload_bytes=1 << 14) for _ in range(S)]
+
+    def make_handler(shard):
+        inner = wire.make_index_handler(shard)
+
+        def handler(payload: bytes) -> bytes:
+            barrier.wait(timeout=10)  # releases only when all S arrive
+            return inner(payload)
+
+        return handler
+
+    servers = [
+        CxlRpcServer(r, make_handler(sh)).start()
+        for r, sh in zip(rings, sidx.shards)
+    ]
+    try:
+        proxy = wire.ShardedRpcIndexClient(
+            [CxlRpcClient(r) for r in rings],
+            LAYOUT.block_tokens,
+            hasher=sidx.hasher,
+        )
+        # every key list is non-empty for 24 keys over 3 shards, so the
+        # barrier needs all three sub-requests in flight at once
+        assert all(kl for kl in partition_keys(keys, S)[0])
+        hits = proxy.match_prefix_keys(keys)
+        assert [b for _, b, _ in hits] == blocks
+    finally:
+        for s in servers:
+            s.stop()
+
+
+def test_sharded_rpc_fanout_collects_posted_slots_on_error():
+    """If one shard errors, replies already posted to other shards are
+    still collected (or quarantined) — no slot leaks, and the next op
+    runs clean."""
+    pool = _pool()
+    sidx = ShardedIndex(pool, 2)
+    tokens, keys, blocks = _publish_chain(pool, sidx, 4, 16)
+    proxy, servers, clients = _sharded_rpc(sidx, n_slots=2)
+    try:
+        # kill one shard's server so its collect times out
+        servers[1].stop()
+        with pytest.raises(TimeoutError):
+            proxy._fanout(
+                {0: wire.encode_match(keys[:1]), 1: wire.encode_match(keys[1:2])},
+                timeout=0.2,
+            )
+        assert clients[0].stats.requests >= 1  # shard 0 was collected
+        assert clients[1].stats.timeouts == 1
+        # shard 0 still fully usable
+        assert proxy.shards[0].match_prefix_keys(
+            partition_keys(keys, 2)[0][0][:1]
+        )
+    finally:
+        for s in servers:
+            s.stop()
+
+
+# ---------------------------------------------------------------------------
+# cluster integration: index_shards in the serving sim
+# ---------------------------------------------------------------------------
+
+
+def _run_small_cluster(**kw):
+    c = Cluster(
+        ClusterConfig(
+            n_engines=2, pool_blocks=2048, hbm_slots_per_engine=256,
+            index_rpc_slots=8, **kw,
+        ),
+        LAYOUT,
+    )
+    try:
+        base = list(range(512))
+        for i in range(8):
+            c.dispatch(Request(f"r{i}", base, 8, 0.0))
+        s1 = c.run()
+        t0 = max(e.clock for e in c.engines)
+        tail = [Request(f"h{i}", base, 8, t0) for i in range(4)]
+        for r in tail:
+            c.dispatch(r)
+        s2 = c.run()
+        served = [srv.served for srv in c._rpc_servers]
+        assert all(r.hit_tokens > 0 for r in tail)
+        return _strip_shards(s1), _strip_shards(s2), served
+    finally:
+        c.close()
+
+
+def _strip_shards(stats):
+    stats = dict(stats)
+    stats["index"] = {k: v for k, v in stats["index"].items() if k != "shards"}
+    return stats
+
+
+def test_cluster_index_shards_summary_stats_bit_identical():
+    """index_shards=1 over RPC == today's unsharded index_rpc ==
+    in-process, stat for stat; index_shards=4 matches too on this
+    hole-free workload (and every ring served real traffic)."""
+    in_proc = _run_small_cluster()
+    rpc_s1 = _run_small_cluster(index_rpc=True)
+    rpc_s4 = _run_small_cluster(index_rpc=True, index_shards=4)
+    assert in_proc[:2] == rpc_s1[:2]
+    assert in_proc[:2] == rpc_s4[:2]
+    assert rpc_s1[2] and all(n > 0 for n in rpc_s1[2])
+    assert len(rpc_s4[2]) == 4 and all(n > 0 for n in rpc_s4[2])
+
+
+def test_cluster_index_shards_in_process_mode():
+    """Sharding without RPC: the engines call the ShardedIndex front
+    directly; same summary stats on hole-free traffic."""
+    in_proc = _run_small_cluster()
+    sharded = _run_small_cluster(index_shards=4)
+    assert in_proc[:2] == sharded[:2]

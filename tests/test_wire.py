@@ -250,6 +250,60 @@ def test_wire_publish_match_property(n, n_tokens, seed):
     assert ids.tolist() == blocks and eps.tolist() == epochs
 
 
+def test_wire_migration_ops_roundtrip():
+    """OWNERS / REMAP / EVICT_BLOCKS — the migrator's control plane —
+    behave over the codec exactly like the in-process index calls."""
+    pool, idx, chains = _published(n_chains=1, chain_len=6)
+    tokens, keys, blocks = chains[0]
+    # OWNERS: only indexed blocks answer, input order, epochs attached
+    [free] = pool.allocate(1)
+    k, b, e = wire.decode_owners_resp(
+        wire.handle_request(idx, wire.encode_owners(blocks[:3] + [free]))
+    )
+    assert (k, b) == (list(keys[:3]), blocks[:3])
+    ref = idx.owners_of(blocks[:3] + [free])
+    assert (k, b, e) == ref
+    # REMAP: stale (old_id, old_epoch) loses the race, fresh one wins
+    [nb] = pool.allocate(1)
+    [ne] = pool.write_blocks([nb])
+    ok = wire.decode_remap_resp(
+        wire.handle_request(
+            idx,
+            wire.encode_remap(
+                [keys[0], keys[1]], [blocks[0], blocks[1]], [e[0], 10**6],
+                [nb, nb], [ne, ne],
+            ),
+        )
+    )
+    assert ok == [True, False]  # second had a wrong old epoch
+    assert idx.lookup(keys[0]).block_id == nb
+    assert idx.lookup(keys[1]).block_id == blocks[1]
+    # EVICT_BLOCKS: frees exactly the indexed, unreferenced targets
+    freed = wire.decode_evict_resp(
+        wire.handle_request(idx, wire.encode_evict_blocks([nb, blocks[1], free]))
+    )
+    assert freed == [nb, blocks[1]]
+    assert idx.lookup(keys[0]) is None and idx.lookup(keys[1]) is None
+
+
+def test_wire_migration_ops_reject_out_of_range_ids():
+    pool, idx, chains = _published(1, 2)
+    keys, blocks = chains[0][1], chains[0][2]
+    bad = pool.n_blocks + 7
+    for msg in (
+        wire.encode_owners([bad]),
+        wire.encode_evict_blocks([-1]),
+        wire.encode_remap([keys[0]], [bad], [1], [blocks[0]], [1]),
+        wire.encode_remap([keys[0]], [blocks[0]], [1], [-2], [1]),
+    ):
+        with pytest.raises(wire.WireError):
+            wire.handle_request(idx, msg)
+        with pytest.raises(wire.WireError):
+            wire.prevalidate(idx, msg)
+    # nothing mutated
+    assert idx.keys_of_blocks(blocks) == list(keys)
+
+
 # ---------------------------------------------------------------------------
 # RpcIndexClient over a live ring
 # ---------------------------------------------------------------------------
@@ -321,6 +375,89 @@ def test_server_survives_handler_failure():
         # well-formed traffic flows normally afterwards
         assert len(proxy.match_prefix(chains[0][0])) == 4
         assert client.free_slots() == ring.n_slots
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# RPC error accounting + in-band error frames
+# ---------------------------------------------------------------------------
+
+
+def test_rpc_stats_account_failed_round_trips():
+    """RESP_ERROR and timeouts must be VISIBLE in RpcStats: counted, and
+    their wait time folded into total_wait (the old client raised before
+    touching the stats, so error-heavy runs looked like rosy QD=1 runs
+    over the successes only)."""
+    gate = threading.Event()
+
+    def handler(payload: bytes) -> bytes:
+        if payload == b"hang":
+            gate.wait(5)
+            return b"late"
+        if payload == b"boom":
+            raise ValueError("no")
+        return payload
+
+    ring = ShmRing(n_slots=2, payload_bytes=64)
+    server = CxlRpcServer(ring, handler).start()
+    try:
+        client = CxlRpcClient(ring)
+        client.call(b"fine")
+        with pytest.raises(RpcError):
+            client.call(b"boom")
+        wait_after_error = client.stats.total_wait
+        with pytest.raises(TimeoutError):
+            client.call(b"hang", timeout=0.05)
+        s = client.stats
+        assert (s.requests, s.errors, s.timeouts) == (1, 1, 1)
+        assert s.round_trips == 3
+        # the timeout contributed >= its 50 ms deadline of wait
+        assert s.total_wait >= wait_after_error + 0.05
+        assert s.avg_wait() == s.total_wait / 3
+    finally:
+        gate.set()
+        server.stop()
+
+
+def test_error_frame_truncates_on_utf8_character_boundary():
+    """A long non-ASCII handler error must be cut on a CHARACTER boundary
+    when it exceeds the slot: the byte-slice truncation could split a
+    multi-byte UTF-8 sequence and ship mojibake to the caller."""
+    boom = "кэш-блок недействителен: " + "デ" * 40  # >64 B encoded
+
+    def handler(payload: bytes) -> bytes:
+        raise RuntimeError(boom)
+
+    ring = ShmRing(n_slots=1, payload_bytes=64)
+    assert len(f"RuntimeError: {boom}".encode()) > ring.payload_bytes
+    server = CxlRpcServer(ring, handler).start()
+    try:
+        client = CxlRpcClient(ring)
+        with pytest.raises(RpcError) as ei:
+            client.call(b"x")
+        msg = str(ei.value)
+        assert "�" not in msg  # decoded cleanly: no replacement char
+        assert msg.startswith("RuntimeError: кэш-блок")
+        assert len(msg.encode()) <= ring.payload_bytes
+        # a whole number of characters survived the cut
+        full = f"RuntimeError: {boom}"
+        assert full.startswith(msg)
+    finally:
+        server.stop()
+
+
+def test_post_collect_split_round_trip():
+    """post() keeps several requests outstanding; collect() in any order."""
+    ring = ShmRing(n_slots=4, payload_bytes=64)
+    server = CxlRpcServer(ring, lambda p: b"ok:" + p).start()
+    try:
+        client = CxlRpcClient(ring)
+        slots = [client.post(bytes([65 + i]) * 4) for i in range(3)]
+        outs = [client.collect(s) for s in reversed(slots)]
+        assert outs == [b"ok:CCCC", b"ok:BBBB", b"ok:AAAA"]
+        assert client.free_slots() == 4
+        assert client.stats.requests == 3
     finally:
         server.stop()
 
