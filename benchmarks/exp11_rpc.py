@@ -13,15 +13,19 @@ traffic every request really generates:
   * ``publish_many`` batched vs per-key;
   * multi-threaded client throughput over one ring;
   * the paper-calibrated CXL vs RDMA RTT constants alongside (Fig. 15);
-  * the SHARD SWEEP: the same multi-client batched-match load against a
-    metadata plane sharded S in {1,2,4} ways (S rings, S service threads,
-    ``ShardedRpcIndexClient`` posting to every ring before collecting).
-    Two numbers per S: wall keys/s (GIL-capped on this host — all S
-    service threads share one interpreter, which a real deployment does
-    not) and CAPACITY keys/s = chain keys / bottleneck-shard service
-    demand, each shard's sub-chain handler timed single-threaded and
-    contention-free — the throughput the same shard layout sustains when
-    each metadata service thread owns a core (the paper's §6 shape).
+  * the SHARD SWEEP, for BOTH ring transports: the same multi-client
+    batched-match load against a metadata plane sharded S in {1,2,4}
+    ways (S rings, ``ShardedRpcIndexClient`` posting to every ring
+    before collecting), once with S service THREADS in this interpreter
+    and once with S service PROCESSES over shared-memory rings
+    (``repro.core.procserver`` — the paper's deployment, where the
+    metadata service owns its cores).  Two numbers per cell: wall keys/s
+    (thread mode is GIL-capped; process mode scales with S on multi-core
+    hosts, client-side capped on this 2-core container) and CAPACITY
+    keys/s = chain keys / bottleneck-shard service demand, each shard's
+    sub-chain handler timed single-threaded and contention-free — the
+    throughput the same shard layout sustains when each metadata service
+    owns a core (the paper's §6 shape).
 
 Client-side ``RpcStats`` (requests / errors / timeouts, with failed
 round-trips' wait time included in the average) are surfaced per section.
@@ -59,23 +63,37 @@ def _best(fn, iters: int, repeat: int = 3) -> float:
     return best
 
 
-def shard_sweep(n_tokens: int, fast: bool) -> list[dict]:
-    """Multi-client batched-match throughput vs metadata shard count.
+def shard_sweep(
+    n_tokens: int,
+    fast: bool,
+    transport: str = "thread",
+    shard_counts: tuple = (1, 2, 4),
+) -> list[dict]:
+    """Multi-client batched-match throughput vs metadata shard count,
+    for EITHER ring transport.
 
-    Two throughput numbers per shard count:
+    ``transport="thread"``: S service threads in THIS interpreter (the
+    PR-4 shape).  Wall aggregate is then GIL-capped near the 1-thread
+    rate regardless of S — a ceiling the paper's deployment does not
+    have.  ``transport="process"``: each shard's ring lives in a named
+    shared-memory segment served by its OWN OS process
+    (``repro.core.procserver``), so the service side really scales with
+    cores and wall keys/s finally tracks S on a multi-core host (on a
+    2-core container the client interpreter itself becomes the cap).
 
-      * ``wall_keys_per_s`` — real threaded clients against real rings.
-        On this host every service thread shares ONE interpreter (GIL),
-        so wall aggregate is capped near the 1-thread rate regardless of
-        S — a ceiling the paper's deployment (one core per metadata
-        service thread) does not have;
+    Two throughput numbers per cell:
+
+      * ``wall_keys_per_s`` — real threaded clients against real rings,
+        whatever this host's cores/GIL allow;
       * ``capacity_keys_per_s`` — chain keys / BOTTLENECK-shard service
-        time, each shard's sub-chain handler timed single-threaded after
-        the load run (contention-free ``perf_counter``; per-thread CPU
-        clocks are jiffy-quantized on this kernel, so timing inside the
-        threaded run would be noise). This is the plane's sustainable
-        rate once each service thread owns a core: the number the
-        >=1.5x S=4 scaling floor is about.
+        demand, each shard's sub-chain handler timed single-threaded on
+        an identically-published in-process replica after the load run
+        (contention-free ``perf_counter``; per-thread CPU clocks are
+        jiffy-quantized on this kernel, so timing inside the threaded
+        run would be noise).  Service demand is a property of the shard
+        LAYOUT, not the transport: this is the plane's sustainable rate
+        once each service owns a core, the number the >=1.5x S=4
+        scaling floor is about.
     """
     from repro.core.index import partition_keys
 
@@ -83,30 +101,55 @@ def shard_sweep(n_tokens: int, fast: bool) -> list[dict]:
     n_threads, per = (4, 10) if fast else (8, 30)
     svc_iters = 20 if fast else 50
     cells = []
-    for n_shards in (1, 2, 4):
+    for n_shards in shard_counts:
         pool = BelugaPool(lay, 65536, 32, backing="meta")
-        sidx = ShardedIndex(pool, n_shards)
-        rings = [ShmRing(n_slots=64, payload_bytes=1 << 16) for _ in range(n_shards)]
-        servers = [
-            CxlRpcServer(
-                ring, wire.make_index_handler(shard, max_reply=ring.payload_bytes)
-            ).start()
-            for ring, shard in zip(rings, sidx.shards)
-        ]
-        clients = [CxlRpcClient(ring) for ring in rings]
+        servers = []
+        shared_hasher = None
+        on_freed = None
+        if transport == "thread":
+            sidx = ShardedIndex(pool, n_shards)
+            shared_hasher = sidx.hasher
+            clients = []
+            for shard in sidx.shards:
+                ring = ShmRing(n_slots=64, payload_bytes=1 << 16)
+                servers.append(
+                    CxlRpcServer(
+                        ring,
+                        wire.make_index_handler(
+                            shard, max_reply=ring.payload_bytes
+                        ),
+                    ).start()
+                )
+                clients.append(CxlRpcClient(ring))
+        elif transport == "process":
+            from repro.core.procserver import ProcessRpcServer
+
+            spec = pool.share_meta()
+            servers = [
+                ProcessRpcServer(spec, n_slots=64, payload_bytes=1 << 16).start()
+                for _ in range(n_shards)
+            ]
+            clients = [
+                CxlRpcClient(srv.ring, liveness=srv.alive) for srv in servers
+            ]
+            on_freed = pool.release  # deferred cross-process reclaim
+        else:
+            raise ValueError(transport)
         try:
             proxy = wire.ShardedRpcIndexClient(
-                clients, lay.block_tokens, hasher=sidx.hasher
+                clients, lay.block_tokens, hasher=shared_hasher,
+                on_freed=on_freed,
             )
             keys = proxy.keys_for(list(range(n_tokens)))
             blocks = pool.allocate(len(keys))
-            sidx.publish_many(keys, blocks, pool.write_blocks(blocks), 16)
+            proxy.publish_many(list(keys), blocks, pool.write_blocks(blocks), 16)
             for _ in range(5):  # warm (LRU fast path, caches)
                 proxy.match_prefix_keys(keys)
 
             def worker():
                 p = wire.ShardedRpcIndexClient(
-                    clients, lay.block_tokens, hasher=sidx.hasher
+                    clients, lay.block_tokens, hasher=proxy.hasher,
+                    on_freed=on_freed,
                 )
                 for _ in range(per):
                     p.match_prefix_keys(keys)
@@ -118,18 +161,33 @@ def shard_sweep(n_tokens: int, fast: bool) -> list[dict]:
             for t in ts:
                 t.join()
             dt = time.perf_counter() - t0
+            served = [srv.served for srv in servers]
+            errors = sum(c.stats.errors for c in clients)
+            timeouts = sum(c.stats.timeouts for c in clients)
         finally:
             for srv in servers:
-                srv.stop()  # spin threads would skew the service timing
-        # per-shard service demand, single-threaded (see docstring)
-        key_lists, _ = partition_keys(keys, n_shards)
+                srv.close()  # spin threads/processes would skew timing
+            pool.unshare_meta()
+        # per-shard service demand on an in-process replica published with
+        # the same keys (single-threaded, contention-free; see docstring)
+        rpool = BelugaPool(lay, 65536, 32, backing="meta")
+        ridx = ShardedIndex(rpool, n_shards)
+        rkeys = ridx.keys_for(list(range(n_tokens)))
+        rblocks = rpool.allocate(len(rkeys))
+        ridx.publish_many(list(rkeys), rblocks, rpool.write_blocks(rblocks), 16)
+        for _ in range(3):  # engage the MRU-suffix fast path
+            ridx.match_prefix_keys(rkeys)
+        key_lists, _ = partition_keys(rkeys, n_shards)
         service_s = []
-        for shard, kl in zip(sidx.shards, key_lists):
+        for shard, kl in zip(ridx.shards, key_lists):
             msg = wire.encode_match(kl)
-            service_s.append(_best(lambda: wire.handle_request(shard, msg), svc_iters))
+            service_s.append(
+                _best(lambda: wire.handle_request(shard, msg), svc_iters)
+            )
         total_keys = n_threads * per * len(keys)
         cells.append(
             {
+                "transport": transport,
                 "n_shards": n_shards,
                 "n_clients": n_threads,
                 "chains": n_threads * per,
@@ -137,9 +195,9 @@ def shard_sweep(n_tokens: int, fast: bool) -> list[dict]:
                 "wall_keys_per_s": total_keys / dt,
                 "shard_service_us": [s * 1e6 for s in service_s],
                 "capacity_keys_per_s": len(keys) / max(service_s),
-                "served_per_shard": [srv.served for srv in servers],
-                "errors": sum(c.stats.errors for c in clients),
-                "timeouts": sum(c.stats.timeouts for c in clients),
+                "served_per_shard": served,
+                "errors": errors,
+                "timeouts": timeouts,
             }
         )
     return cells
@@ -258,7 +316,13 @@ def run(fast: bool = False) -> list[tuple]:
     # Always paper-scale chains: a 128-key fast-mode chain leaves 32-key
     # sub-chains whose fixed per-message overhead buries the scaling the
     # sweep exists to measure; --fast trims iteration counts instead.
-    results["shard_sweep"] = shard_sweep(15000, fast)
+    results["shard_sweep"] = shard_sweep(15000, fast, transport="thread")
+    # ... and the SAME sweep with one metadata service PROCESS per shard
+    # (shared-memory rings): the deployment where wall keys/s is allowed
+    # to track S because service work leaves this interpreter's GIL
+    results["shard_sweep_process"] = shard_sweep(
+        15000, fast, transport="process"
+    )
 
     m, p = results["match"], results["publish"]
     rows.append(
@@ -295,25 +359,38 @@ def run(fast: bool = False) -> list[tuple]:
          f"requests_ok={cs['requests_ok']};errors={cs['errors']};"
          f"timeouts={cs['timeouts']} (failed round-trips counted + waited)")
     )
-    by_s = {c["n_shards"]: c for c in results["shard_sweep"]}
-    for s, c in sorted(by_s.items()):
-        rows.append(
-            (f"exp11.shard_sweep.s{s}",
-             f"{1e6 * c['wall_s'] / c['chains']:.1f}",
-             f"wall={c['wall_keys_per_s']:.0f}keys/s;"
-             f"capacity={c['capacity_keys_per_s']:.0f}keys/s;"
-             f"bottleneck_service_us={max(c['shard_service_us']):.0f};"
-             f"clients={c['n_clients']};errors={c['errors']}")
-        )
-    cap_x = by_s[4]["capacity_keys_per_s"] / by_s[1]["capacity_keys_per_s"]
-    wall_x = by_s[4]["wall_keys_per_s"] / by_s[1]["wall_keys_per_s"]
-    results["shard_scaling_s4_vs_s1"] = {"capacity": cap_x, "wall": wall_x}
+    sweeps = {
+        "thread": {c["n_shards"]: c for c in results["shard_sweep"]},
+        "process": {c["n_shards"]: c for c in results["shard_sweep_process"]},
+    }
+    for transport, by_s in sweeps.items():
+        tag = "shard_sweep" if transport == "thread" else "shard_sweep_process"
+        for s, c in sorted(by_s.items()):
+            rows.append(
+                (f"exp11.{tag}.s{s}",
+                 f"{1e6 * c['wall_s'] / c['chains']:.1f}",
+                 f"wall={c['wall_keys_per_s']:.0f}keys/s;"
+                 f"capacity={c['capacity_keys_per_s']:.0f}keys/s;"
+                 f"bottleneck_service_us={max(c['shard_service_us']):.0f};"
+                 f"clients={c['n_clients']};errors={c['errors']}")
+            )
+    results["shard_scaling_s4_vs_s1"] = {
+        t: {
+            "capacity": by_s[4]["capacity_keys_per_s"]
+            / by_s[1]["capacity_keys_per_s"],
+            "wall": by_s[4]["wall_keys_per_s"] / by_s[1]["wall_keys_per_s"],
+        }
+        for t, by_s in sweeps.items()
+    }
     with open(out_path, "w") as f:
         json.dump(results, f, indent=2)
+    sc = results["shard_scaling_s4_vs_s1"]
     rows.append(
-        ("exp11.shard_scaling", f"{cap_x:.2f}",
-         f"S4/S1 capacity={cap_x:.2f}x (>=1.5x floor);wall={wall_x:.2f}x "
-         f"(all service threads share one GIL on this host)")
+        ("exp11.shard_scaling", f"{sc['thread']['capacity']:.2f}",
+         f"S4/S1 capacity={sc['thread']['capacity']:.2f}x (>=1.5x floor);"
+         f"wall thread={sc['thread']['wall']:.2f}x (GIL-capped) vs "
+         f"process={sc['process']['wall']:.2f}x (service owns its cores; "
+         f"client side is the residual cap on few-core hosts)")
     )
     return rows
 

@@ -446,24 +446,40 @@ class GlobalIndex:
         return np.nonzero(~ok)[0].tolist()
 
     def evict_lru(self, n: int) -> list[int]:
-        """Evict up to n unreferenced blocks; returns freed block ids."""
+        """Evict up to n unreferenced blocks; returns freed block ids.
+
+        A row is a VICTIM only while the index still owns its block:
+        refcount exactly 1 AND the row's epoch matches the pool's.  A
+        stale row (its block already released — epoch bumped, possibly
+        even REALLOCATED to a new owner) must never be "freed" again:
+        that was a double release, and against a reallocated block it
+        would free someone else's live payload.  Stale rows met during
+        the walk are garbage-collected silently instead — dropped from
+        the index, not counted in ``freed``, not fed to ``on_evict``
+        (they are leftovers, not evictions; the match path's stale-drop
+        doesn't arm ghosts either)."""
         freed: list[int] = []
         dropped: list[bytes] = []
         with self._lock:
             nxt = self._lru_next
             block_id = self._block_id
             refcounts = self.pool.refcounts
+            epochs = self.pool.epochs
+            committed = self.pool.committed
             drop: list[int] = []
+            stale: list[int] = []
             r = int(nxt[_HEAD])
             while r != _TAIL and len(freed) < n:
                 b = int(block_id[r])
-                if refcounts[b] <= 1:
+                if refcounts[b] == 1 and committed[b] and epochs[b] == self._epoch[r]:
                     freed.append(b)
                     dropped.append(self._keys[r])
                     drop.append(r)
+                elif refcounts[b] <= 0 or epochs[b] != self._epoch[r]:
+                    stale.append(r)  # dead row: GC, do NOT re-release
                 r = int(nxt[r])
-            if drop:
-                self._drop_rows(np.asarray(drop, np.int64))
+            if drop or stale:
+                self._drop_rows(np.asarray(drop + stale, np.int64))
         if freed:
             self.pool.release(freed)
         if dropped and self.on_evict is not None:
@@ -473,7 +489,12 @@ class GlobalIndex:
     def evict_blocks(self, block_ids: list[int]) -> list[int]:
         """Evict the entries owning specific blocks (tier-local pressure
         relief: the migrator frees cold spill blocks to make demotion
-        room). Skips blocks with in-flight references; returns freed ids."""
+        room). Skips blocks with in-flight references; returns freed ids.
+
+        Same victim rule as ``evict_lru``: the index must still OWN the
+        block (refcount exactly 1, row epoch current) — a stale row is
+        dropped as garbage without a second ``pool.release`` (which
+        could free a reallocated block under its new owner)."""
         freed: list[int] = []
         dropped: list[bytes] = []
         with self._lock:
@@ -485,12 +506,21 @@ class GlobalIndex:
             m = rows >= 0
             if m.any():
                 cand_ids = ids[m]
-                evictable = self.pool.refcounts[cand_ids] <= 1
-                evictable = np.asarray(evictable, bool)
-                if evictable.any():
-                    drop = rows[m][evictable]
+                cand_rows = rows[m]
+                current = np.asarray(
+                    self.pool.validate_epochs(cand_ids, self._epoch[cand_rows]),
+                    bool,
+                )
+                evictable = (self.pool.refcounts[cand_ids] == 1) & current
+                stale = ~current & np.asarray(
+                    self.pool.refcounts[cand_ids] <= 1, bool
+                )
+                if evictable.any() or stale.any():
+                    drop = cand_rows[evictable | stale]
                     freed = cand_ids[evictable].tolist()
-                    dropped = [self._keys[r] for r in drop.tolist()]
+                    dropped = [
+                        self._keys[r] for r in cand_rows[evictable].tolist()
+                    ]
                     self._drop_rows(drop)
         if freed:
             self.pool.release(freed)
@@ -562,6 +592,12 @@ class GlobalIndex:
                 self._block2row[new_ok] = ro
             return ok.tolist()
 
+    def n_entries(self) -> int:
+        """Occupancy probe: the eviction-pressure signal of the sharded
+        plane (cheap — one lock, one len)."""
+        with self._lock:
+            return len(self._rows)
+
     def stats(self) -> dict:
         with self._lock:
             return {
@@ -603,6 +639,78 @@ def evict_blocks_sharded(shards, block_ids) -> list[int]:
     return freed
 
 
+def evict_lru_pressure(shards, n: int) -> list[int]:
+    """Occupancy-LEVELING eviction over per-shard LRU lists (waterfill).
+
+    The PR-4 policy split the quota BLINDLY (ceil(n/S) per shard,
+    round-robin), so a hot shard holding a handful of live entries lost
+    them while a cold shard sat on hundreds of idle ones.  Here every
+    round samples each live shard's occupancy (``n_entries``) and drains
+    the FULLEST shards down toward a common level: one unit of quota at a
+    time goes to the shard with the largest residual occupancy (ties
+    toward the lower shard index).  A shard below the resulting water
+    level — the hot shard with few entries — is not asked at all while
+    any fuller shard can still absorb the pressure.
+
+    The plan is a deterministic function of shard occupancies, and
+    occupancy (not LRU-head age) is the signal ON PURPOSE: entry counts
+    are identical across transports by construction, while monotonic
+    timestamps are not comparable across service PROCESSES — an age
+    signal would make thread- and process-mode eviction diverge.  The
+    in-process ``ShardedIndex`` and the RPC ``ShardedRpcIndexClient``
+    share THIS function, which is what lets the differential harness
+    hold every transport to identical freed lists.
+
+    A shard that returns fewer victims than asked is out of evictable
+    entries (its ``evict_lru`` walks its whole list) and drops out; the
+    loop re-levels the survivors until the need is met or everyone is
+    dry.  Each round either frees at least one block or removes a shard,
+    so termination is structural.
+    """
+    freed: list[int] = []
+    alive = list(range(len(shards)))
+    while len(freed) < n and alive:
+        occ = {s: shards[s].n_entries() for s in alive}
+        alive = [s for s in alive if occ[s] > 0]
+        if not alive:
+            break
+        need = min(n - len(freed), sum(occ[s] for s in alive))
+        # waterfill, closed form: drain every shard down to the minimal
+        # common level L with sum(max(0, occ-L)) <= need, then hand the
+        # remaining units one each (by shard index) to the shards still
+        # AT the level — exactly the plan of granting one unit at a time
+        # to the largest residual with ties toward the lower index, in
+        # O(S log maxocc) instead of O(need * S)
+        lo, hi = 0, max(occ[s] for s in alive)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if sum(occ[s] - mid for s in alive if occ[s] > mid) <= need:
+                hi = mid
+            else:
+                lo = mid + 1
+        level = lo
+        quota = {s: max(0, occ[s] - level) for s in alive}
+        left = need - sum(quota.values())
+        for s in alive:  # < #shards at the level, by construction
+            if left <= 0:
+                break
+            if occ[s] >= level > 0:
+                quota[s] += 1
+                left -= 1
+        survivors = []
+        for s in alive:
+            k = quota[s]
+            if k <= 0:
+                survivors.append(s)  # below the water level: spared
+                continue
+            got = shards[s].evict_lru(k)
+            freed.extend(got)
+            if len(got) >= k:  # short return = out of victims: drop out
+                survivors.append(s)
+        alive = survivors
+    return freed
+
+
 def partition_keys(
     keys, n_shards: int
 ) -> tuple[list[list[bytes]], list[list[int]]]:
@@ -641,8 +749,8 @@ class ShardedIndex:
         ``partition_keys``);
       * block-keyed ops (``owners_of`` / ``evict_blocks`` /
         ``keys_of_blocks``) ask every shard — only the owner answers;
-      * ``evict_lru`` approximates global LRU by round-robin proportional
-        quotas over the per-shard LRU lists (exact for S=1).
+      * ``evict_lru`` approximates global LRU by occupancy-weighted
+        per-shard quotas (``evict_lru_pressure``; exact for S=1).
 
     S=1 delegates every op verbatim to the single shard: bit-identical to
     an unsharded ``GlobalIndex``. For S>1 two semantics shift slightly,
@@ -666,7 +774,6 @@ class ShardedIndex:
         self.hasher = self.shards[0].hasher
         for sh in self.shards[1:]:
             sh.hasher = self.hasher
-        self._evict_rr = 0
 
     # the ghost-LRU admission filter subscribes to evictions on EVERY
     # shard (ring-served evictions run against the shard objects directly)
@@ -755,23 +862,13 @@ class ShardedIndex:
         return out
 
     def evict_lru(self, n: int) -> list[int]:
-        """Approximate global LRU: proportional quotas round-robin over
-        the per-shard LRU lists, then a drain pass over shards that still
-        have victims when others ran dry."""
+        """Approximate global LRU via occupancy-weighted per-shard quotas
+        (``evict_lru_pressure``): pressure lands on the shards that hold
+        the entries, so a hot shard with a few live entries is spared
+        while a cold, full shard absorbs the eviction."""
         if self.n_shards == 1:
             return self.shards[0].evict_lru(n)
-        freed: list[int] = []
-        S = self.n_shards
-        start = self._evict_rr
-        self._evict_rr = (start + 1) % S
-        for pass_quota in (-(-n // S), n):  # proportional, then drain
-            for k in range(S):
-                need = n - len(freed)
-                if need <= 0:
-                    return freed
-                sh = self.shards[(start + k) % S]
-                freed.extend(sh.evict_lru(min(pass_quota, need)))
-        return freed
+        return evict_lru_pressure(self.shards, n)
 
     def evict_blocks(self, block_ids: list[int]) -> list[int]:
         if self.n_shards == 1:

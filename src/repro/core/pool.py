@@ -99,10 +99,13 @@ class BelugaPool:
         self.interleave = interleave
         self.backing = backing
         self._lock = threading.Lock()
-        # vectorized per-block metadata
+        # vectorized per-block metadata (re-homed into a named shared
+        # segment by ``share_meta`` for cross-process metadata services)
         self.epochs = np.zeros(n_blocks, np.int64)
         self.refcounts = np.zeros(n_blocks, np.int32)
         self.committed = np.zeros(n_blocks, bool)
+        self._meta_segment = None
+        self._meta_spec: dict | None = None
         # free structures: per-shard LIFO stacks (interleave) or one FIFO
         # queue (no interleave: fill shard 0 first, the §5.3 bottleneck)
         if interleave:
@@ -144,6 +147,70 @@ class BelugaPool:
             )
         else:
             raise ValueError(backing)
+
+    # ------------------------------------------------------------------
+    # Cross-process metadata export (paper: pool state IS shared memory)
+    # ------------------------------------------------------------------
+    def share_meta(self) -> dict:
+        """Re-home epochs/refcounts/committed into a named shared segment.
+
+        An out-of-process metadata service (``repro.core.procserver``)
+        attaches the SAME arrays by name (``SharedPoolMeta``) and reads
+        the truth the engines write — epoch validation and refcount
+        checks are plain loads on the shared pool state, exactly the
+        paper's trust model (the service owns no copy of anything).
+        Idempotent; returns the attach spec (plain data, picklable).
+        The pool keeps sole ownership of allocation/release — attachers
+        never mutate.
+        """
+        if self._meta_spec is not None:
+            return self._meta_spec
+        from repro.core.shm import create_segment
+
+        n = self.n_blocks
+        seg = create_segment(13 * n)  # 8 B epoch + 4 B refcount + 1 B flag
+        eps = np.frombuffer(seg.buf, np.int64, n, 0)
+        rcs = np.frombuffer(seg.buf, np.int32, n, 8 * n)
+        com = np.frombuffer(seg.buf, np.bool_, n, 12 * n)
+        with self._lock:
+            eps[:] = self.epochs
+            rcs[:] = self.refcounts
+            com[:] = self.committed
+            self.epochs, self.refcounts, self.committed = eps, rcs, com
+        self._meta_segment = seg
+        self._meta_spec = {
+            "shm_name": seg.name,
+            "n_blocks": n,
+            "block_tokens": self.layout.block_tokens,
+        }
+        import atexit
+
+        atexit.register(self.unshare_meta)  # no leaked /dev/shm entries
+        return self._meta_spec
+
+    def unshare_meta(self) -> None:
+        """Copy metadata back to private arrays and unlink the segment.
+
+        Safe to call repeatedly / when never shared; the pool stays fully
+        functional afterwards (values preserved)."""
+        seg = self._meta_segment
+        if seg is None:
+            return
+        from repro.core.shm import close_segment
+
+        with self._lock:
+            self.epochs = np.array(self.epochs, np.int64)
+            self.refcounts = np.array(self.refcounts, np.int32)
+            self.committed = np.array(self.committed, bool)
+        self._meta_segment = None
+        self._meta_spec = None
+        close_segment(seg, unlink=True)
+        import atexit
+
+        try:
+            atexit.unregister(self.unshare_meta)
+        except Exception:  # noqa: BLE001
+            pass
 
     # ------------------------------------------------------------------
     def shard_of(self, block_id: int) -> int:

@@ -1,0 +1,241 @@
+"""Process-per-shard metadata service over shared-memory rings (paper §6).
+
+Beluga's deployment shape is a metadata service that OWNS ITS OWN CORES
+and serves clients over plain load/store slots in the shared pool — not a
+thread inside the client interpreter.  This module is that shape:
+
+  * ``ProcessRpcServer`` boots ONE OS process per metadata shard.  The
+    child never receives a pickled handler, index, or lock: it gets a
+    ``ShardServiceSpec`` of plain names/numbers and CONSTRUCTS its own
+    ``GlobalIndex`` shard behind the ring — all state it serves lives
+    behind the same trust boundary ``prevalidate``/``reply_bound``
+    (repro.core.wire) already police, so nothing crosses except framed
+    bytes in shared memory;
+  * ``SharedPoolMeta`` attaches the pool's epoch/refcount/committed
+    arrays exported by ``BelugaPool.share_meta`` — the service validates
+    epochs and refcounts against the SAME memory the engines mutate
+    (loads on the shared CXL pool state, per the paper), and never
+    mutates pool state itself: its ``release`` is deferred — freed block
+    ids travel back in the wire reply and the pool-owning process applies
+    the real release (``RpcIndexClient(on_freed=pool.release)``);
+  * shutdown is in-band too: the parent flips the ring's ``CTRL_STOP``
+    word, the child drains and exits; ``atexit`` unlinking plus
+    idempotent ``close()`` guarantee no leaked ``/dev/shm`` segments even
+    when construction dies half-way;
+  * a crashed child is DETECTED, not waited out: clients built with
+    ``liveness=server.alive`` turn an abandoned ring into a fast
+    ``RpcError`` counted in ``RpcStats.errors``.
+"""
+
+from __future__ import annotations
+
+import atexit
+import multiprocessing
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.pool import PoolLayout
+from repro.core.rpc import CTRL_SERVED, CTRL_STOP, ShmRing, drain_ready
+from repro.core.shm import attach_segment, close_segment
+
+
+class SharedPoolMeta:
+    """Attach-side, read-only view of a ``BelugaPool``'s metadata arrays.
+
+    Quacks like the pool surface ``GlobalIndex`` needs — ``n_blocks``,
+    ``layout.block_tokens``, ``refcounts``, ``validate_epochs`` — over the
+    segment ``BelugaPool.share_meta`` exported.  ``release`` is a no-op by
+    design: the service process must never mutate allocator state it does
+    not own; freed ids are shipped back over the wire instead (see module
+    docstring).
+    """
+
+    def __init__(self, shm_name: str, n_blocks: int, block_tokens: int):
+        self._segment = attach_segment(shm_name)
+        self.n_blocks = n_blocks
+        # only block_tokens is meaningful service-side (keys arrive
+        # pre-hashed over the wire); the rest is filler
+        self.layout = PoolLayout(
+            block_tokens=block_tokens, n_layers_kv=1, n_kv_heads=1, head_dim=1
+        )
+        buf = self._segment.buf
+        self.epochs = np.frombuffer(buf, np.int64, n_blocks, 0)
+        self.refcounts = np.frombuffer(buf, np.int32, n_blocks, 8 * n_blocks)
+        self.committed = np.frombuffer(buf, np.bool_, n_blocks, 12 * n_blocks)
+        self.data = None  # metadata-only view: payloads never cross here
+
+    def validate_epochs(self, block_ids, epochs) -> np.ndarray:
+        ids = np.asarray(block_ids, np.intp)
+        return self.committed[ids] & (self.epochs[ids] == np.asarray(epochs))
+
+    def validate_epoch(self, block_id: int, epoch: int) -> bool:
+        return bool(self.validate_epochs([block_id], [epoch])[0])
+
+    def release(self, block_ids) -> None:  # noqa: ARG002
+        """Deferred: the pool-owning process releases the freed ids when
+        the wire reply delivers them (``RpcIndexClient.on_freed``)."""
+
+    def close(self) -> None:
+        if self._segment is None:
+            return
+        self.epochs = self.refcounts = self.committed = None
+        close_segment(self._segment, unlink=False)
+        self._segment = None
+
+
+@dataclass(frozen=True)
+class ShardServiceSpec:
+    """Everything a service child needs to build its shard — plain data.
+
+    No handlers, locks, pools or index objects cross the process
+    boundary: the child attaches the named segments and constructs its
+    own ``GlobalIndex`` (the Beluga trust-boundary discipline).
+    """
+
+    ring_name: str
+    n_slots: int
+    payload_bytes: int
+    pool_shm_name: str
+    n_blocks: int
+    block_tokens: int
+    max_reply: int | None = None
+    handler_delay: float = 0.0  # test hook: slow-service torture
+
+
+def _service_main(spec: ShardServiceSpec) -> None:
+    """Child entry: attach, build the shard, spin until CTRL_STOP."""
+    from repro.core.index import GlobalIndex
+    from repro.core.wire import make_index_handler
+
+    ring = ShmRing.attach(spec.ring_name, spec.n_slots, spec.payload_bytes)
+    pool = SharedPoolMeta(spec.pool_shm_name, spec.n_blocks, spec.block_tokens)
+    index = GlobalIndex(pool)
+    handler = make_index_handler(index, max_reply=spec.max_reply)
+    idle = 0
+    try:
+        # NOTE: no local aliases of ring views here — a surviving view
+        # would keep the mapping exported past ring.close() below
+        while not ring.ctrl[CTRL_STOP]:
+            n = drain_ready(ring, handler, delay=spec.handler_delay)
+            if n:
+                ring.ctrl[CTRL_SERVED] += n
+                idle = 0
+            else:
+                # the paper's service spins on its OWN core; on an
+                # oversubscribed host S pure-spin processes would thrash
+                # the scheduler instead, so back off once the ring has
+                # been empty for a while (hot-path latency unaffected:
+                # the first 200 empty passes still pure-yield)
+                idle += 1
+                time.sleep(0 if idle < 200 else 100e-6)
+    finally:
+        ring.close()
+        pool.close()
+
+
+def _mp_context():
+    """fork where safe (fast, no re-import); spawn otherwise.
+
+    The child touches only the spec plus objects it constructs itself —
+    no inherited locks or threads are ever used — so fork is fine on a
+    bare interpreter.  Once jax is loaded, though, its runtime threads
+    make fork() formally hazardous (jax warns about deadlocks), so we
+    pay the spawn re-import instead: the service import chain
+    (rpc/pool/index/wire) is jax-free on purpose, ~0.4 s."""
+    import sys
+
+    if "jax" in sys.modules:
+        return multiprocessing.get_context("spawn")
+    try:
+        return multiprocessing.get_context("fork")
+    except ValueError:
+        return multiprocessing.get_context("spawn")
+
+
+class ProcessRpcServer:
+    """One metadata service OS process behind one shared-memory ring.
+
+    Lifecycle: ``start`` spawns the child; ``stop`` flips the in-band
+    CTRL_STOP word and joins (escalating to terminate/kill only if the
+    child ignores it); ``close`` additionally releases + unlinks the ring
+    segment.  ``atexit`` holds a cleanup hook from construction until
+    ``close`` so an interrupted run cannot leak ``/dev/shm`` entries.
+    """
+
+    def __init__(
+        self,
+        pool_spec: dict,
+        n_slots: int = 64,
+        payload_bytes: int = 1 << 16,
+        max_reply: int | None = None,
+        handler_delay: float = 0.0,
+    ):
+        self.ring = ShmRing.create_shared(n_slots, payload_bytes)
+        if max_reply is None:
+            max_reply = payload_bytes
+        self.spec = ShardServiceSpec(
+            ring_name=self.ring.shm_name,
+            n_slots=n_slots,
+            payload_bytes=payload_bytes,
+            pool_shm_name=pool_spec["shm_name"],
+            n_blocks=pool_spec["n_blocks"],
+            block_tokens=pool_spec["block_tokens"],
+            max_reply=max_reply,
+            handler_delay=handler_delay,
+        )
+        self.proc = _mp_context().Process(
+            target=_service_main, args=(self.spec,), daemon=True
+        )
+        self._closed = False
+        atexit.register(self.close)
+
+    def start(self) -> "ProcessRpcServer":
+        self.proc.start()
+        return self
+
+    @property
+    def served(self) -> int:
+        """Requests served, read from the ring's shared control word."""
+        ctrl = self.ring.ctrl
+        return 0 if ctrl is None else int(ctrl[CTRL_SERVED])
+
+    def alive(self) -> bool:
+        """Liveness probe for ``CxlRpcClient(liveness=...)``."""
+        proc = self.proc
+        return proc is not None and proc.is_alive()
+
+    def kill(self) -> None:
+        """Crash the service ungracefully (failure-injection hook)."""
+        if self.proc is not None and self.proc.pid is not None:
+            self.proc.kill()
+            self.proc.join(timeout=5)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        proc = self.proc
+        if proc is None or proc.pid is None:
+            return
+        if proc.is_alive() and self.ring.ctrl is not None:
+            self.ring.ctrl[CTRL_STOP] = 1  # in-band shutdown request
+            proc.join(timeout)
+        if proc.is_alive():  # unresponsive child must not stall teardown
+            proc.terminate()
+            proc.join(1.0)
+        if proc.is_alive():
+            proc.kill()
+            proc.join(1.0)
+
+    def close(self) -> None:
+        """Stop the child and release + unlink the ring segment."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self.stop()
+        finally:
+            self.ring.close()
+            try:
+                atexit.unregister(self.close)
+            except Exception:  # noqa: BLE001
+                pass

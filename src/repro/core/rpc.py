@@ -37,7 +37,15 @@ metadata-op codec layered on top):
   * FAILED round-trips are visible in ``RpcStats``: an in-band
     RESP_ERROR bumps ``errors``, a timeout bumps ``timeouts``, and both
     account their wait into ``total_wait`` BEFORE raising — so an
-    error-heavy run can't report a rosy average RTT over successes only.
+    error-heavy run can't report a rosy average RTT over successes only;
+  * the ring optionally lives in a NAMED ``multiprocessing.shared_memory``
+    segment (``ShmRing.create_shared`` / ``ShmRing.attach``): status/req/
+    resp become numpy views over one buffer two OS processes map, so a
+    metadata service can run as its own process (one per shard — see
+    ``repro.core.procserver``) with nothing but load/stores crossing the
+    boundary.  A ``liveness`` probe on the client turns a crashed service
+    into a fast in-band ``RpcError`` (counted in ``RpcStats.errors``)
+    instead of a full-timeout hang per outstanding call.
 """
 
 from __future__ import annotations
@@ -50,10 +58,21 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.fabric import DEFAULT, FabricConstants
+from repro.core.shm import attach_segment, close_segment, create_segment
 
 IDLE, REQ_READY, RESP_READY, RESP_ERROR = 0, 1, 2, 3
 CACHE_LINE = 64
 _LEN = struct.Struct("<I")
+
+# control words at the head of every ring (shared-memory rings expose them
+# cross-process; private rings keep the same layout for uniformity):
+#   CTRL_STOP   — the ring owner flips it to 1 to ask an out-of-process
+#                 service to drain and exit (no signal/pipe: the stop
+#                 request travels the same load/store plane as the data);
+#   CTRL_SERVED — served-request counter maintained by the service, the
+#                 cross-process replacement for ``CxlRpcServer.served``.
+CTRL_STOP, CTRL_SERVED = 0, 1
+_N_CTRL = 2
 
 
 class RpcError(RuntimeError):
@@ -89,18 +108,83 @@ def _truncate_utf8(raw: bytes, cap: int) -> bytes:
 
 
 class ShmRing:
-    """One ring: n_slots request/response slot pairs in a flat buffer."""
+    """One ring: n_slots request/response slot pairs in a flat buffer.
 
-    def __init__(self, n_slots: int = 128, payload_bytes: int = 64):
+    Two backings behind one layout:
+
+      * private (default) — numpy arrays in this process, served by a
+        ``CxlRpcServer`` thread (the PR-3/PR-4 shape, bit-identical);
+      * shared — the SAME arrays carved as views over one named
+        ``multiprocessing.shared_memory`` segment, attachable BY NAME from
+        another process (``create_shared`` / ``attach``).  Status flips
+        and payload bytes then really are plain load/stores on memory two
+        OS processes map — the paper's CXL-RPC slots, not a pickle pipe.
+
+    Layout of the shared segment (all offsets 8-byte aligned):
+        ctrl[2] int64 | status[n_slots] int64 | req | resp
+    """
+
+    def __init__(self, n_slots: int = 128, payload_bytes: int = 64, *,
+                 _segment=None, _owner: bool = True):
         # slot = u32 length header + payload, padded to cache-line
         # multiples (paper: cache-line alignment)
         self.payload_bytes = payload_bytes
         slot = 4 + payload_bytes
         self.slot_bytes = ((slot + CACHE_LINE - 1) // CACHE_LINE) * CACHE_LINE
         self.n_slots = n_slots
-        self.status = np.zeros(n_slots, np.int64)
-        self.req = np.zeros((n_slots, self.slot_bytes), np.uint8)
-        self.resp = np.zeros((n_slots, self.slot_bytes), np.uint8)
+        self._segment = _segment
+        self._owner = _owner
+        self.shm_name = None if _segment is None else _segment.name
+        if _segment is None:
+            self.ctrl = np.zeros(_N_CTRL, np.int64)
+            self.status = np.zeros(n_slots, np.int64)
+            self.req = np.zeros((n_slots, self.slot_bytes), np.uint8)
+            self.resp = np.zeros((n_slots, self.slot_bytes), np.uint8)
+        else:
+            buf = _segment.buf
+            off = 0
+            self.ctrl = np.frombuffer(buf, np.int64, _N_CTRL, off)
+            off += 8 * _N_CTRL
+            self.status = np.frombuffer(buf, np.int64, n_slots, off)
+            off += 8 * n_slots
+            nbytes = n_slots * self.slot_bytes
+            self.req = np.frombuffer(buf, np.uint8, nbytes, off).reshape(
+                n_slots, self.slot_bytes
+            )
+            off += nbytes
+            self.resp = np.frombuffer(buf, np.uint8, nbytes, off).reshape(
+                n_slots, self.slot_bytes
+            )
+
+    # -- shared-memory backing ------------------------------------------
+    @staticmethod
+    def shared_size(n_slots: int, payload_bytes: int) -> int:
+        slot = 4 + payload_bytes
+        slot_bytes = ((slot + CACHE_LINE - 1) // CACHE_LINE) * CACHE_LINE
+        return 8 * _N_CTRL + 8 * n_slots + 2 * n_slots * slot_bytes
+
+    @classmethod
+    def create_shared(cls, n_slots: int = 128, payload_bytes: int = 64) -> "ShmRing":
+        """Ring in a fresh named segment; the creator owns the unlink."""
+        seg = create_segment(cls.shared_size(n_slots, payload_bytes))
+        return cls(n_slots, payload_bytes, _segment=seg, _owner=True)
+
+    @classmethod
+    def attach(cls, name: str, n_slots: int, payload_bytes: int) -> "ShmRing":
+        """Map an existing ring by segment name (the service-process side).
+
+        Geometry travels out-of-band (the spawn spec): the segment holds
+        only slot state, never pickled objects."""
+        seg = attach_segment(name)
+        return cls(n_slots, payload_bytes, _segment=seg, _owner=False)
+
+    def close(self) -> None:
+        """Drop this process's mapping (owner also unlinks the name)."""
+        if self._segment is None:
+            return
+        self.ctrl = self.status = self.req = self.resp = None
+        close_segment(self._segment, unlink=self._owner)
+        self._segment = None
 
     # -- framed slot I/O ------------------------------------------------
     def write_req(self, slot: int, payload: bytes) -> None:
@@ -128,6 +212,41 @@ class ShmRing:
         return buf[slot, 4 : 4 + n].tobytes()
 
 
+def drain_ready(ring: ShmRing, handler, delay: float = 0.0) -> int:
+    """One vectorized pass over a ring: serve every REQ_READY slot.
+
+    Shared by the in-process ``CxlRpcServer`` poll thread and the
+    out-of-process service loop (``repro.core.procserver``) so the two
+    transports run the EXACT same slot protocol.  Returns the number of
+    slots served.  ``delay`` is a test hook: a per-request service stall
+    used to exercise client timeout quarantine against a slow service.
+    """
+    status = ring.status
+    # one vectorized scan finds every posted request; the Python loop
+    # below only touches slots that actually have work
+    ready = np.nonzero(status == REQ_READY)[0]
+    for i in ready.tolist():
+        if delay:
+            time.sleep(delay)
+        # paper: CLFLUSH before reading client-written data
+        payload = ring.read_req(i)
+        # a failing handler (malformed frame, index error, reply larger
+        # than the slot) must never kill the service: the error is
+        # relayed in-band as a RESP_ERROR frame and draining continues
+        try:
+            ring.write_resp(i, handler(payload))
+            status[i] = RESP_READY  # publish (ntstore semantics)
+        except Exception as e:  # noqa: BLE001
+            # truncate on a CHARACTER boundary: a byte-slice could
+            # split a multi-byte UTF-8 char and ship mojibake
+            msg = _truncate_utf8(
+                f"{type(e).__name__}: {e}".encode(), ring.payload_bytes
+            )
+            ring.write_resp(i, msg)
+            status[i] = RESP_ERROR
+    return len(ready)
+
+
 class CxlRpcServer:
     """Spin-polling consumer (the metadata service thread)."""
 
@@ -146,43 +265,32 @@ class CxlRpcServer:
         self._stop.set()
         self._thread.join(timeout=5)
 
+    def close(self):
+        """Lifecycle alias (uniform with ``ProcessRpcServer.close``)."""
+        self.stop()
+
     def _poll_loop(self):
         ring = self.ring
-        status = ring.status
         while not self._stop.is_set():
-            # one vectorized scan finds every posted request; the Python
-            # loop below only touches slots that actually have work
-            ready = np.nonzero(status == REQ_READY)[0]
-            if not len(ready):
+            n = drain_ready(ring, self.handler)
+            if not n:
                 time.sleep(0)  # yield GIL; real impl spins
                 continue
-            for i in ready.tolist():
-                # paper: CLFLUSH before reading client-written data
-                payload = ring.read_req(i)
-                # a failing handler (malformed frame, index error, reply
-                # larger than the slot) must never kill the service
-                # thread: the error is relayed in-band as a RESP_ERROR
-                # frame and the poll loop keeps draining
-                try:
-                    ring.write_resp(i, self.handler(payload))
-                    status[i] = RESP_READY  # publish (ntstore semantics)
-                except Exception as e:  # noqa: BLE001
-                    # truncate on a CHARACTER boundary: a byte-slice could
-                    # split a multi-byte UTF-8 char and ship mojibake
-                    msg = _truncate_utf8(
-                        f"{type(e).__name__}: {e}".encode(), ring.payload_bytes
-                    )
-                    ring.write_resp(i, msg)
-                    status[i] = RESP_ERROR
-                self.served += 1
+            self.served += n
 
 
 class CxlRpcClient:
     def __init__(self, ring: ShmRing, model_fabric: bool = False,
-                 constants: FabricConstants = DEFAULT):
+                 constants: FabricConstants = DEFAULT, liveness=None):
         self.ring = ring
         self.model_fabric = model_fabric
         self.c = constants
+        # optional service-liveness probe (``ProcessRpcServer.alive``): a
+        # ring served by a CRASHED process never flips a status word, so
+        # without the probe every outstanding call burns its full timeout.
+        # With it, collect() fails fast as an ERROR (the service died) —
+        # distinct from a timeout (the service is slow).
+        self.liveness = liveness
         self.stats = RpcStats()
         self._slot_lock = threading.Lock()
         self._free = list(range(ring.n_slots))
@@ -240,12 +348,29 @@ class CxlRpcClient:
         t0 = float(self._t_posted[slot])
         deadline = t0 + timeout
         completed = False
+        spins = 0
         try:
             while (st := int(ring.status[slot])) not in (RESP_READY, RESP_ERROR):
                 if time.perf_counter() > deadline:
                     stats.timeouts += 1
                     stats.total_wait += time.perf_counter() - t0
                     raise TimeoutError("RPC timeout")
+                spins += 1
+                # crashed-service detection (throttled: is_alive is a
+                # syscall): a dead service will never flip this slot, so
+                # fail NOW as an in-band error instead of burning the
+                # timeout — unless the reply landed just before death
+                if (
+                    self.liveness is not None
+                    and not (spins & 0xFF)
+                    and not self.liveness()
+                    and int(ring.status[slot]) not in (RESP_READY, RESP_ERROR)
+                ):
+                    stats.errors += 1
+                    stats.total_wait += time.perf_counter() - t0
+                    raise RpcError(
+                        "metadata service process died (ring abandoned)"
+                    )
                 time.sleep(0)
             out = ring.read_resp(slot)
             ring.status[slot] = IDLE

@@ -1,0 +1,83 @@
+"""Named shared-memory segment helpers (cross-process metadata plane).
+
+The process-per-shard metadata service (``repro.core.procserver``) and the
+shared-memory ring (``repro.core.rpc.ShmRing``) both attach plain
+``multiprocessing.shared_memory`` segments by name — the repro stand-in
+for the paper's CXL pool mappings (every participant sees the same bytes
+via load/store, nothing is pickled across the trust boundary).
+
+Two wrinkles this module hides:
+
+  * on Python < 3.13 *attaching* a segment registers it with the
+    ``resource_tracker`` as if the attacher owned it, so the tracker
+    unlinks (and warns about) segments it does not own when the attaching
+    process exits.  ``attach_segment`` unregisters after attach — only
+    the CREATOR of a segment may unlink it;
+  * numpy views keep the mapping exported: ``close_segment`` drops the
+    caller's views first (caller passes/clears them), then retries the
+    close through a ``gc.collect()`` so a lingering view cannot turn
+    shutdown into a ``BufferError`` crash.
+"""
+
+from __future__ import annotations
+
+import gc
+from multiprocessing import shared_memory
+
+
+def create_segment(size: int) -> shared_memory.SharedMemory:
+    """Create a zero-filled named segment (caller owns the unlink)."""
+    seg = shared_memory.SharedMemory(create=True, size=size)
+    seg.buf[:] = bytes(len(seg.buf))  # deterministic start state
+    return seg
+
+
+def attach_segment(name: str) -> shared_memory.SharedMemory:
+    """Attach an existing segment WITHOUT adopting unlink responsibility.
+
+    Python < 3.13 registers *attachers* with the resource tracker as if
+    they owned the segment, which (a) makes a spawned child's tracker
+    unlink a segment the parent still uses when the child exits, and
+    (b) under fork's shared tracker makes unregister-after-attach delete
+    the creator's registration.  Suppressing the register call during
+    attach avoids both; the creator's registration (and unlink duty) is
+    untouched."""
+    try:
+        from multiprocessing import resource_tracker
+
+        orig_register = resource_tracker.register
+        resource_tracker.register = lambda *a, **k: None
+        try:
+            return shared_memory.SharedMemory(name=name)
+        finally:
+            resource_tracker.register = orig_register
+    except ImportError:  # no tracker on this platform: plain attach
+        return shared_memory.SharedMemory(name=name)
+
+
+def close_segment(seg: shared_memory.SharedMemory | None, *, unlink: bool) -> None:
+    """Close (and optionally unlink) a segment; tolerate stale views.
+
+    Idempotent and safe under double-close/unlink: lifecycle teardown runs
+    from ``Cluster.close``, ``atexit`` hooks AND test cleanups, any of
+    which may win the race.
+    """
+    if seg is None:
+        return
+    try:
+        seg.close()
+    except BufferError:
+        gc.collect()  # a dropped numpy view still held the export
+        try:
+            seg.close()
+        except BufferError:
+            pass
+    except Exception:  # noqa: BLE001
+        pass
+    if unlink:
+        try:
+            seg.unlink()
+        except FileNotFoundError:
+            pass
+        except Exception:  # noqa: BLE001
+            pass

@@ -19,6 +19,7 @@ Message layout (little-endian, keys are fixed 16-byte blake2b digests):
     REMAP    := n:u32  keys[n*16]  old_ids[n*i64]  old_epochs[n*i64]
                        new_ids[n*i64]  new_epochs[n*i64]
     EVICT_BLOCKS := n:u32  block_ids[n*i64]
+    STATS    := n:u32 (ignored)            (occupancy/hit counters probe)
 
     responses:
     MATCH    -> n_ok:u32  block_ids[n_ok*i64]  epochs[n_ok*i64]
@@ -31,6 +32,7 @@ Message layout (little-endian, keys are fixed 16-byte blake2b digests):
     OWNERS   -> m:u32  keys[m*16]  block_ids[m*i64]  epochs[m*i64]
     REMAP    -> n:u32  ok[n*u8]
     EVICT_BLOCKS -> m:u32  freed_block_ids[m*i64]
+    STATS    -> entries:u64  hits:u64  misses:u64
 
 OWNERS / REMAP / EVICT_BLOCKS carry the tier-migration control plane, so
 the ``MigrationEngine`` no longer has to be co-located with the index: its
@@ -60,6 +62,7 @@ from repro.core.index import (
     IndexEntry,
     PrefixHasher,
     evict_blocks_sharded,
+    evict_lru_pressure,
     partition_keys,
     shard_of_key,
 )
@@ -75,10 +78,12 @@ OP_BATCH = 6
 OP_OWNERS = 7
 OP_REMAP = 8
 OP_EVICT_BLOCKS = 9
+OP_STATS = 10
 
 _HDR = struct.Struct("<BI")  # op, count
 _U32 = struct.Struct("<I")
 _PUB_HDR = struct.Struct("<BIi")  # op, count, n_tokens
+_STATS = struct.Struct("<QQQ")  # entries, hits, misses
 
 
 class WireError(ValueError):
@@ -155,6 +160,13 @@ def encode_evict_blocks(block_ids) -> bytes:
     ).tobytes()
 
 
+def encode_stats() -> bytes:
+    """Occupancy + hit/miss counters probe.  Serves two masters: the
+    cluster's summary stats when the index lives in another process, and
+    the per-shard occupancy signal of ``evict_lru_pressure``."""
+    return _HDR.pack(OP_STATS, 0)
+
+
 # ---------------------------------------------------------------------------
 # decode helpers
 # ---------------------------------------------------------------------------
@@ -227,6 +239,11 @@ def decode_owners_resp(buf: bytes) -> tuple[list[bytes], list[int], list[int]]:
     return keys, ids.tolist(), eps.tolist()
 
 
+def decode_stats_resp(buf: bytes) -> tuple[int, int, int]:
+    _need(buf, _STATS.size)
+    return _STATS.unpack_from(buf)
+
+
 def decode_remap_resp(buf: bytes) -> list[bool]:
     _need(buf, 4)
     (n,) = _U32.unpack_from(buf)
@@ -294,6 +311,8 @@ def reply_bound(buf: bytes, _depth: int = 0) -> int:
     if op == OP_EVICT_BLOCKS:
         _need(buf, _HDR.size + 8 * n)
         return 4 + 8 * n
+    if op == OP_STATS:
+        return _STATS.size
     if op == OP_BATCH:
         if _depth >= _MAX_BATCH_DEPTH:
             raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
@@ -433,6 +452,9 @@ def handle_request(
             _check_block_ids(index, ids, "EVICT_BLOCKS")
         freed = index.evict_blocks(ids.tolist())
         return _U32.pack(len(freed)) + np.asarray(freed, np.int64).tobytes()
+    if op == OP_STATS:
+        s = index.stats()
+        return _STATS.pack(s["entries"], s["hits"], s["misses"])
     if op == OP_BATCH:
         if _depth >= _MAX_BATCH_DEPTH:
             raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
@@ -471,11 +493,19 @@ class RpcIndexClient:
     (``keys_for``) runs locally, every metadata op is one batched
     round-trip. Ops whose chain exceeds one ring slot are split
     transparently (match splits stop early on a short chunk, so the
-    prefix property is preserved)."""
+    prefix property is preserved).
+
+    ``on_freed`` is the cross-process pool-reclaim hook: a service
+    living in ANOTHER process must not mutate allocator state, so its
+    evictions only drop index rows and ship the freed block ids back —
+    this client then applies the real ``pool.release`` in the
+    pool-owning process (None for in-process/thread transports, whose
+    server releases directly)."""
 
     def __init__(self, rpc, block_tokens: int, max_payload: int | None = None,
-                 hasher: PrefixHasher | None = None):
+                 hasher: PrefixHasher | None = None, on_freed=None):
         self.rpc = rpc
+        self.on_freed = on_freed
         # hashing is pure computation, so clients on one host can share a
         # hasher (and its request memo) instead of re-deriving the same
         # chain once per engine
@@ -552,6 +582,8 @@ class RpcIndexClient:
         while n > 0:
             k = min(n, self._max_evict)
             got = decode_evict_resp(self.rpc.call(encode_evict(k)))
+            if got and self.on_freed is not None:
+                self.on_freed(got)  # cross-process: reclaim pool blocks
             freed.extend(got)
             if len(got) < k:
                 break
@@ -600,12 +632,29 @@ class RpcIndexClient:
         freed: list[int] = []
         M = self._max_evict  # 8 B per id both ways: EVICT sizing applies
         for off in range(0, len(block_ids), M):
-            freed.extend(
-                decode_evict_resp(
-                    self.rpc.call(encode_evict_blocks(block_ids[off : off + M]))
-                )
+            got = decode_evict_resp(
+                self.rpc.call(encode_evict_blocks(block_ids[off : off + M]))
             )
+            if got and self.on_freed is not None:
+                self.on_freed(got)  # cross-process: reclaim pool blocks
+            freed.extend(got)
         return freed
+
+    # -- occupancy / counters -------------------------------------------
+    def stats(self) -> dict:
+        """Same shape as ``GlobalIndex.stats`` — lets the cluster report
+        index stats when the index lives in another process."""
+        entries, hits, misses = decode_stats_resp(self.rpc.call(encode_stats()))
+        return {
+            "entries": entries,
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / max(1, hits + misses),
+        }
+
+    def n_entries(self) -> int:
+        """Occupancy probe (the ``evict_lru_pressure`` signal)."""
+        return self.stats()["entries"]
 
     def call_batch(self, requests: list[bytes]) -> list[bytes]:
         """Ship k already-encoded ops in ONE ring round-trip."""
@@ -633,7 +682,7 @@ class ShardedRpcIndexClient:
     """
 
     def __init__(self, rpcs, block_tokens: int, max_payload: int | None = None,
-                 hasher: PrefixHasher | None = None):
+                 hasher: PrefixHasher | None = None, on_freed=None):
         if not rpcs:
             raise ValueError("need at least one rpc transport")
         self.rpcs = list(rpcs)
@@ -641,9 +690,13 @@ class ShardedRpcIndexClient:
         self.block_tokens = block_tokens
         self.hasher = hasher if hasher is not None else PrefixHasher(block_tokens)
         # per-shard proxies share the hasher (hash once per front); they
-        # also carry the per-op slot-capacity maths
+        # also carry the per-op slot-capacity maths and the cross-process
+        # pool-reclaim hook (see RpcIndexClient.on_freed)
         self.shards = [
-            RpcIndexClient(r, block_tokens, max_payload, hasher=self.hasher)
+            RpcIndexClient(
+                r, block_tokens, max_payload, hasher=self.hasher,
+                on_freed=on_freed,
+            )
             for r in self.rpcs
         ]
         # rings may differ in slot size: fan-out chunks use the tightest
@@ -808,31 +861,16 @@ class ShardedRpcIndexClient:
 
     # -- eviction + migration control plane ------------------------------
     def evict_lru(self, n: int) -> list[int]:
-        """Approximate global LRU (same policy as ``ShardedIndex``):
-        parallel proportional rounds; shards that run dry drop out and the
-        survivors absorb the remainder."""
+        """Occupancy-weighted eviction — the EXACT policy function the
+        in-process ``ShardedIndex`` runs (``evict_lru_pressure``), with
+        each per-shard probe/evict going over that shard's ring.  Shared
+        code is what keeps the two planes in lockstep: the differential
+        harness asserts identical freed lists transport-for-transport.
+        Eviction is pressure-relief (not request-path) traffic, so the
+        sequential rounds are fine."""
         if self.n_shards == 1:
             return self.shards[0].evict_lru(n)
-        freed: list[int] = []
-        active = set(range(self.n_shards))
-        while len(freed) < n and active:
-            need = n - len(freed)
-            alive = sorted(active)
-            base, extra = divmod(need, len(alive))
-            asks = {}
-            for j, s in enumerate(alive):
-                k = min(base + (1 if j < extra else 0), self._max_evict)
-                if k > 0:
-                    asks[s] = k
-            if not asks:
-                break
-            resp = self._fanout({s: encode_evict(k) for s, k in asks.items()})
-            for s, k in asks.items():
-                got = decode_evict_resp(resp[s])
-                freed.extend(got)
-                if len(got) < k:
-                    active.discard(s)
-        return freed
+        return evict_lru_pressure(self.shards, n)
 
     def owners_of(
         self, block_ids
@@ -904,3 +942,19 @@ class ShardedRpcIndexClient:
         # round-trips); this op is background-migrator traffic, so the
         # lost parallelism is not on the request path
         return evict_blocks_sharded(self.shards, block_ids)
+
+    def stats(self) -> dict:
+        """Aggregate per-shard counters — same shape as
+        ``ShardedIndex.stats`` (``shards`` occupancy list for S>1)."""
+        if self.n_shards == 1:
+            return self.shards[0].stats()
+        per = [s.stats() for s in self.shards]
+        hits = sum(p["hits"] for p in per)
+        misses = sum(p["misses"] for p in per)
+        return {
+            "entries": sum(p["entries"] for p in per),
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": hits / max(1, hits + misses),
+            "shards": [p["entries"] for p in per],
+        }

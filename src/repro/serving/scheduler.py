@@ -48,6 +48,17 @@ class ClusterConfig:
     index_rpc: bool = False
     index_rpc_slots: int = 64
     index_rpc_payload: int = 1 << 16
+    # ring transport, orthogonal to index_shards (index_rpc mode only):
+    #   "thread"  — rings are private arrays served by poll THREADS in
+    #               this interpreter (PR-3/PR-4 shape; wall throughput is
+    #               GIL-capped, virtual-time stats are the reference);
+    #   "process" — every shard's ring lives in a NAMED shared-memory
+    #               segment served by its own OS PROCESS
+    #               (repro.core.procserver): the paper's deployment —
+    #               the metadata service owns its cores, the pool's
+    #               epoch/refcount state is shared load/store memory,
+    #               and nothing but framed bytes crosses the boundary.
+    index_transport: str = "thread"
     # metadata-plane sharding (paper §6: the metadata service scales
     # horizontally): keys partition by digest across S independent
     # GlobalIndex shards; in index_rpc mode each shard gets its OWN
@@ -65,7 +76,39 @@ class ClusterConfig:
 class Cluster:
     def __init__(self, cfg: ClusterConfig, layout: PoolLayout, backing: str = "meta"):
         self.cfg = cfg
+        # pre-seed every field close() touches so a constructor failure
+        # can still tear down cleanly (lifecycle hygiene: a half-built
+        # process-mode cluster must not leak service processes or
+        # /dev/shm segments)
+        self._rpc_servers = []
+        self._rpc_clients = []
+        self._shm_names: list[str] = []
+        self.index = None
+        self.migrator = None
+        self.engines: list[EngineInstance] = []
+        self.requests: list[Request] = []
+        self._rr = 0
+        try:
+            self._build(cfg, layout, backing)
+        except BaseException:
+            self.close()
+            raise
+
+    def _build(self, cfg: ClusterConfig, layout: PoolLayout, backing: str):
         tcfg = cfg.tiering
+        if cfg.index_transport not in ("thread", "process"):
+            raise ValueError(
+                f"index_transport must be 'thread' or 'process', "
+                f"got {cfg.index_transport!r}"
+            )
+        process_mode = cfg.index_rpc and cfg.index_transport == "process"
+        if cfg.index_transport == "process" and not cfg.index_rpc:
+            raise ValueError("index_transport='process' requires index_rpc=True")
+        if process_mode and tcfg.enabled:
+            raise NotImplementedError(
+                "tiering + process transport: the TieredPool's two-pool "
+                "metadata is not shared-memory exportable yet (ROADMAP)"
+            )
         if tcfg.enabled:
             spill = tcfg.spill_blocks or 4 * cfg.pool_blocks
             spill = -(-spill // cfg.pool_shards) * cfg.pool_shards
@@ -96,14 +139,40 @@ class Cluster:
                 interleave=cfg.interleave,
                 backing=backing,
             )
-            self.index = self._make_index()
+            # process transport: no in-process index exists AT ALL — each
+            # shard's GlobalIndex is constructed inside its own service
+            # process (building one here would be pure startup waste)
+            self.index = None if process_mode else self._make_index()
             self.queues = None
-        self._rpc_servers = []
-        self._rpc_clients = []
-        if cfg.index_rpc:
+        if process_mode:
+            # the metadata plane leaves this interpreter: pool metadata
+            # becomes named shared memory, and each shard's GlobalIndex
+            # is CONSTRUCTED inside its own service process from a plain
+            # spec — no index object exists here at all (stats and the
+            # eviction-pressure signal come back over the wire)
+            from repro.core.index import PrefixHasher
+            from repro.core.procserver import ProcessRpcServer
+            from repro.core.rpc import CxlRpcClient
+
+            self.hasher = PrefixHasher(self.pool.layout.block_tokens)
+            pool_spec = self.pool.share_meta()
+            self._shm_names.append(pool_spec["shm_name"])
+            for _ in range(cfg.index_shards):
+                srv = ProcessRpcServer(
+                    pool_spec,
+                    n_slots=cfg.index_rpc_slots,
+                    payload_bytes=cfg.index_rpc_payload,
+                ).start()
+                self._rpc_servers.append(srv)
+                self._shm_names.append(srv.ring.shm_name)
+                self._rpc_clients.append(
+                    CxlRpcClient(srv.ring, liveness=srv.alive)
+                )
+        elif cfg.index_rpc:
             from repro.core.rpc import CxlRpcClient, CxlRpcServer, ShmRing
             from repro.core.wire import make_index_handler
 
+            self.hasher = self.index.hasher
             # one ring + one metadata service thread PER SHARD
             shards = (
                 self.index.shards if cfg.index_shards > 1 else [self.index]
@@ -120,6 +189,8 @@ class Cluster:
                     ).start()
                 )
                 self._rpc_clients.append(CxlRpcClient(ring))
+        else:
+            self.hasher = self.index.hasher
         if tcfg.enabled:
             # in index_rpc mode the migrator's metadata ops (owners_of /
             # remap_many / evict_blocks) go over the ring like everything
@@ -130,11 +201,8 @@ class Cluster:
             )
         else:
             self.migrator = None
-        self.engines: list[EngineInstance] = []
-        self._rr = 0
         for i in range(cfg.n_engines):
             self.engines.append(self._make_engine(i))
-        self.requests: list[Request] = []
 
     def _make_index(self):
         if self.cfg.index_shards > 1:
@@ -144,19 +212,40 @@ class Cluster:
     def _index_view(self):
         """The metadata plane as engines/migrator must reach it: the
         co-located object in-process, an RPC proxy in index_rpc mode.
-        Hashing stays shared cluster-wide either way (one PrefixHasher)."""
+        Hashing stays shared cluster-wide either way (one PrefixHasher).
+
+        In PROCESS transport the service must not touch allocator state
+        it doesn't own, so ring-served evictions defer the pool release:
+        the proxy reclaims the freed ids here, in the pool-owning
+        process (``on_freed``)."""
         if not self._rpc_clients:
             return self.index
         from repro.core.wire import RpcIndexClient, ShardedRpcIndexClient
 
         bt = self.pool.layout.block_tokens
+        on_freed = self.pool.release if self.index is None else None
         if len(self._rpc_clients) > 1:
             return ShardedRpcIndexClient(
-                self._rpc_clients, block_tokens=bt, hasher=self.index.hasher
+                self._rpc_clients, block_tokens=bt, hasher=self.hasher,
+                on_freed=on_freed,
             )
         return RpcIndexClient(
-            self._rpc_clients[0], block_tokens=bt, hasher=self.index.hasher
+            self._rpc_clients[0], block_tokens=bt, hasher=self.hasher,
+            on_freed=on_freed,
         )
+
+    def _index_stats(self) -> dict:
+        """Index counters for ``run``: local object, or over the wire
+        when the plane lives in service processes (same dict shape)."""
+        if self.index is not None:
+            return self.index.stats()
+        return self._index_view().stats()
+
+    def shm_segment_names(self) -> list[str]:
+        """Named shared-memory segments this cluster currently owns
+        (process transport; empty otherwise/after close) — the hygiene
+        tests assert every one of them is unlinked on exit."""
+        return list(self._shm_names)
 
     @property
     def _rpc_server(self):
@@ -169,14 +258,23 @@ class Cluster:
         return self._rpc_clients[0] if self._rpc_clients else None
 
     def close(self) -> None:
-        """Stop the metadata-service threads (index_rpc mode; no-op else).
+        """Release the metadata plane (idempotent; safe half-built).
 
-        The poll threads busy-spin (daemon, die with the process), so an
-        index_rpc cluster left open skews any in-process measurement that
-        follows — use ``with Cluster(...) as c:`` to scope it."""
+        Thread transport: stop the busy-spinning poll threads (daemon,
+        die with the process, but left running they skew any in-process
+        measurement that follows).  Process transport: stop every service
+        process AND unlink every named shared-memory segment (rings +
+        pool metadata) — on normal exit, on ``with`` scope exit, and on
+        an exception thrown mid-construction alike; nothing may survive
+        in /dev/shm."""
         for server in self._rpc_servers:
-            server.stop()
+            server.close()  # thread: stop; process: stop + unlink ring
         self._rpc_servers = []
+        # clients stay: their RpcStats remain inspectable post-close
+        pool = getattr(self, "pool", None)
+        if pool is not None and hasattr(pool, "unshare_meta"):
+            pool.unshare_meta()
+        self._shm_names = []
 
     def __enter__(self) -> "Cluster":
         return self
@@ -249,7 +347,7 @@ class Cluster:
             end = until
         start = min((r.arrival for r in self.requests), default=0.0)
         stats = summarize(self.requests, end - start)
-        stats["index"] = self.index.stats()
+        stats["index"] = self._index_stats()
         stats["pool_free"] = self.pool.free_blocks()
         stats["shard_occupancy_max"] = max(self.pool.shard_occupancy() or [0])
         if self.migrator is not None:

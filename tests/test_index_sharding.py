@@ -142,6 +142,59 @@ def test_sharded_evict_lru_spreads_over_shards_and_drains():
     del chains
 
 
+def test_sharded_evict_pressure_spares_hot_shard_with_idle_cold_capacity():
+    """Per-shard eviction pressure (ROADMAP open item): quotas weight by
+    shard OCCUPANCY, so a hot shard holding a handful of live entries is
+    spared while a cold shard with plenty of idle entries absorbs the
+    whole eviction.  The old blind ceil(n/S) split would have taken half
+    the quota out of the hot shard."""
+    pool = _pool()
+    sidx = ShardedIndex(pool, 2)
+    # craft digests routed to a specific shard
+    hot_keys, cold_keys = [], []
+    i = 0
+    while len(hot_keys) < 4 or len(cold_keys) < 24:
+        k = bytes([i % 256, i // 256]) + b"\x00" * 14
+        (hot_keys if shard_of_key(k, 2) == 1 else cold_keys).append(k)
+        i += 1
+    hot_keys, cold_keys = hot_keys[:4], cold_keys[:24]
+    cold_blocks = pool.allocate(24)
+    sidx.publish_many(cold_keys, cold_blocks, pool.write_blocks(cold_blocks), 16)
+    hot_blocks = pool.allocate(4)
+    sidx.publish_many(hot_keys, hot_blocks, pool.write_blocks(hot_blocks), 16)
+    sidx.match_prefix_keys(hot_keys)  # hot shard is busy serving these
+    freed = sidx.evict_lru(12)
+    assert len(freed) == 12
+    assert set(freed) <= set(cold_blocks)  # pressure lands on the cold shard
+    # every hot entry survived (old policy evicted ceil(12/2)=6 incl. all 4)
+    assert all(e is not None for e in sidx.lookup_many(hot_keys))
+    # once the cold shard runs dry the hot shard is still evictable
+    freed2 = sidx.evict_lru(1000)
+    assert len(freed2) == 24 + 4 - 12
+    assert sidx.stats()["entries"] == 0
+
+
+def test_sharded_rpc_evict_pressure_matches_in_process_policy():
+    """The RPC front must run the SAME occupancy-weighted policy: freed
+    lists agree shard-state for shard-state with the in-process front."""
+    pool_a, pool_b = _pool(), _pool()
+    ref = ShardedIndex(pool_a, 3)
+    sidx = ShardedIndex(pool_b, 3)
+    for doc in range(3):
+        for p, idx in ((pool_a, ref), (pool_b, sidx)):
+            tokens = [doc * 10_000 + i for i in range(10 * 16)]
+            keys = idx.keys_for(tokens)
+            blocks = p.allocate(len(keys))
+            idx.publish_many(keys, blocks, p.write_blocks(blocks), 16)
+    proxy, servers, _ = _sharded_rpc(sidx)
+    try:
+        for n in (5, 9, 100):
+            assert proxy.evict_lru(n) == ref.evict_lru(n)
+    finally:
+        for s in servers:
+            s.stop()
+
+
 def test_sharded_remap_routes_by_key_and_checks_old_identity():
     pool = _pool()
     sidx = ShardedIndex(pool, 4)

@@ -1,0 +1,348 @@
+"""Differential property suite: ONE model, every metadata-plane backend.
+
+Random op streams (publish / match / lookup / filter / release-hole /
+evict_lru / evict_blocks / remap) are replayed against every way the repo
+can run the metadata plane:
+
+  * in-process ``GlobalIndex``            (the reference model)
+  * in-process ``ShardedIndex``           (S partitions, one front)
+  * thread-ring                           (ShmRing + CxlRpcServer threads)
+  * process-ring                          (shared-memory ShmRing + one
+                                           metadata service OS process per
+                                           shard, repro.core.procserver)
+
+asserting identical observable results op for op.  This is the single
+harness that pins every transport x sharding combination to one model:
+any divergence — codec, chunking, fan-out merge, eviction-quota policy,
+deferred cross-process pool release — fails here with the exact op trace.
+
+Two comparison scopes, because sharding legitimately changes SOME
+internals: a stale entry mid-chain is garbage-collected per shard, so
+after hole-poking the surviving entry sets may differ between S=1 and
+S>1 (documented in ``ShardedIndex``).  Therefore:
+
+  * CROSS-GROUP (all backends, any S): streams without staleness —
+    publish/match/lookup/filter — must agree everywhere;
+  * WITHIN-GROUP (same S, all transports): the FULL op set, including
+    eviction order, freed lists, remap CAS results, final stats and pool
+    free-block counts, must be bit-identical.
+
+Hypothesis drives extra randomized coverage where installed (CI); the
+seeded replays below always run so the suite is tier-1 everywhere.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wire
+from repro.core.index import GlobalIndex, ShardedIndex
+from repro.core.pool import BelugaPool, PoolLayout
+from repro.core.procserver import ProcessRpcServer
+from repro.core.rpc import CxlRpcClient, CxlRpcServer, ShmRing
+
+LAYOUT = PoolLayout(block_tokens=16, n_layers_kv=4, n_kv_heads=2, head_dim=8)
+MAX_LEN = 8  # longest chain a stream publishes
+
+
+def _key(doc: int, i: int) -> bytes:
+    """Synthetic 16-byte chain keys, identical for every backend."""
+    return hashlib.blake2b(f"{doc}/{i}".encode(), digest_size=16).digest()
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+class Backend:
+    """One (kind, n_shards) metadata plane over its own private pool."""
+
+    def __init__(self, kind: str, n_shards: int):
+        self.kind = kind
+        self.pool = BelugaPool(LAYOUT, n_blocks=4096, n_shards=8, backing="meta")
+        self._servers: list = []
+        if kind == "inproc":
+            self.view = (
+                GlobalIndex(self.pool)
+                if n_shards == 1
+                else ShardedIndex(self.pool, n_shards)
+            )
+        elif kind == "thread":
+            sidx = ShardedIndex(self.pool, n_shards)
+            clients = []
+            for shard in sidx.shards:
+                ring = ShmRing(n_slots=8, payload_bytes=1 << 14)
+                self._servers.append(
+                    CxlRpcServer(
+                        ring,
+                        wire.make_index_handler(
+                            shard, max_reply=ring.payload_bytes
+                        ),
+                    ).start()
+                )
+                clients.append(CxlRpcClient(ring))
+            self.view = wire.ShardedRpcIndexClient(
+                clients, LAYOUT.block_tokens, hasher=sidx.hasher
+            )
+        elif kind == "process":
+            spec = self.pool.share_meta()
+            clients = []
+            for _ in range(n_shards):
+                srv = ProcessRpcServer(
+                    spec, n_slots=8, payload_bytes=1 << 14
+                ).start()
+                self._servers.append(srv)
+                clients.append(CxlRpcClient(srv.ring, liveness=srv.alive))
+            # deferred pool reclaim: ring-served evictions release HERE
+            self.view = wire.ShardedRpcIndexClient(
+                clients, LAYOUT.block_tokens, on_freed=self.pool.release
+            )
+        else:
+            raise ValueError(kind)
+
+    def close(self) -> None:
+        for srv in self._servers:
+            srv.close()
+        self.pool.unshare_meta()
+
+    def __enter__(self) -> "Backend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# op streams + replay
+# ---------------------------------------------------------------------------
+def make_ops(
+    rng: random.Random, n_ops: int, docs: int = 4, staleness: bool = True
+) -> list[tuple]:
+    ops: list[tuple] = []
+    for _ in range(n_ops):
+        r = rng.random()
+        doc = rng.randrange(docs)
+        ln = rng.randint(1, MAX_LEN)
+        if r < 0.30 or not ops:
+            ops.append(("publish", doc, ln))
+        elif r < 0.50:
+            ops.append(("match", doc, ln))
+        elif r < 0.62:
+            ops.append(("lookup", doc, ln))
+        elif r < 0.72:
+            ops.append(("filter", doc))
+        elif not staleness:
+            ops.append(("match", doc, ln))
+        elif r < 0.80:
+            ops.append(("release", doc, rng.randrange(MAX_LEN)))
+        elif r < 0.88:
+            ops.append(("evict_lru", rng.randint(1, 6)))
+        elif r < 0.94:
+            ops.append(("evict_blocks", doc))
+        else:
+            ops.append(("remap", doc, rng.randrange(MAX_LEN)))
+    return ops
+
+
+def replay(backend: Backend, ops: list[tuple]) -> list:
+    """Run one op stream; every return value becomes an observation.
+
+    Pool-side effects (allocate/write/release) are driven HERE, from the
+    pool-owning side, exactly as the manager does — the index backends
+    only ever see metadata ops.  A ``gone`` set guards pool ops against
+    re-releasing blocks the stream already freed; it is rebuilt from the
+    backend's OWN observations, so the guard never masks a divergence.
+    """
+    pool, view = backend.pool, backend.view
+    chains: dict[int, tuple[list[bytes], list[int], list[int]]] = {}
+    gone: set[int] = set()
+    obs: list = []
+    for op in ops:
+        kind = op[0]
+        if kind == "publish":
+            _, doc, ln = op
+            keys = [_key(doc, i) for i in range(ln)]
+            blocks = pool.allocate(ln)
+            eps = pool.write_blocks(blocks)
+            view.publish_many(keys, blocks, eps, LAYOUT.block_tokens)
+            gone.difference_update(blocks)  # reallocated: live again
+            chains[doc] = (keys, blocks, eps)
+            obs.append(("publish", doc, tuple(blocks), tuple(eps)))
+        elif kind == "match":
+            _, doc, ln = op
+            keys = [_key(doc, i) for i in range(ln)]
+            hits = view.match_prefix_keys(keys)
+            obs.append(("match", doc, tuple((b, e) for _, b, e in hits)))
+        elif kind == "lookup":
+            _, doc, ln = op
+            keys = [_key(doc, i) for i in range(ln)]
+            got = view.lookup_many(keys)
+            obs.append(
+                (
+                    "lookup",
+                    doc,
+                    tuple(
+                        None
+                        if e is None
+                        else (e.block_id, e.epoch, e.n_tokens)
+                        for e in got
+                    ),
+                )
+            )
+        elif kind == "filter":
+            _, doc = op
+            keys = [_key(doc, i) for i in range(MAX_LEN)]
+            obs.append(("filter", doc, tuple(view.filter_unpublished(keys))))
+        elif kind == "release":
+            _, doc, i = op
+            ch = chains.get(doc)
+            if ch is not None and i < len(ch[1]) and ch[1][i] not in gone:
+                b = ch[1][i]
+                pool.release([b])
+                gone.add(b)
+                obs.append(("release", doc, b))
+        elif kind == "evict_lru":
+            freed = view.evict_lru(op[1])
+            gone.update(freed)
+            obs.append(("evict_lru", tuple(freed)))
+        elif kind == "evict_blocks":
+            _, doc = op
+            ch = chains.get(doc)
+            if ch is not None:
+                freed = view.evict_blocks(ch[1][::2])
+                gone.update(freed)
+                obs.append(("evict_blocks", doc, tuple(freed)))
+        elif kind == "remap":
+            _, doc, i = op
+            ch = chains.get(doc)
+            if ch is None or i >= len(ch[1]) or ch[1][i] in gone:
+                continue
+            keys, blocks, _ = ch
+            found = view.owners_of([blocks[i]])
+            obs.append(("owners", doc, tuple(found[1]), tuple(found[2])))
+            if not found[1]:
+                continue
+            [nb] = pool.allocate(1)
+            [ne] = pool.write_blocks([nb])
+            ok = view.remap_many(
+                [keys[i]], [blocks[i]], [found[2][0]], [nb], [ne]
+            )
+            obs.append(("remap", doc, tuple(ok)))
+            if ok[0]:
+                old = blocks[i]
+                blocks[i] = nb
+                pool.release([old])  # migration done: old copy retired
+                gone.add(old)
+        else:  # pragma: no cover
+            raise ValueError(kind)
+    obs.append(("free_blocks", pool.free_blocks()))
+    return obs
+
+
+def _within_group(ops: list[tuple], n_shards: int) -> None:
+    """All transports at the same sharding: bit-identical, stats included."""
+    results = {}
+    stats = {}
+    for kind in ("inproc", "thread", "process"):
+        with Backend(kind, n_shards) as b:
+            results[kind] = replay(b, ops)
+            stats[kind] = b.view.stats()
+    assert results["thread"] == results["inproc"], (n_shards, "thread")
+    assert results["process"] == results["inproc"], (n_shards, "process")
+    assert stats["thread"] == stats["inproc"], (n_shards, "thread stats")
+    assert stats["process"] == stats["inproc"], (n_shards, "process stats")
+
+
+def _cross_group(ops: list[tuple]) -> None:
+    """Stale-free streams must agree across EVERY backend and sharding."""
+    combos = [
+        ("inproc", 1),
+        ("inproc", 3),
+        ("thread", 1),
+        ("thread", 3),
+        ("process", 1),
+        ("process", 3),
+    ]
+    results = {}
+    for kind, s in combos:
+        with Backend(kind, s) as b:
+            results[(kind, s)] = replay(b, ops)
+    ref = results[("inproc", 1)]
+    for combo, got in results.items():
+        assert got == ref, combo
+
+
+# ---------------------------------------------------------------------------
+# seeded replays — always run (tier-1 on bare interpreters too)
+# ---------------------------------------------------------------------------
+def test_differential_full_ops_all_transports_sharded():
+    for seed in (2, 7):
+        _within_group(make_ops(random.Random(seed), 24), n_shards=3)
+
+
+def test_differential_full_ops_all_transports_unsharded():
+    for seed in (3, 11):
+        _within_group(make_ops(random.Random(seed), 24), n_shards=1)
+
+
+def test_differential_stale_free_streams_agree_across_sharding():
+    for seed in (5, 13):
+        _cross_group(make_ops(random.Random(seed), 20, staleness=False))
+
+
+def test_differential_deterministic_torture_stream():
+    """Hand-built stream that is GUARANTEED to hit every tricky path:
+    stale hole -> prefix cut + per-shard GC, remap CAS (win and lose),
+    targeted evict_blocks, LRU eviction after touches, republish over
+    evicted keys — random draws only sometimes reach these."""
+    ops = [
+        ("publish", 0, 8),
+        ("publish", 1, 6),
+        ("publish", 2, 8),
+        ("release", 0, 3),   # stale hole mid-chain
+        ("match", 0, 8),     # cut at 3; stale row GC'd shard-side
+        ("filter", 0),
+        ("lookup", 0, 8),
+        ("remap", 1, 2),     # CAS win: entry re-points, old copy retired
+        ("match", 1, 6),
+        ("evict_blocks", 1),  # frees every other block of doc 1
+        ("lookup", 1, 6),
+        ("match", 2, 8),     # touch doc 2 -> doc 0 leftovers are LRU
+        ("evict_lru", 6),
+        ("publish", 0, 8),   # republish over evicted/stale keys
+        ("match", 0, 8),
+        ("filter", 1),
+        ("evict_lru", 50),   # drain
+        ("lookup", 2, 8),
+    ]
+    for s in (1, 3):
+        _within_group(ops, n_shards=s)
+
+
+def test_differential_eviction_pressure_stream():
+    """A stream that leans on eviction: quota policy + deferred release
+    must line up transport-for-transport at S=3."""
+    rng = random.Random(42)
+    ops: list[tuple] = [("publish", d, MAX_LEN) for d in range(4)]
+    for _ in range(10):
+        ops.append(("evict_lru", rng.randint(2, 9)))
+        ops.append(("publish", rng.randrange(4), rng.randint(1, MAX_LEN)))
+        ops.append(("match", rng.randrange(4), MAX_LEN))
+    _within_group(ops, n_shards=3)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven coverage (runs wherever hypothesis is installed)
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31), n_ops=st.integers(4, 28))
+def test_differential_property_within_group_sharded(seed, n_ops):
+    _within_group(make_ops(random.Random(seed), n_ops), n_shards=3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31), n_ops=st.integers(4, 24))
+def test_differential_property_cross_group(seed, n_ops):
+    _cross_group(make_ops(random.Random(seed), n_ops, staleness=False))

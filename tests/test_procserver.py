@@ -1,0 +1,394 @@
+"""Cross-process metadata plane: torture + lifecycle (ISSUE-5 tentpole).
+
+Covers:
+  * shared-memory ``ShmRing`` create/attach round-trip (two mappings of
+    one segment really alias);
+  * wire-codec fuzz frames injected through REAL shared memory: the
+    service process answers RESP_ERROR in-band and keeps serving;
+  * slot exhaustion + timeout quarantine against a deliberately SLOW
+    service process, with full recovery once it catches up;
+  * kill -9 of the service process: clients get ``RpcStats.errors`` plus
+    a raised ``RpcError`` FAST — not a hang, not a silent timeout-burn;
+  * cluster lifecycle hygiene: ``index_transport="process"`` clusters
+    unlink every named segment on ``close()``/``__exit__`` AND when the
+    constructor dies half-way (no leaked /dev/shm entries);
+  * thread-vs-process cluster parity: virtual-time exp05-style summary
+    stats identical transport-for-transport (acceptance criterion);
+  * a subprocess-isolated exp11 process-transport smoke with a HARD
+    timeout, so a hung service child fails the suite fast instead of
+    stalling it (the CI guard).
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import subprocess
+import sys
+import time
+from multiprocessing import shared_memory
+
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.core.pool import BelugaPool, PoolLayout
+from repro.core.procserver import ProcessRpcServer, SharedPoolMeta
+from repro.core.rpc import (
+    REQ_READY,
+    RESP_READY,
+    CxlRpcClient,
+    RpcError,
+    ShmRing,
+)
+from repro.serving.request import Request
+from repro.serving.scheduler import Cluster, ClusterConfig
+
+LAYOUT = PoolLayout(block_tokens=16, n_layers_kv=4, n_kv_heads=2, head_dim=8)
+
+
+def _pool(n_blocks=2048):
+    return BelugaPool(LAYOUT, n_blocks=n_blocks, n_shards=8, backing="meta")
+
+
+def _segment_gone(name: str) -> bool:
+    try:
+        seg = shared_memory.SharedMemory(name=name)
+    except FileNotFoundError:
+        return True
+    seg.close()
+    return False
+
+
+def _server(pool, **kw) -> tuple[ProcessRpcServer, CxlRpcClient]:
+    srv = ProcessRpcServer(pool.share_meta(), **kw).start()
+    return srv, CxlRpcClient(srv.ring, liveness=srv.alive)
+
+
+# ---------------------------------------------------------------------------
+# shared-memory ring plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_shm_ring_attach_aliases_creator_mapping():
+    ring = ShmRing.create_shared(n_slots=4, payload_bytes=256)
+    try:
+        other = ShmRing.attach(ring.shm_name, 4, 256)
+        ring.write_req(2, b"hello-over-shm")
+        ring.status[2] = REQ_READY
+        assert other.read_req(2) == b"hello-over-shm"  # same bytes
+        assert int(other.status[2]) == REQ_READY
+        other.write_resp(2, b"answer")
+        other.status[2] = RESP_READY
+        assert ring.read_resp(2) == b"answer"
+        other.close()  # attacher close never unlinks
+        assert not _segment_gone(ring.shm_name)
+    finally:
+        ring.close()
+    assert _segment_gone(ring.shm_name)  # creator close unlinks
+
+
+def test_shared_pool_meta_sees_parent_mutations():
+    pool = _pool()
+    spec = pool.share_meta()
+    view = SharedPoolMeta(spec["shm_name"], spec["n_blocks"], spec["block_tokens"])
+    try:
+        blocks = pool.allocate(4)
+        eps = pool.write_blocks(blocks)
+        assert np.asarray(view.validate_epochs(blocks, eps), bool).all()
+        assert view.refcounts[blocks[0]] == 1
+        pool.release([blocks[1]])  # epoch bump must be visible
+        assert not view.validate_epoch(blocks[1], eps[1])
+        view.release(blocks)  # deferred no-op: parent state untouched
+        assert pool.refcounts[blocks[0]] == 1
+    finally:
+        view.close()
+        pool.unshare_meta()
+    assert _segment_gone(spec["shm_name"])
+    # the pool keeps working on private arrays after unshare
+    more = pool.allocate(2)
+    assert pool.validate_epochs(more, pool.write_blocks(more)).all()
+
+
+# ---------------------------------------------------------------------------
+# torture: fuzz, slow child, killed child
+# ---------------------------------------------------------------------------
+
+
+def test_fuzz_frames_through_real_shared_memory():
+    """Garbage through the actual segment: every malformed frame comes
+    back as an in-band RpcError, the service process survives, and
+    well-formed traffic flows before/between/after."""
+    pool = _pool()
+    srv, client = _server(pool, n_slots=8, payload_bytes=4096)
+    proxy = wire.RpcIndexClient(client, block_tokens=16)
+    rng = random.Random(99)
+    try:
+        tokens = list(range(160))
+        keys = proxy.keys_for(tokens)
+        blocks = pool.allocate(len(keys))
+        proxy.publish_many(list(keys), blocks, pool.write_blocks(blocks), 16)
+        good = wire.encode_match(list(keys))
+        frames = [
+            b"",
+            bytes([99, 0, 0, 0, 0]),            # unknown op
+            good[:3],                            # truncated header
+            good[: len(good) - 7],               # truncated body
+            wire.encode_match([b"k" * 16]) * 2,  # trailing garbage is data
+            bytes([wire.OP_MATCH]) + (10**6).to_bytes(4, "little"),  # huge n
+        ] + [rng.randbytes(rng.randint(1, 120)) for _ in range(20)]
+        errors = 0
+        for frame in frames:
+            try:
+                client.call(frame, timeout=5)
+            except RpcError:
+                errors += 1
+        assert errors >= len(frames) - 1  # trailing-garbage one may pass
+        assert srv.alive()
+        assert client.stats.errors == errors
+        # the index behind the fuzz is untouched and still serves
+        assert [b for _, b, _ in proxy.match_prefix(tokens)] == blocks
+    finally:
+        srv.close()
+        pool.unshare_meta()
+
+
+def test_slow_service_process_timeout_quarantine_and_recovery():
+    """A slow CHILD (handler_delay) exhausts the slots via timeout
+    quarantine; once it catches up the slots are reclaimed and traffic
+    recovers — same guarantees as the thread transport, across a real
+    process boundary."""
+    pool = _pool()
+    srv, client = _server(
+        pool, n_slots=2, payload_bytes=4096, handler_delay=0.25
+    )
+    proxy = wire.RpcIndexClient(client, block_tokens=16)
+    try:
+        keys = [b"\x01" * 16]
+        for _ in range(2):
+            with pytest.raises(TimeoutError):
+                client.call(wire.encode_match(keys), timeout=0.05)
+        assert client.stats.timeouts == 2
+        assert client.free_slots() == 0  # both slots quarantined
+        with pytest.raises(RuntimeError, match="no free RPC slots"):
+            client.call(wire.encode_match(keys))
+        # wait for the child to answer the stale requests, then reclaim
+        deadline = time.time() + 10
+        while srv.served < 2 and time.time() < deadline:
+            time.sleep(0.02)
+        assert srv.served >= 2
+        hits = proxy.match_prefix_keys(keys)  # acquires -> reclaims slot
+        assert hits == []
+        assert client.free_slots() >= 1
+        assert srv.alive()
+    finally:
+        srv.close()
+        pool.unshare_meta()
+
+
+def test_killed_service_process_raises_fast_not_deadlock():
+    pool = _pool()
+    srv, client = _server(pool, n_slots=4, payload_bytes=4096)
+    proxy = wire.RpcIndexClient(client, block_tokens=16)
+    try:
+        tokens = list(range(64))
+        keys = proxy.keys_for(tokens)
+        blocks = pool.allocate(len(keys))
+        proxy.publish_many(list(keys), blocks, pool.write_blocks(blocks), 16)
+        assert len(proxy.match_prefix(tokens)) == 4
+        srv.kill()  # ungraceful: no drain, no reply to anything in flight
+        t0 = time.perf_counter()
+        with pytest.raises(RpcError, match="died"):
+            # generous timeout ON PURPOSE: liveness detection must beat it
+            client.call(wire.encode_match(list(keys)), timeout=30)
+        assert time.perf_counter() - t0 < 5.0  # fast failure, not a hang
+        assert client.stats.errors == 1
+        # an already-POSTED slot fails the same way
+        slot = client.post(wire.encode_match(list(keys)))
+        with pytest.raises(RpcError, match="died"):
+            client.collect(slot, timeout=30)
+        assert client.stats.errors == 2
+    finally:
+        srv.close()
+        pool.unshare_meta()
+
+
+def test_sharded_process_fanout_with_one_dead_shard():
+    """Sharded front over process rings: killing ONE shard's service
+    fails the fan-out with an accounted error while the other shard
+    stays serviceable."""
+    pool = _pool()
+    spec = pool.share_meta()
+    servers = [
+        ProcessRpcServer(spec, n_slots=4, payload_bytes=1 << 14).start()
+        for _ in range(2)
+    ]
+    clients = [
+        CxlRpcClient(s.ring, liveness=s.alive) for s in servers
+    ]
+    proxy = wire.ShardedRpcIndexClient(
+        clients, LAYOUT.block_tokens, on_freed=pool.release
+    )
+    try:
+        tokens = list(range(24 * 16))
+        keys = proxy.keys_for(tokens)
+        blocks = pool.allocate(len(keys))
+        proxy.publish_many(list(keys), blocks, pool.write_blocks(blocks), 16)
+        assert [b for _, b, _ in proxy.match_prefix(tokens)] == blocks
+        servers[1].kill()
+        with pytest.raises(RpcError, match="died"):
+            proxy.match_prefix_keys(keys)
+        assert clients[1].stats.errors >= 1
+        # the surviving shard still answers its own sub-chain
+        from repro.core.index import partition_keys
+
+        kl0 = partition_keys(keys, 2)[0][0]
+        assert len(proxy.shards[0].match_prefix_keys(kl0)) == len(kl0)
+    finally:
+        for s in servers:
+            s.close()
+        pool.unshare_meta()
+
+
+# ---------------------------------------------------------------------------
+# cluster integration: parity + lifecycle hygiene
+# ---------------------------------------------------------------------------
+
+
+def _run_small_cluster(**kw):
+    with Cluster(
+        ClusterConfig(
+            n_engines=2, pool_blocks=2048, hbm_slots_per_engine=256,
+            index_rpc_slots=8, **kw,
+        ),
+        LAYOUT,
+    ) as c:
+        base = list(range(512))
+        for i in range(8):
+            c.dispatch(Request(f"r{i}", base, 8, 0.0))
+        s1 = c.run()
+        t0 = max(e.clock for e in c.engines)
+        tail = [Request(f"h{i}", base, 8, t0) for i in range(4)]
+        for r in tail:
+            c.dispatch(r)
+        s2 = c.run()
+        assert all(r.hit_tokens > 0 for r in tail)
+        served = [srv.served for srv in c._rpc_servers]
+        return s1, s2, served
+
+
+def test_cluster_process_transport_reproduces_thread_stats():
+    """Acceptance: index_transport='process' (S=1 and S=4) reproduces the
+    thread-transport virtual-time summary stats EXACTLY — the transport
+    changes where the service runs, never what it answers."""
+    for shards in (1, 4):
+        thr = _run_small_cluster(index_rpc=True, index_shards=shards)
+        prc = _run_small_cluster(
+            index_rpc=True, index_shards=shards, index_transport="process"
+        )
+        assert prc[:2] == thr[:2], shards
+        assert len(prc[2]) == shards and all(n > 0 for n in prc[2])
+
+
+def test_cluster_process_transport_config_validation():
+    with pytest.raises(ValueError, match="requires index_rpc"):
+        Cluster(ClusterConfig(n_engines=1, index_transport="process"), LAYOUT)
+    with pytest.raises(ValueError, match="thread.*process"):
+        Cluster(
+            ClusterConfig(n_engines=1, index_rpc=True, index_transport="smoke"),
+            LAYOUT,
+        )
+    from repro.tiering import TieringConfig
+
+    with pytest.raises(NotImplementedError, match="tiering"):
+        Cluster(
+            ClusterConfig(
+                n_engines=1, index_rpc=True, index_transport="process",
+                tiering=TieringConfig(enabled=True),
+            ),
+            LAYOUT,
+        )
+
+
+def test_cluster_releases_every_segment_on_exit():
+    c = Cluster(
+        ClusterConfig(
+            n_engines=1, pool_blocks=1024, hbm_slots_per_engine=64,
+            index_rpc=True, index_shards=2, index_rpc_slots=8,
+            index_transport="process",
+        ),
+        LAYOUT,
+    )
+    names = c.shm_segment_names()
+    assert len(names) == 3  # pool meta + one ring per shard
+    assert all(not _segment_gone(n) for n in names)
+    c.close()
+    assert c.shm_segment_names() == []
+    for n in names:
+        assert _segment_gone(n), n
+    c.close()  # idempotent
+
+
+def test_cluster_mid_construction_failure_leaks_nothing(monkeypatch):
+    """An exception AFTER the segments exist (engine construction) must
+    still unlink them all and reap the service processes."""
+    created: list = []
+    real_init = ProcessRpcServer.__init__
+
+    def recording_init(self, *a, **kw):
+        real_init(self, *a, **kw)
+        created.append(self)
+
+    monkeypatch.setattr(ProcessRpcServer, "__init__", recording_init)
+
+    def boom(self, engine_id):
+        raise RuntimeError("engine construction failed")
+
+    monkeypatch.setattr(Cluster, "_make_engine", boom)
+    with pytest.raises(RuntimeError, match="engine construction"):
+        Cluster(
+            ClusterConfig(
+                n_engines=2, pool_blocks=1024, hbm_slots_per_engine=64,
+                index_rpc=True, index_shards=2, index_rpc_slots=8,
+                index_transport="process",
+            ),
+            LAYOUT,
+        )
+    assert len(created) == 2  # the failure really happened downstream
+    for srv in created:
+        assert _segment_gone(srv.spec.ring_name)
+        assert _segment_gone(srv.spec.pool_shm_name)
+        assert not srv.alive()
+
+
+# ---------------------------------------------------------------------------
+# CI smoke: exp11 process transport under a HARD timeout
+# ---------------------------------------------------------------------------
+
+
+def test_exp11_process_transport_smoke_under_hard_timeout():
+    """Runs the exp11 thread-vs-process sweep machinery (tiny config) in
+    a subprocess with a hard kill-timeout: a hung service child fails
+    this test in bounded time instead of stalling the whole workflow —
+    the same guard the CI smoke leg relies on."""
+    code = (
+        "from benchmarks.exp11_rpc import shard_sweep\n"
+        "for transport in ('thread', 'process'):\n"
+        "    cells = shard_sweep(512, fast=True, transport=transport,\n"
+        "                        shard_counts=(1, 2))\n"
+        "    assert [c['n_shards'] for c in cells] == [1, 2], cells\n"
+        "    assert all(c['wall_keys_per_s'] > 0 for c in cells)\n"
+        "    assert all(c['errors'] == 0 and c['timeouts'] == 0 for c in cells)\n"
+        "print('SMOKE-PASS')\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))
+        ),
+        timeout=180,  # HARD guard: hung child == fast failure
+    )
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-3000:])
+    assert "SMOKE-PASS" in out.stdout

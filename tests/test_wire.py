@@ -286,6 +286,74 @@ def test_wire_migration_ops_roundtrip():
     assert idx.lookup(keys[0]) is None and idx.lookup(keys[1]) is None
 
 
+def test_wire_stats_op_roundtrip():
+    """OP_STATS mirrors GlobalIndex.stats — the probe the cluster uses
+    when the index lives in another process, and the occupancy signal of
+    the sharded eviction policy."""
+    pool, idx, chains = _published(n_chains=2, chain_len=5)
+    idx.match_prefix(chains[0][0])
+    idx.match_prefix(chains[1][0][: 3 * 16] + [-1] * 16)  # 3 hits + misses
+    entries, hits, misses = wire.decode_stats_resp(
+        wire.handle_request(idx, wire.encode_stats())
+    )
+    s = idx.stats()
+    assert (entries, hits, misses) == (s["entries"], s["hits"], s["misses"])
+    assert wire.reply_bound(wire.encode_stats()) == 24
+    # and over a live ring via the proxy (hit_rate computed client-side)
+    ring = ShmRing(n_slots=2, payload_bytes=256)
+    server = CxlRpcServer(ring, wire.make_index_handler(idx)).start()
+    try:
+        proxy = wire.RpcIndexClient(CxlRpcClient(ring), block_tokens=16)
+        assert proxy.stats() == idx.stats()
+        assert proxy.n_entries() == s["entries"]
+    finally:
+        server.stop()
+
+
+def test_evict_never_rereleases_stale_rows():
+    """Eviction-safety regression (found by the differential harness):
+    a row whose block was already released — refcount 0, epoch bumped,
+    possibly REALLOCATED to a new owner — must be GC'd by evict_lru /
+    evict_blocks WITHOUT a second pool.release.  The old refcount<=1
+    victim rule double-freed it (and against a reallocated block would
+    have freed the new owner's live payload)."""
+    pool, idx, chains = _published(n_chains=1, chain_len=6)
+    tokens, keys, blocks = chains[0]
+    pool.release([blocks[1], blocks[4]])  # stale rows, refcount 0
+    free_before = pool.free_blocks()
+    # evict_lru walks past the stale rows: they are dropped, not "freed"
+    freed = idx.evict_lru(2)
+    assert freed == [blocks[0], blocks[2]]  # live LRU victims only
+    assert idx.lookup(keys[1]) is None  # stale row GC'd
+    assert pool.free_blocks() == free_before + 2  # no double count
+    # evict_blocks on a stale target: same rule
+    assert idx.evict_blocks([blocks[4]]) == []
+    assert idx.lookup(keys[4]) is None
+    assert pool.free_blocks() == free_before + 2
+    # a REALLOCATED block with a SURVIVING stale row must not be freed
+    # out from under its new owner: publish a fresh key, release its
+    # block (stale row, never walked), then reallocate that same block
+    k = b"\x55" * 16
+    [b] = pool.allocate(1)
+    idx.publish(k, b, pool.write_blocks([b])[0], 16)
+    pool.release([b])  # stale row for k survives, b back in the free pool
+    got, held = [], []
+    while b not in got:  # reacquire b (bounded: pool is finite)
+        got = pool.allocate(1)
+        held += got
+    assert idx.lookup(k) is not None  # the stale row is still there
+    assert idx.evict_blocks([b]) == []  # NOT freed under its new owner
+    assert pool.refcounts[b] == 1  # new owner untouched
+    assert idx.lookup(k) is None  # stale row GC'd instead
+    pool.release(held)
+    # on_evict (ghost arming) never fires for stale-row GC
+    seen = []
+    idx.on_evict = seen.append
+    pool.release([blocks[5]])
+    assert idx.evict_lru(10) == [blocks[3]]
+    assert seen == [[keys[3]]]
+
+
 def test_wire_migration_ops_reject_out_of_range_ids():
     pool, idx, chains = _published(1, 2)
     keys, blocks = chains[0][1], chains[0][2]
