@@ -86,14 +86,15 @@ def shard_sweep(
       * ``wall_keys_per_s`` — real threaded clients against real rings,
         whatever this host's cores/GIL allow;
       * ``capacity_keys_per_s`` — chain keys / BOTTLENECK-shard service
-        demand, each shard's sub-chain handler timed single-threaded on
-        an identically-published in-process replica after the load run
-        (contention-free ``perf_counter``; per-thread CPU clocks are
-        jiffy-quantized on this kernel, so timing inside the threaded
-        run would be noise).  Service demand is a property of the shard
-        LAYOUT, not the transport: this is the plane's sustainable rate
-        once each service owns a core, the number the >=1.5x S=4
-        scaling floor is about.
+        demand, DIRECT-MEASURED by the service itself: the OP_STATS
+        busy-ns timer (accounted inside ``drain_ready``, thread and
+        process transports alike) is snapshotted around a
+        single-threaded, contention-free run of each shard's sub-chain
+        after the load run.  No in-process replica is built — the
+        number comes from the same handler the load hit.  Service
+        demand is a property of the shard LAYOUT, not the transport:
+        this is the plane's sustainable rate once each service owns a
+        core, the number the >=1.5x S=4 scaling floor is about.
     """
     from repro.core.index import partition_keys
 
@@ -164,26 +165,23 @@ def shard_sweep(
             served = [srv.served for srv in servers]
             errors = sum(c.stats.errors for c in clients)
             timeouts = sum(c.stats.timeouts for c in clients)
+            # per-shard service demand direct-measured in the service:
+            # busy-ns delta around a single-threaded run of each shard's
+            # sub-chain (the replica the old harness rebuilt is gone —
+            # the handler that served the load times itself)
+            key_lists, _ = partition_keys(keys, n_shards)
+            service_s = []
+            for srv, cl, kl in zip(servers, clients, key_lists):
+                msg = wire.encode_match(kl)
+                cl.call(msg)  # warm: fault in code paths outside the timer
+                b0 = srv.busy_ns
+                for _ in range(svc_iters):
+                    cl.call(msg)
+                service_s.append((srv.busy_ns - b0) / svc_iters / 1e9)
         finally:
             for srv in servers:
                 srv.close()  # spin threads/processes would skew timing
             pool.unshare_meta()
-        # per-shard service demand on an in-process replica published with
-        # the same keys (single-threaded, contention-free; see docstring)
-        rpool = BelugaPool(lay, 65536, 32, backing="meta")
-        ridx = ShardedIndex(rpool, n_shards)
-        rkeys = ridx.keys_for(list(range(n_tokens)))
-        rblocks = rpool.allocate(len(rkeys))
-        ridx.publish_many(list(rkeys), rblocks, rpool.write_blocks(rblocks), 16)
-        for _ in range(3):  # engage the MRU-suffix fast path
-            ridx.match_prefix_keys(rkeys)
-        key_lists, _ = partition_keys(rkeys, n_shards)
-        service_s = []
-        for shard, kl in zip(ridx.shards, key_lists):
-            msg = wire.encode_match(kl)
-            service_s.append(
-                _best(lambda: wire.handle_request(shard, msg), svc_iters)
-            )
         total_keys = n_threads * per * len(keys)
         cells.append(
             {
@@ -201,6 +199,103 @@ def shard_sweep(
             }
         )
     return cells
+
+
+def chaos_sweep(n_tokens: int, fast: bool, n_shards: int = 2) -> dict:
+    """Kill -9 one supervised metadata shard under live match load and
+    measure the service through the kill -> journal rebuild -> adopt_ring
+    window vs steady state.
+
+    The plane is the self-healing deployment: one ``ShardSupervisor``
+    per shard (crash probe + fresh-ring respawn + journal replay),
+    clients with bounded retry AND ``degrade=True`` — so every chain
+    issued during the outage still RETURNS (holes for the dead shard's
+    positions at worst, a retried full hit once the supervisor swears
+    the shard back in).  Reported:
+
+      * steady-state keys/s (pre-kill, single client, wall);
+      * outage-window keys/s — matched keys actually returned between
+        the kill and the first full-length match (lower: holes + retry
+        backoff), over that window's wall time;
+      * ``recovery_s`` — kill to first full-length match (detection +
+        respawn + journal replay + cut-over + one successful op);
+      * restart/retry/degraded counters, and the journal size replayed.
+    """
+    from repro.core.procserver import ShardSupervisor
+    from repro.core.rpc import RetryPolicy
+
+    lay = PoolLayout(block_tokens=16, n_layers_kv=4, n_kv_heads=2, head_dim=8)
+    pool = BelugaPool(lay, 65536, 32, backing="meta")
+    spec = pool.share_meta()
+    sups = [
+        ShardSupervisor(
+            spec, journal_capacity=65536, probe_interval=0.01,
+            n_slots=64, payload_bytes=1 << 16,
+        ).start()
+        for _ in range(n_shards)
+    ]
+    clients = []
+    for sup in sups:
+        cl = CxlRpcClient(sup.ring, liveness=sup.server.alive)
+        sup.register_client(cl)
+        clients.append(cl)
+    proxy = wire.ShardedRpcIndexClient(
+        clients, lay.block_tokens, on_freed=pool.release,
+        journals=[s.journal for s in sups],
+        retry=RetryPolicy(), degrade=True,
+    )
+    try:
+        for sup in sups:
+            if not sup.wait_ready(10):
+                raise RuntimeError("shard service never became ready")
+        keys = proxy.keys_for(list(range(n_tokens)))
+        blocks = pool.allocate(len(keys))
+        proxy.publish_many(list(keys), blocks, pool.write_blocks(blocks), 16)
+        for _ in range(5):
+            proxy.match_prefix_keys(keys)
+        # steady state
+        iters = 20 if fast else 80
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            proxy.match_prefix_keys(keys)
+        steady_s = (time.perf_counter() - t0) / iters
+        # chaos window: kill shard 0, keep matching until fully healed
+        t_kill = time.perf_counter()
+        sups[0].kill()
+        matched = 0
+        chains = 0
+        recovery_s = None
+        while time.perf_counter() - t_kill < 30.0:
+            hits = proxy.match_prefix_keys(keys)
+            chains += 1
+            matched += len(hits)
+            if len(hits) == len(keys):
+                recovery_s = time.perf_counter() - t_kill
+                break
+        window_s = time.perf_counter() - t_kill
+        # post-recovery steady state (the rebuilt shard serves the same
+        # entries: journal replay restored every confirmed publish)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            proxy.match_prefix_keys(keys)
+        post_s = (time.perf_counter() - t0) / iters
+        return {
+            "n_shards": n_shards,
+            "n_keys": len(keys),
+            "steady_keys_per_s": len(keys) / steady_s,
+            "outage_keys_per_s": matched / window_s,
+            "outage_chains": chains,
+            "recovery_s": recovery_s,
+            "post_recovery_keys_per_s": len(keys) / post_s,
+            "restarts": sum(s.restarts for s in sups),
+            "rpc_retries": sum(c.stats.retries for c in clients),
+            "rpc_degraded_ops": sum(c.stats.degraded_ops for c in clients),
+            "journal_records": [len(s.journal) for s in sups],
+        }
+    finally:
+        for sup in sups:
+            sup.close()
+        pool.unshare_meta()
 
 
 def run(fast: bool = False) -> list[tuple]:
@@ -323,6 +418,10 @@ def run(fast: bool = False) -> list[tuple]:
     results["shard_sweep_process"] = shard_sweep(
         15000, fast, transport="process"
     )
+    # chaos sweep: kill -9 one SUPERVISED shard under load, measure the
+    # kill -> journal rebuild -> adopt window vs steady state (always
+    # paper-scale chains, like the shard sweep; --fast trims iterations)
+    results["chaos"] = chaos_sweep(15000, fast)
 
     m, p = results["match"], results["publish"]
     rows.append(
@@ -391,6 +490,18 @@ def run(fast: bool = False) -> list[tuple]:
          f"wall thread={sc['thread']['wall']:.2f}x (GIL-capped) vs "
          f"process={sc['process']['wall']:.2f}x (service owns its cores; "
          f"client side is the residual cap on few-core hosts)")
+    )
+    ch = results["chaos"]
+    rows.append(
+        ("exp11.chaos_recovery", f"{(ch['recovery_s'] or -1) * 1e3:.0f}",
+         f"kill->rebuild->recover={ch['recovery_s']:.3f}s;"
+         f"steady={ch['steady_keys_per_s']:.0f}keys/s;"
+         f"outage={ch['outage_keys_per_s']:.0f}keys/s;"
+         f"post={ch['post_recovery_keys_per_s']:.0f}keys/s;"
+         f"restarts={ch['restarts']};retries={ch['rpc_retries']};"
+         f"degraded={ch['rpc_degraded_ops']}"
+         if ch["recovery_s"] is not None
+         else "shard NEVER recovered within the 30s chaos window")
     )
     return rows
 

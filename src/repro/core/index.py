@@ -598,6 +598,64 @@ class GlobalIndex:
         with self._lock:
             return len(self._rows)
 
+    # ------------------------------------------------------------------
+    # crash-restart support (the self-healing plane, repro.core.procserver)
+    # ------------------------------------------------------------------
+    def rebuild_from_journal(self, records) -> int:
+        """Replay a shard journal (``repro.core.shm.ShardJournal`` record
+        stream) into this — freshly constructed — index.
+
+        Pure replay, deliberately WITHOUT epoch validation against the
+        pool: a row that had gone stale before the crash must reappear
+        stale, not vanish, so post-restart lookup/match behavior tracks
+        the pre-crash index (match GCs stale rows exactly as it would
+        have).  Entries are inserted in journal order, so the rebuilt LRU
+        approximates the pre-crash recency order (exact up to match
+        touches the journal never sees — covered by the chaos harness's
+        "modulo evictions" contract).  Returns the number of rows."""
+        from repro.core.shm import live_entries
+
+        live = live_entries(records)
+        for k, (bid, epoch, ntk) in live.items():
+            self.publish(k, bid, epoch, max(0, ntk))
+        return len(live)
+
+    def snapshot_entries(
+        self, start: int, max_items: int
+    ) -> tuple[int, list[bytes], list[int], list[int], list[int]]:
+        """One page of the index in LRU order (oldest first).
+
+        Returns ``(total, keys, block_ids, epochs, n_tokens)`` with at
+        most ``max_items`` rows starting ``start`` rows in — the paged
+        OP_SNAPSHOT op the chaos harness uses to diff a rebuilt shard
+        against its pre-crash peer. The cursor is positional: callers
+        page a QUIESCED index (a booting/verifying shard), not a live
+        one."""
+        with self._lock:
+            total = len(self._rows)
+            keys: list[bytes] = []
+            ids: list[int] = []
+            eps: list[int] = []
+            ntk: list[int] = []
+            r = int(self._lru_next[_HEAD])
+            i = 0
+            while r != _TAIL and len(keys) < max_items:
+                if i >= start:
+                    keys.append(self._keys[r])
+                    ids.append(int(self._block_id[r]))
+                    eps.append(int(self._epoch[r]))
+                    ntk.append(int(self._n_tokens[r]))
+                i += 1
+                r = int(self._lru_next[r])
+            return total, keys, ids, eps, ntk
+
+    def restore_entries(self, keys, block_ids, epochs, n_tokens) -> int:
+        """Bulk-insert entries in order (supervisor-pushed rebuild path:
+        the OP_RESTORE twin of ``snapshot_entries``)."""
+        for k, b, e, t in zip(keys, block_ids, epochs, n_tokens):
+            self.publish(k, int(b), int(e), int(t))
+        return len(keys)
+
     def stats(self) -> dict:
         with self._lock:
             return {

@@ -31,14 +31,23 @@ from __future__ import annotations
 
 import atexit
 import multiprocessing
+import threading
 import time
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.pool import PoolLayout
-from repro.core.rpc import CTRL_SERVED, CTRL_STOP, ShmRing, drain_ready
-from repro.core.shm import attach_segment, close_segment
+from repro.core.rpc import (
+    CTRL_BUSY_NS,
+    CTRL_READY,
+    CTRL_SERVED,
+    CTRL_STOP,
+    ShmRing,
+    drain_ready,
+)
+from repro.core.shm import ShardJournal, attach_segment, close_segment
+from repro.distributed.fault_tolerance import HeartbeatMonitor
 
 
 class SharedPoolMeta:
@@ -102,35 +111,52 @@ class ShardServiceSpec:
     block_tokens: int
     max_reply: int | None = None
     handler_delay: float = 0.0  # test hook: slow-service torture
+    journal_name: str | None = None  # replay source for crash-restart
+    journal_capacity: int = 0
+    idle_spin_passes: int = 200  # empty passes before sleeping at all
+    idle_backoff_s: float = 100e-6  # ceiling once the ring has gone cold
 
 
 def _service_main(spec: ShardServiceSpec) -> None:
-    """Child entry: attach, build the shard, spin until CTRL_STOP."""
+    """Child entry: attach, replay the journal, spin until CTRL_STOP."""
     from repro.core.index import GlobalIndex
     from repro.core.wire import make_index_handler
 
     ring = ShmRing.attach(spec.ring_name, spec.n_slots, spec.payload_bytes)
     pool = SharedPoolMeta(spec.pool_shm_name, spec.n_blocks, spec.block_tokens)
     index = GlobalIndex(pool)
-    handler = make_index_handler(index, max_reply=spec.max_reply)
+    if spec.journal_name is not None:
+        # crash-restart rebuild: replay the pool owner's publish journal
+        # BEFORE advertising readiness, so the first request a client
+        # lands after adopt_ring already sees the pre-crash entries
+        journal = ShardJournal.attach(spec.journal_name, spec.journal_capacity)
+        try:
+            index.rebuild_from_journal(journal.records())
+        finally:
+            journal.close()
+    handler = make_index_handler(index, max_reply=spec.max_reply, ctrl=ring.ctrl)
+    ring.ctrl[CTRL_READY] = 1  # supervisor gates adopt_ring on this word
     idle = 0
     try:
-        # NOTE: no local aliases of ring views here — a surviving view
-        # would keep the mapping exported past ring.close() below
+        # NOTE: no ring-view aliases beyond `handler`'s ctrl capture —
+        # `handler` is dropped below before ring.close() so no surviving
+        # view keeps the mapping exported
         while not ring.ctrl[CTRL_STOP]:
-            n = drain_ready(ring, handler, delay=spec.handler_delay)
-            if n:
-                ring.ctrl[CTRL_SERVED] += n
+            # drain_ready accounts CTRL_SERVED / CTRL_BUSY_NS itself
+            if drain_ready(ring, handler, delay=spec.handler_delay):
                 idle = 0
             else:
                 # the paper's service spins on its OWN core; on an
                 # oversubscribed host S pure-spin processes would thrash
                 # the scheduler instead, so back off once the ring has
                 # been empty for a while (hot-path latency unaffected:
-                # the first 200 empty passes still pure-yield)
+                # the first idle_spin_passes empty passes still pure-yield)
                 idle += 1
-                time.sleep(0 if idle < 200 else 100e-6)
+                time.sleep(
+                    0 if idle < spec.idle_spin_passes else spec.idle_backoff_s
+                )
     finally:
+        handler = None  # noqa: F841 — drop the ctrl view before close
         ring.close()
         pool.close()
 
@@ -171,6 +197,9 @@ class ProcessRpcServer:
         payload_bytes: int = 1 << 16,
         max_reply: int | None = None,
         handler_delay: float = 0.0,
+        journal: ShardJournal | None = None,
+        idle_spin_passes: int = 200,
+        idle_backoff_s: float = 100e-6,
     ):
         self.ring = ShmRing.create_shared(n_slots, payload_bytes)
         if max_reply is None:
@@ -184,6 +213,10 @@ class ProcessRpcServer:
             block_tokens=pool_spec["block_tokens"],
             max_reply=max_reply,
             handler_delay=handler_delay,
+            journal_name=None if journal is None else journal.name,
+            journal_capacity=0 if journal is None else journal.capacity,
+            idle_spin_passes=idle_spin_passes,
+            idle_backoff_s=idle_backoff_s,
         )
         self.proc = _mp_context().Process(
             target=_service_main, args=(self.spec,), daemon=True
@@ -200,6 +233,30 @@ class ProcessRpcServer:
         """Requests served, read from the ring's shared control word."""
         ctrl = self.ring.ctrl
         return 0 if ctrl is None else int(ctrl[CTRL_SERVED])
+
+    @property
+    def busy_ns(self) -> int:
+        """Nanoseconds the child spent inside handlers (service-side timer)."""
+        ctrl = self.ring.ctrl
+        return 0 if ctrl is None else int(ctrl[CTRL_BUSY_NS])
+
+    @property
+    def ready(self) -> bool:
+        """True once the child finished journal replay and is serving."""
+        ctrl = self.ring.ctrl
+        return ctrl is not None and bool(ctrl[CTRL_READY])
+
+    def wait_ready(self, timeout: float = 10.0) -> bool:
+        """Block until the child advertises CTRL_READY (or it dies)."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.ready:
+                return True
+            if self.proc is not None and self.proc.pid is not None \
+                    and not self.proc.is_alive():
+                return False
+            time.sleep(1e-3)
+        return self.ready
 
     def alive(self) -> bool:
         """Liveness probe for ``CxlRpcClient(liveness=...)``."""
@@ -239,3 +296,169 @@ class ProcessRpcServer:
                 atexit.unregister(self.close)
             except Exception:  # noqa: BLE001
                 pass
+
+
+class ShardSupervisor:
+    """Keep one metadata shard alive across crashes (self-healing plane).
+
+    Owns the shard's ``ShardJournal`` and a succession of
+    ``ProcessRpcServer`` generations.  A probe thread feeds a
+    ``HeartbeatMonitor`` (the shared liveness policy from
+    ``repro.distributed.fault_tolerance``) with ``proc.is_alive()``
+    beats; once the grace window expires without one, the supervisor
+
+      1. reaps the corpse (``stop`` — join, never unlink yet),
+      2. boots a FRESH ring + child from the same spec (the old ring may
+         hold slots a request died in; a fresh ring needs no slot-state
+         forensics),
+      3. waits for ``CTRL_READY`` — the child replays the journal
+         BEFORE advertising it, so the rebuilt index already holds every
+         confirmed pre-crash publish,
+      4. cuts every registered client over via ``adopt_ring`` (which
+         resets slot bookkeeping and bumps ``RpcStats.restarts``).
+
+    In-flight ``collect`` calls on the old ring notice the swap (ring
+    identity check) and raise ``ServiceDiedError`` — a retryable verdict,
+    so the client's retry loop re-posts onto the new ring.  Retired rings
+    are only closed at ``close()``: another thread may still be spinning
+    on old-ring views, and unmapping under it would turn a clean
+    ``ServiceDiedError`` into a segfault-shaped surprise.
+
+    Detection latency is bounded by ``probe_interval + grace`` and is
+    DECOUPLED from the child's idle backoff (spec knobs) — see
+    tests/test_selfheal.py.
+    """
+
+    def __init__(
+        self,
+        pool_spec: dict,
+        *,
+        journal_capacity: int = 4096,
+        probe_interval: float = 0.02,
+        grace: float | None = None,
+        max_restarts: int = 16,
+        **server_kwargs,
+    ):
+        self._pool_spec = pool_spec
+        self._server_kwargs = dict(server_kwargs)
+        self.journal = ShardJournal.create(journal_capacity)
+        self.probe_interval = probe_interval
+        self.grace = 2 * probe_interval if grace is None else grace
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self.server = ProcessRpcServer(
+            pool_spec, journal=self.journal, **self._server_kwargs
+        )
+        self._retired: list[ProcessRpcServer] = []
+        self._clients: list = []  # CxlRpcClient-shaped: has adopt_ring
+        self._monitor = HeartbeatMonitor(n_hosts=1, timeout_s=self.grace)
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._probe: threading.Thread | None = None
+        self._closed = False
+        atexit.register(self.close)
+
+    # -- wiring ----------------------------------------------------------
+    @property
+    def ring(self) -> ShmRing:
+        return self.server.ring
+
+    def alive(self) -> bool:
+        """Liveness of the CURRENT generation (client ``liveness=``)."""
+        return self.server.alive()
+
+    def register_client(self, client) -> None:
+        """Clients to cut over (``adopt_ring``) after each restart."""
+        with self._lock:
+            self._clients.append(client)
+
+    def start(self) -> "ShardSupervisor":
+        self.server.start()
+        self._monitor.beat(0)
+        self._stop.clear()
+        self._probe = threading.Thread(
+            target=self._probe_loop, name="shard-supervisor", daemon=True
+        )
+        self._probe.start()
+        return self
+
+    def wait_ready(self, timeout: float = 10.0) -> bool:
+        return self.server.wait_ready(timeout)
+
+    # -- stats (cumulative across generations) ---------------------------
+    @property
+    def served(self) -> int:
+        return self.server.served + sum(s.served for s in self._retired)
+
+    @property
+    def busy_ns(self) -> int:
+        return self.server.busy_ns + sum(s.busy_ns for s in self._retired)
+
+    def segment_names(self) -> list[str]:
+        """Every /dev/shm name this supervisor owns (hygiene checks)."""
+        names = [self.journal.name, self.server.ring.shm_name]
+        names += [s.ring.shm_name for s in self._retired]
+        return names
+
+    # -- failure handling ------------------------------------------------
+    def kill(self) -> None:
+        """Crash the current child ungracefully (chaos hook)."""
+        self.server.kill()
+
+    def _probe_loop(self) -> None:
+        while not self._stop.wait(self.probe_interval):
+            with self._lock:
+                if self._closed:
+                    return
+                if self.server.alive():
+                    self._monitor.beat(0)
+                elif self._monitor.dead_hosts():
+                    self._restart_locked()
+                    self._monitor.beat(0)
+
+    def _restart_locked(self) -> None:
+        if self.restarts >= self.max_restarts:
+            return  # flapping shard: stop resuscitating, clients degrade
+        old = self.server
+        old.stop()  # reap; ring segment stays mapped until close()
+        self._retired.append(old)
+        srv = ProcessRpcServer(
+            self._pool_spec, journal=self.journal, **self._server_kwargs
+        )
+        srv.start()
+        self.server = srv
+        self.restarts += 1
+        if not srv.wait_ready(timeout=10.0):
+            return  # replacement stillborn; next probe pass retries
+        for client in self._clients:
+            client.adopt_ring(srv.ring, liveness=srv.alive)
+
+    def check(self) -> None:
+        """Synchronous probe step (tests drive restarts without waiting
+        out the probe thread's schedule)."""
+        with self._lock:
+            if self._closed:
+                return
+            if self.server.alive():
+                self._monitor.beat(0)
+            elif self._monitor.dead_hosts():
+                self._restart_locked()
+                self._monitor.beat(0)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        with self._lock:
+            self._closed = True
+        self._stop.set()
+        if self._probe is not None and self._probe.is_alive():
+            self._probe.join(timeout=5)
+        self.server.close()
+        for srv in self._retired:
+            srv.close()
+        self._retired.clear()
+        self.journal.close()
+        try:
+            atexit.unregister(self.close)
+        except Exception:  # noqa: BLE001
+            pass

@@ -66,17 +66,31 @@ _LEN = struct.Struct("<I")
 
 # control words at the head of every ring (shared-memory rings expose them
 # cross-process; private rings keep the same layout for uniformity):
-#   CTRL_STOP   — the ring owner flips it to 1 to ask an out-of-process
-#                 service to drain and exit (no signal/pipe: the stop
-#                 request travels the same load/store plane as the data);
-#   CTRL_SERVED — served-request counter maintained by the service, the
-#                 cross-process replacement for ``CxlRpcServer.served``.
-CTRL_STOP, CTRL_SERVED = 0, 1
-_N_CTRL = 2
+#   CTRL_STOP    — the ring owner flips it to 1 to ask an out-of-process
+#                  service to drain and exit (no signal/pipe: the stop
+#                  request travels the same load/store plane as the data);
+#   CTRL_SERVED  — served-request counter maintained by the service, the
+#                  cross-process replacement for ``CxlRpcServer.served``;
+#   CTRL_READY   — the service flips it to 1 once boot (including any
+#                  journal replay) is done and the serve loop is entered:
+#                  the supervisor gates client cut-over on it;
+#   CTRL_BUSY_NS — cumulative wall-ns the service spent inside handlers
+#                  (the OP_STATS service timer: capacity = served/busy).
+CTRL_STOP, CTRL_SERVED, CTRL_READY, CTRL_BUSY_NS = 0, 1, 2, 3
+_N_CTRL = 4
 
 
 class RpcError(RuntimeError):
     """Server-side handler failure, relayed in-band (RESP_ERROR frame)."""
+
+
+class ServiceDiedError(RpcError):
+    """The service process died (or its ring was swapped by a supervisor
+    restart) while a call was outstanding.  Distinct from ``RpcError``
+    proper — a handler failure is the CALLER's bug and must not be
+    retried, while this is transient by construction (a supervisor is
+    respawning the shard) and safe to retry for every op: the journal
+    replay restores any mutation whose reply the crash swallowed."""
 
 
 @dataclass
@@ -85,6 +99,9 @@ class RpcStats:
     total_wait: float = 0.0  # includes the wait of errored/timed-out calls
     timeouts: int = 0
     errors: int = 0  # in-band RESP_ERROR frames (handler failures)
+    retries: int = 0  # failed attempts retried under a RetryPolicy
+    degraded_ops: int = 0  # ops served degraded (shard down, holes/refusal)
+    restarts: int = 0  # shard service restarts observed (ring swaps)
 
     @property
     def round_trips(self) -> int:
@@ -93,6 +110,24 @@ class RpcStats:
 
     def avg_wait(self) -> float:
         return self.total_wait / max(1, self.round_trips)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff against a restarting shard service.
+
+    ``backoff(attempt)`` is the sleep BEFORE retry number ``attempt``
+    (1-based): base * 2^(attempt-1), capped.  The total budget across
+    ``max_retries`` attempts bounds how long a caller blocks on a shard
+    the supervisor is still rebuilding — with the defaults ~2.5 s, a
+    comfortable multiple of kill→respawn→replay on this host."""
+
+    max_retries: int = 8
+    base_backoff: float = 0.02
+    max_backoff: float = 1.0
+
+    def backoff(self, attempt: int) -> float:
+        return min(self.max_backoff, self.base_backoff * (2 ** (attempt - 1)))
 
 
 def _truncate_utf8(raw: bytes, cap: int) -> bytes:
@@ -225,6 +260,9 @@ def drain_ready(ring: ShmRing, handler, delay: float = 0.0) -> int:
     # one vectorized scan finds every posted request; the Python loop
     # below only touches slots that actually have work
     ready = np.nonzero(status == REQ_READY)[0]
+    if not len(ready):
+        return 0
+    t_ns = time.perf_counter_ns()
     for i in ready.tolist():
         if delay:
             time.sleep(delay)
@@ -244,6 +282,12 @@ def drain_ready(ring: ShmRing, handler, delay: float = 0.0) -> int:
             )
             ring.write_resp(i, msg)
             status[i] = RESP_ERROR
+    # service-side timer, measured IN the serving process: both served
+    # count and busy-ns live in the ring's ctrl words, so the client can
+    # read capacity (served/busy) without an in-process replica and both
+    # transports (thread + process) account identically.
+    ring.ctrl[CTRL_SERVED] += len(ready)
+    ring.ctrl[CTRL_BUSY_NS] += time.perf_counter_ns() - t_ns
     return len(ready)
 
 
@@ -255,9 +299,21 @@ class CxlRpcServer:
         self.handler = handler
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._poll_loop, daemon=True)
-        self.served = 0
+
+    @property
+    def served(self) -> int:
+        """Requests served, read from the ring's ctrl word (the service
+        timer maintained by ``drain_ready`` — identical across the thread
+        and process transports)."""
+        return int(self.ring.ctrl[CTRL_SERVED])
+
+    @property
+    def busy_ns(self) -> int:
+        """Cumulative ns spent inside handlers (service-side timer)."""
+        return int(self.ring.ctrl[CTRL_BUSY_NS])
 
     def start(self):
+        self.ring.ctrl[CTRL_READY] = 1  # no boot work on the thread path
         self._thread.start()
         return self
 
@@ -272,11 +328,8 @@ class CxlRpcServer:
     def _poll_loop(self):
         ring = self.ring
         while not self._stop.is_set():
-            n = drain_ready(ring, self.handler)
-            if not n:
+            if not drain_ready(ring, self.handler):
                 time.sleep(0)  # yield GIL; real impl spins
-                continue
-            self.served += n
 
 
 class CxlRpcClient:
@@ -304,6 +357,23 @@ class CxlRpcClient:
     def free_slots(self) -> int:
         with self._slot_lock:
             return len(self._free)
+
+    def adopt_ring(self, ring: ShmRing, liveness=None) -> None:
+        """Cut this client over to a FRESH ring (supervisor restart path).
+
+        The old ring is abandoned, not closed here — in-flight collects
+        still hold references to it and fail fast via the identity check
+        in ``collect``; the supervisor owns the old segment's teardown.
+        All slot state resets: the new ring starts empty by construction
+        (a fresh zero-filled segment), so the free list is full and no
+        quarantine carries over."""
+        with self._slot_lock:
+            self.ring = ring
+            self.liveness = liveness
+            self._free = list(range(ring.n_slots))
+            self._quarantined = set()
+            self._t_posted = np.zeros(ring.n_slots, np.float64)
+            self.stats.restarts += 1
 
     def _acquire_slot(self) -> int:
         with self._slot_lock:
@@ -346,6 +416,12 @@ class CxlRpcClient:
         ring = self.ring
         stats = self.stats
         t0 = float(self._t_posted[slot])
+        if t0 == 0.0:
+            # the ring was swapped (adopt_ring zeroes post timestamps)
+            # between this slot's post and its collect: the reply will
+            # never arrive on the ring we now hold
+            stats.errors += 1
+            raise ServiceDiedError("ring swapped mid-call (service restarted)")
         deadline = t0 + timeout
         completed = False
         spins = 0
@@ -356,21 +432,33 @@ class CxlRpcClient:
                     stats.total_wait += time.perf_counter() - t0
                     raise TimeoutError("RPC timeout")
                 spins += 1
-                # crashed-service detection (throttled: is_alive is a
-                # syscall): a dead service will never flip this slot, so
-                # fail NOW as an in-band error instead of burning the
-                # timeout — unless the reply landed just before death
-                if (
-                    self.liveness is not None
-                    and not (spins & 0xFF)
-                    and not self.liveness()
-                    and int(ring.status[slot]) not in (RESP_READY, RESP_ERROR)
-                ):
-                    stats.errors += 1
-                    stats.total_wait += time.perf_counter() - t0
-                    raise RpcError(
-                        "metadata service process died (ring abandoned)"
-                    )
+                if not (spins & 0xFF):
+                    # ring-swap detection: a supervisor restart adopted a
+                    # fresh ring under this client while we waited on the
+                    # OLD one — our slot will never be served. Fail fast
+                    # as an RpcError so the retry layer re-posts on the
+                    # new ring.
+                    if self.ring is not ring:
+                        stats.errors += 1
+                        stats.total_wait += time.perf_counter() - t0
+                        raise ServiceDiedError(
+                            "ring swapped mid-call (service restarted)"
+                        )
+                    # crashed-service detection (throttled: is_alive is a
+                    # syscall): a dead service will never flip this slot,
+                    # so fail NOW as an in-band error instead of burning
+                    # the timeout — unless the reply landed before death
+                    if (
+                        self.liveness is not None
+                        and not self.liveness()
+                        and int(ring.status[slot])
+                        not in (RESP_READY, RESP_ERROR)
+                    ):
+                        stats.errors += 1
+                        stats.total_wait += time.perf_counter() - t0
+                        raise ServiceDiedError(
+                            "metadata service process died (ring abandoned)"
+                        )
                 time.sleep(0)
             out = ring.read_resp(slot)
             ring.status[slot] = IDLE
@@ -383,7 +471,9 @@ class CxlRpcClient:
             return out
         finally:
             with self._slot_lock:
-                if completed:
+                if self.ring is not ring:
+                    pass  # swapped ring: adopt_ring already rebuilt state
+                elif completed:
                     self._free.append(slot)
                 else:
                     # the server may still write here — quarantine until

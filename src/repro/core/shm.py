@@ -22,6 +22,8 @@ Two wrinkles this module hides:
 from __future__ import annotations
 
 import gc
+import struct
+import threading
 from multiprocessing import shared_memory
 
 
@@ -81,3 +83,184 @@ def close_segment(seg: shared_memory.SharedMemory | None, *, unlink: bool) -> No
             pass
         except Exception:  # noqa: BLE001
             pass
+
+
+# ---------------------------------------------------------------------------
+# per-shard publish journal (the self-healing metadata plane's flight
+# recorder — see ``repro.core.procserver.ShardSupervisor``)
+# ---------------------------------------------------------------------------
+JOURNAL_PUBLISH, JOURNAL_RETRACT, JOURNAL_REMAP = 1, 2, 3
+
+
+def live_entries(records) -> dict[bytes, tuple[int, int, int]]:
+    """Fold a journal record stream into the surviving index entries.
+
+    Returns an insertion-ordered ``key -> (block_id, epoch, n_tokens)``
+    map: the state a shard's ``GlobalIndex`` replays to after a crash
+    (``GlobalIndex.rebuild_from_journal``), and the state a compaction
+    rewrites the journal down to.
+
+      * PUBLISH upserts the key (a re-publish moves it to the end — the
+        MRU approximation of the single-publish LRU refresh);
+      * RETRACT (an eviction's freed block id) removes the key that LAST
+        published that block — exactly the row the index dropped.  Stale
+        alias rows (an older key whose block was recycled under a new
+        key) survive, as they do in the live index;
+      * REMAP re-points an existing key to its migrated (block, epoch),
+        keeping n_tokens (the payload moved tiers, the tokens did not).
+    """
+    live: dict[bytes, list[int]] = {}
+    block2key: dict[int, bytes] = {}
+    for op, key, bid, epoch, ntk in records:
+        if op == JOURNAL_PUBLISH:
+            if key in live:
+                del live[key]  # move to end: re-publish refreshes LRU
+            live[key] = [bid, epoch, ntk]
+            block2key[bid] = key
+        elif op == JOURNAL_RETRACT:
+            k = block2key.pop(bid, None)
+            if k is not None and k in live and live[k][0] == bid:
+                del live[k]
+        elif op == JOURNAL_REMAP:
+            ent = live.get(key)
+            if ent is not None:
+                old = ent[0]
+                if block2key.get(old) == key:
+                    del block2key[old]
+                ent[0] = bid
+                ent[1] = epoch
+                block2key[bid] = key
+    return {k: (v[0], v[1], v[2]) for k, v in live.items()}
+
+
+class ShardJournal:
+    """Append-only per-shard publish journal in a named segment.
+
+    The pool-OWNING process (the RPC client side — the only place that
+    knows an op actually round-tripped) appends one fixed-size record per
+    observable index mutation it drove: publish, eviction (retract by
+    freed block id), remap.  A respawned shard service replays the
+    journal at boot (``GlobalIndex.rebuild_from_journal``) before
+    serving, so a kill -9 of the service loses no published block.
+
+    Crash-atomicity contract: a record is appended only AFTER the RPC
+    reply confirmed the mutation.  A mutation applied server-side whose
+    reply was lost to the crash is therefore NOT replayed — for publish
+    that's safe (the client retries and re-publishes idempotently), for
+    evict it's safe by omission (``on_freed`` never ran, the pool still
+    holds the block, and the rebuilt index still owns it — nothing is
+    lost or double-freed).
+
+    Layout: header ``generation:u64 count:u64 capacity:u64`` then
+    ``capacity`` records ``op:u8 key:16s block_id:i64 epoch:i64
+    n_tokens:i32`` (37 B).  Single writer (the pool owner, lock inside);
+    the only reader is a BOOTING shard service, whose ring is down — the
+    journal is quiescent for the whole read.  On overflow the writer
+    compacts in place (rewrite of ``live_entries`` as pure publishes)
+    and bumps ``generation``.
+    """
+
+    _HDR = struct.Struct("<QQQ")  # generation, count, capacity
+    _REC = struct.Struct("<B16sqqi")  # op, key, block_id, epoch, n_tokens
+
+    def __init__(self, seg: shared_memory.SharedMemory, capacity: int,
+                 *, _owner: bool):
+        self._seg = seg
+        self._owner = _owner
+        self.capacity = capacity
+        self.name = seg.name
+        self._lock = threading.Lock()
+
+    @classmethod
+    def segment_size(cls, capacity: int) -> int:
+        return cls._HDR.size + capacity * cls._REC.size
+
+    @classmethod
+    def create(cls, capacity: int) -> "ShardJournal":
+        seg = create_segment(cls.segment_size(capacity))
+        j = cls(seg, capacity, _owner=True)
+        cls._HDR.pack_into(seg.buf, 0, 0, 0, capacity)
+        return j
+
+    @classmethod
+    def attach(cls, name: str, capacity: int) -> "ShardJournal":
+        seg = attach_segment(name)
+        j = cls(seg, capacity, _owner=False)
+        _, _, cap = cls._HDR.unpack_from(seg.buf, 0)
+        if cap != capacity:
+            raise ValueError(
+                f"journal {name}: capacity mismatch (segment {cap}, spec {capacity})"
+            )
+        return j
+
+    # -- header ----------------------------------------------------------
+    @property
+    def generation(self) -> int:
+        return self._HDR.unpack_from(self._seg.buf, 0)[0]
+
+    def __len__(self) -> int:
+        return self._HDR.unpack_from(self._seg.buf, 0)[1]
+
+    def _set_header(self, generation: int, count: int) -> None:
+        self._HDR.pack_into(self._seg.buf, 0, generation, count, self.capacity)
+
+    # -- records ---------------------------------------------------------
+    def _write_rec(self, i: int, op: int, key: bytes, bid: int, epoch: int,
+                   ntk: int) -> None:
+        self._REC.pack_into(
+            self._seg.buf, self._HDR.size + i * self._REC.size,
+            op, key, bid, epoch, ntk,
+        )
+
+    def records(self) -> list[tuple[int, bytes, int, int, int]]:
+        """Decode every committed record (op, key, block_id, epoch, n_tokens)."""
+        gen, count, _ = self._HDR.unpack_from(self._seg.buf, 0)
+        out = []
+        off = self._HDR.size
+        for _ in range(count):
+            op, key, bid, epoch, ntk = self._REC.unpack_from(self._seg.buf, off)
+            out.append((op, key, bid, epoch, ntk))
+            off += self._REC.size
+        return out
+
+    def _append(self, recs) -> None:
+        with self._lock:
+            gen, count, _ = self._HDR.unpack_from(self._seg.buf, 0)
+            if count + len(recs) > self.capacity:
+                live = live_entries(self.records())
+                if len(live) + len(recs) > self.capacity:
+                    raise RuntimeError(
+                        f"journal {self.name} overflow: {len(live)} live + "
+                        f"{len(recs)} new > capacity {self.capacity}"
+                    )
+                # compact in place: the live map as pure publishes
+                for i, (k, (bid, epoch, ntk)) in enumerate(live.items()):
+                    self._write_rec(i, JOURNAL_PUBLISH, k, bid, epoch, ntk)
+                gen, count = gen + 1, len(live)
+            for op, key, bid, epoch, ntk in recs:
+                self._write_rec(count, op, key, bid, epoch, ntk)
+                count += 1
+            # count is published LAST: a reader attached mid-append never
+            # sees a half-written record as committed
+            self._set_header(gen, count)
+
+    def append_publish(self, keys, block_ids, epochs, n_tokens: int) -> None:
+        self._append([
+            (JOURNAL_PUBLISH, k, int(b), int(e), n_tokens)
+            for k, b, e in zip(keys, block_ids, epochs)
+        ])
+
+    def append_retract(self, block_ids) -> None:
+        self._append([
+            (JOURNAL_RETRACT, b"\0" * 16, int(b), 0, 0) for b in block_ids
+        ])
+
+    def append_remap(self, keys, new_ids, new_epochs) -> None:
+        self._append([
+            (JOURNAL_REMAP, k, int(b), int(e), -1)
+            for k, b, e in zip(keys, new_ids, new_epochs)
+        ])
+
+    def close(self) -> None:
+        close_segment(self._seg, unlink=self._owner)
+        self._seg = None

@@ -55,6 +55,7 @@ collecting any reply — the S sub-requests are outstanding in parallel.
 from __future__ import annotations
 
 import struct
+import time
 
 import numpy as np
 
@@ -65,6 +66,12 @@ from repro.core.index import (
     evict_lru_pressure,
     partition_keys,
     shard_of_key,
+)
+from repro.core.rpc import (
+    CTRL_BUSY_NS,
+    CTRL_SERVED,
+    RetryPolicy,
+    ServiceDiedError,
 )
 
 KEY_BYTES = 16
@@ -79,11 +86,16 @@ OP_OWNERS = 7
 OP_REMAP = 8
 OP_EVICT_BLOCKS = 9
 OP_STATS = 10
+OP_SNAPSHOT = 11
+OP_RESTORE = 12
 
 _HDR = struct.Struct("<BI")  # op, count
 _U32 = struct.Struct("<I")
 _PUB_HDR = struct.Struct("<BIi")  # op, count, n_tokens
-_STATS = struct.Struct("<QQQ")  # entries, hits, misses
+# entries, hits, misses + the service-side timer (ops served, busy-ns)
+# measured IN the serving process — exp11 capacity is read from here
+# instead of being inferred from an in-process replica
+_STATS = struct.Struct("<QQQQQ")
 
 
 class WireError(ValueError):
@@ -167,6 +179,25 @@ def encode_stats() -> bytes:
     return _HDR.pack(OP_STATS, 0)
 
 
+def encode_snapshot(start: int, max_items: int) -> bytes:
+    """Page ``max_items`` index entries starting ``start`` rows in (LRU
+    order) — the rebuild-verification op of the self-healing plane."""
+    return _HDR.pack(OP_SNAPSHOT, max_items) + _U32.pack(start)
+
+
+def encode_restore(keys, block_ids, epochs, n_tokens) -> bytes:
+    n = len(keys)
+    if not (n == len(block_ids) == len(epochs) == len(n_tokens)):
+        raise WireError("restore arrays disagree on length")
+    return (
+        _HDR.pack(OP_RESTORE, n)
+        + _join_keys(keys)
+        + np.asarray(block_ids, np.int64).tobytes()
+        + np.asarray(epochs, np.int64).tobytes()
+        + np.asarray(n_tokens, np.int32).tobytes()
+    )
+
+
 # ---------------------------------------------------------------------------
 # decode helpers
 # ---------------------------------------------------------------------------
@@ -239,9 +270,29 @@ def decode_owners_resp(buf: bytes) -> tuple[list[bytes], list[int], list[int]]:
     return keys, ids.tolist(), eps.tolist()
 
 
-def decode_stats_resp(buf: bytes) -> tuple[int, int, int]:
+def decode_stats_resp(buf: bytes) -> tuple[int, int, int, int, int]:
+    """(entries, hits, misses, ops_served, busy_ns) — the last two are
+    the service-side timer (zero when the handler has no ring ctrl)."""
     _need(buf, _STATS.size)
     return _STATS.unpack_from(buf)
+
+
+def decode_snapshot_resp(
+    buf: bytes,
+) -> tuple[int, list[bytes], list[int], list[int], list[int]]:
+    """(total_entries, keys, block_ids, epochs, n_tokens) for one page."""
+    _need(buf, 8)
+    total, m = _U32.unpack_from(buf)[0], _U32.unpack_from(buf, 4)[0]
+    keys, off = _split_keys(buf, 8, m)
+    ids, off = _split_i64(buf, off, m)
+    eps, off = _split_i64(buf, off, m)
+    ntk, _ = _split_i32(buf, off, m)
+    return total, keys, ids.tolist(), eps.tolist(), ntk.tolist()
+
+
+def decode_restore_resp(buf: bytes) -> int:
+    _need(buf, 4)
+    return _U32.unpack_from(buf)[0]
 
 
 def decode_remap_resp(buf: bytes) -> list[bool]:
@@ -313,6 +364,12 @@ def reply_bound(buf: bytes, _depth: int = 0) -> int:
         return 4 + 8 * n
     if op == OP_STATS:
         return _STATS.size
+    if op == OP_SNAPSHOT:
+        _need(buf, _HDR.size + 4)
+        return 8 + 36 * n  # total+m then 16+8+8+4 per entry
+    if op == OP_RESTORE:
+        _need(buf, _HDR.size + (KEY_BYTES + 20) * n)
+        return 4
     if op == OP_BATCH:
         if _depth >= _MAX_BATCH_DEPTH:
             raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
@@ -344,6 +401,10 @@ def prevalidate(index, buf: bytes, _depth: int = 0) -> None:
     elif op in (OP_OWNERS, OP_EVICT_BLOCKS):
         ids, _ = _split_i64(buf, _HDR.size, n)
         _check_block_ids(index, ids, "OWNERS" if op == OP_OWNERS else "EVICT_BLOCKS")
+    elif op == OP_RESTORE:
+        _, off = _split_keys(buf, _HDR.size, n)
+        ids, _ = _split_i64(buf, off, n)
+        _check_block_ids(index, ids, "RESTORE")
     elif op == OP_REMAP:
         _, off = _split_keys(buf, _HDR.size, n)
         old_ids, off = _split_i64(buf, off, n)
@@ -374,13 +435,15 @@ def _check_block_ids(index, ids: np.ndarray, what: str) -> None:
 
 
 def handle_request(
-    index, buf: bytes, _depth: int = 0, _validated: bool = False
+    index, buf: bytes, _depth: int = 0, _validated: bool = False, ctrl=None
 ) -> bytes:
     """Decode one wire message, run it against ``index``, encode the reply.
 
     ``_validated`` skips the inline semantic checks when the caller
     already ran ``prevalidate`` over the whole frame (the server path) —
-    direct callers keep them as defense-in-depth."""
+    direct callers keep them as defense-in-depth.  ``ctrl`` is the
+    serving ring's control array when running inside a ring service: it
+    lets OP_STATS report the service-side timer (ops served, busy-ns)."""
     _need(buf, _HDR.size)
     op, n = _HDR.unpack_from(buf)
     if op == OP_MATCH:
@@ -454,31 +517,55 @@ def handle_request(
         return _U32.pack(len(freed)) + np.asarray(freed, np.int64).tobytes()
     if op == OP_STATS:
         s = index.stats()
-        return _STATS.pack(s["entries"], s["hits"], s["misses"])
+        served = int(ctrl[CTRL_SERVED]) if ctrl is not None else 0
+        busy = int(ctrl[CTRL_BUSY_NS]) if ctrl is not None else 0
+        return _STATS.pack(s["entries"], s["hits"], s["misses"], served, busy)
+    if op == OP_SNAPSHOT:
+        _need(buf, _HDR.size + 4)
+        (start,) = _U32.unpack_from(buf, _HDR.size)
+        total, keys, ids, eps, ntk = index.snapshot_entries(start, n)
+        return (
+            _U32.pack(total)
+            + _U32.pack(len(keys))
+            + b"".join(keys)
+            + np.asarray(ids, np.int64).tobytes()
+            + np.asarray(eps, np.int64).tobytes()
+            + np.asarray(ntk, np.int32).tobytes()
+        )
+    if op == OP_RESTORE:
+        keys, off = _split_keys(buf, _HDR.size, n)
+        ids, off = _split_i64(buf, off, n)
+        eps, off = _split_i64(buf, off, n)
+        ntk, _ = _split_i32(buf, off, n)
+        if not _validated:
+            _check_block_ids(index, ids, "RESTORE")
+        index.restore_entries(keys, ids.tolist(), eps.tolist(), ntk.tolist())
+        return _U32.pack(n)
     if op == OP_BATCH:
         if _depth >= _MAX_BATCH_DEPTH:
             raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
         out = [
-            handle_request(index, f, _depth + 1, _validated)
+            handle_request(index, f, _depth + 1, _validated, ctrl)
             for f in _split_frames(buf, _HDR.size, n)
         ]
         return _U32.pack(n) + b"".join(_U32.pack(len(r)) + r for r in out)
     raise WireError(f"unknown op {op}")
 
 
-def make_index_handler(index, max_reply: int | None = None):
+def make_index_handler(index, max_reply: int | None = None, ctrl=None):
     """Handler for ``CxlRpcServer``: the metadata service poll thread.
 
     ``max_reply`` (usually the ring's ``payload_bytes``) makes the handler
     verify — via ``reply_bound``, before executing anything — that the
     reply can be shipped, so a request whose answer cannot fit never
-    half-runs a mutating op."""
+    half-runs a mutating op.  ``ctrl`` (the serving ring's control array)
+    exposes the service timer to OP_STATS."""
 
     def handler(payload: bytes) -> bytes:
         if max_reply is not None and reply_bound(payload) > max_reply:
             raise WireError(f"reply would exceed {max_reply} B slot")
         prevalidate(index, payload)  # batch starts clean or not at all
-        return handle_request(index, payload, _validated=True)
+        return handle_request(index, payload, _validated=True, ctrl=ctrl)
 
     return handler
 
@@ -500,12 +587,24 @@ class RpcIndexClient:
     evictions only drop index rows and ship the freed block ids back —
     this client then applies the real ``pool.release`` in the
     pool-owning process (None for in-process/thread transports, whose
-    server releases directly)."""
+    server releases directly).
+
+    ``journal`` (a ``repro.core.shm.ShardJournal``) is the self-healing
+    hook: confirmed publishes/evictions/remaps are appended so a
+    supervisor-respawned service can replay the shard's observable state.
+    ``retry`` (a ``repro.core.rpc.RetryPolicy``) turns a dying/restarting
+    service into bounded backoff instead of an exception: a
+    ``ServiceDiedError`` retries for every op (crash-safe — see the
+    journal contract), a ``TimeoutError`` retries only ops that are
+    idempotent under an applied-but-unacknowledged first attempt."""
 
     def __init__(self, rpc, block_tokens: int, max_payload: int | None = None,
-                 hasher: PrefixHasher | None = None, on_freed=None):
+                 hasher: PrefixHasher | None = None, on_freed=None,
+                 journal=None, retry: RetryPolicy | None = None):
         self.rpc = rpc
         self.on_freed = on_freed
+        self.journal = journal
+        self.retry = retry
         # hashing is pure computation, so clients on one host can share a
         # hasher (and its request memo) instead of re-deriving the same
         # chain once per engine
@@ -523,39 +622,124 @@ class RpcIndexClient:
         self._max_evict = max(1, (max_payload - 16) // 8)
         self._max_owners = max(1, (max_payload - 16) // 32)  # reply-bound
         self._max_remap = max(1, (max_payload - 16) // (KEY_BYTES + 32))
+        self._max_snapshot = max(1, (max_payload - 24) // 36)  # reply-bound
 
     # -- hashing is local ------------------------------------------------
     def keys_for(self, tokens: list[int]) -> tuple[bytes, ...]:
         return self.hasher.keys_for(tokens)
+
+    # -- transport with bounded retry -----------------------------------
+    def _call(self, payload: bytes, idempotent: bool = True) -> bytes:
+        """One round-trip under the retry policy (if any).
+
+        ``ServiceDiedError`` (crash / supervisor ring swap) retries every
+        op: the journal contract makes an applied-but-unacknowledged
+        mutation safe to replay.  ``TimeoutError`` (service alive but
+        slow) retries only ``idempotent`` ops — a timed-out EVICT may
+        have freed blocks whose reply now sits in a quarantined slot, and
+        a timed-out REMAP may have applied, so both surface the timeout
+        to the caller instead."""
+        pol = self.retry
+        if pol is None:
+            return self.rpc.call(payload)
+        attempt = 0
+        while True:
+            try:
+                return self.rpc.call(payload)
+            except ServiceDiedError:
+                attempt += 1
+                if attempt > pol.max_retries:
+                    raise
+            except TimeoutError:
+                if not idempotent:
+                    raise
+                attempt += 1
+                if attempt > pol.max_retries:
+                    raise
+            stats = getattr(self.rpc, "stats", None)
+            if stats is not None:
+                stats.retries += 1
+            time.sleep(pol.backoff(attempt))
+
+    def _pipelined_rounds(self, msgs: list[bytes]) -> list[bytes]:
+        """Ship independent chunk requests with the post/collect split:
+        keep up to the ring's free-slot budget outstanding instead of one
+        round-trip per chunk. ONLY for ops whose chunks commute (pure
+        reads): the service drains slots in slot order, not post order,
+        so pipelined mutations would apply out of order.  A transient
+        transport failure (service died / timed out) re-runs every round
+        serially under the retry policy — safe precisely because the
+        callers are idempotent reads."""
+        rpc = self.rpc
+        if len(msgs) <= 1 or not hasattr(rpc, "post"):
+            return [self._call(m) for m in msgs]
+        out: list[bytes | None] = [None] * len(msgs)
+        slots: list[tuple[int, int]] = []  # (msg index, slot)
+        i = 0
+        try:
+            window = max(1, min(len(msgs), rpc.free_slots() - 1, 8))
+            while i < len(msgs) or slots:
+                while i < len(msgs) and len(slots) < window:
+                    slots.append((i, rpc.post(msgs[i])))
+                    i += 1
+                j, slot = slots.pop(0)
+                out[j] = rpc.collect(slot)
+        except BaseException as e:
+            for _, slot in slots:  # drain what was posted (or quarantine)
+                try:
+                    rpc.collect(slot)
+                except Exception:  # noqa: BLE001
+                    pass
+            if self.retry is None or not isinstance(
+                e, (ServiceDiedError, TimeoutError)
+            ):
+                raise
+            return [self._call(m) for m in msgs]
+        return out
 
     # -- one round-trip per op ------------------------------------------
     def match_prefix(self, tokens: list[int]) -> list[tuple[bytes, int, int]]:
         return self.match_prefix_keys(self.keys_for(tokens))
 
     def match_prefix_keys(self, keys) -> list[tuple[bytes, int, int]]:
+        # chunk rounds stay SERIAL on purpose: a chunk is only sent after
+        # the previous one matched in full, so the service LRU-touches
+        # exactly the global all-hit prefix — pipelining would
+        # speculatively touch keys past the first hole and break the
+        # bit-identical differential equivalence with the in-process index
         out: list[tuple[bytes, int, int]] = []
         for off in range(0, len(keys), self._max_match):
             chunk = keys[off : off + self._max_match]
-            ids, eps = decode_match_resp(self.rpc.call(encode_match(chunk)))
+            ids, eps = decode_match_resp(self._call(encode_match(chunk)))
             out.extend(zip(chunk, ids.tolist(), eps.tolist()))
             if len(ids) < len(chunk):
                 break  # prefix ended inside this chunk
         return out
 
     def publish_many(self, keys, block_ids, epochs, n_tokens: int) -> None:
+        # serial rounds on purpose: the service drains slots in slot
+        # order, so pipelined publish chunks could insert rows out of
+        # chain order and scramble the LRU against the in-process index
         for off in range(0, len(keys), self._max_publish):
             end = off + self._max_publish
-            self.rpc.call(
+            self._call(
                 encode_publish(
                     keys[off:end], block_ids[off:end], epochs[off:end], n_tokens
                 )
             )
+            if self.journal is not None:
+                self.journal.append_publish(
+                    keys[off:end], block_ids[off:end], epochs[off:end], n_tokens
+                )
 
     def lookup_many(self, keys) -> list[IndexEntry | None]:
+        msgs = [
+            encode_lookup(keys[off : off + self._max_lookup])
+            for off in range(0, len(keys), self._max_lookup)
+        ]
         out: list[IndexEntry | None] = []
-        for off in range(0, len(keys), self._max_lookup):
-            chunk = keys[off : off + self._max_lookup]
-            ids, eps, ntk = decode_lookup_resp(self.rpc.call(encode_lookup(chunk)))
+        for resp in self._pipelined_rounds(msgs):
+            ids, eps, ntk = decode_lookup_resp(resp)
             out.extend(
                 None if b < 0 else IndexEntry(int(b), int(e), int(t), 0.0)
                 for b, e, t in zip(ids.tolist(), eps.tolist(), ntk.tolist())
@@ -566,12 +750,11 @@ class RpcIndexClient:
         return self.lookup_many([key])[0]
 
     def filter_unpublished(self, keys) -> list[int]:
+        offs = list(range(0, len(keys), self._max_lookup))
+        msgs = [encode_filter(keys[off : off + self._max_lookup]) for off in offs]
         out: list[int] = []
-        for off in range(0, len(keys), self._max_lookup):
-            chunk = keys[off : off + self._max_lookup]
-            out.extend(
-                off + p for p in decode_filter_resp(self.rpc.call(encode_filter(chunk)))
-            )
+        for off, resp in zip(offs, self._pipelined_rounds(msgs)):
+            out.extend(off + p for p in decode_filter_resp(resp))
         return out
 
     def evict_lru(self, n: int) -> list[int]:
@@ -581,9 +764,12 @@ class RpcIndexClient:
         freed: list[int] = []
         while n > 0:
             k = min(n, self._max_evict)
-            got = decode_evict_resp(self.rpc.call(encode_evict(k)))
-            if got and self.on_freed is not None:
-                self.on_freed(got)  # cross-process: reclaim pool blocks
+            got = decode_evict_resp(self._call(encode_evict(k), idempotent=False))
+            if got:
+                if self.journal is not None:
+                    self.journal.append_retract(got)
+                if self.on_freed is not None:
+                    self.on_freed(got)  # cross-process: reclaim pool blocks
             freed.extend(got)
             if len(got) < k:
                 break
@@ -600,10 +786,12 @@ class RpcIndexClient:
         ids: list[int] = []
         eps: list[int] = []
         M = self._max_owners
-        for off in range(0, len(block_ids), M):
-            k, b, e = decode_owners_resp(
-                self.rpc.call(encode_owners(block_ids[off : off + M]))
-            )
+        msgs = [
+            encode_owners(block_ids[off : off + M])
+            for off in range(0, len(block_ids), M)
+        ]
+        for resp in self._pipelined_rounds(msgs):
+            k, b, e = decode_owners_resp(resp)
             keys.extend(k)
             ids.extend(b)
             eps.extend(e)
@@ -616,16 +804,25 @@ class RpcIndexClient:
         M = self._max_remap
         for off in range(0, len(keys), M):
             end = off + M
-            ok.extend(
-                decode_remap_resp(
-                    self.rpc.call(
-                        encode_remap(
-                            keys[off:end], old_ids[off:end], old_epochs[off:end],
-                            new_ids[off:end], new_epochs[off:end],
-                        )
-                    )
+            sub = decode_remap_resp(
+                # NOT timeout-idempotent: a timed-out remap may have
+                # applied, and a retry would then misreport ok=False
+                self._call(
+                    encode_remap(
+                        keys[off:end], old_ids[off:end], old_epochs[off:end],
+                        new_ids[off:end], new_epochs[off:end],
+                    ),
+                    idempotent=False,
                 )
             )
+            if self.journal is not None and any(sub):
+                sel = [i for i, o in enumerate(sub) if o]
+                self.journal.append_remap(
+                    [keys[off:end][i] for i in sel],
+                    [new_ids[off:end][i] for i in sel],
+                    [new_epochs[off:end][i] for i in sel],
+                )
+            ok.extend(sub)
         return ok
 
     def evict_blocks(self, block_ids) -> list[int]:
@@ -633,18 +830,29 @@ class RpcIndexClient:
         M = self._max_evict  # 8 B per id both ways: EVICT sizing applies
         for off in range(0, len(block_ids), M):
             got = decode_evict_resp(
-                self.rpc.call(encode_evict_blocks(block_ids[off : off + M]))
+                self._call(
+                    encode_evict_blocks(block_ids[off : off + M]),
+                    idempotent=False,
+                )
             )
-            if got and self.on_freed is not None:
-                self.on_freed(got)  # cross-process: reclaim pool blocks
+            if got:
+                if self.journal is not None:
+                    self.journal.append_retract(got)
+                if self.on_freed is not None:
+                    self.on_freed(got)  # cross-process: reclaim pool blocks
             freed.extend(got)
         return freed
 
     # -- occupancy / counters -------------------------------------------
     def stats(self) -> dict:
         """Same shape as ``GlobalIndex.stats`` — lets the cluster report
-        index stats when the index lives in another process."""
-        entries, hits, misses = decode_stats_resp(self.rpc.call(encode_stats()))
+        index stats when the index lives in another process.  The wire's
+        service-timer fields are deliberately NOT in this dict (the
+        differential harness bit-compares it against the in-process
+        index); read them via ``service_stats``."""
+        entries, hits, misses, _, _ = decode_stats_resp(
+            self._call(encode_stats())
+        )
         return {
             "entries": entries,
             "hits": hits,
@@ -652,13 +860,60 @@ class RpcIndexClient:
             "hit_rate": hits / max(1, hits + misses),
         }
 
+    def service_stats(self) -> dict:
+        """Service-side timer: requests served + ns spent in handlers,
+        measured IN the serving thread/process (exp11's direct capacity
+        signal — no in-process replica needed)."""
+        _, _, _, served, busy = decode_stats_resp(self._call(encode_stats()))
+        return {"ops_served": served, "busy_ns": busy}
+
     def n_entries(self) -> int:
         """Occupancy probe (the ``evict_lru_pressure`` signal)."""
         return self.stats()["entries"]
 
+    # -- crash-restart support ------------------------------------------
+    def snapshot_entries(
+        self, start: int = 0, max_items: int | None = None
+    ) -> tuple[int, list[bytes], list[int], list[int], list[int]]:
+        """One OP_SNAPSHOT page (defaults to the slot-capacity page size)."""
+        if max_items is None:
+            max_items = self._max_snapshot
+        return decode_snapshot_resp(
+            self._call(encode_snapshot(start, max_items))
+        )
+
+    def snapshot_all(self) -> list[tuple[bytes, int, int, int]]:
+        """Page the WHOLE index in LRU order: [(key, id, epoch, n_tokens)].
+        Rebuild-verification helper — call against a quiesced shard."""
+        out: list[tuple[bytes, int, int, int]] = []
+        start = 0
+        while True:
+            total, keys, ids, eps, ntk = self.snapshot_entries(start)
+            out.extend(zip(keys, ids, eps, ntk))
+            start += len(keys)
+            if start >= total or not keys:
+                return out
+
+    def restore_entries(self, keys, block_ids, epochs, n_tokens) -> int:
+        """Push entries into the (freshly restarted) shard: OP_RESTORE,
+        chunked at 36 B/entry (same geometry as snapshot pages)."""
+        done = 0
+        M = self._max_snapshot
+        for off in range(0, len(keys), M):
+            end = off + M
+            done += decode_restore_resp(
+                self._call(
+                    encode_restore(
+                        keys[off:end], block_ids[off:end],
+                        epochs[off:end], n_tokens[off:end],
+                    )
+                )
+            )
+        return done
+
     def call_batch(self, requests: list[bytes]) -> list[bytes]:
         """Ship k already-encoded ops in ONE ring round-trip."""
-        return decode_batch_resp(self.rpc.call(encode_batch(requests)))
+        return decode_batch_resp(self._call(encode_batch(requests)))
 
 
 # ---------------------------------------------------------------------------
@@ -682,22 +937,35 @@ class ShardedRpcIndexClient:
     """
 
     def __init__(self, rpcs, block_tokens: int, max_payload: int | None = None,
-                 hasher: PrefixHasher | None = None, on_freed=None):
+                 hasher: PrefixHasher | None = None, on_freed=None,
+                 journals=None, retry: RetryPolicy | None = None,
+                 degrade: bool = False):
         if not rpcs:
             raise ValueError("need at least one rpc transport")
         self.rpcs = list(rpcs)
         self.n_shards = len(self.rpcs)
         self.block_tokens = block_tokens
         self.hasher = hasher if hasher is not None else PrefixHasher(block_tokens)
+        self.retry = retry
+        # degraded mode: a shard that stays unreachable through its
+        # retries fails SOFT on the match path — its positions become
+        # holes, the merged prefix cuts there, and serving recomputes
+        # instead of erroring (worse TTFT, no failure)
+        self.degrade = degrade
+        self.degraded_ops = 0
+        if journals is None:
+            journals = [None] * self.n_shards
+        self.journals = list(journals)
         # per-shard proxies share the hasher (hash once per front); they
-        # also carry the per-op slot-capacity maths and the cross-process
-        # pool-reclaim hook (see RpcIndexClient.on_freed)
+        # also carry the per-op slot-capacity maths, the cross-process
+        # pool-reclaim hook (see RpcIndexClient.on_freed), that shard's
+        # publish journal, and the retry policy
         self.shards = [
             RpcIndexClient(
                 r, block_tokens, max_payload, hasher=self.hasher,
-                on_freed=on_freed,
+                on_freed=on_freed, journal=self.journals[i], retry=retry,
             )
-            for r in self.rpcs
+            for i, r in enumerate(self.rpcs)
         ]
         # rings may differ in slot size: fan-out chunks use the tightest
         self._max_match = min(s._max_match for s in self.shards)
@@ -708,32 +976,98 @@ class ShardedRpcIndexClient:
         self._max_remap = min(s._max_remap for s in self.shards)
 
     # -- transport: post-all, then collect-all ---------------------------
+    def _call_shard(
+        self, s: int, msg: bytes, timeout: float, idempotent: bool
+    ) -> bytes:
+        """Single-shard call with the bounded-retry semantics of
+        ``RpcIndexClient._call`` (see there for the idempotency rules)."""
+        pol = self.retry
+        attempt = 0
+        while True:
+            try:
+                return self.rpcs[s].call(msg, timeout)
+            except ServiceDiedError:
+                attempt += 1
+                if pol is None or attempt > pol.max_retries:
+                    raise
+            except TimeoutError:
+                if pol is None or not idempotent:
+                    raise
+                attempt += 1
+                if attempt > pol.max_retries:
+                    raise
+            st = getattr(self.rpcs[s], "stats", None)
+            if st is not None:
+                st.retries += 1
+            time.sleep(pol.backoff(attempt))
+
     def _fanout(
-        self, msgs: dict[int, bytes], timeout: float = 5.0
+        self, msgs: dict[int, bytes], timeout: float = 5.0,
+        idempotent: bool = True, failed: set[int] | None = None,
     ) -> dict[int, bytes]:
         """One parallel round: post every shard's request, then collect.
 
         A failed post stops posting (nothing else enters the rings); every
         slot that WAS posted is still collected (or quarantined by its own
-        collect), then the first failure is re-raised — no leaked slots,
-        no reply left to alias a later caller."""
+        collect).  Shards that failed transiently (service died/restarted,
+        idempotent timeout) — or never got posted because an earlier
+        shard's post raised — then get a bounded-backoff second chance via
+        ``_call_shard``.  A shard still missing after that either raises
+        the first recorded failure, or (``failed`` not None — degraded
+        mode) is recorded in ``failed`` and simply omitted from the
+        result, the caller treating its positions as holes."""
         slots: dict[int, int] = {}
-        first_err: BaseException | None = None
+        errs: dict[int, BaseException] = {}
         for s, m in msgs.items():
             try:
                 slots[s] = self.rpcs[s].post(m)
             except BaseException as e:  # noqa: BLE001
-                first_err = e
+                errs[s] = e
                 break
         out: dict[int, bytes] = {}
         for s, slot in slots.items():
             try:
                 out[s] = self.rpcs[s].collect(slot, timeout)
             except BaseException as e:  # noqa: BLE001
-                if first_err is None:
-                    first_err = e
-        if first_err is not None:
-            raise first_err
+                errs[s] = e
+        for s in msgs:
+            if s in out:
+                continue
+            e = errs.get(s)
+            if e is not None and not isinstance(
+                e, (ServiceDiedError, TimeoutError)
+            ):
+                continue  # handler/protocol error: never retried
+            if isinstance(e, TimeoutError) and not idempotent:
+                continue  # may have applied server-side: surface it
+            if self.retry is None and failed is None:
+                continue  # no second chance configured
+            try:
+                out[s] = self._call_shard(s, msgs[s], timeout, idempotent)
+                errs.pop(s, None)
+            except BaseException as e2:  # noqa: BLE001
+                errs[s] = e2
+        missing = [s for s in msgs if s not in out]
+        if missing:
+            # a hard error (handler/protocol failure) is a caller bug and
+            # raises even in degraded mode — only transient transport
+            # failures degrade to holes
+            degradable = failed is not None and all(
+                isinstance(errs[s], (ServiceDiedError, TimeoutError))
+                for s in missing
+                if s in errs
+            )
+            if not degradable:
+                for s in msgs:
+                    if s in errs:
+                        raise errs[s]
+                raise RuntimeError("fan-out incomplete without an error")
+            for s in missing:
+                failed.add(s)
+                st = getattr(self.rpcs[s], "stats", None)
+                if st is not None:
+                    st.degraded_ops += 1
+            self.degraded_ops += len(missing)
         return out
 
     # -- hashing is local ------------------------------------------------
@@ -746,19 +1080,36 @@ class ShardedRpcIndexClient:
 
     def match_prefix_keys(self, keys) -> list[tuple[bytes, int, int]]:
         if self.n_shards == 1:
-            return self.shards[0].match_prefix_keys(keys)
+            if not self.degrade:
+                return self.shards[0].match_prefix_keys(keys)
+            try:
+                return self.shards[0].match_prefix_keys(keys)
+            except (ServiceDiedError, TimeoutError):
+                # the single shard is down: every position is a hole —
+                # serving recomputes the whole prefix instead of erroring
+                self.degraded_ops += 1
+                st = getattr(self.rpcs[0], "stats", None)
+                if st is not None:
+                    st.degraded_ops += 1
+                return []
         key_lists, pos_lists = partition_keys(keys, self.n_shards)
         found: list[tuple[int, int] | None] = [None] * len(keys)
         offs = [0] * self.n_shards
         active = {s for s in range(self.n_shards) if key_lists[s]}
+        failed: set[int] | None = set() if self.degrade else None
         M = self._max_match
         while active:
             msgs = {
                 s: encode_match(key_lists[s][offs[s] : offs[s] + M])
                 for s in active
             }
-            resp = self._fanout(msgs)
+            resp = self._fanout(msgs, failed=failed)
             for s in list(active):
+                if s not in resp:
+                    # degraded: shard down — its unanswered positions
+                    # stay None and the merge cuts at the first hole
+                    active.discard(s)
+                    continue
                 ids, eps = decode_match_resp(resp[s])
                 kl, pl = key_lists[s], pos_lists[s]
                 o = offs[s]
@@ -800,8 +1151,14 @@ class ShardedRpcIndexClient:
                 )
             self._fanout(msgs)
             for s in list(parts):
+                kl, bl, el = parts[s]
+                o = offs[s]
+                if self.journals[s] is not None:
+                    self.journals[s].append_publish(
+                        kl[o : o + M], bl[o : o + M], el[o : o + M], n_tokens
+                    )
                 offs[s] += M
-                if offs[s] >= len(parts[s][0]):
+                if offs[s] >= len(kl):
                     del parts[s], offs[s]
 
     def lookup_many(self, keys) -> list[IndexEntry | None]:
@@ -924,12 +1281,20 @@ class ShardedRpcIndexClient:
                     [new_ids[i] for i in sel],
                     [new_epochs[i] for i in sel],
                 )
-            resp = self._fanout(msgs)
+            resp = self._fanout(msgs, idempotent=False)
             for s in list(active):
                 kl, pl = key_lists[s], pos_lists[s]
                 o = offs[s]
-                for v, i in zip(decode_remap_resp(resp[s]), pl[o : o + M]):
+                sub = decode_remap_resp(resp[s])
+                for v, i in zip(sub, pl[o : o + M]):
                     ok[i] = v
+                if self.journals[s] is not None and any(sub):
+                    done = [i for v, i in zip(sub, pl[o : o + M]) if v]
+                    self.journals[s].append_remap(
+                        [keys[i] for i in done],
+                        [new_ids[i] for i in done],
+                        [new_epochs[i] for i in done],
+                    )
                 offs[s] = o + min(M, len(kl) - o)
                 if offs[s] >= len(kl):
                     active.discard(s)
@@ -957,4 +1322,13 @@ class ShardedRpcIndexClient:
             "misses": misses,
             "hit_rate": hits / max(1, hits + misses),
             "shards": [p["entries"] for p in per],
+        }
+
+    def service_stats(self) -> dict:
+        """Aggregate service-side timers (per-shard breakdown included)."""
+        per = [s.service_stats() for s in self.shards]
+        return {
+            "ops_served": sum(p["ops_served"] for p in per),
+            "busy_ns": sum(p["busy_ns"] for p in per),
+            "shards": per,
         }

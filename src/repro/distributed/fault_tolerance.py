@@ -17,6 +17,15 @@ Training-side contract:
   * ``StragglerPolicy``    — per-step duration tracking; hosts slower than
     ``k × median`` over a window are flagged for replacement (training) —
     the serving twin is the fetch-vs-recompute cutover in KVCacheManager.
+
+Serving-side contract (the self-healing metadata plane, PR 6):
+  * ``FaultEvent``/``FaultPlan`` — declarative chaos schedule: kill a
+    shard service, or open a delayed/dropped-reply window, at a virtual
+    time into the run;
+  * ``FaultInjector``   — applies a plan against live ``ShardSupervisor``s
+    (kills) and wraps shard RPC clients (delay/drop windows), so the
+    differential equivalence harness and the exp11 chaos sweep drive the
+    SAME failure schedule through real processes.
 """
 
 from __future__ import annotations
@@ -124,3 +133,118 @@ class StragglerPolicy:
         return [
             h for h, m in medians.items() if m > self.slow_factor * global_med
         ]
+
+
+# ---------------------------------------------------------------------------
+# serving-side chaos: declarative fault schedules against the metadata plane
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.
+
+    ``kind``:
+      * ``"kill"``  — SIGKILL the shard's service process at ``t`` (the
+        supervisor detects and heals it);
+      * ``"delay"`` — for ``[t, t + duration)`` every serial RPC on the
+        shard sleeps ``delay_s`` before posting (slow-service window);
+      * ``"drop"``  — for ``[t, t + duration)`` every serial RPC on the
+        shard raises ``TimeoutError`` instead of posting (lost-reply
+        window; the client's retry/degrade policy decides what happens).
+    """
+
+    t: float
+    kind: str  # "kill" | "delay" | "drop"
+    shard: int = 0
+    duration: float = 0.0
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("kill", "delay", "drop"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class FaultPlan:
+    """A time-sorted fault schedule with a one-way cursor.
+
+    ``due(now)`` hands back every not-yet-applied event whose time has
+    come (kills are applied once); ``active(shard, now)`` reports the
+    delay/drop windows covering ``now`` (windows are stateless — purely
+    a function of the plan and the clock)."""
+
+    def __init__(self, events: list[FaultEvent]):
+        self.events = sorted(events, key=lambda e: e.t)
+        self._cursor = 0
+
+    def due(self, now: float) -> list[FaultEvent]:
+        out = []
+        while self._cursor < len(self.events) and \
+                self.events[self._cursor].t <= now:
+            out.append(self.events[self._cursor])
+            self._cursor += 1
+        return out
+
+    def pending(self) -> int:
+        return len(self.events) - self._cursor
+
+    def active(self, shard: int, now: float) -> list[FaultEvent]:
+        return [
+            e
+            for e in self.events
+            if e.kind in ("delay", "drop")
+            and e.shard == shard
+            and e.t <= now < e.t + e.duration
+        ]
+
+
+class FaultInjector:
+    """Drive a ``FaultPlan`` against a live sharded metadata plane.
+
+    * kills go through ``supervisors[shard].kill()`` — a real SIGKILL of
+      a real child process, healed by the real supervisor;
+    * delay/drop windows wrap each shard's ``CxlRpcClient.call`` (the
+      serial round-trip every retried op funnels through), so the wire
+      client's OWN retry/backoff/degrade machinery — not a test double —
+      absorbs the fault.  Pipelined pure-read rounds bypass ``call`` by
+      design and are not subject to delay/drop windows.
+
+    The harness calls ``advance()`` between ops (or on a timer); the
+    virtual clock starts at ``start()``.
+    """
+
+    def __init__(self, plan: FaultPlan, supervisors, clock=time.monotonic):
+        self.plan = plan
+        self.supervisors = list(supervisors)
+        self._clock = clock
+        self._t0: float | None = None
+        self.applied: list[FaultEvent] = []
+
+    def start(self) -> "FaultInjector":
+        self._t0 = self._clock()
+        return self
+
+    def now(self) -> float:
+        return 0.0 if self._t0 is None else self._clock() - self._t0
+
+    def attach_client(self, shard: int, rpc_client) -> None:
+        """Wrap ``rpc_client.call`` with this plan's delay/drop windows."""
+        orig = rpc_client.call
+
+        def call(payload: bytes, timeout: float = 5.0) -> bytes:
+            for ev in self.plan.active(shard, self.now()):
+                if ev.kind == "drop":
+                    raise TimeoutError(
+                        f"fault-injected dropped reply (shard {shard})"
+                    )
+                time.sleep(ev.delay_s)
+            return orig(payload, timeout)
+
+        rpc_client.call = call
+
+    def advance(self, now: float | None = None) -> list[FaultEvent]:
+        """Apply every event whose time has come; returns them."""
+        fired = self.plan.due(self.now() if now is None else now)
+        for ev in fired:
+            if ev.kind == "kill" and ev.shard < len(self.supervisors):
+                self.supervisors[ev.shard].kill()
+            self.applied.append(ev)
+        return fired

@@ -24,8 +24,13 @@ import numpy as np
 
 from repro.core.index import GlobalIndex
 from repro.core.pool import BelugaPool, OutOfPoolMemory
+from repro.core.rpc import ServiceDiedError
 from repro.core.transfer import TransferEngine
 from repro.kvcache.hbm_cache import HbmPagedCache, OutOfHbmBlocks
+
+# sentinel: "the metadata plane was down and we degraded" (distinct from
+# any legitimate index return value, including None/0/[])
+_DEGRADED = object()
 
 
 @dataclass
@@ -46,6 +51,7 @@ class ManagerStats:
     writebacks: int = 0
     recompute_cutovers: int = 0
     pool_evictions: int = 0
+    degraded_ops: int = 0  # index ops absorbed while the plane was down
 
 
 class KVCacheManager:
@@ -58,6 +64,7 @@ class KVCacheManager:
         recompute_cutover: float | None = None,
         prefill_tok_per_s: float = 8000.0,
         queues=None,
+        degraded_ok: bool = False,
     ):
         self.pool = pool
         self.index = index
@@ -65,10 +72,28 @@ class KVCacheManager:
         self.transfer = transfer
         self.recompute_cutover = recompute_cutover
         self.prefill_tok_per_s = prefill_tok_per_s
+        # degraded mode: a metadata-plane outage (crashed shard service
+        # mid-restart) turns index ops into no-ops — match as all-miss
+        # (full recompute, worse TTFT), writeback skipped — instead of an
+        # exception reaching the engine.  Only transient transport faults
+        # degrade; in-band handler errors still raise (they are bugs).
+        self.degraded_ok = degraded_ok
         # shared fabric.DeviceQueues (tiered mode): foreground fetches
         # queue on the same pool devices as background migration traffic
         self.queues = queues
         self.stats = ManagerStats()
+
+    def _index_op(self, fn):
+        """Run one remote index op under the degraded-mode contract:
+        transient transport faults (service died / timed out after the
+        client's own retries) return ``_DEGRADED`` instead of raising."""
+        if not self.degraded_ok:
+            return fn()
+        try:
+            return fn()
+        except (ServiceDiedError, TimeoutError):
+            self.stats.degraded_ops += 1
+            return _DEGRADED
 
     # ------------------------------------------------------------------
     def plan_fetch(self, tokens: list[int], now: float = 0.0) -> FetchPlan:
@@ -78,7 +103,9 @@ class KVCacheManager:
         drives hotness decay and device-queue contention."""
         bt = self.pool.layout.block_tokens
         keys = self.index.keys_for(tokens)
-        hits = self.index.match_prefix_keys(keys)
+        hits = self._index_op(lambda: self.index.match_prefix_keys(keys))
+        if hits is _DEGRADED:
+            hits = []  # plane down: all-miss, ride the recompute path
         n_hit = len(hits) * bt
         n_miss = len(tokens) - n_hit
         # modeled fetch latency for the hit prefix (one fused kernel)
@@ -216,7 +243,9 @@ class KVCacheManager:
             keys = self.index.keys_for(tokens)
         # only blocks not already in the pool need writing: ONE metadata
         # round-trip (lookup + vectorized epoch check fused server-side)
-        missing = self.index.filter_unpublished(keys)
+        missing = self._index_op(lambda: self.index.filter_unpublished(keys))
+        if missing is _DEGRADED:
+            return 0  # plane down: skip the offload, blocks recompute later
         new_keys = [(i, keys[i]) for i in missing]
         if not new_keys:
             return 0
@@ -231,7 +260,9 @@ class KVCacheManager:
         try:
             block_ids = _alloc()
         except OutOfPoolMemory:
-            freed = self.index.evict_lru(len(new_keys) * 2)
+            freed = self._index_op(lambda: self.index.evict_lru(len(new_keys) * 2))
+            if freed is _DEGRADED:
+                return 0  # can't evict while the plane is down: skip offload
             self.stats.pool_evictions += len(freed)
             try:
                 block_ids = _alloc()
@@ -250,9 +281,14 @@ class KVCacheManager:
                 np.float16,
             )
         epochs = self.transfer.gather_write(block_ids, kv_payload)
-        self.index.publish_many(
+        published = self._index_op(lambda: self.index.publish_many(
             [key for _, key in new_keys], block_ids, epochs, bt
-        )
+        ))
+        if published is _DEGRADED:
+            # unpublished blocks would strand (the index can never evict
+            # what it never learned about): hand them straight back
+            self.pool.release(block_ids)
+            return 0
         self.stats.writebacks += 1
         return len(new_keys)
 

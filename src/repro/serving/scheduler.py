@@ -59,6 +59,19 @@ class ClusterConfig:
     #               epoch/refcount state is shared load/store memory,
     #               and nothing but framed bytes crosses the boundary.
     index_transport: str = "thread"
+    # self-healing metadata plane (process transport only): every shard
+    # service runs under a ShardSupervisor — crash detection via
+    # HeartbeatMonitor, respawn on a fresh ring, GlobalIndex rebuilt from
+    # the per-shard publish journal — while clients retry with bounded
+    # backoff and the manager degrades (recompute instead of raise) for
+    # the duration of an outage.
+    selfheal: bool = False
+    journal_capacity: int = 8192  # records per shard journal
+    supervisor_probe_interval: float = 0.02  # crash-detection cadence (s)
+    # service-child idle backoff (decoupled from the probe interval —
+    # restart detection latency is bounded by the supervisor alone)
+    service_idle_spin: int = 200  # empty ring passes before any sleep
+    service_idle_backoff: float = 100e-6  # sleep ceiling once cold
     # metadata-plane sharding (paper §6: the metadata service scales
     # horizontally): keys partition by digest across S independent
     # GlobalIndex shards; in index_rpc mode each shard gets its OWN
@@ -82,6 +95,7 @@ class Cluster:
         # /dev/shm segments)
         self._rpc_servers = []
         self._rpc_clients = []
+        self._supervisors = []
         self._shm_names: list[str] = []
         self.index = None
         self.migrator = None
@@ -151,23 +165,40 @@ class Cluster:
             # spec — no index object exists here at all (stats and the
             # eviction-pressure signal come back over the wire)
             from repro.core.index import PrefixHasher
-            from repro.core.procserver import ProcessRpcServer
+            from repro.core.procserver import ProcessRpcServer, ShardSupervisor
             from repro.core.rpc import CxlRpcClient
 
             self.hasher = PrefixHasher(self.pool.layout.block_tokens)
             pool_spec = self.pool.share_meta()
             self._shm_names.append(pool_spec["shm_name"])
             for _ in range(cfg.index_shards):
-                srv = ProcessRpcServer(
-                    pool_spec,
-                    n_slots=cfg.index_rpc_slots,
-                    payload_bytes=cfg.index_rpc_payload,
-                ).start()
-                self._rpc_servers.append(srv)
-                self._shm_names.append(srv.ring.shm_name)
-                self._rpc_clients.append(
-                    CxlRpcClient(srv.ring, liveness=srv.alive)
-                )
+                if cfg.selfheal:
+                    sup = ShardSupervisor(
+                        pool_spec,
+                        journal_capacity=cfg.journal_capacity,
+                        probe_interval=cfg.supervisor_probe_interval,
+                        n_slots=cfg.index_rpc_slots,
+                        payload_bytes=cfg.index_rpc_payload,
+                        idle_spin_passes=cfg.service_idle_spin,
+                        idle_backoff_s=cfg.service_idle_backoff,
+                    ).start()
+                    self._supervisors.append(sup)
+                    client = CxlRpcClient(sup.ring, liveness=sup.server.alive)
+                    sup.register_client(client)
+                    self._rpc_clients.append(client)
+                else:
+                    srv = ProcessRpcServer(
+                        pool_spec,
+                        n_slots=cfg.index_rpc_slots,
+                        payload_bytes=cfg.index_rpc_payload,
+                        idle_spin_passes=cfg.service_idle_spin,
+                        idle_backoff_s=cfg.service_idle_backoff,
+                    ).start()
+                    self._rpc_servers.append(srv)
+                    self._shm_names.append(srv.ring.shm_name)
+                    self._rpc_clients.append(
+                        CxlRpcClient(srv.ring, liveness=srv.alive)
+                    )
         elif cfg.index_rpc:
             from repro.core.rpc import CxlRpcClient, CxlRpcServer, ShmRing
             from repro.core.wire import make_index_handler
@@ -224,14 +255,23 @@ class Cluster:
 
         bt = self.pool.layout.block_tokens
         on_freed = self.pool.release if self.index is None else None
+        retry = None
+        journals = None
+        if self._supervisors:
+            from repro.core.rpc import RetryPolicy
+
+            retry = RetryPolicy()
+            journals = [s.journal for s in self._supervisors]
         if len(self._rpc_clients) > 1:
             return ShardedRpcIndexClient(
                 self._rpc_clients, block_tokens=bt, hasher=self.hasher,
-                on_freed=on_freed,
+                on_freed=on_freed, journals=journals, retry=retry,
+                degrade=bool(self._supervisors),
             )
         return RpcIndexClient(
             self._rpc_clients[0], block_tokens=bt, hasher=self.hasher,
             on_freed=on_freed,
+            journal=journals[0] if journals else None, retry=retry,
         )
 
     def _index_stats(self) -> dict:
@@ -244,8 +284,13 @@ class Cluster:
     def shm_segment_names(self) -> list[str]:
         """Named shared-memory segments this cluster currently owns
         (process transport; empty otherwise/after close) — the hygiene
-        tests assert every one of them is unlinked on exit."""
-        return list(self._shm_names)
+        tests assert every one of them is unlinked on exit.  Supervised
+        shards are queried live: restarts retire rings, and every
+        generation's segment must still be unlinked at close."""
+        names = list(self._shm_names)
+        for sup in self._supervisors:
+            names.extend(sup.segment_names())
+        return names
 
     @property
     def _rpc_server(self):
@@ -270,6 +315,9 @@ class Cluster:
         for server in self._rpc_servers:
             server.close()  # thread: stop; process: stop + unlink ring
         self._rpc_servers = []
+        for sup in self._supervisors:
+            sup.close()  # stop probe, all ring generations + journal
+        self._supervisors = []
         # clients stay: their RpcStats remain inspectable post-close
         pool = getattr(self, "pool", None)
         if pool is not None and hasattr(pool, "unshare_meta"):
@@ -301,6 +349,7 @@ class Cluster:
             recompute_cutover=cfg.straggler_cutover,
             prefill_tok_per_s=cfg.runner.prefill_tok_per_s,
             queues=self.queues,
+            degraded_ok=bool(self._supervisors),
         )
         if cfg.transfer_mode == "none":
             # no pool offload: disable prefix reuse entirely
@@ -350,6 +399,19 @@ class Cluster:
         stats["index"] = self._index_stats()
         stats["pool_free"] = self.pool.free_blocks()
         stats["shard_occupancy_max"] = max(self.pool.shard_occupancy() or [0])
+        if self._supervisors:
+            stats["selfheal"] = {
+                "restarts": sum(s.restarts for s in self._supervisors),
+                "rpc_retries": sum(
+                    c.stats.retries for c in self._rpc_clients
+                ),
+                "rpc_degraded_ops": sum(
+                    c.stats.degraded_ops for c in self._rpc_clients
+                ),
+                "manager_degraded_ops": sum(
+                    e.manager.stats.degraded_ops for e in self.engines
+                ),
+            }
         if self.migrator is not None:
             stats["tiering"] = self.pool.stats_dict()
             stats["tiering"]["migrator_steps"] = self.migrator.steps

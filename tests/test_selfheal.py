@@ -1,0 +1,808 @@
+"""Self-healing metadata plane: journal, rebuild, supervisor, retry,
+degrade, fault injection, and the kill -9 chaos gates (ISSUE 6).
+
+Layered like the feature:
+
+  * ``ShardJournal`` / ``live_entries``       — the flight recorder;
+  * ``GlobalIndex.rebuild_from_journal``      — crash-restart replay;
+  * OP_SNAPSHOT / OP_RESTORE                  — wire-level rebuild ops;
+  * ``RetryPolicy`` + ``adopt_ring``          — client-side healing;
+  * ``ShardSupervisor``                       — kill -9 -> respawn ->
+    journal replay -> adopt, with bounded detection latency DECOUPLED
+    from the service child's idle backoff;
+  * degraded mode                             — sharded match holes +
+    ``KVCacheManager`` absorbing plane outages (never raises to engine);
+  * ``FaultPlan`` / ``FaultInjector``         — declarative chaos driven
+    through the real retry machinery;
+  * chaos differential gates                  — kill -9 mid-stream
+    converges to the no-fault run (stale-free streams bit-identical;
+    full streams complete with block conservation).
+"""
+
+from __future__ import annotations
+
+import random
+import time
+
+import pytest
+
+from repro.core import wire
+from repro.core.index import GlobalIndex
+from repro.core.pool import BelugaPool, PoolLayout
+from repro.core.procserver import ProcessRpcServer, ShardSupervisor
+from repro.core.rpc import (
+    CxlRpcClient,
+    CxlRpcServer,
+    RetryPolicy,
+    RpcError,
+    ServiceDiedError,
+    ShmRing,
+)
+from repro.core.shm import (
+    JOURNAL_PUBLISH,
+    JOURNAL_REMAP,
+    JOURNAL_RETRACT,
+    ShardJournal,
+    live_entries,
+)
+from repro.distributed.fault_tolerance import (
+    ElasticPlan,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    HeartbeatMonitor,
+    StragglerPolicy,
+    plan_elastic_remesh,
+)
+
+from tests.test_metadata_equivalence import Backend, make_ops, replay, _key
+
+LAYOUT = PoolLayout(block_tokens=16, n_layers_kv=4, n_kv_heads=2, head_dim=8)
+FAST_RETRY = RetryPolicy(max_retries=10, base_backoff=0.005, max_backoff=0.1)
+
+
+def _k(i: int) -> bytes:
+    return i.to_bytes(4, "little") * 4
+
+
+def _segment_gone(name: str) -> bool:
+    from repro.core.shm import attach_segment
+
+    try:
+        seg = attach_segment(name)
+    except FileNotFoundError:
+        return True
+    seg.close()
+    return False
+
+
+# ---------------------------------------------------------------------------
+# ShardJournal + live_entries
+# ---------------------------------------------------------------------------
+def test_journal_roundtrip_and_live_fold():
+    j = ShardJournal.create(capacity=64)
+    try:
+        j.append_publish([_k(1), _k(2), _k(3)], [10, 11, 12], [1, 1, 1], 16)
+        j.append_retract([11])
+        j.append_publish([_k(1)], [13], [2], 16)  # re-publish: moves to end
+        j.append_remap([_k(3)], [20], [5])
+        recs = j.records()
+        assert len(j) == 6 and len(recs) == 6
+        assert recs[0] == (JOURNAL_PUBLISH, _k(1), 10, 1, 16)
+        assert recs[3][0] == JOURNAL_RETRACT and recs[3][2] == 11
+        assert recs[5] == (JOURNAL_REMAP, _k(3), 20, 5, -1)
+        live = live_entries(recs)
+        # key2 retracted; key3 remapped (keeps n_tokens); key1 re-published
+        # LAST so it folds to the journal's MRU end
+        assert live == {_k(3): (20, 5, 16), _k(1): (13, 2, 16)}
+        assert list(live) == [_k(3), _k(1)]
+    finally:
+        j.close()
+
+
+def test_journal_retract_removes_only_last_publisher():
+    """A recycled block id must retract the CURRENT owner's row, not a
+    stale alias that published the same id earlier — mirroring which row
+    the live index actually dropped."""
+    recs = [
+        (JOURNAL_PUBLISH, _k(1), 10, 1, 16),
+        (JOURNAL_PUBLISH, _k(2), 10, 2, 16),  # block 10 recycled to key2
+        (JOURNAL_RETRACT, b"\0" * 16, 10, 0, 0),
+    ]
+    live = live_entries(recs)
+    # key2 (last publisher) gone; key1's stale alias row survives, as in
+    # the live index (match GCs it later, identically pre/post rebuild)
+    assert _k(2) not in live and _k(1) in live
+
+
+def test_journal_overflow_compacts_in_place():
+    j = ShardJournal.create(capacity=8)
+    try:
+        for i in range(6):
+            j.append_publish([_k(1)], [100 + i], [i], 16)
+        j.append_publish([_k(2)], [200], [1], 16)
+        assert len(j) == 7 and j.generation == 0
+        # 2 more would exceed capacity -> compaction to the 2 live rows
+        j.append_publish([_k(3), _k(4)], [300, 400], [1, 1], 16)
+        assert j.generation == 1
+        assert len(j) == 4  # 2 live survivors + 2 new
+        live = live_entries(j.records())
+        assert live[_k(1)] == (105, 5, 16) and _k(4) in live
+    finally:
+        j.close()
+
+
+def test_journal_overflow_beyond_live_raises():
+    j = ShardJournal.create(capacity=2)
+    try:
+        j.append_publish([_k(1), _k(2)], [1, 2], [1, 1], 16)
+        with pytest.raises(RuntimeError, match="overflow"):
+            j.append_publish([_k(3)], [3], [1], 16)
+    finally:
+        j.close()
+
+
+def test_journal_attach_validates_capacity():
+    j = ShardJournal.create(capacity=16)
+    try:
+        with pytest.raises(ValueError, match="capacity mismatch"):
+            ShardJournal.attach(j.name, 32)
+        j2 = ShardJournal.attach(j.name, 16)
+        j2.close()
+    finally:
+        j.close()
+
+
+# ---------------------------------------------------------------------------
+# rebuild + snapshot/restore
+# ---------------------------------------------------------------------------
+def test_rebuild_from_journal_restores_observable_state():
+    pool = BelugaPool(LAYOUT, n_blocks=256, n_shards=4, backing="meta")
+    idx = GlobalIndex(pool)
+    keys = [_key(0, i) for i in range(6)]
+    blocks = pool.allocate(6)
+    eps = pool.write_blocks(blocks)
+    j = ShardJournal.create(capacity=64)
+    try:
+        idx.publish_many(keys, blocks, eps, 16)
+        j.append_publish(keys, blocks, eps, 16)
+        freed = idx.evict_blocks([blocks[2]])
+        assert freed == [blocks[2]]
+        j.append_retract(freed)
+        # "crash": a brand-new index replays the journal
+        rebuilt = GlobalIndex(pool)
+        assert rebuilt.rebuild_from_journal(j.records()) == 5
+        for i, k in enumerate(keys):
+            if i == 2:
+                assert rebuilt.lookup(k) is None
+            else:
+                ent = rebuilt.lookup(k)
+                assert (ent.block_id, ent.epoch) == (blocks[i], eps[i])
+        # the match path agrees with the pre-crash index: cut at the hole
+        hits = rebuilt.match_prefix_keys(keys)
+        assert [b for _, b, _ in hits] == blocks[:2]
+    finally:
+        j.close()
+
+
+def test_snapshot_restore_ops_roundtrip_over_ring():
+    """OP_SNAPSHOT pages the index in LRU order over a tiny ring (many
+    pages) and OP_RESTORE rebuilds a fresh shard to the same entries."""
+    pool = BelugaPool(LAYOUT, n_blocks=256, n_shards=4, backing="meta")
+    idx = GlobalIndex(pool)
+    ring = ShmRing(n_slots=4, payload_bytes=512)  # forces paging
+    server = CxlRpcServer(
+        ring, wire.make_index_handler(idx, max_reply=ring.payload_bytes)
+    ).start()
+    try:
+        proxy = wire.RpcIndexClient(CxlRpcClient(ring), block_tokens=16)
+        keys = [_key(1, i) for i in range(40)]
+        blocks = pool.allocate(40)
+        eps = pool.write_blocks(blocks)
+        proxy.publish_many(keys, blocks, eps, 16)
+        snap = proxy.snapshot_all()
+        assert len(snap) == 40
+        assert [k for k, *_ in snap] == keys  # LRU order = publish order
+        # restore into a second, empty shard behind its own ring
+        idx2 = GlobalIndex(pool)
+        ring2 = ShmRing(n_slots=4, payload_bytes=512)
+        server2 = CxlRpcServer(
+            ring2, wire.make_index_handler(idx2, max_reply=ring2.payload_bytes)
+        ).start()
+        try:
+            proxy2 = wire.RpcIndexClient(CxlRpcClient(ring2), block_tokens=16)
+            n = proxy2.restore_entries(
+                [k for k, *_ in snap],
+                [b for _, b, _, _ in snap],
+                [e for _, _, e, _ in snap],
+                [t for *_, t in snap],
+            )
+            assert n == 40
+            assert proxy2.snapshot_all() == snap
+        finally:
+            server2.stop()
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# retry + adopt_ring
+# ---------------------------------------------------------------------------
+def test_retry_policy_backoff_is_bounded_exponential():
+    pol = RetryPolicy(max_retries=6, base_backoff=0.01, max_backoff=0.05)
+    waits = [pol.backoff(a) for a in range(1, 7)]
+    assert waits[:3] == [0.01, 0.02, 0.04]
+    assert all(w <= 0.05 for w in waits[3:])
+
+
+def test_adopt_ring_cuts_client_to_fresh_generation():
+    pool = BelugaPool(LAYOUT, n_blocks=128, n_shards=4, backing="meta")
+    spec = pool.share_meta()
+    srv1 = ProcessRpcServer(spec, n_slots=8, payload_bytes=1 << 14).start()
+    srv2 = None
+    client = CxlRpcClient(srv1.ring, liveness=srv1.alive)
+    try:
+        assert srv1.wait_ready(10)
+        proxy = wire.RpcIndexClient(
+            client, block_tokens=16, retry=FAST_RETRY
+        )
+        keys = [_key(2, i) for i in range(3)]
+        blocks = pool.allocate(3)
+        proxy.publish_many(keys, blocks, pool.write_blocks(blocks), 16)
+        srv1.kill()
+        # dead generation: liveness turns the wait into ServiceDiedError,
+        # and the retry budget here is too small to outlive the outage
+        with pytest.raises((ServiceDiedError, RpcError)):
+            wire.RpcIndexClient(
+                client, block_tokens=16,
+                retry=RetryPolicy(max_retries=1, base_backoff=0.001),
+            ).lookup_many(keys)
+        srv2 = ProcessRpcServer(spec, n_slots=8, payload_bytes=1 << 14).start()
+        assert srv2.wait_ready(10)
+        client.adopt_ring(srv2.ring, liveness=srv2.alive)
+        assert client.stats.restarts == 1
+        # fresh generation serves (empty index: no journal was replayed)
+        assert proxy.lookup_many(keys) == [None, None, None]
+    finally:
+        srv1.close()
+        if srv2 is not None:
+            srv2.close()
+        pool.unshare_meta()
+
+
+# ---------------------------------------------------------------------------
+# supervisor: kill -9 -> respawn -> journal replay -> adopt
+# ---------------------------------------------------------------------------
+def test_supervisor_restarts_and_replays_journal():
+    pool = BelugaPool(LAYOUT, n_blocks=256, n_shards=4, backing="meta")
+    spec = pool.share_meta()
+    sup = ShardSupervisor(
+        spec, journal_capacity=256, probe_interval=0.01,
+        n_slots=8, payload_bytes=1 << 14,
+    ).start()
+    try:
+        assert sup.wait_ready(10)
+        client = CxlRpcClient(sup.ring, liveness=sup.server.alive)
+        sup.register_client(client)
+        proxy = wire.RpcIndexClient(
+            client, block_tokens=16, journal=sup.journal, retry=FAST_RETRY,
+            on_freed=pool.release,
+        )
+        keys = [_key(3, i) for i in range(8)]
+        blocks = pool.allocate(8)
+        eps = pool.write_blocks(blocks)
+        proxy.publish_many(keys, blocks, eps, 16)
+        freed = proxy.evict_blocks([blocks[5]])
+        assert freed == [blocks[5]]
+        before = [
+            None if e is None else (e.block_id, e.epoch)
+            for e in proxy.lookup_many(keys)
+        ]
+        served_before = sup.served
+        sup.kill()
+        # the NEXT op rides retry straight through detection + respawn +
+        # replay + adopt_ring — no caller-visible failure
+        after = [
+            None if e is None else (e.block_id, e.epoch)
+            for e in proxy.lookup_many(keys)
+        ]
+        assert after == before
+        assert sup.restarts == 1
+        assert client.stats.restarts == 1
+        assert client.stats.retries >= 1
+        # cumulative service counters span generations
+        assert sup.served > served_before
+        # zero lost / double-freed: every non-evicted block is still
+        # owned by the rebuilt index, the evicted one is back in the pool
+        assert pool.free_blocks() == 256 - 7
+        names = sup.segment_names()
+        assert len(names) == 3  # journal + live ring + 1 retired ring
+    finally:
+        sup.close()
+        pool.unshare_meta()
+    for n in names:
+        assert _segment_gone(n), n
+
+
+def test_detection_latency_decoupled_from_idle_backoff():
+    """The service child may idle-sleep arbitrarily long (satellite:
+    configurable backoff ceiling) — crash DETECTION is the supervisor's
+    probe alone, so restart latency stays bounded by probe + grace."""
+    pool = BelugaPool(LAYOUT, n_blocks=64, n_shards=4, backing="meta")
+    spec = pool.share_meta()
+    sup = ShardSupervisor(
+        spec, journal_capacity=64, probe_interval=0.01, grace=0.02,
+        n_slots=8, payload_bytes=1 << 14,
+        idle_spin_passes=1, idle_backoff_s=0.25,  # pathologically sleepy
+    ).start()
+    try:
+        assert sup.wait_ready(10)
+        assert sup.server.spec.idle_backoff_s == 0.25  # knob reaches child
+        sup.kill()
+        t0 = time.monotonic()
+        deadline = t0 + 5.0
+        while sup.restarts == 0 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        detected = time.monotonic() - t0
+        assert sup.restarts == 1, "crash never detected"
+        # bound: probe+grace+respawn+replay — far below the 0.25 s idle
+        # sleep times the ~200-pass spin the OLD fixed backoff implied,
+        # and completely independent of idle_backoff_s
+        assert detected < 3.0
+    finally:
+        sup.close()
+        pool.unshare_meta()
+
+
+def test_supervisor_gives_up_after_max_restarts():
+    pool = BelugaPool(LAYOUT, n_blocks=64, n_shards=4, backing="meta")
+    spec = pool.share_meta()
+    sup = ShardSupervisor(
+        spec, journal_capacity=64, probe_interval=0.005, max_restarts=2,
+        n_slots=8, payload_bytes=1 << 14,
+    ).start()
+    try:
+        assert sup.wait_ready(10)
+        for _ in range(4):
+            sup.kill()
+            deadline = time.monotonic() + 5.0
+            while time.monotonic() < deadline:
+                if sup.restarts >= sup.max_restarts or sup.server.alive():
+                    break
+                time.sleep(0.005)
+        time.sleep(0.05)  # give a runaway probe loop rope to hang itself
+        assert sup.restarts == 2  # flapping shard: resuscitation capped
+    finally:
+        sup.close()
+        pool.unshare_meta()
+
+
+# ---------------------------------------------------------------------------
+# degraded mode
+# ---------------------------------------------------------------------------
+def test_sharded_degrade_turns_dead_shard_into_holes():
+    pool = BelugaPool(LAYOUT, n_blocks=256, n_shards=4, backing="meta")
+    spec = pool.share_meta()
+    servers = [
+        ProcessRpcServer(spec, n_slots=8, payload_bytes=1 << 14).start()
+        for _ in range(2)
+    ]
+    clients = [
+        CxlRpcClient(s.ring, liveness=s.alive) for s in servers
+    ]
+    try:
+        for s in servers:
+            assert s.wait_ready(10)
+        proxy = wire.ShardedRpcIndexClient(
+            clients, 16, on_freed=pool.release,
+            retry=RetryPolicy(max_retries=2, base_backoff=0.002),
+            degrade=True,
+        )
+        keys = [_key(4, i) for i in range(12)]
+        blocks = pool.allocate(12)
+        proxy.publish_many(keys, blocks, pool.write_blocks(blocks), 16)
+        full = proxy.match_prefix_keys(keys)
+        assert len(full) == 12
+        from repro.core.index import shard_of_key
+
+        dead = shard_of_key(keys[0], 2)
+        servers[dead].kill()  # NO supervisor: the shard stays down
+        hits = proxy.match_prefix_keys(keys)
+        # the dead shard's first position is a hole -> merged prefix cuts
+        # before it; serving got a (possibly empty) prefix, not an error
+        assert len(hits) < 12
+        assert proxy.degraded_ops >= 1
+        assert sum(c.stats.degraded_ops for c in clients) >= 1
+        first_dead_pos = min(
+            i for i, k in enumerate(keys) if shard_of_key(k, 2) == dead
+        )
+        assert len(hits) <= first_dead_pos
+    finally:
+        for s in servers:
+            s.close()
+        pool.unshare_meta()
+
+
+def test_manager_degraded_mode_never_raises_to_engine():
+    from repro.core.transfer import TransferEngine
+    from repro.kvcache.hbm_cache import HbmPagedCache
+    from repro.kvcache.manager import KVCacheManager
+
+    pool = BelugaPool(LAYOUT, n_blocks=128, n_shards=4, backing="meta")
+
+    class FlakyIndex(GlobalIndex):
+        """In-process index whose REMOTE ops fail like a dead transport."""
+
+        down = True
+
+        def _die(self):
+            if self.down:
+                raise ServiceDiedError("injected outage")
+
+        def match_prefix_keys(self, keys):
+            self._die()
+            return super().match_prefix_keys(keys)
+
+        def filter_unpublished(self, keys):
+            self._die()
+            return super().filter_unpublished(keys)
+
+        def publish_many(self, *a, **k):
+            self._die()
+            return super().publish_many(*a, **k)
+
+        def evict_lru(self, *a, **k):
+            self._die()
+            return super().evict_lru(*a, **k)
+
+    idx = FlakyIndex(pool)
+    mgr = KVCacheManager(
+        pool, idx, HbmPagedCache(64, 16), TransferEngine(pool),
+        degraded_ok=True,
+    )
+    tokens = list(range(64))
+    # match degrades to all-miss (full recompute), no exception
+    plan = mgr.plan_fetch(tokens)
+    assert plan.n_hit_tokens == 0 and plan.hit_blocks == []
+    # writeback degrades to "skip offload", no exception, nothing leaked
+    free0 = pool.free_blocks()
+    assert mgr.writeback("s0", tokens) == 0
+    assert pool.free_blocks() == free0
+    assert mgr.stats.degraded_ops == 2
+    # plane heals -> the same calls go remote again
+    idx.down = False
+    assert mgr.writeback("s0", tokens) == 4
+    assert mgr.plan_fetch(tokens).n_hit_tokens == 64
+    assert mgr.stats.degraded_ops == 2
+    # without the opt-in, the fault propagates (strict mode unchanged)
+    idx.down = True
+    mgr2 = KVCacheManager(
+        pool, idx, HbmPagedCache(64, 16), TransferEngine(pool),
+    )
+    with pytest.raises(ServiceDiedError):
+        mgr2.plan_fetch(tokens)
+
+
+def test_manager_degraded_publish_rolls_back_blocks():
+    """A publish that dies AFTER the blocks were allocated must hand them
+    back — an unpublished block the index never saw can never be evicted,
+    so keeping it would leak pool memory on every outage-window write."""
+    from repro.core.transfer import TransferEngine
+    from repro.kvcache.hbm_cache import HbmPagedCache
+    from repro.kvcache.manager import KVCacheManager
+
+    pool = BelugaPool(LAYOUT, n_blocks=128, n_shards=4, backing="meta")
+
+    class PublishDies(GlobalIndex):
+        def publish_many(self, *a, **k):
+            raise ServiceDiedError("injected outage")
+
+    mgr = KVCacheManager(
+        pool, PublishDies(pool), HbmPagedCache(64, 16), TransferEngine(pool),
+        degraded_ok=True,
+    )
+    free0 = pool.free_blocks()
+    assert mgr.writeback("s0", list(range(64))) == 0
+    assert pool.free_blocks() == free0  # allocated blocks returned
+    assert mgr.stats.degraded_ops == 1
+
+
+# ---------------------------------------------------------------------------
+# fault_tolerance policies (previously untested) + FaultPlan/FaultInjector
+# ---------------------------------------------------------------------------
+def test_heartbeat_monitor_grace_windows():
+    mon = HeartbeatMonitor(n_hosts=3, timeout_s=10.0)
+    mon.beat(0, now=0.0)
+    mon.beat(1, now=5.0)
+    # host 2 never beat; host 0 beyond grace at t=11
+    assert mon.dead_hosts(now=11.0) == [0, 2]
+    mon.beat(0, now=12.0)
+    assert mon.dead_hosts(now=13.0) == [2]
+    assert mon.dead_hosts(now=13.0 + 1e18) == [0, 1, 2]
+
+
+def test_elastic_plan_shrinks_outer_dp_axis_only():
+    plan = plan_elastic_remesh(
+        (4, 2, 8), ("data", "fsdp", "model"), hosts_per_unit=1,
+        failed_hosts=[0], checkpoint_step=100,
+    )
+    assert plan.new_shape == (3, 2, 8)
+    assert plan.degraded and plan.restart_step == 100
+    noop = plan_elastic_remesh(
+        (4, 2, 8), ("data", "fsdp", "model"), 1, [], 100
+    )
+    assert noop.new_shape == (4, 2, 8) and not noop.degraded
+    with pytest.raises(RuntimeError, match="all DP slices"):
+        plan_elastic_remesh((1, 4), ("data", "model"), 1, [0], 0)
+    assert ElasticPlan((2, 2), (2, 2), ("data", "model"), 0, "x").degraded is False
+
+
+def test_straggler_policy_flags_slow_hosts():
+    pol = StragglerPolicy(window=4, slow_factor=1.5)
+    assert pol.stragglers() == []  # <2 hosts: no signal
+    for t in (1.0, 1.1, 0.9, 1.0, 1.05):  # >window: oldest rolls off
+        pol.record(0, t)
+    for t in (1.0, 1.0, 1.1):
+        pol.record(1, t)
+    for t in (2.0, 2.2, 1.9):
+        pol.record(2, t)
+    assert pol.stragglers() == [2]
+    assert len(pol.history[0]) == 4
+
+
+def test_fault_plan_due_and_active_windows():
+    plan = FaultPlan([
+        FaultEvent(t=0.5, kind="kill", shard=1),
+        FaultEvent(t=0.1, kind="delay", shard=0, duration=0.3, delay_s=0.01),
+        FaultEvent(t=0.2, kind="drop", shard=0, duration=0.2),
+    ])
+    assert [e.t for e in plan.events] == [0.1, 0.2, 0.5]
+    assert [e.kind for e in plan.due(0.25)] == ["delay", "drop"]
+    assert plan.pending() == 1
+    assert plan.due(0.25) == []  # one-way cursor
+    assert {e.kind for e in plan.active(0, 0.3)} == {"delay", "drop"}
+    assert plan.active(0, 0.45) == []  # both windows closed
+    assert plan.active(1, 0.3) == []  # other shard untouched
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent(t=0.0, kind="explode")
+
+
+def test_fault_injector_kill_and_drop_through_retry():
+    """Kills reach the supervisor; a drop window makes the wrapped client
+    raise TimeoutError, which the wire client's OWN retry absorbs for
+    idempotent ops once the window closes."""
+
+    class FakeSup:
+        kills = 0
+
+        def kill(self):
+            FakeSup.kills += 1
+
+    pool = BelugaPool(LAYOUT, n_blocks=64, n_shards=4, backing="meta")
+    idx = GlobalIndex(pool)
+    ring = ShmRing(n_slots=4, payload_bytes=1 << 14)
+    server = CxlRpcServer(
+        ring, wire.make_index_handler(idx, max_reply=ring.payload_bytes)
+    ).start()
+    try:
+        client = CxlRpcClient(ring)
+        # virtual clock: the test advances time by hand
+        clock = {"t": 0.0}
+        inj = FaultInjector(
+            FaultPlan([
+                FaultEvent(t=0.0, kind="kill", shard=0),
+                FaultEvent(t=1.0, kind="drop", shard=0, duration=1.0),
+            ]),
+            supervisors=[FakeSup()],
+            clock=lambda: clock["t"],
+        ).start()
+        inj.attach_client(0, client)
+        assert inj.advance() == [FaultEvent(t=0.0, kind="kill", shard=0)]
+        assert FakeSup.kills == 1
+        proxy = wire.RpcIndexClient(client, block_tokens=16)
+        keys = [_key(5, i) for i in range(2)]
+        assert proxy.lookup_many(keys) == [None, None]  # window not open
+        clock["t"] = 1.5  # inside the drop window: replies "lost"
+        with pytest.raises(TimeoutError, match="fault-injected"):
+            proxy.lookup_many(keys)
+        # with retry, the op outlives the window: backoff sleeps don't
+        # advance the virtual clock, so close it by hand mid-retry
+        retried = wire.RpcIndexClient(
+            client, block_tokens=16,
+            retry=RetryPolicy(max_retries=8, base_backoff=0.01),
+        )
+        import threading
+
+        threading.Timer(0.03, lambda: clock.update(t=2.5)).start()
+        assert retried.lookup_many(keys) == [None, None]
+        assert client.stats.retries >= 1
+    finally:
+        server.stop()
+        pool.unshare_meta()
+
+
+# ---------------------------------------------------------------------------
+# pipelined chunk rounds (satellite): equivalence at tiny payloads
+# ---------------------------------------------------------------------------
+def test_pipelined_pure_reads_match_serial_results():
+    """A payload small enough to force MANY chunk rounds: the pipelined
+    post/collect path for pure reads must return exactly what the served
+    index answers in-process (order, None-holes, filter indices)."""
+    pool = BelugaPool(LAYOUT, n_blocks=512, n_shards=8, backing="meta")
+    idx = GlobalIndex(pool)
+    ring = ShmRing(n_slots=8, payload_bytes=512)
+    server = CxlRpcServer(
+        ring, wire.make_index_handler(idx, max_reply=ring.payload_bytes)
+    ).start()
+    try:
+        proxy = wire.RpcIndexClient(CxlRpcClient(ring), block_tokens=16)
+        assert proxy._max_lookup < 40  # tiny chunks: rounds really happen
+        keys = [_key(6, i) for i in range(180)]
+        blocks = pool.allocate(120)
+        eps = pool.write_blocks(blocks)
+        proxy.publish_many(keys[:120], blocks, eps, 16)
+        got = proxy.lookup_many(keys)
+        want = idx.lookup_many(keys)
+        assert [
+            None if e is None else (e.block_id, e.epoch, e.n_tokens)
+            for e in got
+        ] == [
+            None if e is None else (e.block_id, e.epoch, e.n_tokens)
+            for e in want
+        ]
+        assert proxy.filter_unpublished(keys) == idx.filter_unpublished(keys)
+        [unowned] = pool.allocate(1)  # valid id, never published
+        found = proxy.owners_of(blocks + [unowned])
+        assert found == idx.owners_of(blocks + [unowned])
+        # and the serial paths on the same proxy still agree (match must
+        # NOT pipeline: LRU touch order is part of its contract)
+        hits = proxy.match_prefix_keys(keys)
+        assert [b for _, b, _ in hits] == blocks
+    finally:
+        server.stop()
+        pool.unshare_meta()
+
+
+# ---------------------------------------------------------------------------
+# chaos differential gates (the merge gate from the issue)
+# ---------------------------------------------------------------------------
+class SupervisedBackend(Backend):
+    """Differential-harness backend: process transport behind
+    ``ShardSupervisor``s with journals + retry — the self-healing
+    deployment, with a ``kill`` chaos hook."""
+
+    def __init__(self, n_shards: int, degrade: bool = False):
+        self.kind = "supervised"
+        self.pool = BelugaPool(LAYOUT, n_blocks=4096, n_shards=8, backing="meta")
+        self._servers = []
+        spec = self.pool.share_meta()
+        self.sups = [
+            ShardSupervisor(
+                spec, journal_capacity=4096, probe_interval=0.01,
+                n_slots=8, payload_bytes=1 << 14,
+            ).start()
+            for _ in range(n_shards)
+        ]
+        clients = []
+        for sup in self.sups:
+            assert sup.wait_ready(10)
+            cl = CxlRpcClient(sup.ring, liveness=sup.server.alive)
+            sup.register_client(cl)
+            clients.append(cl)
+        self.view = wire.ShardedRpcIndexClient(
+            clients, LAYOUT.block_tokens, on_freed=self.pool.release,
+            journals=[s.journal for s in self.sups],
+            retry=RetryPolicy(max_retries=12, base_backoff=0.01,
+                              max_backoff=0.2),
+            degrade=degrade,
+        )
+
+    def kill(self, shard: int = 0) -> None:
+        self.sups[shard].kill()
+
+    def close(self) -> None:
+        for sup in self.sups:
+            sup.close()
+        self.pool.unshare_meta()
+
+
+def test_chaos_differential_stale_free_stream_bit_identical():
+    """Kill -9 mid-stream; retry + supervisor + journal replay must make
+    the fault INVISIBLE: observations bit-identical to the no-fault run
+    (stale-free streams — no evictions, so no 'modulo')."""
+    ops = make_ops(random.Random(17), 24, staleness=False)
+    half = len(ops) // 2
+    with Backend("inproc", 3) as ref:
+        want = replay(ref, ops[:half]) + replay(ref, ops[half:])
+    with SupervisedBackend(3) as b:
+        got = replay(b, ops[:half])
+        b.kill(0)
+        got += replay(b, ops[half:])
+        assert b.sups[0].restarts == 1
+        assert b.view.rpcs[0].stats.restarts == 1
+    assert got == want
+
+
+def test_chaos_differential_full_stream_conserves_blocks():
+    """Full op set (evictions, remap, stale holes) under kill -9: the
+    stream must COMPLETE (no error reaches the driver), every block must
+    end up either free or owned by exactly one valid index entry, and
+    post-recovery lookups must agree with the plane's own final state —
+    the no-fault run modulo eviction victims, which the rebuilt LRU
+    order may legitimately reorder."""
+    ops = make_ops(random.Random(23), 30)
+    half = len(ops) // 2
+    # no-fault supervised reference: same deployment, same split, no kill
+    with SupervisedBackend(3) as ref:
+        replay(ref, ops[:half])
+        replay(ref, ops[half:])
+        ref_free = ref.pool.free_blocks()
+    with SupervisedBackend(3) as b:
+        replay(b, ops[:half])
+        b.kill(0)
+        obs = replay(b, ops[half:])
+        assert b.sups[0].restarts == 1
+        assert obs  # stream ran to completion through the outage
+        # conservation: the kill freed/lost no block the no-fault run
+        # kept (a lost block would lower free_blocks, a double-free
+        # trips the pool's own assertions before we ever get here; the
+        # COUNT matches because rebuilt-LRU eviction may pick different
+        # victims but frees the same quota)
+        assert b.pool.free_blocks() == ref_free
+        # self-consistency after recovery: a fresh match over a published
+        # doc returns exactly its surviving entries
+        for doc in range(4):
+            keys = [_key(doc, i) for i in range(8)]
+            hits = b.view.match_prefix_keys(keys)
+            looked = b.view.lookup_many([k for k, _, _ in hits])
+            assert [
+                (e.block_id, e.epoch) for e in looked
+            ] == [(bid, ep) for _, bid, ep in hits]
+
+
+def test_chaos_kill_during_outage_heavy_write_load():
+    """Publishes landing DURING the outage must either fail-soft or land
+    exactly once — after recovery the journal-rebuilt shard and the pool
+    agree block for block (the zero lost / zero double-freed gate)."""
+    with SupervisedBackend(2) as b:
+        pool, view = b.pool, b.view
+        all_blocks = []
+        for doc in range(3):
+            keys = [_key(doc, i) for i in range(8)]
+            blocks = pool.allocate(8)
+            view.publish_many(keys, blocks, pool.write_blocks(blocks), 16)
+            all_blocks += blocks
+            if doc == 0:
+                b.kill(1)  # crash while the write load keeps coming
+        for doc in range(3):
+            keys = [_key(doc, i) for i in range(8)]
+            hits = view.match_prefix_keys(keys)
+            assert len(hits) == 8, f"doc {doc} lost entries"
+        assert pool.free_blocks() == 4096 - 24
+        assert b.sups[1].restarts == 1
+
+
+@pytest.mark.slow
+def test_chaos_smoke_subprocess_isolated():
+    """CI chaos smoke with hard timeout: the exp11 chaos sweep (kill -9
+    one supervised shard mid-load) runs in a SUBPROCESS so a hung child
+    can't stall the suite; asserts actual recovery."""
+    import json
+    import subprocess
+    import sys
+
+    code = (
+        "import json;"
+        "from benchmarks.exp11_rpc import chaos_sweep;"
+        "print(json.dumps(chaos_sweep(2048, True)))"
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, timeout=120,
+        cwd=".", env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    ch = json.loads(out.stdout.strip().splitlines()[-1])
+    assert ch["restarts"] >= 1
+    assert ch["recovery_s"] is not None and ch["recovery_s"] < 30
+    assert ch["post_recovery_keys_per_s"] > 0

@@ -293,12 +293,15 @@ def test_wire_stats_op_roundtrip():
     pool, idx, chains = _published(n_chains=2, chain_len=5)
     idx.match_prefix(chains[0][0])
     idx.match_prefix(chains[1][0][: 3 * 16] + [-1] * 16)  # 3 hits + misses
-    entries, hits, misses = wire.decode_stats_resp(
+    entries, hits, misses, ops, busy = wire.decode_stats_resp(
         wire.handle_request(idx, wire.encode_stats())
     )
     s = idx.stats()
     assert (entries, hits, misses) == (s["entries"], s["hits"], s["misses"])
-    assert wire.reply_bound(wire.encode_stats()) == 24
+    # service-side timer fields ride the same reply; without a ring ctrl
+    # block wired in they read 0 (handle_request called directly here)
+    assert (ops, busy) == (0, 0)
+    assert wire.reply_bound(wire.encode_stats()) == 40
     # and over a live ring via the proxy (hit_rate computed client-side)
     ring = ShmRing(n_slots=2, payload_bytes=256)
     server = CxlRpcServer(ring, wire.make_index_handler(idx)).start()
