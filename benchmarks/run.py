@@ -1,13 +1,14 @@
 """Benchmark harness entry: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only exp05,exp11] [--fast]
-    PYTHONPATH=src python -m benchmarks.run --smoke   # CI: exp11-13 tiny
+    PYTHONPATH=src python -m benchmarks.run --smoke   # CI: exp11-14 tiny
 
-``--smoke`` runs the three artifact-emitting harnesses (exp11 CXL-RPC
+``--smoke`` runs the four artifact-emitting harnesses (exp11 CXL-RPC
 metadata plane — including the shard-scaling sweep, so ``BENCH_rpc.json``
-carries per-shard-count rows in CI — exp12 control plane, exp13 tiering)
-at CI-sized inputs so the perf benchmarks can't silently rot; their
-``BENCH_*.fast.json`` outputs are uploaded by the CI job.
+carries per-shard-count rows in CI — exp12 control plane, exp13 tiering,
+exp14 zero-copy engine-worker data plane) at CI-sized inputs so the perf
+benchmarks can't silently rot; their ``BENCH_*.fast.json`` outputs are
+uploaded by the CI job.
 
 Prints ``name,us_per_call,derived`` CSV per row, then a roofline summary
 derived from the dry-run artifacts (if present in results/dryrun).
@@ -34,6 +35,7 @@ MODULES = [
     ("exp11", "benchmarks.exp11_rpc"),
     ("exp12", "benchmarks.exp12_control_plane"),
     ("exp13", "benchmarks.exp13_tiering"),
+    ("exp14", "benchmarks.exp14_procengine"),
 ]
 
 
@@ -48,7 +50,7 @@ def main() -> None:
     args = ap.parse_args()
     if args.smoke:
         args.fast = True
-        args.only = "exp11,exp12,exp13"
+        args.only = "exp11,exp12,exp13,exp14"
     only = set(args.only.split(",")) if args.only else None
 
     import importlib
@@ -63,7 +65,7 @@ def main() -> None:
             mod = importlib.import_module(mod_name)
             if args.fast and exp_id == "exp05":
                 rows = mod.run(n=64, in_len=4096)
-            elif exp_id in ("exp11", "exp12", "exp13"):
+            elif exp_id in ("exp11", "exp12", "exp13", "exp14"):
                 rows = mod.run(fast=args.fast)
             else:
                 rows = mod.run()

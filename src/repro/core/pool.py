@@ -106,6 +106,8 @@ class BelugaPool:
         self.committed = np.zeros(n_blocks, bool)
         self._meta_segment = None
         self._meta_spec: dict | None = None
+        self._data_segment = None
+        self._data_spec: dict | None = None
         # free structures: per-shard LIFO stacks (interleave) or one FIFO
         # queue (no interleave: fill shard 0 first, the §5.3 bottleneck)
         if interleave:
@@ -209,6 +211,80 @@ class BelugaPool:
 
         try:
             atexit.unregister(self.unshare_meta)
+        except Exception:  # noqa: BLE001
+            pass
+
+    # ------------------------------------------------------------------
+    # Cross-process DATA export (the paper's headline: the block payloads
+    # themselves are one shared pool every participant loads/stores)
+    # ------------------------------------------------------------------
+    def share_data(self) -> dict:
+        """Re-home the block payload array into a named shared segment.
+
+        Engine worker processes (``repro.serving.engineproc``) attach the
+        SAME ``(n_blocks, block_bytes)`` array by name
+        (``repro.core.shmpool.SharedPoolData``) and scatter/gather KV
+        blocks against it directly — zero payload copies through the
+        parent, the modeled CXL load/store path crossing a real OS
+        process boundary.  Allocation stays with this pool (served over
+        a ring); writers own freshly-allocated blocks exclusively until
+        publish, so payload stores need no cross-process lock (§5.1
+        single-writer).  Implies ``share_meta`` (epoch validation is a
+        plain load on the shared metadata).  Idempotent; returns the
+        attach spec (plain data, picklable).
+        """
+        if self._data_spec is not None:
+            return self._data_spec
+        if self.backing != "numpy":
+            raise ValueError(
+                f"share_data requires backing='numpy', not {self.backing!r}"
+            )
+        meta = self.share_meta()
+        from repro.core.shm import create_segment
+
+        lay = self.layout
+        seg = create_segment(self.n_blocks * lay.block_bytes)
+        view = np.frombuffer(seg.buf, np.uint8).reshape(
+            self.n_blocks, lay.block_bytes
+        )
+        with self._lock:
+            view[:] = self.data
+            self.data = view
+        self._data_segment = seg
+        self._data_spec = {
+            "data_shm_name": seg.name,
+            "meta": meta,
+            "n_blocks": self.n_blocks,
+            "block_tokens": lay.block_tokens,
+            "n_layers_kv": lay.n_layers_kv,
+            "n_kv_heads": lay.n_kv_heads,
+            "head_dim": lay.head_dim,
+            "dtype_bytes": lay.dtype_bytes,
+        }
+        import atexit
+
+        atexit.register(self.unshare_data)  # no leaked /dev/shm entries
+        return self._data_spec
+
+    def unshare_data(self) -> None:
+        """Copy payloads back to a private array and unlink the segment.
+
+        Safe to call repeatedly / when never shared; leaves ``share_meta``
+        as-is (its own unshare handles it)."""
+        seg = self._data_segment
+        if seg is None:
+            return
+        from repro.core.shm import close_segment
+
+        with self._lock:
+            self.data = np.array(self.data, np.uint8)
+        self._data_segment = None
+        self._data_spec = None
+        close_segment(seg, unlink=True)
+        import atexit
+
+        try:
+            atexit.unregister(self.unshare_data)
         except Exception:  # noqa: BLE001
             pass
 

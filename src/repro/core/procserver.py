@@ -40,13 +40,14 @@ import numpy as np
 from repro.core.pool import PoolLayout
 from repro.core.rpc import (
     CTRL_BUSY_NS,
+    CTRL_DOORBELL,
     CTRL_READY,
     CTRL_SERVED,
     CTRL_STOP,
     ShmRing,
     drain_ready,
 )
-from repro.core.shm import ShardJournal, attach_segment, close_segment
+from repro.core.shm import Doorbell, ShardJournal, attach_segment, close_segment
 from repro.distributed.fault_tolerance import HeartbeatMonitor
 
 
@@ -115,6 +116,8 @@ class ShardServiceSpec:
     journal_capacity: int = 0
     idle_spin_passes: int = 200  # empty passes before sleeping at all
     idle_backoff_s: float = 100e-6  # ceiling once the ring has gone cold
+    doorbell_name: str | None = None  # FIFO path: park instead of backoff
+    doorbell_wait_s: float = 0.05  # bounded park (lost-wakeup ceiling)
 
 
 def _service_main(spec: ShardServiceSpec) -> None:
@@ -135,6 +138,10 @@ def _service_main(spec: ShardServiceSpec) -> None:
         finally:
             journal.close()
     handler = make_index_handler(index, max_reply=spec.max_reply, ctrl=ring.ctrl)
+    doorbell = None
+    if spec.doorbell_name is not None:
+        doorbell = Doorbell.attach(spec.doorbell_name)
+        doorbell.open_read()  # producers must always find a live reader
     ring.ctrl[CTRL_READY] = 1  # supervisor gates adopt_ring on this word
     idle = 0
     try:
@@ -145,18 +152,32 @@ def _service_main(spec: ShardServiceSpec) -> None:
             # drain_ready accounts CTRL_SERVED / CTRL_BUSY_NS itself
             if drain_ready(ring, handler, delay=spec.handler_delay):
                 idle = 0
+                continue
+            # the paper's service spins on its OWN core; on an
+            # oversubscribed host S pure-spin processes would thrash the
+            # scheduler instead.  Hot-path latency is unaffected either
+            # way: the first idle_spin_passes empty passes pure-yield.
+            # Past that, a doorbell PARKS the child (arm the ctrl word,
+            # close the arm/post race with one re-scan, bounded wait);
+            # without one, fall back to the configurable backoff sleep.
+            idle += 1
+            if idle < spec.idle_spin_passes:
+                time.sleep(0)
+            elif doorbell is None:
+                time.sleep(spec.idle_backoff_s)
             else:
-                # the paper's service spins on its OWN core; on an
-                # oversubscribed host S pure-spin processes would thrash
-                # the scheduler instead, so back off once the ring has
-                # been empty for a while (hot-path latency unaffected:
-                # the first idle_spin_passes empty passes still pure-yield)
-                idle += 1
-                time.sleep(
-                    0 if idle < spec.idle_spin_passes else spec.idle_backoff_s
-                )
+                ring.ctrl[CTRL_DOORBELL] = 1
+                try:
+                    if drain_ready(ring, handler, delay=spec.handler_delay):
+                        idle = 0
+                        continue
+                    doorbell.wait(spec.doorbell_wait_s)
+                finally:
+                    ring.ctrl[CTRL_DOORBELL] = 0
     finally:
         handler = None  # noqa: F841 — drop the ctrl view before close
+        if doorbell is not None:
+            doorbell.close()  # attach-side: drops fds, never unlinks
         ring.close()
         pool.close()
 
@@ -200,8 +221,14 @@ class ProcessRpcServer:
         journal: ShardJournal | None = None,
         idle_spin_passes: int = 200,
         idle_backoff_s: float = 100e-6,
+        use_doorbell: bool = True,
+        doorbell_wait_s: float = 0.05,
     ):
         self.ring = ShmRing.create_shared(n_slots, payload_bytes)
+        # parked child instead of backoff-sleeping child; Doorbell.create
+        # returning None (no mkfifo on this platform) falls back to the
+        # spin/backoff loop transparently
+        self.doorbell = Doorbell.create() if use_doorbell else None
         if max_reply is None:
             max_reply = payload_bytes
         self.spec = ShardServiceSpec(
@@ -217,6 +244,8 @@ class ProcessRpcServer:
             journal_capacity=0 if journal is None else journal.capacity,
             idle_spin_passes=idle_spin_passes,
             idle_backoff_s=idle_backoff_s,
+            doorbell_name=None if self.doorbell is None else self.doorbell.path,
+            doorbell_wait_s=doorbell_wait_s,
         )
         self.proc = _mp_context().Process(
             target=_service_main, args=(self.spec,), daemon=True
@@ -263,6 +292,13 @@ class ProcessRpcServer:
         proc = self.proc
         return proc is not None and proc.is_alive()
 
+    def client_doorbell(self) -> Doorbell | None:
+        """Producer-side handle for clients of this ring (None when the
+        service falls back to spin/backoff)."""
+        return None if self.doorbell is None else Doorbell.attach(
+            self.doorbell.path
+        )
+
     def kill(self) -> None:
         """Crash the service ungracefully (failure-injection hook)."""
         if self.proc is not None and self.proc.pid is not None:
@@ -275,6 +311,8 @@ class ProcessRpcServer:
             return
         if proc.is_alive() and self.ring.ctrl is not None:
             self.ring.ctrl[CTRL_STOP] = 1  # in-band shutdown request
+            if self.doorbell is not None:
+                self.doorbell.ring()  # wake a parked child immediately
             proc.join(timeout)
         if proc.is_alive():  # unresponsive child must not stall teardown
             proc.terminate()
@@ -292,6 +330,8 @@ class ProcessRpcServer:
             self.stop()
         finally:
             self.ring.close()
+            if self.doorbell is not None:
+                self.doorbell.close()  # owner: unlinks the FIFO path
             try:
                 atexit.unregister(self.close)
             except Exception:  # noqa: BLE001
@@ -400,6 +440,15 @@ class ShardSupervisor:
         names += [s.ring.shm_name for s in self._retired]
         return names
 
+    def client_doorbell(self) -> Doorbell | None:
+        """Producer handle on the CURRENT generation's doorbell."""
+        return self.server.client_doorbell()
+
+    def doorbell_paths(self) -> list[str]:
+        """Every FIFO path this supervisor owns (hygiene checks)."""
+        servers = [self.server, *self._retired]
+        return [s.doorbell.path for s in servers if s.doorbell is not None]
+
     # -- failure handling ------------------------------------------------
     def kill(self) -> None:
         """Crash the current child ungracefully (chaos hook)."""
@@ -431,7 +480,9 @@ class ShardSupervisor:
         if not srv.wait_ready(timeout=10.0):
             return  # replacement stillborn; next probe pass retries
         for client in self._clients:
-            client.adopt_ring(srv.ring, liveness=srv.alive)
+            client.adopt_ring(
+                srv.ring, liveness=srv.alive, doorbell=srv.client_doorbell()
+            )
 
     def check(self) -> None:
         """Synchronous probe step (tests drive restarts without waiting

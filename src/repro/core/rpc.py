@@ -75,9 +75,14 @@ _LEN = struct.Struct("<I")
 #                  journal replay) is done and the serve loop is entered:
 #                  the supervisor gates client cut-over on it;
 #   CTRL_BUSY_NS — cumulative wall-ns the service spent inside handlers
-#                  (the OP_STATS service timer: capacity = served/busy).
-CTRL_STOP, CTRL_SERVED, CTRL_READY, CTRL_BUSY_NS = 0, 1, 2, 3
-_N_CTRL = 4
+#                  (the OP_STATS service timer: capacity = served/busy);
+#   CTRL_DOORBELL — armed flag for the doorbell wakeup protocol: the
+#                  consumer sets it before blocking on its Doorbell FIFO,
+#                  producers ring after posting iff it is set (see
+#                  ``repro.core.shm.Doorbell`` for the lost-wakeup
+#                  argument).  Rings without a doorbell leave it 0.
+CTRL_STOP, CTRL_SERVED, CTRL_READY, CTRL_BUSY_NS, CTRL_DOORBELL = 0, 1, 2, 3, 4
+_N_CTRL = 5
 
 
 class RpcError(RuntimeError):
@@ -292,11 +297,25 @@ def drain_ready(ring: ShmRing, handler, delay: float = 0.0) -> int:
 
 
 class CxlRpcServer:
-    """Spin-polling consumer (the metadata service thread)."""
+    """Spin-polling consumer (the metadata service thread).
 
-    def __init__(self, ring: ShmRing, handler):
+    ``doorbell`` (a ``repro.core.shm.Doorbell``) replaces the pure
+    GIL-yield spin once the ring has been empty for ``idle_spin_passes``
+    scans: the thread arms ``CTRL_DOORBELL``, re-scans, and blocks in the
+    FIFO wait (bounded by ``doorbell_wait_s`` — a lost wakeup costs one
+    period, never a hang).  Without a doorbell the loop keeps the
+    configurable spin/backoff fallback (``idle_backoff_s``); the defaults
+    reproduce the original always-yield behavior exactly."""
+
+    def __init__(self, ring: ShmRing, handler, doorbell=None,
+                 idle_spin_passes: int = 0, idle_backoff_s: float = 0.0,
+                 doorbell_wait_s: float = 0.05):
         self.ring = ring
         self.handler = handler
+        self.doorbell = doorbell
+        self.idle_spin_passes = idle_spin_passes
+        self.idle_backoff_s = idle_backoff_s
+        self.doorbell_wait_s = doorbell_wait_s
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._poll_loop, daemon=True)
 
@@ -319,6 +338,8 @@ class CxlRpcServer:
 
     def stop(self):
         self._stop.set()
+        if self.doorbell is not None:
+            self.doorbell.ring()  # wake a thread parked in the FIFO wait
         self._thread.join(timeout=5)
 
     def close(self):
@@ -327,14 +348,37 @@ class CxlRpcServer:
 
     def _poll_loop(self):
         ring = self.ring
+        doorbell = self.doorbell
+        if doorbell is not None:
+            doorbell.open_read()  # reader must exist before the first arm
+        idle = 0
         while not self._stop.is_set():
-            if not drain_ready(ring, self.handler):
+            if drain_ready(ring, self.handler):
+                idle = 0
+                continue
+            idle += 1
+            if idle < self.idle_spin_passes or (
+                doorbell is None and not self.idle_backoff_s
+            ):
                 time.sleep(0)  # yield GIL; real impl spins
+            elif doorbell is None:
+                time.sleep(self.idle_backoff_s)
+            else:
+                # arm -> re-scan -> block: the doorbell wakeup protocol
+                ring.ctrl[CTRL_DOORBELL] = 1
+                try:
+                    if drain_ready(ring, self.handler):
+                        idle = 0
+                        continue
+                    doorbell.wait(self.doorbell_wait_s)
+                finally:
+                    ring.ctrl[CTRL_DOORBELL] = 0
 
 
 class CxlRpcClient:
     def __init__(self, ring: ShmRing, model_fabric: bool = False,
-                 constants: FabricConstants = DEFAULT, liveness=None):
+                 constants: FabricConstants = DEFAULT, liveness=None,
+                 doorbell=None, slot_range: tuple[int, int] | None = None):
         self.ring = ring
         self.model_fabric = model_fabric
         self.c = constants
@@ -344,9 +388,23 @@ class CxlRpcClient:
         # With it, collect() fails fast as an ERROR (the service died) —
         # distinct from a timeout (the service is slow).
         self.liveness = liveness
+        # optional producer-side doorbell handle: post() rings it when the
+        # service has armed CTRL_DOORBELL (idle consumer parked in its
+        # FIFO wait) so a cold ring wakes without burning the wait period
+        self.doorbell = doorbell
+        # slot ownership: by default a client owns EVERY slot of its ring.
+        # ``slot_range=(lo, hi)`` restricts it to [lo, hi) so SEVERAL
+        # client processes (engine workers + the pool owner) can share one
+        # ring without colliding on the free list — the slot protocol
+        # itself is single-producer per slot either way.
+        self._slot_range = (0, ring.n_slots) if slot_range is None else slot_range
+        lo, hi = self._slot_range
+        if not (0 <= lo < hi <= ring.n_slots):
+            raise ValueError(f"slot_range {self._slot_range} outside ring "
+                             f"of {ring.n_slots} slots")
         self.stats = RpcStats()
         self._slot_lock = threading.Lock()
-        self._free = list(range(ring.n_slots))
+        self._free = list(range(lo, hi))
         # slots whose caller timed out while the server still owed a
         # response; unsafe to reuse until the server flips them
         self._quarantined: set[int] = set()
@@ -358,7 +416,7 @@ class CxlRpcClient:
         with self._slot_lock:
             return len(self._free)
 
-    def adopt_ring(self, ring: ShmRing, liveness=None) -> None:
+    def adopt_ring(self, ring: ShmRing, liveness=None, doorbell=None) -> None:
         """Cut this client over to a FRESH ring (supervisor restart path).
 
         The old ring is abandoned, not closed here — in-flight collects
@@ -366,11 +424,18 @@ class CxlRpcClient:
         in ``collect``; the supervisor owns the old segment's teardown.
         All slot state resets: the new ring starts empty by construction
         (a fresh zero-filled segment), so the free list is full and no
-        quarantine carries over."""
+        quarantine carries over.  The client keeps its slot-range share
+        (same geometry by construction: restarts reuse the spec)."""
         with self._slot_lock:
+            old_db = self.doorbell
+            if old_db is not None and old_db is not doorbell:
+                old_db.close()  # attach-side: drops fds, never unlinks
             self.ring = ring
             self.liveness = liveness
-            self._free = list(range(ring.n_slots))
+            self.doorbell = doorbell
+            lo, hi = self._slot_range
+            hi = min(hi, ring.n_slots)
+            self._free = list(range(lo, hi))
             self._quarantined = set()
             self._t_posted = np.zeros(ring.n_slots, np.float64)
             self.stats.restarts += 1
@@ -404,6 +469,13 @@ class CxlRpcClient:
             raise
         self._t_posted[slot] = time.perf_counter()
         self.ring.status[slot] = REQ_READY  # ntstore + fence
+        # status is published FIRST, then the armed word is checked: if
+        # the consumer armed before our store it sees the ring; if it
+        # scans between our store and this check it serves us directly
+        # and the extra ring is a drained no-op (see Doorbell docstring)
+        db = self.doorbell
+        if db is not None and self.ring.ctrl[CTRL_DOORBELL]:
+            db.ring()
         return slot
 
     def collect(self, slot: int, timeout: float = 5.0) -> bytes:

@@ -22,7 +22,11 @@ Two wrinkles this module hides:
 from __future__ import annotations
 
 import gc
+import os
+import secrets
+import select
 import struct
+import tempfile
 import threading
 from multiprocessing import shared_memory
 
@@ -83,6 +87,139 @@ def close_segment(seg: shared_memory.SharedMemory | None, *, unlink: bool) -> No
             pass
         except Exception:  # noqa: BLE001
             pass
+
+
+# ---------------------------------------------------------------------------
+# doorbell: cross-process wakeup for idle ring consumers
+# ---------------------------------------------------------------------------
+class Doorbell:
+    """Edge-triggered wakeup channel for a ring consumer (named FIFO).
+
+    Replaces pure busy-poll on an idle ring: the consumer ARMS the ring's
+    ``CTRL_DOORBELL`` word, re-scans once, then blocks here; a producer
+    that posts a request while the word is armed writes one byte into the
+    FIFO and the consumer wakes.  A FIFO rather than an eventfd because it
+    attaches BY PATH — exactly like the named shared-memory segments the
+    rest of the plane uses — so it crosses a spawn-based process boundary
+    with nothing but a string in the service spec (fds don't).
+
+    Lost-wakeup safety is a protocol property, not a channel property:
+
+      1. the waiter sets ``ctrl[CTRL_DOORBELL] = 1`` FIRST, re-scans the
+         ring, and only then blocks in ``wait`` — so a request posted
+         after the scan sees the armed word and rings;
+      2. ``wait`` is BOUNDED (``timeout``): a ring lost to the tiny
+         arm/post race (or to a producer whose FIFO open failed) costs at
+         most one timeout of latency, never a hang;
+      3. spurious rings are harmless: ``wait`` drains the FIFO and the
+         serve loop re-scans anyway.
+
+    The waiter opens the FIFO ``O_RDWR`` (it becomes its own phantom
+    writer) so zero-producer moments read EAGAIN instead of EOF — a plain
+    ``O_RDONLY`` FIFO with no writers is permanently "readable", which
+    would turn ``select`` into a busy spin.  Producers open
+    ``O_WRONLY | O_NONBLOCK`` lazily and tolerate ENXIO (no reader yet),
+    a full pipe (a wakeup is already pending) and a vanished reader.
+
+    The CREATOR owns the path unlink (same rule as the shm segments);
+    attach-side ``close`` only drops fds.
+    """
+
+    def __init__(self, path: str, *, _owner: bool):
+        self.path = path
+        self._owner = _owner
+        self._rfd: int | None = None
+        self._wfd: int | None = None
+        self._closed = False
+
+    @classmethod
+    def create(cls) -> "Doorbell | None":
+        """New FIFO in tmpdir; None when the platform has no mkfifo
+        (callers fall back to the configurable spin/backoff poll)."""
+        path = os.path.join(
+            tempfile.gettempdir(),
+            f"beluga-doorbell-{os.getpid()}-{secrets.token_hex(6)}",
+        )
+        try:
+            os.mkfifo(path)
+        except (AttributeError, NotImplementedError, OSError):
+            return None
+        return cls(path, _owner=True)
+
+    @classmethod
+    def attach(cls, path: str) -> "Doorbell":
+        """Consumer/producer-side handle on an existing FIFO (by path)."""
+        return cls(path, _owner=False)
+
+    # -- consumer side ---------------------------------------------------
+    def open_read(self) -> None:
+        """Open the read end eagerly (before the first arm, so a producer
+        that sees the armed word can always reach a live reader)."""
+        if self._rfd is None and not self._closed:
+            self._rfd = os.open(self.path, os.O_RDWR | os.O_NONBLOCK)
+
+    def wait(self, timeout: float) -> bool:
+        """Block until rung (or ``timeout`` seconds); drains pending
+        rings.  Returns True when a ring arrived."""
+        self.open_read()
+        if self._rfd is None:
+            return False
+        try:
+            readable, _, _ = select.select([self._rfd], [], [], timeout)
+        except OSError:
+            return False
+        woke = bool(readable)
+        while True:  # edge-triggered: swallow every pending byte
+            try:
+                if not os.read(self._rfd, 4096):
+                    break
+            except BlockingIOError:
+                break
+            except OSError:
+                break
+        return woke
+
+    # -- producer side ---------------------------------------------------
+    def ring(self) -> bool:
+        """One wakeup byte; False (never raises) when no reader exists."""
+        if self._closed:
+            return False
+        if self._wfd is None:
+            try:
+                self._wfd = os.open(self.path, os.O_WRONLY | os.O_NONBLOCK)
+            except OSError:  # ENXIO: no reader yet — nothing to wake
+                return False
+        try:
+            os.write(self._wfd, b"\x01")
+            return True
+        except BlockingIOError:
+            return True  # FIFO full: a wakeup is already pending
+        except OSError:  # reader vanished; drop the stale fd
+            try:
+                os.close(self._wfd)
+            except OSError:
+                pass
+            self._wfd = None
+            return False
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self) -> None:
+        """Idempotent: drop fds; the creator also unlinks the path."""
+        if self._closed:
+            return
+        self._closed = True
+        for fd in (self._rfd, self._wfd):
+            if fd is not None:
+                try:
+                    os.close(fd)
+                except OSError:
+                    pass
+        self._rfd = self._wfd = None
+        if self._owner:
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,211 @@
+"""Attach-side view of a shared-data ``BelugaPool`` (zero-copy data plane).
+
+``BelugaPool.share_data`` re-homes the pool's block payload array — not
+just its metadata — into one named shared-memory segment.  This module is
+the OTHER side of that export: what an engine worker OS process
+(``repro.serving.engineproc``) maps to scatter/gather KV blocks directly
+against the modeled CXL pool, with zero payload copies through the parent
+interpreter.
+
+Division of labour across the process boundary:
+
+  * payload loads/stores and epoch publication happen HERE, on the shared
+    arrays (``SharedPoolData``) — the paper's native load/store path;
+  * allocate/retain/release stay with the pool-owning parent and travel
+    over a ring (``repro.core.wire.PoolRpcClient``) — the allocator's free
+    stacks are ordinary Python state that must have exactly one owner;
+  * ``WorkerPoolView`` glues the two into the full pool surface
+    ``KVCacheManager`` + ``TransferEngine`` expect, so the serving stack
+    runs unmodified inside a worker.
+
+Why payload stores need NO cross-process lock (paper §5.1): a block is
+written only between ``allocate`` (exclusive ownership to one worker) and
+``publish`` (after which every toucher is a reader until refcount hits
+zero back in the owning pool).  The only concurrent epoch mutation is the
+pool owner's release-side bump, which by the same contract only targets
+blocks no worker is writing.  Torn int64 reads on the shared epoch array
+are theoretical on the platforms this runs on (aligned 8-byte loads), and
+the committed-flag check backstops them.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.pool import PoolLayout
+from repro.core.shm import attach_segment, close_segment
+
+
+class SharedPoolData:
+    """Attach-side view of ``BelugaPool.share_data``'s segments.
+
+    Maps BOTH exports — the payload segment and the metadata segment that
+    ``share_data`` implies — and rebuilds the real ``PoolLayout`` from the
+    spec, so fragment math matches the owner exactly.  Mirrors the
+    ``BelugaPool`` data-plane surface (``write_blocks`` / ``read_blocks``
+    / ``validate_epochs`` / ``read_fragments``); never unlinks on close
+    (the creator owns unlink, same rule as every segment in the plane).
+    """
+
+    def __init__(self, spec: dict):
+        self.layout = PoolLayout(
+            block_tokens=spec["block_tokens"],
+            n_layers_kv=spec["n_layers_kv"],
+            n_kv_heads=spec["n_kv_heads"],
+            head_dim=spec["head_dim"],
+            dtype_bytes=spec["dtype_bytes"],
+        )
+        self.n_blocks = spec["n_blocks"]
+        n = self.n_blocks
+        self._data_segment = attach_segment(spec["data_shm_name"])
+        self._meta_segment = attach_segment(spec["meta"]["shm_name"])
+        self.data = np.frombuffer(self._data_segment.buf, np.uint8).reshape(
+            n, self.layout.block_bytes
+        )
+        mbuf = self._meta_segment.buf
+        self.epochs = np.frombuffer(mbuf, np.int64, n, 0)
+        self.refcounts = np.frombuffer(mbuf, np.int32, n, 8 * n)
+        self.committed = np.frombuffer(mbuf, np.bool_, n, 12 * n)
+
+    # -- data plane (same contracts as BelugaPool) -----------------------
+    def write_block(self, block_id: int, payload: np.ndarray | None) -> int:
+        if payload is not None:
+            assert payload.nbytes == self.layout.block_bytes
+            self.data[block_id] = payload.reshape(-1).view(np.uint8)
+        self.epochs[block_id] += 1
+        self.committed[block_id] = True
+        return int(self.epochs[block_id])
+
+    def write_blocks(
+        self, block_ids, payloads: np.ndarray | None = None
+    ) -> list[int]:
+        """Batch store + publish, straight into the shared segment.
+
+        Lock-free on purpose: the caller owns these freshly-allocated
+        blocks exclusively until this publish (module docstring)."""
+        ids = np.asarray(block_ids, np.intp)
+        if payloads is not None:
+            assert payloads.nbytes == len(ids) * self.layout.block_bytes
+            self.data[ids] = payloads.reshape(len(ids), -1).view(np.uint8)
+        self.epochs[ids] += 1
+        self.committed[ids] = True
+        return self.epochs[ids].tolist()
+
+    def read_block(self, block_id: int) -> tuple[np.ndarray, int]:
+        e = int(self.epochs[block_id])
+        return self.data[block_id].copy(), e
+
+    def read_blocks(
+        self, block_ids, out: np.ndarray | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Batch gather; epoch snapshot BEFORE the copy (§5.1 protocol)."""
+        ids = np.asarray(block_ids, np.intp)
+        eps = self.epochs[ids].copy()
+        if out is None:
+            return self.data[ids], eps
+        assert out.shape == (len(ids), self.layout.block_bytes)
+        data = self.data
+        for j, b in enumerate(ids):
+            out[j] = data[b]
+        return out, eps
+
+    def read_fragments(self, block_id: int, frag_ids) -> np.ndarray:
+        fb = self.layout.fragment_bytes
+        block = self.data[block_id]
+        return block.reshape(self.layout.n_fragments, fb)[
+            np.asarray(frag_ids, np.intp)
+        ]
+
+    def validate_epoch(self, block_id: int, epoch: int) -> bool:
+        return bool(self.committed[block_id]) and int(
+            self.epochs[block_id]
+        ) == epoch
+
+    def validate_epochs(self, block_ids, epochs) -> np.ndarray:
+        ids = np.asarray(block_ids, np.intp)
+        return self.committed[ids] & (self.epochs[ids] == np.asarray(epochs))
+
+    # -- lifecycle -------------------------------------------------------
+    def close(self) -> None:
+        """Drop the mappings; NEVER unlinks (attacher is not the owner)."""
+        if self._data_segment is None:
+            return
+        self.data = None
+        self.epochs = self.refcounts = self.committed = None
+        close_segment(self._data_segment, unlink=False)
+        close_segment(self._meta_segment, unlink=False)
+        self._data_segment = self._meta_segment = None
+
+
+class WorkerPoolView:
+    """The full pool surface, split across the process boundary.
+
+    Data ops hit the shared segment (``SharedPoolData``); allocator ops
+    round-trip to the pool-owning parent over a ring
+    (``repro.core.wire.PoolRpcClient``).  This is exactly the paper's
+    split: load/store to the shared pool for payloads, RPC slots for the
+    allocator — ``KVCacheManager`` and ``TransferEngine`` cannot tell the
+    difference from an in-process ``BelugaPool``.
+    """
+
+    is_tiered = False
+
+    def __init__(self, shared: SharedPoolData, alloc):
+        self._shared = shared
+        self._alloc = alloc
+        self.layout = shared.layout
+        self.n_blocks = shared.n_blocks
+
+    # -- allocator plane (over the wire) ---------------------------------
+    def allocate(self, n: int) -> list[int]:
+        return self._alloc.allocate(n)
+
+    def retain(self, block_ids) -> None:
+        self._alloc.retain(block_ids)
+
+    def release(self, block_ids) -> None:
+        self._alloc.release(block_ids)
+
+    def free_blocks(self) -> int:
+        return self._alloc.free_blocks()
+
+    # -- data plane (shared segment, zero-copy) --------------------------
+    @property
+    def data(self):
+        return self._shared.data
+
+    @property
+    def epochs(self):
+        return self._shared.epochs
+
+    @property
+    def refcounts(self):
+        return self._shared.refcounts
+
+    @property
+    def committed(self):
+        return self._shared.committed
+
+    def write_block(self, block_id, payload):
+        return self._shared.write_block(block_id, payload)
+
+    def write_blocks(self, block_ids, payloads=None):
+        return self._shared.write_blocks(block_ids, payloads)
+
+    def read_block(self, block_id):
+        return self._shared.read_block(block_id)
+
+    def read_blocks(self, block_ids, out=None):
+        return self._shared.read_blocks(block_ids, out=out)
+
+    def read_fragments(self, block_id, frag_ids):
+        return self._shared.read_fragments(block_id, frag_ids)
+
+    def validate_epoch(self, block_id, epoch):
+        return self._shared.validate_epoch(block_id, epoch)
+
+    def validate_epochs(self, block_ids, epochs):
+        return self._shared.validate_epochs(block_ids, epochs)
+
+    def close(self) -> None:
+        self._shared.close()

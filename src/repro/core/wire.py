@@ -67,10 +67,12 @@ from repro.core.index import (
     partition_keys,
     shard_of_key,
 )
+from repro.core.pool import OutOfPoolMemory
 from repro.core.rpc import (
     CTRL_BUSY_NS,
     CTRL_SERVED,
     RetryPolicy,
+    RpcError,
     ServiceDiedError,
 )
 
@@ -88,6 +90,14 @@ OP_EVICT_BLOCKS = 9
 OP_STATS = 10
 OP_SNAPSHOT = 11
 OP_RESTORE = 12
+# pool allocator plane (engine workers -> pool-owning parent); these ops
+# are served by a SEPARATE dispatcher (``make_pool_handler``) on its own
+# ring — allocator state has exactly one owner, the index service never
+# sees them
+OP_POOL_ALLOC = 13
+OP_POOL_RETAIN = 14
+OP_POOL_RELEASE = 15
+OP_POOL_FREE = 16
 
 _HDR = struct.Struct("<BI")  # op, count
 _U32 = struct.Struct("<I")
@@ -1332,3 +1342,175 @@ class ShardedRpcIndexClient:
             "busy_ns": sum(p["busy_ns"] for p in per),
             "shards": per,
         }
+
+
+# ---------------------------------------------------------------------------
+# pool allocator over the wire (the zero-copy data plane's control half)
+# ---------------------------------------------------------------------------
+# With the block payloads in one shared segment (``BelugaPool.share_data``
+# / ``repro.core.shmpool``), engine worker processes load/store KV bytes
+# directly — but the allocator's free stacks are ordinary Python state
+# with exactly one owner, the pool-owning parent.  These four ops carry
+# allocate/retain/release/free-count over a ring:
+#
+#     POOL_ALLOC   := n:u32            -> n:u32  block_ids[n*i64]
+#     POOL_RETAIN  := n:u32  ids[n*i64] -> n:u32
+#     POOL_RELEASE := n:u32  ids[n*i64] -> n:u32
+#     POOL_FREE    := n:u32 (ignored)  -> free:u64  alloc_count:u64
+#
+# An allocator failure (``OutOfPoolMemory``) travels in-band as the ring's
+# RESP_ERROR frame and is re-raised type-faithfully client-side, so the
+# manager's evict-and-retry path works unchanged across the boundary.
+
+_POOL_FREE_RESP = struct.Struct("<QQ")
+
+
+def encode_pool_alloc(n: int) -> bytes:
+    return _HDR.pack(OP_POOL_ALLOC, n)
+
+
+def encode_pool_retain(block_ids) -> bytes:
+    return _HDR.pack(OP_POOL_RETAIN, len(block_ids)) + np.asarray(
+        block_ids, np.int64
+    ).tobytes()
+
+
+def encode_pool_release(block_ids) -> bytes:
+    return _HDR.pack(OP_POOL_RELEASE, len(block_ids)) + np.asarray(
+        block_ids, np.int64
+    ).tobytes()
+
+
+def encode_pool_free() -> bytes:
+    return _HDR.pack(OP_POOL_FREE, 0)
+
+
+def decode_pool_alloc_resp(buf: bytes) -> list[int]:
+    _need(buf, 4)
+    (n,) = _U32.unpack_from(buf)
+    ids, _ = _split_i64(buf, 4, n)
+    return ids.tolist()
+
+
+def decode_pool_free_resp(buf: bytes) -> tuple[int, int]:
+    _need(buf, _POOL_FREE_RESP.size)
+    return _POOL_FREE_RESP.unpack_from(buf)
+
+
+def pool_reply_bound(buf: bytes) -> int:
+    """Worst-case reply size WITHOUT executing (see ``reply_bound``):
+    an ALLOC whose id list could not ship must fail before any blocks
+    leave the free stacks."""
+    _need(buf, _HDR.size)
+    op, n = _HDR.unpack_from(buf)
+    if op == OP_POOL_ALLOC:
+        return 4 + 8 * n
+    if op in (OP_POOL_RETAIN, OP_POOL_RELEASE):
+        _need(buf, _HDR.size + 8 * n)
+        return 4
+    if op == OP_POOL_FREE:
+        return _POOL_FREE_RESP.size
+    raise WireError(f"unknown pool op {op}")
+
+
+def handle_pool_request(pool, buf: bytes) -> bytes:
+    """Dispatch one pool-allocator op against the OWNING pool."""
+    _need(buf, _HDR.size)
+    op, n = _HDR.unpack_from(buf)
+    if op == OP_POOL_ALLOC:
+        ids = pool.allocate(n)  # OutOfPoolMemory -> in-band RESP_ERROR
+        return _U32.pack(len(ids)) + np.asarray(ids, np.int64).tobytes()
+    if op in (OP_POOL_RETAIN, OP_POOL_RELEASE):
+        ids, _ = _split_i64(buf, _HDR.size, n)
+        what = "POOL_RETAIN" if op == OP_POOL_RETAIN else "POOL_RELEASE"
+        _check_block_ids(pool_index_shim(pool), ids, what)
+        if op == OP_POOL_RETAIN:
+            pool.retain(ids.tolist())
+        else:
+            pool.release(ids.tolist())
+        return _U32.pack(n)
+    if op == OP_POOL_FREE:
+        return _POOL_FREE_RESP.pack(pool.free_blocks(), pool.alloc_count)
+    raise WireError(f"unknown pool op {op}")
+
+
+class pool_index_shim:
+    """Adapter so ``_check_block_ids`` (written against an index) can
+    range-check untrusted ids against a bare pool."""
+
+    def __init__(self, pool):
+        self.pool = pool
+
+
+def make_pool_handler(pool, max_reply: int | None = None):
+    """Handler for the parent-side pool-allocator ring service."""
+
+    def handler(payload: bytes) -> bytes:
+        if max_reply is not None and pool_reply_bound(payload) > max_reply:
+            raise WireError(f"reply would exceed {max_reply} B slot")
+        return handle_pool_request(pool, payload)
+
+    return handler
+
+
+class PoolRpcClient:
+    """Worker-side proxy for the pool allocator (one ring round-trip per
+    op, chunked at slot capacity).
+
+    Allocation is ATOMIC across chunks: if a later chunk hits
+    ``OutOfPoolMemory``, every block the earlier chunks handed out is
+    released before the error re-raises — the caller never leaks a
+    partial allocation.  The error itself is recognized in the in-band
+    ``RpcError`` frame ("OutOfPoolMemory: ...") and re-raised with its
+    real type so ``KVCacheManager``'s evict-and-retry path is oblivious
+    to the process boundary.
+    """
+
+    def __init__(self, rpc, n_blocks: int, max_payload: int | None = None):
+        self.rpc = rpc
+        self.n_blocks = n_blocks
+        if max_payload is None:
+            max_payload = getattr(
+                getattr(rpc, "ring", None), "payload_bytes", 1 << 20
+            )
+        self._max_ids = max(1, (max_payload - 16) // 8)
+
+    def _call(self, payload: bytes) -> bytes:
+        try:
+            return self.rpc.call(payload)
+        except ServiceDiedError:
+            raise
+        except RpcError as e:
+            msg = str(e)
+            if msg.startswith("OutOfPoolMemory"):
+                _, _, detail = msg.partition(": ")
+                raise OutOfPoolMemory(detail or msg) from e
+            raise
+
+    def allocate(self, n: int) -> list[int]:
+        out: list[int] = []
+        try:
+            while len(out) < n:
+                k = min(n - len(out), self._max_ids)
+                out.extend(decode_pool_alloc_resp(
+                    self._call(encode_pool_alloc(k))
+                ))
+        except OutOfPoolMemory:
+            if out:
+                self.release(out)  # atomic: no partial allocation leaks
+            raise
+        return out
+
+    def retain(self, block_ids) -> None:
+        for off in range(0, len(block_ids), self._max_ids):
+            self._call(encode_pool_retain(block_ids[off : off + self._max_ids]))
+
+    def release(self, block_ids) -> None:
+        for off in range(0, len(block_ids), self._max_ids):
+            self._call(encode_pool_release(block_ids[off : off + self._max_ids]))
+
+    def free_blocks(self) -> int:
+        return decode_pool_free_resp(self._call(encode_pool_free()))[0]
+
+    def alloc_count(self) -> int:
+        return decode_pool_free_resp(self._call(encode_pool_free()))[1]

@@ -145,10 +145,11 @@ class FaultEvent:
     ``kind``:
       * ``"kill"``  — SIGKILL the shard's service process at ``t`` (the
         supervisor detects and heals it);
-      * ``"delay"`` — for ``[t, t + duration)`` every serial RPC on the
-        shard sleeps ``delay_s`` before posting (slow-service window);
-      * ``"drop"``  — for ``[t, t + duration)`` every serial RPC on the
-        shard raises ``TimeoutError`` instead of posting (lost-reply
+      * ``"delay"`` — for ``[t, t + duration)`` every RPC post on the
+        shard — serial ``call`` and pipelined rounds alike — sleeps
+        ``delay_s`` before posting (slow-service window);
+      * ``"drop"``  — for ``[t, t + duration)`` every RPC post on the
+        shard raises ``TimeoutError`` instead of posting (lost-request
         window; the client's retry/degrade policy decides what happens).
     """
 
@@ -201,11 +202,14 @@ class FaultInjector:
 
     * kills go through ``supervisors[shard].kill()`` — a real SIGKILL of
       a real child process, healed by the real supervisor;
-    * delay/drop windows wrap each shard's ``CxlRpcClient.call`` (the
-      serial round-trip every retried op funnels through), so the wire
-      client's OWN retry/backoff/degrade machinery — not a test double —
-      absorbs the fault.  Pipelined pure-read rounds bypass ``call`` by
-      design and are not subject to delay/drop windows.
+    * delay/drop windows wrap each shard's ``CxlRpcClient.post`` — the
+      single choke point BOTH transfer paths funnel through (``call`` is
+      ``collect(post(...))`` and pipelined pure-read rounds post each
+      chunk themselves) — so the wire client's OWN retry/backoff/degrade
+      machinery, not a test double, absorbs the fault.  A drop in a
+      pipelined round surfaces exactly like a real wire loss: the round
+      aborts, drains its outstanding slots and re-runs serially under
+      the retry policy (still through the injected ``post``).
 
     The harness calls ``advance()`` between ops (or on a timer); the
     virtual clock starts at ``start()``.
@@ -226,19 +230,21 @@ class FaultInjector:
         return 0.0 if self._t0 is None else self._clock() - self._t0
 
     def attach_client(self, shard: int, rpc_client) -> None:
-        """Wrap ``rpc_client.call`` with this plan's delay/drop windows."""
-        orig = rpc_client.call
+        """Wrap ``rpc_client.post`` with this plan's delay/drop windows
+        (intercepts the serial ``call`` AND the pipelined split — both
+        resolve ``post`` through the instance attribute)."""
+        orig = rpc_client.post
 
-        def call(payload: bytes, timeout: float = 5.0) -> bytes:
+        def post(payload: bytes) -> int:
             for ev in self.plan.active(shard, self.now()):
                 if ev.kind == "drop":
                     raise TimeoutError(
-                        f"fault-injected dropped reply (shard {shard})"
+                        f"fault-injected dropped request (shard {shard})"
                     )
                 time.sleep(ev.delay_s)
-            return orig(payload, timeout)
+            return orig(payload)
 
-        rpc_client.call = call
+        rpc_client.post = post
 
     def advance(self, now: float | None = None) -> list[FaultEvent]:
         """Apply every event whose time has come; returns them."""

@@ -1,0 +1,565 @@
+"""Engine worker OS processes over the zero-copy data plane (ROADMAP #2).
+
+PR 5 moved the METADATA plane out of the client interpreter; this module
+moves the ENGINES out.  One worker process per modeled "GPU" hosts the
+full serving stack — ``EngineInstance`` + ``KVCacheManager`` + HBM cache +
+``TransferEngine`` — and runs it against:
+
+  * the shared pool DATA segment (``repro.core.shmpool.SharedPoolData``):
+    KV block scatter/gather is native load/store on memory every process
+    maps — zero payload copies through the parent (the paper's core
+    claim, across real OS process boundaries);
+  * the pool ALLOCATOR ring back to the pool-owning parent
+    (``repro.core.wire.PoolRpcClient``), slot-partitioned so N workers
+    share one ring without colliding;
+  * the METADATA rings of the shard service processes, the same
+    slot-partitioning trick letting parent + workers share each shard's
+    ring (``CxlRpcClient(slot_range=...)``).
+
+The parent drives a worker over a tiny COMMAND ring (same ShmRing slot
+protocol, own binary codec below): submit requests, run the virtual
+clock, page results and stats back.  Request payloads never travel on the
+command ring — only token ids, timings and counters; KV bytes exist
+solely in the shared segment.
+
+Idle workers park on a ``Doorbell`` exactly like the metadata services
+(arm ``CTRL_DOORBELL``, re-scan, bounded FIFO wait), so an N-worker
+cluster at rest costs no busy-poll CPU.
+
+The worker import chain is deliberately jax-free (same discipline as
+``repro.core.procserver``): fork is safe on a bare interpreter, and spawn
+re-imports in ~0.4 s.
+"""
+
+from __future__ import annotations
+
+import atexit
+import math
+import struct
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.procserver import _mp_context
+from repro.core.rpc import (
+    CTRL_DOORBELL,
+    CTRL_READY,
+    CTRL_STOP,
+    RESP_ERROR,
+    RESP_READY,
+    CxlRpcClient,
+    ShmRing,
+    drain_ready,
+)
+from repro.core.shm import Doorbell
+from repro.core.wire import WireError
+from repro.serving.engine import SimRunnerConfig
+from repro.serving.request import Request
+
+# ---------------------------------------------------------------------------
+# command codec (parent -> worker, little-endian)
+# ---------------------------------------------------------------------------
+#     SUBMIT  := op:u8 n:u32 arrival:f64 n_output:i32 req_idx:u32 tokens[n*i32]
+#             -> n_queued:u32
+#     RUN     := op:u8 mode:u8 until:f64      (mode 0 = drain, 1 = advance)
+#             -> clock:f64 n_done:u32
+#     RESULTS := op:u8 start:u32 max:u32
+#             -> total:u32 m:u32 m * (req_idx:u32 t_admitted:f64 t_first:f64
+#                t_done:f64 tokens_out:i32 hit_tokens:i32 state:u8)
+#                (NaN encodes a None timestamp)
+#     STATS   := op:u8 -> fixed _STATS_RESP struct (engine + manager +
+#                transfer counters and the worker's virtual clock)
+WCMD_SUBMIT, WCMD_RUN, WCMD_RESULTS, WCMD_STATS = 1, 2, 3, 4
+
+_U32 = struct.Struct("<I")
+_SUB_HDR = struct.Struct("<BIdiI")
+_RUN = struct.Struct("<BBd")
+_RUN_RESP = struct.Struct("<dI")
+_RES_REQ = struct.Struct("<BII")
+_RES_REC = struct.Struct("<IdddiiB")
+_STATS_REQ = struct.Struct("<B")
+# clock | prefills decode_steps | busy fetch writeback | 7 manager counters
+# | writes reads bytes_w bytes_r requests_issued | modeled_write modeled_read
+_STATS_RESP = struct.Struct("<dQQdddQQQQQQQQQQQQdd")
+
+_STATE_CODE = {"queued": 0, "running": 1, "done": 2}
+_STATE_NAME = ["queued", "running", "done"]
+
+
+def _opt(v: float | None) -> float:
+    return float("nan") if v is None else float(v)
+
+
+def _unopt(v: float) -> float | None:
+    return None if math.isnan(v) else v
+
+
+def partition_slots(n_slots: int, n_parts: int) -> list[tuple[int, int]]:
+    """Carve one ring's slots into ``n_parts`` disjoint ``[lo, hi)`` shares
+    (the last part absorbs the remainder).  Each share needs >= 2 slots so
+    every owner can keep a call outstanding while one slot sits
+    quarantined."""
+    per = n_slots // n_parts
+    if per < 2:
+        raise ValueError(
+            f"{n_slots} slots cannot be split {n_parts} ways (need >= 2 each)"
+        )
+    return [
+        (i * per, (i + 1) * per if i < n_parts - 1 else n_slots)
+        for i in range(n_parts)
+    ]
+
+
+@dataclass(frozen=True)
+class EngineWorkerSpec:
+    """Everything a worker needs to build its stack — plain data only
+    (names, numbers, the picklable pool attach spec); no live objects
+    cross the boundary, same discipline as ``ShardServiceSpec``."""
+
+    engine_id: int
+    pool_spec: dict  # BelugaPool.share_data() attach spec
+    cmd_ring_name: str
+    cmd_slots: int
+    cmd_payload: int
+    cmd_doorbell_name: str | None
+    pool_ring_name: str
+    pool_slots: int
+    pool_payload: int
+    pool_doorbell_name: str | None
+    pool_slot_range: tuple[int, int]
+    index_ring_names: tuple[str, ...]
+    index_slots: int
+    index_payload: int
+    index_doorbell_names: tuple[str | None, ...]
+    index_slot_range: tuple[int, int]
+    hbm_slots: int
+    transfer_mode: str  # beluga | rdma | none
+    super_block_tokens: int
+    straggler_cutover: float | None
+    runner: SimRunnerConfig
+    idle_spin_passes: int = 200
+    idle_backoff_s: float = 100e-6
+    doorbell_wait_s: float = 0.05
+
+
+# ---------------------------------------------------------------------------
+# worker side
+# ---------------------------------------------------------------------------
+def _no_offload_plan():
+    from repro.kvcache.manager import FetchPlan
+
+    def plan(tokens, now=0.0):
+        return FetchPlan(0, len(tokens), [], 0.0, False)
+
+    return plan
+
+
+def _build_worker_stack(spec: EngineWorkerSpec):
+    """Attach segments/rings and construct the full serving stack.
+
+    Returns (engine, closeables); closing every closeable (views, rings,
+    attach-side doorbells) is the worker's teardown duty."""
+    from repro.core.index import PrefixHasher
+    from repro.core.shmpool import SharedPoolData, WorkerPoolView
+    from repro.core.transfer import TransferEngine
+    from repro.core.wire import (
+        PoolRpcClient,
+        RpcIndexClient,
+        ShardedRpcIndexClient,
+    )
+    from repro.kvcache.hbm_cache import HbmPagedCache
+    from repro.kvcache.manager import KVCacheManager
+    from repro.serving.engine import EngineInstance, SimRunner
+
+    closeables = []
+    shared = SharedPoolData(spec.pool_spec)
+    closeables.append(shared)
+    pool_ring = ShmRing.attach(
+        spec.pool_ring_name, spec.pool_slots, spec.pool_payload
+    )
+    closeables.append(pool_ring)
+    pool_db = (
+        None if spec.pool_doorbell_name is None
+        else Doorbell.attach(spec.pool_doorbell_name)
+    )
+    if pool_db is not None:
+        closeables.append(pool_db)
+    pool_rpc = CxlRpcClient(
+        pool_ring, doorbell=pool_db, slot_range=spec.pool_slot_range
+    )
+    alloc = PoolRpcClient(
+        pool_rpc, spec.pool_spec["n_blocks"], max_payload=spec.pool_payload
+    )
+    pool_view = WorkerPoolView(shared, alloc)
+    bt = spec.pool_spec["block_tokens"]
+    hasher = PrefixHasher(bt)
+    index_rpcs = []
+    for name, db_name in zip(spec.index_ring_names, spec.index_doorbell_names):
+        ring = ShmRing.attach(name, spec.index_slots, spec.index_payload)
+        closeables.append(ring)
+        idx_db = None if db_name is None else Doorbell.attach(db_name)
+        if idx_db is not None:
+            closeables.append(idx_db)
+        index_rpcs.append(CxlRpcClient(
+            ring, doorbell=idx_db, slot_range=spec.index_slot_range,
+        ))
+    # evictions served by a shard process defer the pool release; in a
+    # WORKER the release itself is one more hop over the allocator ring
+    # back to the owning parent (on_freed -> PoolRpcClient.release)
+    if len(index_rpcs) > 1:
+        index = ShardedRpcIndexClient(
+            index_rpcs, bt, max_payload=spec.index_payload, hasher=hasher,
+            on_freed=alloc.release,
+        )
+    else:
+        index = RpcIndexClient(
+            index_rpcs[0], bt, max_payload=spec.index_payload, hasher=hasher,
+            on_freed=alloc.release,
+        )
+    transfer = TransferEngine(
+        pool_view,
+        mode="beluga" if spec.transfer_mode == "none" else spec.transfer_mode,
+        super_block_tokens=spec.super_block_tokens,
+    )
+    hbm = HbmPagedCache(spec.hbm_slots, bt)
+    mgr = KVCacheManager(
+        pool_view, index, hbm, transfer,
+        recompute_cutover=spec.straggler_cutover,
+        prefill_tok_per_s=spec.runner.prefill_tok_per_s,
+    )
+    if spec.transfer_mode == "none":
+        mgr.plan_fetch_orig = mgr.plan_fetch
+        mgr.plan_fetch = _no_offload_plan()
+        mgr.writeback = lambda *a, **k: 0
+    engine = EngineInstance(
+        spec.engine_id, mgr, SimRunner(spec.runner)
+    )
+    return engine, closeables
+
+
+def _make_worker_handler(engine, reqs: list):
+    """Command-ring dispatcher (runs inside the worker's serve loop)."""
+
+    def handler(payload: bytes) -> bytes:
+        if not payload:
+            raise WireError("empty worker command")
+        op = payload[0]
+        if op == WCMD_SUBMIT:
+            _, n, arrival, n_output, req_idx = _SUB_HDR.unpack_from(payload)
+            tokens = np.frombuffer(
+                payload, np.int32, n, _SUB_HDR.size
+            ).tolist()
+            req = Request(
+                req_id=f"w{engine.engine_id}-{req_idx}",
+                tokens=tokens, n_output=n_output, arrival=arrival,
+            )
+            reqs.append((req_idx, req))
+            engine.submit(req, arrival)
+            return _U32.pack(engine.n_queued)
+        if op == WCMD_RUN:
+            _, mode, until = _RUN.unpack_from(payload)
+            if mode == 0:
+                engine.drain()
+            else:
+                engine.advance(until)
+            n_done = sum(1 for _, r in reqs if r.state == "done")
+            return _RUN_RESP.pack(engine.clock, n_done)
+        if op == WCMD_RESULTS:
+            _, start, max_items = _RES_REQ.unpack_from(payload)
+            page = reqs[start : start + max_items]
+            out = [_U32.pack(len(reqs)), _U32.pack(len(page))]
+            for idx, r in page:
+                out.append(_RES_REC.pack(
+                    idx, _opt(r.t_admitted), _opt(r.t_first_token),
+                    _opt(r.t_done), r.tokens_out, r.hit_tokens,
+                    _STATE_CODE[r.state],
+                ))
+            return b"".join(out)
+        if op == WCMD_STATS:
+            es, ms = engine.stats, engine.manager.stats
+            ts = engine.manager.transfer.stats
+            return _STATS_RESP.pack(
+                engine.clock,
+                es.prefills, es.decode_steps,
+                es.busy_s, es.fetch_s, es.writeback_s,
+                ms.prefix_hits_tokens, ms.prefix_miss_tokens, ms.fetches,
+                ms.writebacks, ms.recompute_cutovers, ms.pool_evictions,
+                ms.degraded_ops,
+                ts.writes, ts.reads, ts.bytes_written, ts.bytes_read,
+                ts.requests_issued,
+                ts.modeled_write_s, ts.modeled_read_s,
+            )
+        raise WireError(f"unknown worker command {op}")
+
+    return handler
+
+
+def _engine_worker_main(spec: EngineWorkerSpec) -> None:
+    """Worker entry: attach everything, serve the command ring until
+    CTRL_STOP (the same arm/re-scan/park idle loop as ``_service_main``)."""
+    cmd_ring = ShmRing.attach(spec.cmd_ring_name, spec.cmd_slots, spec.cmd_payload)
+    engine, closeables = _build_worker_stack(spec)
+    reqs: list = []
+    handler = _make_worker_handler(engine, reqs)
+    doorbell = None
+    if spec.cmd_doorbell_name is not None:
+        doorbell = Doorbell.attach(spec.cmd_doorbell_name)
+        doorbell.open_read()
+    cmd_ring.ctrl[CTRL_READY] = 1
+    idle = 0
+    try:
+        while not cmd_ring.ctrl[CTRL_STOP]:
+            if drain_ready(cmd_ring, handler):
+                idle = 0
+                continue
+            idle += 1
+            if idle < spec.idle_spin_passes:
+                time.sleep(0)
+            elif doorbell is None:
+                time.sleep(spec.idle_backoff_s)
+            else:
+                cmd_ring.ctrl[CTRL_DOORBELL] = 1
+                try:
+                    if drain_ready(cmd_ring, handler):
+                        idle = 0
+                        continue
+                    doorbell.wait(spec.doorbell_wait_s)
+                finally:
+                    cmd_ring.ctrl[CTRL_DOORBELL] = 0
+    finally:
+        handler = None  # noqa: F841 — drop ring views before close
+        if doorbell is not None:
+            doorbell.close()
+        engine = None  # noqa: F841
+        for c in closeables:
+            try:
+                c.close()
+            except Exception:  # noqa: BLE001
+                pass
+        cmd_ring.close()
+
+
+# ---------------------------------------------------------------------------
+# parent side
+# ---------------------------------------------------------------------------
+class EngineWorkerHost:
+    """Parent-side handle on one engine worker process.
+
+    Owns the command ring + its doorbell (and unlinks both); the data
+    segment, pool ring and metadata rings are owned elsewhere and only
+    their NAMES are handed to the worker.  Mirrors the
+    ``ProcessRpcServer`` lifecycle: in-band CTRL_STOP shutdown escalating
+    to terminate/kill, idempotent ``close``, atexit hygiene hook.
+    """
+
+    def __init__(
+        self,
+        spec_kwargs: dict,
+        *,
+        cmd_slots: int = 8,
+        cmd_payload: int = 1 << 16,
+        use_doorbell: bool = True,
+    ):
+        self.ring = ShmRing.create_shared(cmd_slots, cmd_payload)
+        self.doorbell = Doorbell.create() if use_doorbell else None
+        self.spec = EngineWorkerSpec(
+            cmd_ring_name=self.ring.shm_name,
+            cmd_slots=cmd_slots,
+            cmd_payload=cmd_payload,
+            cmd_doorbell_name=(
+                None if self.doorbell is None else self.doorbell.path
+            ),
+            **spec_kwargs,
+        )
+        self.engine_id = self.spec.engine_id
+        self.client = CxlRpcClient(
+            self.ring,
+            liveness=self.alive,
+            doorbell=(
+                None if self.doorbell is None
+                else Doorbell.attach(self.doorbell.path)
+            ),
+        )
+        self.proc = _mp_context().Process(
+            target=_engine_worker_main, args=(self.spec,), daemon=True
+        )
+        self.n_submitted = 0
+        self.n_done = 0
+        self.clock = 0.0
+        self._closed = False
+        atexit.register(self.close)
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "EngineWorkerHost":
+        self.proc.start()
+        return self
+
+    @property
+    def ready(self) -> bool:
+        ctrl = self.ring.ctrl
+        return ctrl is not None and bool(ctrl[CTRL_READY])
+
+    def wait_ready(self, timeout: float = 20.0) -> bool:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if self.ready:
+                return True
+            if self.proc.pid is not None and not self.proc.is_alive():
+                return False
+            time.sleep(1e-3)
+        return self.ready
+
+    def alive(self) -> bool:
+        proc = self.proc
+        return proc is not None and proc.is_alive()
+
+    def kill(self) -> None:
+        """Crash the worker ungracefully (hygiene/chaos hook)."""
+        if self.proc is not None and self.proc.pid is not None:
+            self.proc.kill()
+            self.proc.join(timeout=5)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        proc = self.proc
+        if proc is None or proc.pid is None:
+            return
+        if proc.is_alive() and self.ring.ctrl is not None:
+            self.ring.ctrl[CTRL_STOP] = 1
+            if self.doorbell is not None:
+                self.doorbell.ring()
+            proc.join(timeout)
+        if proc.is_alive():
+            proc.terminate()
+            proc.join(1.0)
+        if proc.is_alive():
+            proc.kill()
+            proc.join(1.0)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self.stop()
+        finally:
+            self.ring.close()
+            if self.doorbell is not None:
+                self.doorbell.close()  # owner: unlinks the FIFO
+            try:
+                atexit.unregister(self.close)
+            except Exception:  # noqa: BLE001
+                pass
+
+    # -- commands --------------------------------------------------------
+    def submit_indexed(self, req: Request, req_idx: int) -> None:
+        """Ship one request to the worker; ``req_idx`` is the parent's
+        global index (the worker echoes it back with the results)."""
+        body = np.asarray(req.tokens, np.int32).tobytes()
+        if _SUB_HDR.size + len(body) > self.spec.cmd_payload:
+            raise WireError(
+                f"prompt of {len(req.tokens)} tokens exceeds the "
+                f"{self.spec.cmd_payload} B command slot"
+            )
+        req.engine_id = self.engine_id
+        self.client.call(
+            _SUB_HDR.pack(
+                WCMD_SUBMIT, len(req.tokens), req.arrival,
+                req.n_output, req_idx,
+            ) + body
+        )
+        self.n_submitted += 1
+
+    def submit(self, req: Request, now: float = 0.0) -> None:  # noqa: ARG002
+        """Engine-shaped convenience (tests): parent index == local order."""
+        self.submit_indexed(req, self.n_submitted)
+
+    def load(self) -> float:
+        """Scheduler signal between runs: requests not yet seen done."""
+        return float(self.n_submitted - self.n_done)
+
+    def post_run(self, until: float | None = None) -> int:
+        """Post (don't wait): lets the parent start ALL workers' clocks
+        before collecting any — the N drains run concurrently."""
+        mode, horizon = (0, 0.0) if until is None else (1, until)
+        return self.client.post(_RUN.pack(WCMD_RUN, mode, horizon))
+
+    def collect_run(self, slot: int, timeout: float = 600.0) -> float:
+        """Wait out a (long) drain WITHOUT busy-spinning the parent core:
+        gentle 2 ms poll on the slot word, then the client's collect for
+        the usual bookkeeping/error paths.  Returns the worker clock."""
+        ring = self.client.ring
+        deadline = time.perf_counter() + timeout
+        while int(ring.status[slot]) not in (RESP_READY, RESP_ERROR):
+            if not self.alive() or time.perf_counter() > deadline:
+                break  # let collect() classify (died / timed out)
+            time.sleep(2e-3)
+        clock, n_done = _RUN_RESP.unpack(self.client.collect(slot, timeout))
+        self.clock = clock
+        self.n_done = n_done
+        return clock
+
+    def run(self, until: float | None = None, timeout: float = 600.0) -> float:
+        return self.collect_run(self.post_run(until), timeout)
+
+    def fetch_results(self) -> list[tuple]:
+        """Page every request record back:
+        [(req_idx, t_admitted, t_first, t_done, tokens_out, hit, state)]."""
+        page = max(1, (self.spec.cmd_payload - 16) // _RES_REC.size)
+        out: list[tuple] = []
+        start = 0
+        while True:
+            resp = self.client.call(
+                _RES_REQ.pack(WCMD_RESULTS, start, page)
+            )
+            (total,) = _U32.unpack_from(resp)
+            (m,) = _U32.unpack_from(resp, 4)
+            off = 8
+            for _ in range(m):
+                idx, ta, tf, td, tout, hit, st = _RES_REC.unpack_from(resp, off)
+                out.append((
+                    idx, _unopt(ta), _unopt(tf), _unopt(td), tout, hit,
+                    _STATE_NAME[st],
+                ))
+                off += _RES_REC.size
+            start += m
+            if start >= total or m == 0:
+                return out
+
+    def apply_results(self, requests: list[Request]) -> None:
+        """Fold the worker's timings back into the parent's own Request
+        objects (matched by the echoed global index)."""
+        for idx, ta, tf, td, tout, hit, state in self.fetch_results():
+            r = requests[idx]
+            r.t_admitted, r.t_first_token, r.t_done = ta, tf, td
+            r.tokens_out, r.hit_tokens, r.state = tout, hit, state
+            r.engine_id = self.engine_id
+
+    def stats_dict(self) -> dict:
+        v = _STATS_RESP.unpack(self.client.call(_STATS_REQ.pack(WCMD_STATS)))
+        (clock, prefills, decode_steps, busy_s, fetch_s, writeback_s,
+         hit_tok, miss_tok, fetches, writebacks, cutovers, evictions,
+         degraded, t_writes, t_reads, t_bw, t_br, t_reqs,
+         t_mw, t_mr) = v
+        self.clock = clock
+        return {
+            "clock": clock,
+            "engine": {
+                "prefills": prefills, "decode_steps": decode_steps,
+                "busy_s": busy_s, "fetch_s": fetch_s,
+                "writeback_s": writeback_s,
+            },
+            "manager": {
+                "prefix_hits_tokens": hit_tok,
+                "prefix_miss_tokens": miss_tok,
+                "fetches": fetches, "writebacks": writebacks,
+                "recompute_cutovers": cutovers,
+                "pool_evictions": evictions, "degraded_ops": degraded,
+            },
+            "transfer": {
+                "writes": t_writes, "reads": t_reads,
+                "bytes_written": t_bw, "bytes_read": t_br,
+                "requests_issued": t_reqs,
+                "modeled_write_s": t_mw, "modeled_read_s": t_mr,
+            },
+        }

@@ -79,6 +79,24 @@ class ClusterConfig:
     # op outstanding in parallel. 1 (default) = today's single metadata
     # plane, bit-identical to the unsharded path.
     index_shards: int = 1
+    # zero-copy data plane (ROADMAP #2):
+    #   "private" — block payloads live in this interpreter's arrays (the
+    #               bit-identical reference path);
+    #   "shared"  — BelugaPool.share_data() re-homes the payload array
+    #               into one named shared-memory segment, so OTHER OS
+    #               processes scatter/gather KV blocks by native
+    #               load/store (requires backing="numpy").
+    data_plane: str = "private"
+    # engine WORKER processes (one per modeled GPU, data_plane="shared" +
+    # process transport only): each worker hosts the full serving stack
+    # against the shared segment; allocate/retain/release and index ops
+    # cross slot-partitioned rings. 0 = engines stay in-process.
+    engine_processes: int = 0
+    # Doorbell (FIFO) wakeups for idle metadata services, the pool
+    # allocator service and engine workers: an empty ring parks its
+    # consumer instead of spin/backoff. False restores the pure
+    # service_idle_spin/service_idle_backoff fallback.
+    service_doorbell: bool = True
     runner: SimRunnerConfig = field(default_factory=SimRunnerConfig)
     # tiered pool memory (Exp #13): disabled -> flat BelugaPool, the exact
     # PR-1 code path; enabled -> pool_blocks become the FAST tier and a
@@ -97,6 +115,10 @@ class Cluster:
         self._rpc_clients = []
         self._supervisors = []
         self._shm_names: list[str] = []
+        self.workers = []  # EngineWorkerHost list (engine_processes mode)
+        self._pool_server = None  # allocator service thread (worker mode)
+        self._pool_ring = None
+        self._pool_doorbell = None
         self.index = None
         self.migrator = None
         self.engines: list[EngineInstance] = []
@@ -123,6 +145,46 @@ class Cluster:
                 "tiering + process transport: the TieredPool's two-pool "
                 "metadata is not shared-memory exportable yet (ROADMAP)"
             )
+        if cfg.data_plane not in ("private", "shared"):
+            raise ValueError(
+                f"data_plane must be 'private' or 'shared', "
+                f"got {cfg.data_plane!r}"
+            )
+        if cfg.data_plane == "shared" and tcfg.enabled:
+            raise NotImplementedError(
+                "tiering + data_plane='shared': the TieredPool's two-tier "
+                "payload space is not shared-memory exportable yet (ROADMAP)"
+            )
+        if cfg.data_plane == "shared" and backing != "numpy":
+            raise ValueError(
+                "data_plane='shared' requires backing='numpy' "
+                "(payload bytes must exist to be shared)"
+            )
+        if cfg.engine_processes:
+            if cfg.data_plane != "shared":
+                raise ValueError(
+                    "engine_processes requires data_plane='shared'"
+                )
+            if not process_mode:
+                raise ValueError(
+                    "engine_processes requires index_rpc=True and "
+                    "index_transport='process'"
+                )
+            if cfg.engine_processes != cfg.n_engines:
+                raise ValueError(
+                    "engine_processes must equal n_engines "
+                    "(one worker per modeled GPU)"
+                )
+            if cfg.policy != "round_robin":
+                raise NotImplementedError(
+                    "engine workers support policy='round_robin' only "
+                    "(load/clock live inside the worker processes)"
+                )
+            if cfg.selfheal:
+                raise NotImplementedError(
+                    "selfheal + engine workers: ring-generation cutover "
+                    "is not plumbed into workers yet (ROADMAP)"
+                )
         if tcfg.enabled:
             spill = tcfg.spill_blocks or 4 * cfg.pool_blocks
             spill = -(-spill // cfg.pool_shards) * cfg.pool_shards
@@ -171,6 +233,16 @@ class Cluster:
             self.hasher = PrefixHasher(self.pool.layout.block_tokens)
             pool_spec = self.pool.share_meta()
             self._shm_names.append(pool_spec["shm_name"])
+            # with engine workers, every shard ring is SHARED by N+1
+            # client processes: the parent keeps partition 0, worker i
+            # takes partition i+1 (disjoint slot free lists, one ring)
+            parent_range = None
+            if cfg.engine_processes:
+                from repro.serving.engineproc import partition_slots
+
+                parent_range = partition_slots(
+                    cfg.index_rpc_slots, cfg.engine_processes + 1
+                )[0]
             for _ in range(cfg.index_shards):
                 if cfg.selfheal:
                     sup = ShardSupervisor(
@@ -181,9 +253,13 @@ class Cluster:
                         payload_bytes=cfg.index_rpc_payload,
                         idle_spin_passes=cfg.service_idle_spin,
                         idle_backoff_s=cfg.service_idle_backoff,
+                        use_doorbell=cfg.service_doorbell,
                     ).start()
                     self._supervisors.append(sup)
-                    client = CxlRpcClient(sup.ring, liveness=sup.server.alive)
+                    client = CxlRpcClient(
+                        sup.ring, liveness=sup.server.alive,
+                        doorbell=sup.client_doorbell(),
+                    )
                     sup.register_client(client)
                     self._rpc_clients.append(client)
                 else:
@@ -193,11 +269,16 @@ class Cluster:
                         payload_bytes=cfg.index_rpc_payload,
                         idle_spin_passes=cfg.service_idle_spin,
                         idle_backoff_s=cfg.service_idle_backoff,
+                        use_doorbell=cfg.service_doorbell,
                     ).start()
                     self._rpc_servers.append(srv)
                     self._shm_names.append(srv.ring.shm_name)
                     self._rpc_clients.append(
-                        CxlRpcClient(srv.ring, liveness=srv.alive)
+                        CxlRpcClient(
+                            srv.ring, liveness=srv.alive,
+                            doorbell=srv.client_doorbell(),
+                            slot_range=parent_range,
+                        )
                     )
         elif cfg.index_rpc:
             from repro.core.rpc import CxlRpcClient, CxlRpcServer, ShmRing
@@ -232,8 +313,86 @@ class Cluster:
             )
         else:
             self.migrator = None
-        for i in range(cfg.n_engines):
-            self.engines.append(self._make_engine(i))
+        if cfg.data_plane == "shared":
+            # re-home block payloads into one named segment; in-process
+            # engines keep using the pool object (whose .data is now the
+            # shared view) — bit-identical, which is what the parity
+            # tests pin before any worker enters the picture
+            data_spec = self.pool.share_data()
+            self._shm_names.append(data_spec["data_shm_name"])
+            if data_spec["meta"]["shm_name"] not in self._shm_names:
+                self._shm_names.append(data_spec["meta"]["shm_name"])
+        if cfg.engine_processes:
+            self._build_workers(cfg, data_spec)
+        else:
+            for i in range(cfg.n_engines):
+                self.engines.append(self._make_engine(i))
+
+    def _build_workers(self, cfg: ClusterConfig, data_spec: dict) -> None:
+        """Boot the allocator service + one engine worker per modeled GPU.
+
+        The allocator stays HERE (the pool-owning interpreter) behind its
+        own ring: free-stack mutation keeps exactly one owner while the
+        payload bytes live in the shared segment every worker maps."""
+        from repro.core.rpc import CxlRpcServer, ShmRing
+        from repro.core.shm import Doorbell
+        from repro.core.wire import make_pool_handler
+        from repro.serving.engineproc import EngineWorkerHost, partition_slots
+
+        ring = ShmRing.create_shared(cfg.index_rpc_slots, cfg.index_rpc_payload)
+        self._pool_ring = ring
+        self._shm_names.append(ring.shm_name)
+        db = Doorbell.create() if cfg.service_doorbell else None
+        self._pool_doorbell = db
+        self._pool_server = CxlRpcServer(
+            ring,
+            make_pool_handler(self.pool, max_reply=cfg.index_rpc_payload),
+            doorbell=db,
+            idle_spin_passes=cfg.service_idle_spin,
+            idle_backoff_s=cfg.service_idle_backoff,
+        ).start()
+        n = cfg.engine_processes
+        idx_parts = partition_slots(cfg.index_rpc_slots, n + 1)
+        pool_parts = partition_slots(cfg.index_rpc_slots, n)
+        index_rings = tuple(s.ring.shm_name for s in self._rpc_servers)
+        index_dbs = tuple(
+            None if s.doorbell is None else s.doorbell.path
+            for s in self._rpc_servers
+        )
+        for i in range(n):
+            host = EngineWorkerHost(
+                dict(
+                    engine_id=i,
+                    pool_spec=data_spec,
+                    pool_ring_name=ring.shm_name,
+                    pool_slots=cfg.index_rpc_slots,
+                    pool_payload=cfg.index_rpc_payload,
+                    pool_doorbell_name=None if db is None else db.path,
+                    pool_slot_range=pool_parts[i],
+                    index_ring_names=index_rings,
+                    index_slots=cfg.index_rpc_slots,
+                    index_payload=cfg.index_rpc_payload,
+                    index_doorbell_names=index_dbs,
+                    index_slot_range=idx_parts[i + 1],
+                    hbm_slots=cfg.hbm_slots_per_engine,
+                    transfer_mode=cfg.transfer_mode,
+                    super_block_tokens=cfg.super_block_tokens,
+                    straggler_cutover=cfg.straggler_cutover,
+                    runner=cfg.runner,
+                    idle_spin_passes=cfg.service_idle_spin,
+                    idle_backoff_s=cfg.service_idle_backoff,
+                ),
+                use_doorbell=cfg.service_doorbell,
+            ).start()
+            self.workers.append(host)
+            self._shm_names.append(host.ring.shm_name)
+        for host in self.workers:
+            if not host.wait_ready(30):
+                raise RuntimeError(
+                    f"engine worker {host.engine_id} failed to boot"
+                )
+        # scheduler surface: the hosts ARE the cluster's engines
+        self.engines = self.workers
 
     def _make_index(self):
         if self.cfg.index_shards > 1:
@@ -292,6 +451,23 @@ class Cluster:
             names.extend(sup.segment_names())
         return names
 
+    def doorbell_paths(self) -> list[str]:
+        """Doorbell FIFO paths this cluster currently owns (hygiene
+        tests assert each is unlinked on exit, like the segments)."""
+        paths = []
+        for srv in self._rpc_servers:
+            db = getattr(srv, "doorbell", None)
+            if db is not None:
+                paths.append(db.path)
+        for sup in self._supervisors:
+            paths.extend(sup.doorbell_paths())
+        if self._pool_doorbell is not None:
+            paths.append(self._pool_doorbell.path)
+        for w in self.workers:
+            if w.doorbell is not None:
+                paths.append(w.doorbell.path)
+        return paths
+
     @property
     def _rpc_server(self):
         """First shard's server (compat probe; see ``_rpc_servers``)."""
@@ -312,6 +488,21 @@ class Cluster:
         pool metadata) — on normal exit, on ``with`` scope exit, and on
         an exception thrown mid-construction alike; nothing may survive
         in /dev/shm."""
+        # workers go FIRST: they hold attachments to every other plane
+        # (data segment, pool ring, metadata rings) and may have RPCs in
+        # flight against the services stopped below
+        for w in self.workers:
+            w.close()  # stop worker, unlink its cmd ring + doorbell
+        self.workers = []
+        if self._pool_server is not None:
+            self._pool_server.stop()
+            self._pool_server = None
+        if self._pool_ring is not None:
+            self._pool_ring.close()  # owner: unlinks the allocator ring
+            self._pool_ring = None
+        if self._pool_doorbell is not None:
+            self._pool_doorbell.close()  # owner: unlinks the FIFO
+            self._pool_doorbell = None
         for server in self._rpc_servers:
             server.close()  # thread: stop; process: stop + unlink ring
         self._rpc_servers = []
@@ -320,6 +511,8 @@ class Cluster:
         self._supervisors = []
         # clients stay: their RpcStats remain inspectable post-close
         pool = getattr(self, "pool", None)
+        if pool is not None and hasattr(pool, "unshare_data"):
+            pool.unshare_data()  # copies payloads back, unlinks segment
         if pool is not None and hasattr(pool, "unshare_meta"):
             pool.unshare_meta()
         self._shm_names = []
@@ -382,13 +575,29 @@ class Cluster:
 
     def dispatch(self, req: Request) -> EngineInstance:
         eng = self._select_engine(req)
-        eng.submit(req, req.arrival)
+        if self.workers:
+            # workers need the parent's GLOBAL request index echoed back
+            # with the results (the worker builds its own Request copy)
+            eng.submit_indexed(req, len(self.requests))
+        else:
+            eng.submit(req, req.arrival)
         self.requests.append(req)
         return eng
 
     # ------------------------------------------------------------------
     def run(self, until: float | None = None) -> dict:
-        if until is None:
+        if self.workers:
+            # post the clock command to EVERY worker before collecting
+            # any reply: the N drains run concurrently, each against the
+            # one shared segment
+            slots = [w.post_run(until) for w in self.workers]
+            clocks = [
+                w.collect_run(s) for w, s in zip(self.workers, slots)
+            ]
+            end = until if until is not None else max(clocks, default=0.0)
+            for w in self.workers:
+                w.apply_results(self.requests)
+        elif until is None:
             end = max(e.drain() for e in self.engines)
         else:
             for e in self.engines:
@@ -428,6 +637,10 @@ class Cluster:
         O(k) dispatches, with no duplicate append + O(n)
         ``requests.remove`` scan — and ``self.requests`` keeps its
         original order."""
+        if self.workers:
+            raise NotImplementedError(
+                "elastic scaling with engine worker processes (ROADMAP)"
+            )
         eng = self.engines[engine_id]
         orphans = list(eng.waiting) + list(eng.running)
         for r in orphans:
@@ -442,6 +655,10 @@ class Cluster:
         return orphans
 
     def add_engine(self) -> EngineInstance:
+        if self.workers:
+            raise NotImplementedError(
+                "elastic scaling with engine worker processes (ROADMAP)"
+            )
         eng = self._make_engine(len(self.engines))
         eng.clock = max((e.clock for e in self.engines), default=0.0)
         self.engines.append(eng)

@@ -1,0 +1,549 @@
+"""Zero-copy cross-process data plane: shared block storage + engine
+worker processes + doorbell wakeups.
+
+What is pinned here:
+
+  * ``Doorbell`` — park/wake latency bounded by the wait ceiling, safe
+    with no reader attached, FIFO unlinked by the creator only;
+  * ``BelugaPool.share_data`` / ``SharedPoolData`` — stores on either
+    side of the process boundary are the SAME bytes (zero-copy), and
+    ``unshare_data`` copies back + unlinks;
+  * ``PoolRpcClient`` — allocator ops over the ring, type-faithful
+    ``OutOfPoolMemory``, atomic rollback of partially-chunked allocates,
+    slot partitioning so N clients share one ring;
+  * cluster parity — data_plane="shared" (in-process AND 1-worker) is
+    bit-identical to the private reference, stats dict for stats dict;
+  * lifecycle hygiene — segments + doorbell FIFOs all unlinked on
+    close/__exit__/mid-construction failure/worker kill -9;
+  * config gates — tiering + shared data plane, worker-mode
+    prerequisites;
+  * ``FaultInjector`` delay/drop now intercepts the pipelined
+    post/collect split, not just serial ``call``.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import threading
+import time
+from multiprocessing import shared_memory
+
+import numpy as np
+import pytest
+
+from repro.core.pool import BelugaPool, OutOfPoolMemory, PoolLayout
+from repro.core.rpc import (
+    CxlRpcClient,
+    CxlRpcServer,
+    RetryPolicy,
+    ShmRing,
+)
+from repro.core.shm import Doorbell
+from repro.core.shmpool import SharedPoolData, WorkerPoolView
+from repro.core.wire import PoolRpcClient, make_pool_handler
+from repro.serving.engineproc import partition_slots
+from repro.serving.request import Request
+from repro.serving.scheduler import Cluster, ClusterConfig
+
+LAYOUT = PoolLayout(
+    block_tokens=8, n_layers_kv=2, n_kv_heads=2, head_dim=8, dtype_bytes=2
+)
+
+
+def _segment_gone(name: str) -> bool:
+    try:
+        seg = shared_memory.SharedMemory(name=name)
+    except FileNotFoundError:
+        return True
+    seg.close()
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Doorbell
+# ---------------------------------------------------------------------------
+
+
+def test_doorbell_wakes_parked_waiter_within_ceiling():
+    db = Doorbell.create()
+    try:
+        db.open_read()
+        woke = []
+
+        def park():
+            t0 = time.perf_counter()
+            db.wait(5.0)  # ceiling far above the expected wake
+            woke.append(time.perf_counter() - t0)
+
+        t = threading.Thread(target=park)
+        t.start()
+        time.sleep(0.05)  # let it block in the FIFO read
+        producer = Doorbell.attach(db.path)
+        producer.ring()
+        t.join(timeout=5)
+        producer.close()
+        assert woke and woke[0] < 1.0, woke  # rang, not timed out
+    finally:
+        db.close()
+    assert not os.path.exists(db.path)
+
+
+def test_doorbell_ring_with_no_reader_is_safe_and_attacher_never_unlinks():
+    db = Doorbell.create()
+    producer = Doorbell.attach(db.path)
+    producer.ring()  # nobody listening: must not raise or block
+    producer.ring()
+    producer.close()
+    assert os.path.exists(db.path)  # attach-side close never unlinks
+    db.close()
+    assert not os.path.exists(db.path)
+    db.close()  # idempotent
+
+
+# ---------------------------------------------------------------------------
+# shared data segment
+# ---------------------------------------------------------------------------
+
+
+def test_share_data_zero_copy_both_directions():
+    pool = BelugaPool(LAYOUT, n_blocks=64, n_shards=4, backing="numpy")
+    spec = pool.share_data()
+    view = SharedPoolData(spec)
+    try:
+        ids = pool.allocate(2)
+        payload = np.arange(
+            2 * LAYOUT.block_bytes, dtype=np.uint8
+        ).reshape(2, -1)
+        # attach-side store, owner-side load: same bytes, no copy hop
+        eps = view.write_blocks(ids, payload)
+        assert np.array_equal(pool.data[ids], payload)
+        assert pool.validate_epochs(ids, eps).all()
+        # owner-side store, attach-side load
+        pool.data[ids[0]] ^= 0xFF
+        got, eps2 = view.read_blocks([ids[0]])
+        assert np.array_equal(got[0], payload[0] ^ 0xFF)
+        assert int(eps2[0]) == eps[0]
+    finally:
+        view.close()
+        # attach-side close must NOT unlink
+        assert not _segment_gone(spec["data_shm_name"])
+        pool.unshare_data()
+        pool.unshare_meta()
+    assert _segment_gone(spec["data_shm_name"])
+    assert _segment_gone(spec["meta"]["shm_name"])
+
+
+def test_unshare_data_copies_payloads_back():
+    pool = BelugaPool(LAYOUT, n_blocks=16, n_shards=4, backing="numpy")
+    spec = pool.share_data()
+    view = SharedPoolData(spec)
+    ids = pool.allocate(1)
+    view.write_blocks(ids, np.full((1, LAYOUT.block_bytes), 7, np.uint8))
+    view.close()
+    pool.unshare_data()
+    pool.unshare_meta()
+    assert (pool.data[ids[0]] == 7).all()  # survived the unshare
+    assert pool.validate_epoch(ids[0], int(pool.epochs[ids[0]]))
+
+
+def test_share_data_requires_numpy_backing():
+    pool = BelugaPool(LAYOUT, n_blocks=16, n_shards=4, backing="meta")
+    with pytest.raises(ValueError, match="numpy"):
+        pool.share_data()
+
+
+# ---------------------------------------------------------------------------
+# allocator over the ring
+# ---------------------------------------------------------------------------
+
+
+def _pool_service(pool, n_slots=16, payload=256):
+    ring = ShmRing(n_slots=n_slots, payload_bytes=payload)
+    srv = CxlRpcServer(
+        ring, make_pool_handler(pool, max_reply=payload)
+    ).start()
+    return ring, srv
+
+
+def test_pool_rpc_ops_and_type_faithful_oom():
+    pool = BelugaPool(LAYOUT, n_blocks=32, n_shards=4, backing="numpy")
+    ring, srv = _pool_service(pool)
+    try:
+        client = PoolRpcClient(CxlRpcClient(ring), pool.n_blocks,
+                               max_payload=256)
+        ids = client.allocate(4)
+        assert pool.free_blocks() == 28 == client.free_blocks()
+        client.retain(ids)
+        client.release(ids)
+        assert pool.refcounts[ids].tolist() == [1] * 4
+        client.release(ids)
+        assert pool.free_blocks() == 32
+        with pytest.raises(OutOfPoolMemory):
+            client.allocate(33)
+    finally:
+        srv.stop()
+
+
+def test_pool_rpc_chunked_allocate_rolls_back_atomically():
+    pool = BelugaPool(LAYOUT, n_blocks=32, n_shards=4, backing="numpy")
+    ring, srv = _pool_service(pool, payload=64)  # tiny slots force chunks
+    try:
+        client = PoolRpcClient(CxlRpcClient(ring), pool.n_blocks,
+                               max_payload=64)
+        assert client._max_ids < 32  # the request below really chunks
+        with pytest.raises(OutOfPoolMemory):
+            client.allocate(40)  # some chunks succeed, then the well runs dry
+        # atomicity: every block of the failed allocate was handed back
+        assert pool.free_blocks() == 32
+        assert client.allocate(32) and pool.free_blocks() == 0
+    finally:
+        srv.stop()
+
+
+def test_slot_partitioning_shares_one_ring():
+    assert partition_slots(10, 3) == [(0, 3), (3, 6), (6, 10)]
+    with pytest.raises(ValueError, match=">= 2"):
+        partition_slots(8, 5)
+    pool = BelugaPool(LAYOUT, n_blocks=64, n_shards=4, backing="numpy")
+    ring, srv = _pool_service(pool, n_slots=8)
+    try:
+        lo, hi = partition_slots(8, 2)[0]
+        a = PoolRpcClient(
+            CxlRpcClient(ring, slot_range=(lo, hi)), 64, max_payload=256
+        )
+        b = PoolRpcClient(
+            CxlRpcClient(ring, slot_range=partition_slots(8, 2)[1]),
+            64, max_payload=256,
+        )
+        got = []
+
+        def worker(cl):
+            for _ in range(20):
+                ids = cl.allocate(2)
+                cl.release(ids)
+                got.extend(ids)
+
+        ts = [threading.Thread(target=worker, args=(c,)) for c in (a, b)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert len(got) == 80 and pool.free_blocks() == 64
+        with pytest.raises(ValueError):
+            CxlRpcClient(ring, slot_range=(4, 3))
+    finally:
+        srv.stop()
+
+
+def test_worker_pool_view_full_surface():
+    pool = BelugaPool(LAYOUT, n_blocks=32, n_shards=4, backing="numpy")
+    spec = pool.share_data()
+    ring, srv = _pool_service(pool)
+    try:
+        view = WorkerPoolView(
+            SharedPoolData(spec),
+            PoolRpcClient(CxlRpcClient(ring), 32, max_payload=256),
+        )
+        assert view.is_tiered is False
+        assert view.layout.block_bytes == LAYOUT.block_bytes
+        ids = view.allocate(2)
+        eps = view.write_blocks(
+            ids, np.zeros((2, LAYOUT.block_bytes), np.uint8)
+        )
+        assert view.validate_epochs(ids, eps).all()
+        assert pool.committed[ids].all()  # visible to the owner
+        view.retain(ids)
+        view.release(ids)
+        assert pool.refcounts[ids].tolist() == [1, 1]
+        view.release(ids)
+        assert view.free_blocks() == 32
+        view.close()
+    finally:
+        srv.stop()
+        pool.unshare_data()
+        pool.unshare_meta()
+
+
+# ---------------------------------------------------------------------------
+# cluster parity + worker mode
+# ---------------------------------------------------------------------------
+
+
+def _workload():
+    rng = np.random.default_rng(3)
+    base = rng.integers(0, 1000, 64).tolist()
+    out = []
+    for i in range(16):
+        toks = (
+            base + rng.integers(0, 1000, 24).tolist()
+            if i % 2
+            else rng.integers(0, 1000, 80).tolist()
+        )
+        out.append((f"r{i}", [int(t) for t in toks], 8, i * 0.03))
+    return out
+
+
+def _run_cluster(**kw):
+    cfg = ClusterConfig(
+        n_engines=kw.pop("n_engines", 1), policy="round_robin",
+        pool_blocks=512, pool_shards=4, hbm_slots_per_engine=64,
+        block_tokens=8, index_rpc=True, index_transport="process",
+        index_shards=2, **kw,
+    )
+    with Cluster(cfg, LAYOUT, backing="numpy") as c:
+        for rid, toks, nout, arr in _workload():
+            c.dispatch(Request(rid, toks, nout, arrival=arr))
+        stats = c.run()
+        names = c.shm_segment_names()
+        paths = c.doorbell_paths()
+    return stats, names, paths
+
+
+def test_shared_data_plane_inprocess_bit_identical():
+    ref, _, _ = _run_cluster(data_plane="private")
+    shared, names, _ = _run_cluster(data_plane="shared")
+    assert ref == shared  # FULL stats dict, index counters included
+    assert ref["n_done"] == 16 and ref["hit_tokens"] > 0
+    for n in names:
+        assert _segment_gone(n), n
+
+
+def test_worker_process_n1_bit_identical():
+    """Acceptance: one engine worker OS process reproduces the private
+    in-process run stat for stat — the process boundary is invisible."""
+    ref, _, _ = _run_cluster(data_plane="private")
+    w1, names, paths = _run_cluster(data_plane="shared", engine_processes=1)
+    assert ref == w1
+    for n in names:
+        assert _segment_gone(n), n
+    for p in paths:
+        assert not os.path.exists(p), p
+
+
+def test_worker_processes_n2_share_one_segment():
+    cfg = ClusterConfig(
+        n_engines=2, policy="round_robin", pool_blocks=512, pool_shards=4,
+        hbm_slots_per_engine=64, block_tokens=8, index_rpc=True,
+        index_transport="process", index_shards=2, data_plane="shared",
+        engine_processes=2,
+    )
+    with Cluster(cfg, LAYOUT, backing="numpy") as c:
+        assert len(c.workers) == 2
+        for rid, toks, nout, arr in _workload():
+            c.dispatch(Request(rid, toks, nout, arrival=arr))
+        stats = c.run()
+        assert stats["n_done"] == 16
+        # both workers really ran traffic, against the one shared pool
+        per_worker = [w.stats_dict() for w in c.workers]
+        assert all(ws["transfer"]["bytes_written"] > 0 for ws in per_worker)
+        assert all(r.engine_id in (0, 1) for r in c.requests)
+        assert {r.engine_id for r in c.requests} == {0, 1}
+        names, paths = c.shm_segment_names(), c.doorbell_paths()
+        assert len(names) == 7  # meta+data+pool ring+2 shard rings+2 cmd
+    for n in names:
+        assert _segment_gone(n), n
+    for p in paths:
+        assert not os.path.exists(p), p
+
+
+def test_worker_mode_elastic_scaling_gated():
+    cfg = ClusterConfig(
+        n_engines=1, policy="round_robin", pool_blocks=256, pool_shards=4,
+        hbm_slots_per_engine=32, block_tokens=8, index_rpc=True,
+        index_transport="process", data_plane="shared", engine_processes=1,
+    )
+    with Cluster(cfg, LAYOUT, backing="numpy") as c:
+        with pytest.raises(NotImplementedError, match="elastic"):
+            c.add_engine()
+        with pytest.raises(NotImplementedError, match="elastic"):
+            c.remove_engine(0)
+
+
+# ---------------------------------------------------------------------------
+# config gates
+# ---------------------------------------------------------------------------
+
+
+def test_tiering_plus_shared_data_plane_is_gated():
+    from repro.tiering import TieringConfig
+
+    with pytest.raises(
+        NotImplementedError,
+        match="tiering \\+ data_plane='shared': the TieredPool's two-tier "
+              "payload space is not shared-memory exportable yet",
+    ):
+        Cluster(
+            ClusterConfig(
+                n_engines=1, data_plane="shared",
+                tiering=TieringConfig(enabled=True),
+            ),
+            LAYOUT, backing="numpy",
+        )
+
+
+def test_data_plane_and_worker_config_gates():
+    def cfg(**kw):
+        return ClusterConfig(
+            n_engines=1, pool_blocks=256, hbm_slots_per_engine=32, **kw
+        )
+
+    with pytest.raises(ValueError, match="private.*shared"):
+        Cluster(cfg(data_plane="zero_copy"), LAYOUT)
+    with pytest.raises(ValueError, match="backing='numpy'"):
+        Cluster(cfg(data_plane="shared"), LAYOUT, backing="meta")
+    with pytest.raises(ValueError, match="data_plane='shared'"):
+        Cluster(cfg(engine_processes=1), LAYOUT, backing="numpy")
+    with pytest.raises(ValueError, match="index_transport='process'"):
+        Cluster(
+            cfg(engine_processes=1, data_plane="shared"),
+            LAYOUT, backing="numpy",
+        )
+    with pytest.raises(ValueError, match="must equal n_engines"):
+        Cluster(
+            cfg(engine_processes=2, data_plane="shared", index_rpc=True,
+                index_transport="process"),
+            LAYOUT, backing="numpy",
+        )
+    with pytest.raises(NotImplementedError, match="round_robin"):
+        Cluster(
+            cfg(engine_processes=1, data_plane="shared", index_rpc=True,
+                index_transport="process", policy="cache_aware"),
+            LAYOUT, backing="numpy",
+        )
+    with pytest.raises(NotImplementedError, match="selfheal"):
+        Cluster(
+            cfg(engine_processes=1, data_plane="shared", index_rpc=True,
+                index_transport="process", policy="round_robin",
+                selfheal=True),
+            LAYOUT, backing="numpy",
+        )
+
+
+# ---------------------------------------------------------------------------
+# lifecycle hygiene under failure
+# ---------------------------------------------------------------------------
+
+
+def test_worker_boot_failure_leaks_nothing(monkeypatch):
+    """A worker that never reaches CTRL_READY aborts construction; every
+    segment and FIFO created before the failure must still be gone."""
+    from repro.serving import engineproc
+
+    seen: list = []
+    real_ready = engineproc.EngineWorkerHost.wait_ready
+
+    def failing_ready(self, timeout=20.0):
+        seen.append(self)
+        real_ready(self, timeout=5.0)
+        return False  # claim the boot timed out
+
+    monkeypatch.setattr(
+        engineproc.EngineWorkerHost, "wait_ready", failing_ready
+    )
+    cfg = ClusterConfig(
+        n_engines=1, policy="round_robin", pool_blocks=256, pool_shards=4,
+        hbm_slots_per_engine=32, block_tokens=8, index_rpc=True,
+        index_transport="process", data_plane="shared", engine_processes=1,
+    )
+    with pytest.raises(RuntimeError, match="failed to boot"):
+        Cluster(cfg, LAYOUT, backing="numpy")
+    assert seen  # the failure really happened at worker boot
+    for host in seen:
+        assert _segment_gone(host.ring.shm_name)
+        if host.doorbell is not None:
+            assert not os.path.exists(host.doorbell.path)
+        assert not host.alive()
+
+
+def test_worker_kill9_leaves_no_leaks():
+    cfg = ClusterConfig(
+        n_engines=1, policy="round_robin", pool_blocks=256, pool_shards=4,
+        hbm_slots_per_engine=32, block_tokens=8, index_rpc=True,
+        index_transport="process", data_plane="shared", engine_processes=1,
+    )
+    c = Cluster(cfg, LAYOUT, backing="numpy")
+    names, paths = c.shm_segment_names(), c.doorbell_paths()
+    assert names and paths
+    c.workers[0].kill()  # SIGKILL: no atexit, no finally, nothing
+    assert not c.workers[0].alive()
+    c.close()
+    for n in names:
+        assert _segment_gone(n), n
+    for p in paths:
+        assert not os.path.exists(p), p
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: pipelined post/collect split
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_intercepts_pipelined_rounds():
+    from repro.core.index import GlobalIndex
+    from repro.core.wire import RpcIndexClient, make_index_handler
+    from repro.distributed.fault_tolerance import (
+        FaultEvent,
+        FaultInjector,
+        FaultPlan,
+    )
+
+    pool = BelugaPool(LAYOUT, n_blocks=256, n_shards=4, backing="meta")
+    index = GlobalIndex(pool)
+    # tiny slots: a 64-key lookup splits into several chunks, which the
+    # client ships through the pipelined post/collect split
+    ring = ShmRing(n_slots=8, payload_bytes=256)
+    srv = CxlRpcServer(ring, make_index_handler(index, max_reply=256)).start()
+    try:
+        rpc = CxlRpcClient(ring)
+        client = RpcIndexClient(
+            rpc, LAYOUT.block_tokens, max_payload=256,
+            retry=RetryPolicy(base_backoff=0.05),
+        )
+        tokens = list(range(64 * LAYOUT.block_tokens))
+        keys = client.keys_for(tokens)
+        assert len(keys) == 64
+        ids = pool.allocate(64)
+        eps = pool.write_blocks(ids)
+        client.publish_many(keys, ids, eps, len(tokens))
+        inj = FaultInjector(
+            FaultPlan([FaultEvent(t=0.0, kind="drop", duration=0.4)]),
+            supervisors=[],
+        ).start()
+        inj.attach_client(0, rpc)
+        t0 = time.perf_counter()
+        got = client.lookup_many(keys)  # pipelined — and dropped at post
+        assert time.perf_counter() - t0 > 0.2  # really sat out the window
+        assert all(e is not None for e in got)
+        # the drop flowed through the client's OWN retry machinery
+        assert rpc.stats.retries >= 1
+    finally:
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# exp14 smoke under a HARD timeout (CI leg's in-repo twin)
+# ---------------------------------------------------------------------------
+
+
+def test_exp14_procengine_smoke_under_hard_timeout():
+    """Runs the exp14 parity + sweep harness (tiny config) in a
+    subprocess with a hard kill-timeout: a hung worker or service child
+    fails this test in bounded time — the guard the CI smoke relies on."""
+    code = (
+        "from benchmarks.exp14_procengine import run\n"
+        "rows = run(fast=True)\n"
+        "assert any('bit_identical=True' in r[2] for r in rows), rows\n"
+        "print('SMOKE-PASS')\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=240,  # HARD guard: hung child == fast failure
+    )
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-3000:])
+    assert "SMOKE-PASS" in out.stdout
