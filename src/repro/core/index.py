@@ -656,6 +656,17 @@ class GlobalIndex:
             self.publish(k, int(b), int(e), int(t))
         return len(keys)
 
+    def seed_stats(self, hits: int, misses: int) -> None:
+        """Seed the hit/miss counters (warm-snapshot restore path).
+
+        A journal rebuild restores entries but zeroes the counters; a
+        supervisor that captured OP_STATS before the crash pushes them
+        back so post-restart hit-rate reporting continues from the
+        pre-crash totals instead of resetting."""
+        with self._lock:
+            self.hits = int(hits)
+            self.misses = int(misses)
+
     def stats(self) -> dict:
         with self._lock:
             return {

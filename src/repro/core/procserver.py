@@ -377,6 +377,7 @@ class ShardSupervisor:
         probe_interval: float = 0.02,
         grace: float | None = None,
         max_restarts: int = 16,
+        snapshot_interval: float | None = None,
         **server_kwargs,
     ):
         self._pool_spec = pool_spec
@@ -385,6 +386,11 @@ class ShardSupervisor:
         self.probe_interval = probe_interval
         self.grace = 2 * probe_interval if grace is None else grace
         self.max_restarts = max_restarts
+        # warm-snapshot cadence (None = journal-only rebuild): the probe
+        # thread periodically pages the live shard's LRU order + hit/miss
+        # counters so a respawn can restore recency, not just entries
+        self.snapshot_interval = snapshot_interval
+        self._snapshot: tuple[list, int, int] | None = None
         self.restarts = 0
         self.server = ProcessRpcServer(
             pool_spec, journal=self.journal, **self._server_kwargs
@@ -455,21 +461,114 @@ class ShardSupervisor:
         self.server.kill()
 
     def _probe_loop(self) -> None:
+        last_snap = time.monotonic()
         while not self._stop.wait(self.probe_interval):
             with self._lock:
                 if self._closed:
                     return
                 if self.server.alive():
                     self._monitor.beat(0)
+                    if (
+                        self.snapshot_interval is not None
+                        and time.monotonic() - last_snap
+                        >= self.snapshot_interval
+                    ):
+                        self.capture_snapshot()
+                        last_snap = time.monotonic()
                 elif self._monitor.dead_hosts():
                     self._restart_locked()
                     self._monitor.beat(0)
+
+    def capture_snapshot(self) -> bool:
+        """Page the live shard (LRU order + hit/miss counters) into the
+        supervisor's warm snapshot.
+
+        Best-effort by design: the positional snapshot cursor pages a
+        LIVE index, so concurrent mutation can tear a page — the restore
+        path re-validates every entry against the journal's live state,
+        so a torn page degrades warmth, never correctness.  Uses the
+        first registered client that can ``call`` (slot acquisition is
+        thread-safe), returns False when there is none or the page
+        failed."""
+        client = next(
+            (c for c in self._clients if hasattr(c, "call")), None
+        )
+        if client is None or not self.server.alive():
+            return False
+        from repro.core import wire
+
+        try:
+            entries: list[tuple[bytes, int, int, int]] = []
+            start = 0
+            page = max(1, (self.server.spec.payload_bytes - 24) // 36)
+            while True:
+                total, keys, ids, eps, ntk = wire.decode_snapshot_resp(
+                    client.call(wire.encode_snapshot(start, page))
+                )
+                entries.extend(zip(keys, ids, eps, ntk))
+                start += len(keys)
+                if start >= total or not keys:
+                    break
+            _, hits, misses, _, _ = wire.decode_stats_resp(
+                client.call(wire.encode_stats())
+            )
+        except Exception:  # noqa: BLE001 — a failed capture keeps the old one
+            return False
+        self._snapshot = (entries, hits, misses)
+        return True
+
+    def _apply_snapshot(self, srv: ProcessRpcServer) -> None:
+        """Warm-restore a freshly respawned child from the last snapshot.
+
+        The child already replayed the journal (entries are complete but
+        in journal order, counters zeroed); re-publishing the snapshot's
+        entries in ITS order rebuilds the pre-crash LRU recency (publish
+        re-touches), and OP_SEED_STATS restores the hit/miss counters.
+        Every snapshot entry is validated against the journal's CURRENT
+        live state first — an entry retracted or remapped since the
+        capture must not resurrect (a resurrected stale row could
+        double-free its block at eviction).  Best-effort: any failure
+        leaves the journal rebuild as the contract."""
+        snap = self._snapshot
+        if snap is None:
+            return
+        entries, hits, misses = snap
+        from repro.core import wire
+        from repro.core.rpc import CxlRpcClient
+        from repro.core.shm import live_entries
+
+        live = live_entries(self.journal.records())
+        keep = [
+            (k, b, e, t)
+            for k, b, e, t in entries
+            if (lv := live.get(k)) is not None and lv[0] == b and lv[1] == e
+        ]
+        client = CxlRpcClient(srv.ring, liveness=srv.alive)
+        page = max(1, (srv.spec.payload_bytes - 24) // 36)
+        try:
+            for off in range(0, len(keep), page):
+                chunk = keep[off : off + page]
+                client.call(wire.encode_restore(
+                    [k for k, _, _, _ in chunk],
+                    [b for _, b, _, _ in chunk],
+                    [e for _, _, e, _ in chunk],
+                    [t for _, _, _, t in chunk],
+                ))
+            client.call(wire.encode_seed_stats(hits, misses))
+        except Exception:  # noqa: BLE001 — warmth is optional, healing is not
+            pass
 
     def _restart_locked(self) -> None:
         if self.restarts >= self.max_restarts:
             return  # flapping shard: stop resuscitating, clients degrade
         old = self.server
         old.stop()  # reap; ring segment stays mapped until close()
+        if old.ring.ctrl is not None:
+            # a kill -9'd child never saw the stop word; flip it anyway so
+            # CTRL_STOP-based liveness probes (engine workers share no
+            # process handle with this supervisor) fail fast on the
+            # retired ring instead of burning full RPC timeouts
+            old.ring.ctrl[CTRL_STOP] = 1
         self._retired.append(old)
         srv = ProcessRpcServer(
             self._pool_spec, journal=self.journal, **self._server_kwargs
@@ -479,6 +578,7 @@ class ShardSupervisor:
         self.restarts += 1
         if not srv.wait_ready(timeout=10.0):
             return  # replacement stillborn; next probe pass retries
+        self._apply_snapshot(srv)
         for client in self._clients:
             client.adopt_ring(
                 srv.ring, liveness=srv.alive, doorbell=srv.client_doorbell()

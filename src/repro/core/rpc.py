@@ -267,6 +267,12 @@ def drain_ready(ring: ShmRing, handler, delay: float = 0.0) -> int:
     ready = np.nonzero(status == REQ_READY)[0]
     if not len(ready):
         return 0
+    # a handler that declares ``wants_slot`` also receives the slot index
+    # that posted the request: on a partitioned ring (several worker
+    # processes sharing disjoint slot ranges) the slot identifies the
+    # POSTER, which a lease-tracking pool handler needs to attribute
+    # allocator traffic per worker
+    wants_slot = getattr(handler, "wants_slot", False)
     t_ns = time.perf_counter_ns()
     for i in ready.tolist():
         if delay:
@@ -277,7 +283,8 @@ def drain_ready(ring: ShmRing, handler, delay: float = 0.0) -> int:
         # than the slot) must never kill the service: the error is
         # relayed in-band as a RESP_ERROR frame and draining continues
         try:
-            ring.write_resp(i, handler(payload))
+            reply = handler(payload, i) if wants_slot else handler(payload)
+            ring.write_resp(i, reply)
             status[i] = RESP_READY  # publish (ntstore semantics)
         except Exception as e:  # noqa: BLE001
             # truncate on a CHARACTER boundary: a byte-slice could
@@ -452,6 +459,23 @@ class CxlRpcClient:
                     self.ring.status[s] = IDLE
                     self._quarantined.discard(s)
                     self._free.append(s)
+                # a DEAD service will never answer the rest: once the
+                # liveness probe fails (killed child / retired ring with
+                # CTRL_STOP set) no writer remains for those slots, so
+                # they are safe to reuse.  Without this, fail-fast
+                # retries against a dead ring burn one slot each and a
+                # narrow slot partition (engine workers share rings by
+                # disjoint ranges) exhausts into "QD exceeded" before
+                # the cutover to the new generation can reach it.
+                if (
+                    self._quarantined
+                    and self.liveness is not None
+                    and not self.liveness()
+                ):
+                    for s in list(self._quarantined):
+                        self.ring.status[s] = IDLE
+                        self._quarantined.discard(s)
+                        self._free.append(s)
             if not self._free:
                 raise RuntimeError("no free RPC slots (QD exceeded)")
             return self._free.pop()

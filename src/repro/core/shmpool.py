@@ -30,6 +30,8 @@ the committed-flag check backstops them.
 
 from __future__ import annotations
 
+import threading
+
 import numpy as np
 
 from repro.core.pool import PoolLayout
@@ -135,6 +137,141 @@ class SharedPoolData:
         close_segment(self._data_segment, unlink=False)
         close_segment(self._meta_segment, unlink=False)
         self._data_segment = self._meta_segment = None
+
+
+class WorkerLeaseLedger:
+    """Per-worker retained-block ledger on the pool-owning side.
+
+    The allocator ring handler mirrors every ALLOC/RETAIN/RELEASE into
+    this ledger (``repro.core.wire.make_pool_handler`` with
+    ``ledger=``), tagged with the posting worker (slot partitions make
+    the slot identify the worker).  When a worker dies, ``reconcile``
+    releases exactly the refs that worker still held — and ONLY those —
+    using the PR-5 epoch-validity rule so a block whose lease has since
+    moved on is never freed under its new owner:
+
+      * ``epoch == grant``                 — untouched since the grant
+        (fresh allocation never written, or a retain-ref on a committed
+        block): release;
+      * ``epoch == grant+1`` and committed — the worker wrote it; probe
+        the metadata plane (``owners_of``): if the index owns
+        ``(block, grant+1)`` the alloc-ref transferred at publish and
+        must survive, otherwise it is a wrote-but-unpublished leak and
+        is released.  Reallocation by another worker is impossible
+        without an intervening free, which would bump the epoch past
+        ``grant+1`` — so this release can never land on a new owner;
+      * anything else                      — the lease provably moved
+        on (or the state is unaccountable): skip.  The bias is
+        leak-not-corrupt; skipped blocks are reported, not freed.
+
+    Publishes clear the lease eagerly (``on_publish``, driven by the
+    journal-proxy handler), so in steady state the ledger holds only a
+    worker's transient refs.  ``mutex`` serializes pool mutation between
+    the allocator service thread (handler) and the supervisor's
+    reconcile (parent main thread)."""
+
+    def __init__(self):
+        self.mutex = threading.Lock()
+        # worker -> {block_id: [ref_count, grant_epoch]}
+        self._leases: dict[int, dict[int, list[int]]] = {}
+
+    # -- handler-side mirror hooks (called under ``mutex``) --------------
+    def on_alloc(self, worker: int, block_ids, pool) -> None:
+        held = self._leases.setdefault(worker, {})
+        eps = pool.epochs
+        for b in block_ids:
+            b = int(b)
+            lease = held.get(b)
+            if lease is None:
+                held[b] = [1, int(eps[b])]
+            else:
+                lease[0] += 1
+                lease[1] = int(eps[b])
+
+    on_retain = on_alloc  # same bookkeeping: one more ref at current epoch
+
+    def on_release(self, worker: int, block_ids) -> None:
+        """Unknown ids are tolerated on purpose: a worker also routes
+        index-eviction releases (``on_freed``) through its ring, and
+        those free refs the INDEX owned, not leases of this worker."""
+        held = self._leases.get(worker)
+        if held is None:
+            return
+        for b in block_ids:
+            lease = held.get(int(b))
+            if lease is None:
+                continue
+            lease[0] -= 1
+            if lease[0] <= 0:
+                del held[int(b)]
+
+    def on_publish(self, worker: int, block_ids) -> None:
+        """Alloc-ref ownership transfer: published blocks belong to the
+        index (eviction releases them via ``on_freed``)."""
+        self.on_release(worker, block_ids)
+
+    # -- supervisor-side --------------------------------------------------
+    def leases(self, worker: int) -> dict[int, tuple[int, int]]:
+        with self.mutex:
+            return {
+                b: (c, e)
+                for b, (c, e) in self._leases.get(worker, {}).items()
+            }
+
+    def drop(self, worker: int) -> None:
+        with self.mutex:
+            self._leases.pop(worker, None)
+
+    def reconcile(self, worker: int, pool, owners_of=None) -> dict:
+        """Release a dead worker's leases exactly once (epoch-validated).
+
+        The worker's entry is popped up front, so a second call (or a
+        concurrent handler append from a not-actually-dead worker) finds
+        nothing — exactly-once by construction.  Returns a summary:
+        refs released / skipped and the block ids involved."""
+        with self.mutex:
+            held = self._leases.pop(worker, {})
+            if not held:
+                return {"released": 0, "skipped": 0, "blocks": [], "kept": []}
+            eps, committed, refcounts = pool.epochs, pool.committed, pool.refcounts
+            to_release: list[int] = []
+            probe: list[tuple[int, int, int]] = []  # (bid, count, grant)
+            kept: list[int] = []
+            for b, (count, grant) in held.items():
+                rc = int(refcounts[b])
+                if rc <= 0:
+                    kept.append(b)  # already free: nothing to reclaim
+                    continue
+                ec = int(eps[b])
+                if ec == grant:
+                    to_release.extend([b] * min(count, rc))
+                elif ec == grant + 1 and bool(committed[b]):
+                    probe.append((b, min(count, rc), grant))
+                else:
+                    kept.append(b)  # lease moved on: leak-not-corrupt
+            if probe and owners_of is not None:
+                keys, ids, owner_eps = owners_of([b for b, _, _ in probe])
+                owned = set(zip(ids, owner_eps))
+                for b, count, grant in probe:
+                    if (b, grant + 1) in owned:
+                        # publish applied before death: the index holds
+                        # the alloc-ref now — it must survive the worker
+                        if count > 1:
+                            to_release.extend([b] * (count - 1))
+                        else:
+                            kept.append(b)
+                    else:
+                        to_release.extend([b] * count)
+            elif probe:
+                kept.extend(b for b, _, _ in probe)
+            if to_release:
+                pool.release(to_release)
+            return {
+                "released": len(to_release),
+                "skipped": len(kept),
+                "blocks": sorted(set(to_release)),
+                "kept": sorted(set(kept)),
+            }
 
 
 class WorkerPoolView:

@@ -98,6 +98,17 @@ OP_POOL_ALLOC = 13
 OP_POOL_RETAIN = 14
 OP_POOL_RELEASE = 15
 OP_POOL_FREE = 16
+# journal proxy (engine workers -> pool-owning parent, selfheal mode):
+# worker-side index clients must journal their confirmed mutations like
+# every other client, but the ShardJournal segments are owned by the
+# parent — these ops carry the append over the SAME allocator ring the
+# worker already holds, tagged with the target shard
+OP_JRNL_PUBLISH = 17
+OP_JRNL_RETRACT = 18
+OP_JRNL_REMAP = 19
+# seed hit/miss counters into a freshly restarted shard (warm-snapshot
+# restore path; served by the index dispatcher)
+OP_SEED_STATS = 20
 
 _HDR = struct.Struct("<BI")  # op, count
 _U32 = struct.Struct("<I")
@@ -193,6 +204,13 @@ def encode_snapshot(start: int, max_items: int) -> bytes:
     """Page ``max_items`` index entries starting ``start`` rows in (LRU
     order) — the rebuild-verification op of the self-healing plane."""
     return _HDR.pack(OP_SNAPSHOT, max_items) + _U32.pack(start)
+
+
+_SEED_STATS = struct.Struct("<QQ")
+
+
+def encode_seed_stats(hits: int, misses: int) -> bytes:
+    return _HDR.pack(OP_SEED_STATS, 0) + _SEED_STATS.pack(hits, misses)
 
 
 def encode_restore(keys, block_ids, epochs, n_tokens) -> bytes:
@@ -380,6 +398,9 @@ def reply_bound(buf: bytes, _depth: int = 0) -> int:
     if op == OP_RESTORE:
         _need(buf, _HDR.size + (KEY_BYTES + 20) * n)
         return 4
+    if op == OP_SEED_STATS:
+        _need(buf, _HDR.size + _SEED_STATS.size)
+        return 4
     if op == OP_BATCH:
         if _depth >= _MAX_BATCH_DEPTH:
             raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
@@ -551,6 +572,10 @@ def handle_request(
             _check_block_ids(index, ids, "RESTORE")
         index.restore_entries(keys, ids.tolist(), eps.tolist(), ntk.tolist())
         return _U32.pack(n)
+    if op == OP_SEED_STATS:
+        hits, misses = _SEED_STATS.unpack_from(buf, _HDR.size)
+        index.seed_stats(hits, misses)
+        return _U32.pack(0)
     if op == OP_BATCH:
         if _depth >= _MAX_BATCH_DEPTH:
             raise WireError(f"BATCH nesting exceeds {_MAX_BATCH_DEPTH}")
@@ -920,6 +945,10 @@ class RpcIndexClient:
                 )
             )
         return done
+
+    def seed_stats(self, hits: int, misses: int) -> None:
+        """Seed the shard's hit/miss counters (warm-restore path)."""
+        self._call(encode_seed_stats(hits, misses))
 
     def call_batch(self, requests: list[bytes]) -> list[bytes]:
         """Ship k already-encoded ops in ONE ring round-trip."""
@@ -1397,6 +1426,46 @@ def decode_pool_free_resp(buf: bytes) -> tuple[int, int]:
     return _POOL_FREE_RESP.unpack_from(buf)
 
 
+# journal proxy frames (shard:u32 right after the op header):
+#     JRNL_PUBLISH := op:u8 n:u32 shard:u32 n_tokens:i32
+#                     keys[n*16] ids[n*i64] epochs[n*i64]       -> n:u32
+#     JRNL_RETRACT := op:u8 n:u32 shard:u32 ids[n*i64]          -> n:u32
+#     JRNL_REMAP   := op:u8 n:u32 shard:u32
+#                     keys[n*16] ids[n*i64] epochs[n*i64]       -> n:u32
+_JRNL_PUB_HDR = struct.Struct("<BIIi")  # op, count, shard, n_tokens
+_JRNL_HDR = struct.Struct("<BII")  # op, count, shard
+
+
+def encode_jrnl_publish(shard, keys, block_ids, epochs, n_tokens) -> bytes:
+    n = len(keys)
+    if not (n == len(block_ids) == len(epochs)):
+        raise WireError("journal publish arrays disagree on length")
+    return (
+        _JRNL_PUB_HDR.pack(OP_JRNL_PUBLISH, n, shard, n_tokens)
+        + _join_keys(keys)
+        + np.asarray(block_ids, np.int64).tobytes()
+        + np.asarray(epochs, np.int64).tobytes()
+    )
+
+
+def encode_jrnl_retract(shard, block_ids) -> bytes:
+    return _JRNL_HDR.pack(
+        OP_JRNL_RETRACT, len(block_ids), shard
+    ) + np.asarray(block_ids, np.int64).tobytes()
+
+
+def encode_jrnl_remap(shard, keys, new_ids, new_epochs) -> bytes:
+    n = len(keys)
+    if not (n == len(new_ids) == len(new_epochs)):
+        raise WireError("journal remap arrays disagree on length")
+    return (
+        _JRNL_HDR.pack(OP_JRNL_REMAP, n, shard)
+        + _join_keys(keys)
+        + np.asarray(new_ids, np.int64).tobytes()
+        + np.asarray(new_epochs, np.int64).tobytes()
+    )
+
+
 def pool_reply_bound(buf: bytes) -> int:
     """Worst-case reply size WITHOUT executing (see ``reply_bound``):
     an ALLOC whose id list could not ship must fail before any blocks
@@ -1410,7 +1479,57 @@ def pool_reply_bound(buf: bytes) -> int:
         return 4
     if op == OP_POOL_FREE:
         return _POOL_FREE_RESP.size
+    if op == OP_JRNL_PUBLISH:
+        _need(buf, _JRNL_PUB_HDR.size + (KEY_BYTES + 16) * n)
+        return 4
+    if op == OP_JRNL_RETRACT:
+        _need(buf, _JRNL_HDR.size + 8 * n)
+        return 4
+    if op == OP_JRNL_REMAP:
+        _need(buf, _JRNL_HDR.size + (KEY_BYTES + 16) * n)
+        return 4
     raise WireError(f"unknown pool op {op}")
+
+
+def handle_journal_request(buf: bytes, journals, ledger=None, worker=None) -> bytes:
+    """Dispatch one journal-proxy op against the parent-held journals.
+
+    ``ShardJournal._append`` is thread-locked, so this handler (running
+    on the allocator service thread) appends safely alongside the parent
+    main thread's own index clients.  A JRNL_PUBLISH additionally clears
+    the posting worker's lease on the published blocks: the alloc-ref's
+    ownership transfers to the index (eviction releases it via
+    ``on_freed``), so those blocks must NOT be reclaimed if the worker
+    later dies."""
+    _need(buf, _HDR.size)
+    op, n = _HDR.unpack_from(buf)
+    if op == OP_JRNL_PUBLISH:
+        _need(buf, _JRNL_PUB_HDR.size)
+        _, n, shard, n_tokens = _JRNL_PUB_HDR.unpack_from(buf)
+        if shard >= len(journals):
+            raise WireError(f"journal shard {shard} out of range")
+        keys, off = _split_keys(buf, _JRNL_PUB_HDR.size, n)
+        ids, off = _split_i64(buf, off, n)
+        eps, _ = _split_i64(buf, off, n)
+        journals[shard].append_publish(keys, ids.tolist(), eps.tolist(), n_tokens)
+        if ledger is not None and worker is not None:
+            ledger.on_publish(worker, ids.tolist())
+        return _U32.pack(n)
+    if op in (OP_JRNL_RETRACT, OP_JRNL_REMAP):
+        _need(buf, _JRNL_HDR.size)
+        _, n, shard = _JRNL_HDR.unpack_from(buf)
+        if shard >= len(journals):
+            raise WireError(f"journal shard {shard} out of range")
+        if op == OP_JRNL_RETRACT:
+            ids, _ = _split_i64(buf, _JRNL_HDR.size, n)
+            journals[shard].append_retract(ids.tolist())
+        else:
+            keys, off = _split_keys(buf, _JRNL_HDR.size, n)
+            ids, off = _split_i64(buf, off, n)
+            eps, _ = _split_i64(buf, off, n)
+            journals[shard].append_remap(keys, ids.tolist(), eps.tolist())
+        return _U32.pack(n)
+    raise WireError(f"unknown journal op {op}")
 
 
 def handle_pool_request(pool, buf: bytes) -> bytes:
@@ -1442,15 +1561,120 @@ class pool_index_shim:
         self.pool = pool
 
 
-def make_pool_handler(pool, max_reply: int | None = None):
-    """Handler for the parent-side pool-allocator ring service."""
+def make_pool_handler(pool, max_reply: int | None = None, *, ledger=None,
+                      slot_owner=None, journals=None):
+    """Handler for the parent-side pool-allocator ring service.
 
-    def handler(payload: bytes) -> bytes:
+    Plain mode (all keyword hooks None) is the PR-7 hot path, unchanged.
+    With ``ledger`` (a ``repro.core.shmpool.WorkerLeaseLedger``) the
+    handler declares ``wants_slot`` so ``drain_ready`` also passes the
+    posting slot: ``slot_owner(slot)`` maps it to the worker index (the
+    pool ring is partitioned per worker) and every ALLOC/RETAIN/RELEASE
+    is mirrored into the ledger — the raw material of lease
+    reconciliation when that worker dies.  ``journals`` additionally
+    enables the journal-proxy ops (selfheal mode), serving worker-side
+    journal appends against the parent-held ``ShardJournal``s.  Ledger
+    mode serializes pool mutation against ``ledger.mutex`` so the
+    supervisor's reconcile path (parent main thread) cannot race the
+    allocator thread on the pool's free stacks."""
+    if ledger is None and journals is None:
+
+        def handler(payload: bytes) -> bytes:
+            if max_reply is not None and pool_reply_bound(payload) > max_reply:
+                raise WireError(f"reply would exceed {max_reply} B slot")
+            return handle_pool_request(pool, payload)
+
+        return handler
+
+    jrnls = list(journals) if journals is not None else []
+
+    def handler(payload: bytes, slot: int) -> bytes:  # noqa: F811
         if max_reply is not None and pool_reply_bound(payload) > max_reply:
             raise WireError(f"reply would exceed {max_reply} B slot")
-        return handle_pool_request(pool, payload)
+        op, n = _HDR.unpack_from(payload)
+        worker = slot_owner(slot) if slot_owner is not None else None
+        if op in (OP_JRNL_PUBLISH, OP_JRNL_RETRACT, OP_JRNL_REMAP):
+            return handle_journal_request(payload, jrnls, ledger, worker)
+        if ledger is None or worker is None:
+            return handle_pool_request(pool, payload)
+        with ledger.mutex:
+            reply = handle_pool_request(pool, payload)
+            if op == OP_POOL_ALLOC:
+                ledger.on_alloc(worker, decode_pool_alloc_resp(reply), pool)
+            elif op == OP_POOL_RETAIN:
+                ids, _ = _split_i64(payload, _HDR.size, n)
+                ledger.on_retain(worker, ids.tolist(), pool)
+            elif op == OP_POOL_RELEASE:
+                ids, _ = _split_i64(payload, _HDR.size, n)
+                ledger.on_release(worker, ids.tolist())
+        return reply
 
+    handler.wants_slot = True
     return handler
+
+
+class RemoteJournal:
+    """Worker-side proxy for a parent-held ``ShardJournal``.
+
+    Exposes the exact append surface the index clients call after a
+    confirmed reply (``append_publish`` / ``append_retract`` /
+    ``append_remap``), but ships each append over the worker's pool
+    allocator ring tagged with the target shard — the journal segments
+    themselves have exactly one writer side, the parent.  Appends are
+    idempotent under ``live_entries`` folding (a duplicated publish or
+    retract folds to the same live state), so transient transport
+    failures retry under the same policy as the data ops."""
+
+    def __init__(self, rpc, shard: int, max_payload: int | None = None,
+                 retry: RetryPolicy | None = None):
+        self.rpc = rpc
+        self.shard = shard
+        self.retry = retry
+        if max_payload is None:
+            max_payload = getattr(
+                getattr(rpc, "ring", None), "payload_bytes", 1 << 20
+            )
+        self._max_pub = max(1, (max_payload - 24) // (KEY_BYTES + 16))
+        self._max_ids = max(1, (max_payload - 24) // 8)
+
+    def _call(self, payload: bytes) -> bytes:
+        pol = self.retry
+        if pol is None:
+            return self.rpc.call(payload)
+        attempt = 0
+        while True:
+            try:
+                return self.rpc.call(payload)
+            except (ServiceDiedError, TimeoutError):
+                attempt += 1
+                if attempt > pol.max_retries:
+                    raise
+            stats = getattr(self.rpc, "stats", None)
+            if stats is not None:
+                stats.retries += 1
+            time.sleep(pol.backoff(attempt))
+
+    def append_publish(self, keys, block_ids, epochs, n_tokens: int) -> None:
+        M = self._max_pub
+        for off in range(0, len(keys), M):
+            end = off + M
+            self._call(encode_jrnl_publish(
+                self.shard, keys[off:end], block_ids[off:end],
+                epochs[off:end], n_tokens,
+            ))
+
+    def append_retract(self, block_ids) -> None:
+        M = self._max_ids
+        for off in range(0, len(block_ids), M):
+            self._call(encode_jrnl_retract(self.shard, block_ids[off : off + M]))
+
+    def append_remap(self, keys, new_ids, new_epochs) -> None:
+        M = self._max_pub
+        for off in range(0, len(keys), M):
+            end = off + M
+            self._call(encode_jrnl_remap(
+                self.shard, keys[off:end], new_ids[off:end], new_epochs[off:end]
+            ))
 
 
 class PoolRpcClient:

@@ -150,17 +150,25 @@ class FaultEvent:
         ``delay_s`` before posting (slow-service window);
       * ``"drop"``  — for ``[t, t + duration)`` every RPC post on the
         shard raises ``TimeoutError`` instead of posting (lost-request
-        window; the client's retry/degrade policy decides what happens).
+        window; the client's retry/degrade policy decides what happens);
+      * ``"kill_worker"``    — SIGKILL engine worker ``shard`` (the
+        worker supervisor detects it, reconciles its pool leases,
+        respawns it and replays its un-acked submits);
+      * ``"kill_allocator"`` — trigger the cluster's allocator-outage
+        hook (a rolling allocator-ring restart: workers cut over via the
+        command-plane ADOPT, in-flight allocator ops retry).
     """
 
     t: float
-    kind: str  # "kill" | "delay" | "drop"
+    kind: str  # "kill" | "delay" | "drop" | "kill_worker" | "kill_allocator"
     shard: int = 0
     duration: float = 0.0
     delay_s: float = 0.0
 
     def __post_init__(self):
-        if self.kind not in ("kill", "delay", "drop"):
+        if self.kind not in (
+            "kill", "delay", "drop", "kill_worker", "kill_allocator"
+        ):
             raise ValueError(f"unknown fault kind {self.kind!r}")
 
 
@@ -215,9 +223,15 @@ class FaultInjector:
     virtual clock starts at ``start()``.
     """
 
-    def __init__(self, plan: FaultPlan, supervisors, clock=time.monotonic):
+    def __init__(self, plan: FaultPlan, supervisors, clock=time.monotonic,
+                 worker_supervisors=(), allocator=None):
         self.plan = plan
         self.supervisors = list(supervisors)
+        # data-plane targets (PR 8): engine-worker supervisors for
+        # ``kill_worker`` events, and the cluster's allocator-outage hook
+        # (``Cluster.restart_allocator``) for ``kill_allocator``
+        self.worker_supervisors = list(worker_supervisors)
+        self.allocator = allocator
         self._clock = clock
         self._t0: float | None = None
         self.applied: list[FaultEvent] = []
@@ -252,5 +266,11 @@ class FaultInjector:
         for ev in fired:
             if ev.kind == "kill" and ev.shard < len(self.supervisors):
                 self.supervisors[ev.shard].kill()
+            elif ev.kind == "kill_worker" and ev.shard < len(
+                self.worker_supervisors
+            ):
+                self.worker_supervisors[ev.shard].kill()
+            elif ev.kind == "kill_allocator" and self.allocator is not None:
+                self.allocator()
             self.applied.append(ev)
         return fired

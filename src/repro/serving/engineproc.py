@@ -36,6 +36,7 @@ from __future__ import annotations
 import atexit
 import math
 import struct
+import threading
 import time
 from dataclasses import dataclass
 
@@ -49,9 +50,11 @@ from repro.core.rpc import (
     RESP_ERROR,
     RESP_READY,
     CxlRpcClient,
+    ServiceDiedError,
     ShmRing,
     drain_ready,
 )
+from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.core.shm import Doorbell
 from repro.core.wire import WireError
 from repro.serving.engine import SimRunnerConfig
@@ -70,10 +73,18 @@ from repro.serving.request import Request
 #                (NaN encodes a None timestamp)
 #     STATS   := op:u8 -> fixed _STATS_RESP struct (engine + manager +
 #                transfer counters and the worker's virtual clock)
-WCMD_SUBMIT, WCMD_RUN, WCMD_RESULTS, WCMD_STATS = 1, 2, 3, 4
+#     ADOPT   := op:u8 plane:u8 shard:u32 n_slots:u32 payload:u32
+#                ring_len:u32 ring_name  db_len:u32 doorbell_path
+#             -> ok:u32
+#                (ring-generation cutover INTO the worker: plane 0 = the
+#                index shard ``shard``'s ring, plane 1 = the pool
+#                allocator ring; the worker attaches the named segment
+#                and ``adopt_ring``s its own client onto it)
+WCMD_SUBMIT, WCMD_RUN, WCMD_RESULTS, WCMD_STATS, WCMD_ADOPT = 1, 2, 3, 4, 5
 
 _U32 = struct.Struct("<I")
 _SUB_HDR = struct.Struct("<BIdiI")
+_ADOPT_HDR = struct.Struct("<BBIII")
 _RUN = struct.Struct("<BBd")
 _RUN_RESP = struct.Struct("<dI")
 _RES_REQ = struct.Struct("<BII")
@@ -111,6 +122,38 @@ def partition_slots(n_slots: int, n_parts: int) -> list[tuple[int, int]]:
     ]
 
 
+def encode_adopt(
+    plane: int,
+    shard: int,
+    n_slots: int,
+    payload_bytes: int,
+    ring_name: str,
+    doorbell_path: str = "",
+) -> bytes:
+    """ADOPT command: cut one of the worker's service clients over onto a
+    new ring generation (``plane`` 0 = index shard ``shard``, 1 = pool
+    allocator).  An empty ``doorbell_path`` means poll-only."""
+    rn = ring_name.encode()
+    dp = doorbell_path.encode()
+    return (
+        _ADOPT_HDR.pack(WCMD_ADOPT, plane, shard, n_slots, payload_bytes)
+        + _U32.pack(len(rn)) + rn + _U32.pack(len(dp)) + dp
+    )
+
+
+def _ring_liveness(client):
+    """Liveness for clients with no process handle on the service: a
+    retired ring generation has CTRL_STOP flipped by the supervisor, so
+    reading the CURRENT ring's stop word through the client fails fast
+    instead of burning the full collect timeout against a dead ring."""
+
+    def live() -> bool:
+        ctrl = client.ring.ctrl
+        return ctrl is not None and not ctrl[CTRL_STOP]
+
+    return live
+
+
 @dataclass(frozen=True)
 class EngineWorkerSpec:
     """Everything a worker needs to build its stack — plain data only
@@ -141,6 +184,11 @@ class EngineWorkerSpec:
     idle_spin_passes: int = 200
     idle_backoff_s: float = 100e-6
     doorbell_wait_s: float = 0.05
+    # selfheal mode: survive service restarts (ring-generation cutover via
+    # ADOPT, CTRL_STOP liveness, retry/degrade on the index plane, journal
+    # writes proxied to the parent over the allocator ring)
+    selfheal: bool = False
+    retry: object | None = None  # RetryPolicy (picklable dataclass)
 
 
 # ---------------------------------------------------------------------------
@@ -158,13 +206,17 @@ def _no_offload_plan():
 def _build_worker_stack(spec: EngineWorkerSpec):
     """Attach segments/rings and construct the full serving stack.
 
-    Returns (engine, closeables); closing every closeable (views, rings,
+    Returns (engine, clients, closeables): ``clients`` maps the worker's
+    service-facing RPC clients ({"pool": CxlRpcClient, "index": [CxlRpcClient,
+    ...]}) so the ADOPT command can cut them over onto a respawned
+    service's fresh ring; closing every closeable (views, rings,
     attach-side doorbells) is the worker's teardown duty."""
     from repro.core.index import PrefixHasher
     from repro.core.shmpool import SharedPoolData, WorkerPoolView
     from repro.core.transfer import TransferEngine
     from repro.core.wire import (
         PoolRpcClient,
+        RemoteJournal,
         RpcIndexClient,
         ShardedRpcIndexClient,
     )
@@ -188,6 +240,8 @@ def _build_worker_stack(spec: EngineWorkerSpec):
     pool_rpc = CxlRpcClient(
         pool_ring, doorbell=pool_db, slot_range=spec.pool_slot_range
     )
+    if spec.selfheal:
+        pool_rpc.liveness = _ring_liveness(pool_rpc)
     alloc = PoolRpcClient(
         pool_rpc, spec.pool_spec["n_blocks"], max_payload=spec.pool_payload
     )
@@ -201,13 +255,34 @@ def _build_worker_stack(spec: EngineWorkerSpec):
         idx_db = None if db_name is None else Doorbell.attach(db_name)
         if idx_db is not None:
             closeables.append(idx_db)
-        index_rpcs.append(CxlRpcClient(
+        rpc = CxlRpcClient(
             ring, doorbell=idx_db, slot_range=spec.index_slot_range,
-        ))
+        )
+        if spec.selfheal:
+            rpc.liveness = _ring_liveness(rpc)
+        index_rpcs.append(rpc)
     # evictions served by a shard process defer the pool release; in a
     # WORKER the release itself is one more hop over the allocator ring
     # back to the owning parent (on_freed -> PoolRpcClient.release)
-    if len(index_rpcs) > 1:
+    if spec.selfheal:
+        # the sharded client even for one shard: it carries the
+        # retry/degrade machinery a restarting shard needs, and its
+        # publishes are mirrored into the PARENT-held journals via the
+        # journal proxy on the allocator ring — a respawned shard
+        # rebuilds from a journal that includes worker publishes
+        index = ShardedRpcIndexClient(
+            index_rpcs, bt, max_payload=spec.index_payload, hasher=hasher,
+            on_freed=alloc.release,
+            journals=[
+                RemoteJournal(
+                    pool_rpc, s, max_payload=spec.pool_payload,
+                    retry=spec.retry,
+                )
+                for s in range(len(index_rpcs))
+            ],
+            retry=spec.retry, degrade=True,
+        )
+    elif len(index_rpcs) > 1:
         index = ShardedRpcIndexClient(
             index_rpcs, bt, max_payload=spec.index_payload, hasher=hasher,
             on_freed=alloc.release,
@@ -227,6 +302,7 @@ def _build_worker_stack(spec: EngineWorkerSpec):
         pool_view, index, hbm, transfer,
         recompute_cutover=spec.straggler_cutover,
         prefill_tok_per_s=spec.runner.prefill_tok_per_s,
+        degraded_ok=spec.selfheal,
     )
     if spec.transfer_mode == "none":
         mgr.plan_fetch_orig = mgr.plan_fetch
@@ -235,16 +311,55 @@ def _build_worker_stack(spec: EngineWorkerSpec):
     engine = EngineInstance(
         spec.engine_id, mgr, SimRunner(spec.runner)
     )
-    return engine, closeables
+    clients = {"pool": pool_rpc, "index": index_rpcs}
+    return engine, clients, closeables
 
 
-def _make_worker_handler(engine, reqs: list):
+def _make_worker_handler(engine, reqs: list, clients=None, closeables=None):
     """Command-ring dispatcher (runs inside the worker's serve loop)."""
 
     def handler(payload: bytes) -> bytes:
         if not payload:
             raise WireError("empty worker command")
         op = payload[0]
+        if op == WCMD_ADOPT:
+            _, plane, shard, n_slots, payload_bytes = _ADOPT_HDR.unpack_from(
+                payload
+            )
+            off = _ADOPT_HDR.size
+            (ln,) = _U32.unpack_from(payload, off)
+            off += 4
+            ring_name = payload[off : off + ln].decode()
+            off += ln
+            (ln,) = _U32.unpack_from(payload, off)
+            off += 4
+            db_path = payload[off : off + ln].decode()
+            if clients is None:
+                raise WireError("adopt: worker built without client registry")
+            if plane == 1:
+                target = clients["pool"]
+            else:
+                rpcs = clients["index"]
+                if shard >= len(rpcs):
+                    raise WireError(f"adopt: index shard {shard} out of range")
+                target = rpcs[shard]
+            new_ring = ShmRing.attach(ring_name, n_slots, payload_bytes)
+            closeables.append(new_ring)
+            db = Doorbell.attach(db_path) if db_path else None
+            if db is not None:
+                closeables.append(db)
+            old_ring = target.ring
+            target.adopt_ring(
+                new_ring, liveness=_ring_liveness(target), doorbell=db
+            )
+            # the worker is single-threaded: no in-flight collect can hold
+            # the retired mapping, so close it now instead of at teardown
+            try:
+                closeables.remove(old_ring)
+            except ValueError:
+                pass
+            old_ring.close()
+            return _U32.pack(1)
         if op == WCMD_SUBMIT:
             _, n, arrival, n_output, req_idx = _SUB_HDR.unpack_from(payload)
             tokens = np.frombuffer(
@@ -299,9 +414,9 @@ def _engine_worker_main(spec: EngineWorkerSpec) -> None:
     """Worker entry: attach everything, serve the command ring until
     CTRL_STOP (the same arm/re-scan/park idle loop as ``_service_main``)."""
     cmd_ring = ShmRing.attach(spec.cmd_ring_name, spec.cmd_slots, spec.cmd_payload)
-    engine, closeables = _build_worker_stack(spec)
+    engine, clients, closeables = _build_worker_stack(spec)
     reqs: list = []
-    handler = _make_worker_handler(engine, reqs)
+    handler = _make_worker_handler(engine, reqs, clients, closeables)
     doorbell = None
     if spec.cmd_doorbell_name is not None:
         doorbell = Doorbell.attach(spec.cmd_doorbell_name)
@@ -563,3 +678,306 @@ class EngineWorkerHost:
                 "modeled_write_s": t_mw, "modeled_read_s": t_mr,
             },
         }
+
+
+# ---------------------------------------------------------------------------
+# worker supervision (data-plane selfheal)
+# ---------------------------------------------------------------------------
+class EngineWorkerSupervisor:
+    """Keep one engine worker alive across crashes.
+
+    The same supervision loop as ``ShardSupervisor`` — probe thread +
+    ``HeartbeatMonitor`` grace window, synchronous ``check()`` for tests —
+    but healing a WORKER is more than a respawn: the worker's in-flight
+    requests died with its interpreter.  The parent therefore keeps a
+    request LEDGER (``_pending``: every submitted request not yet seen
+    ``done`` by ``apply_results``) and replays it, in submit order, into
+    the respawned worker.  The engines are deterministic virtual-time
+    sims, so the replayed worker converges with a no-fault run on
+    everything the data plane can observe (requests done, free blocks,
+    index contents) — the differential chaos test pins exactly that.
+
+    ``spec_factory`` rebuilds the worker's spec kwargs at respawn time so
+    the new worker attaches the CURRENT ring generations (a metadata
+    shard or the allocator may itself have been respawned while the
+    worker was down).  ``on_worker_death(engine_id)`` runs after the old
+    process is confirmed dead and before the new one starts — the
+    cluster hooks pool-lease reconciliation here so the dead worker's
+    retained blocks are released exactly once.
+    """
+
+    def __init__(
+        self,
+        spec_factory,
+        *,
+        cmd_slots: int = 8,
+        cmd_payload: int = 1 << 16,
+        use_doorbell: bool = True,
+        probe_interval: float = 0.02,
+        grace: float | None = None,
+        max_restarts: int = 16,
+        on_worker_death=None,
+    ):
+        self._spec_factory = spec_factory
+        self._host_kwargs = dict(
+            cmd_slots=cmd_slots, cmd_payload=cmd_payload,
+            use_doorbell=use_doorbell,
+        )
+        self.probe_interval = probe_interval
+        self.grace = 2 * probe_interval if grace is None else grace
+        self.max_restarts = max_restarts
+        self.on_worker_death = on_worker_death
+        self.restarts = 0
+        self.reconciled: list = []  # one reconcile summary per restart
+        self.host = EngineWorkerHost(spec_factory(), **self._host_kwargs)
+        self.engine_id = self.host.engine_id
+        self._retired: list[EngineWorkerHost] = []
+        self._pending: dict[int, Request] = {}
+        self.clock = 0.0
+        self._monitor = HeartbeatMonitor(n_hosts=1, timeout_s=self.grace)
+        self._lock = threading.Lock()
+        self._halt = threading.Event()
+        self._probe: threading.Thread | None = None
+        self._closed = False
+        atexit.register(self.close)
+
+    # -- lifecycle -------------------------------------------------------
+    def start(self) -> "EngineWorkerSupervisor":
+        self.host.start()
+        self._monitor.beat(0)
+        self._halt.clear()
+        self._probe = threading.Thread(
+            target=self._probe_loop, name="worker-supervisor", daemon=True
+        )
+        self._probe.start()
+        return self
+
+    def wait_ready(self, timeout: float = 20.0) -> bool:
+        return self.host.wait_ready(timeout)
+
+    def alive(self) -> bool:
+        return self.host.alive()
+
+    @property
+    def spec(self) -> EngineWorkerSpec:
+        return self.host.spec
+
+    @property
+    def client(self) -> CxlRpcClient:
+        return self.host.client
+
+    @property
+    def n_submitted(self) -> int:
+        return self.host.n_submitted
+
+    @property
+    def n_done(self) -> int:
+        return self.host.n_done
+
+    def kill(self) -> None:
+        """Chaos hook: SIGKILL the current worker process."""
+        self.host.kill()
+
+    def stop(self) -> None:
+        self.host.stop()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        with self._lock:
+            self._closed = True
+        self._halt.set()
+        if self._probe is not None and self._probe.is_alive():
+            self._probe.join(timeout=5)
+        self.host.close()
+        for h in self._retired:
+            h.close()
+        self._retired.clear()
+        try:
+            atexit.unregister(self.close)
+        except Exception:  # noqa: BLE001
+            pass
+
+    # hygiene accounting spans every generation this supervisor created
+    def segment_names(self) -> list[str]:
+        return [h.ring.shm_name for h in (self.host, *self._retired)]
+
+    def doorbell_paths(self) -> list[str]:
+        return [
+            h.doorbell.path
+            for h in (self.host, *self._retired)
+            if h.doorbell is not None
+        ]
+
+    # -- supervision -----------------------------------------------------
+    def _probe_loop(self) -> None:
+        while not self._halt.wait(self.probe_interval):
+            with self._lock:
+                if self._closed:
+                    return
+                if self.host.alive():
+                    self._monitor.beat(0)
+                elif self._monitor.dead_hosts():
+                    self._restart_locked()
+                    self._monitor.beat(0)
+
+    def check(self) -> None:
+        """Synchronous probe (tests drive healing deterministically)."""
+        with self._lock:
+            if self._closed:
+                return
+            if self.host.alive():
+                self._monitor.beat(0)
+            elif self._monitor.dead_hosts():
+                self._restart_locked()
+                self._monitor.beat(0)
+
+    def _heal(self, seen_gen: int) -> None:
+        """Op-failure-driven healing: the failed op IS the detection, so
+        skip the grace window — but only if nobody else healed first."""
+        with self._lock:
+            if self._closed or self.restarts != seen_gen:
+                return
+            if not self.host.alive():
+                self._restart_locked()
+                self._monitor.beat(0)
+
+    def _restart_locked(self) -> None:
+        if self.restarts >= self.max_restarts:
+            return
+        old = self.host
+        old.stop()
+        # the killed worker never saw its stop word; flip it so anything
+        # still holding the retired command ring fails fast
+        if old.ring.ctrl is not None:
+            old.ring.ctrl[CTRL_STOP] = 1
+        self._retired.append(old)
+        if self.on_worker_death is not None:
+            try:
+                self.reconciled.append(self.on_worker_death(self.engine_id))
+            except Exception:  # noqa: BLE001
+                self.reconciled.append(None)  # best-effort: healing proceeds
+        host = EngineWorkerHost(self._spec_factory(), **self._host_kwargs)
+        host.start()
+        self.host = host
+        self.restarts += 1
+        if not host.wait_ready(timeout=20.0):
+            return
+        try:
+            for idx in sorted(self._pending):
+                host.submit_indexed(self._pending[idx], idx)
+        except (ServiceDiedError, TimeoutError):
+            pass  # replay resumes on the next heal — _pending is intact
+
+    # -- engine-shaped surface (heal-and-retry wrappers) -----------------
+    def submit_indexed(self, req: Request, req_idx: int) -> None:
+        # ledger FIRST: a crash mid-submit must still replay this request
+        self._pending[req_idx] = req
+        gen = self.restarts
+        try:
+            self.host.submit_indexed(req, req_idx)
+        except (ServiceDiedError, TimeoutError):
+            self._heal(gen)
+            if self.restarts == gen:
+                raise  # no heal happened (still alive, or restart cap)
+            # else: the restart replayed _pending, this request included
+
+    def submit(self, req: Request, now: float = 0.0) -> None:  # noqa: ARG002
+        self.submit_indexed(req, self.host.n_submitted)
+
+    def load(self) -> float:
+        return float(len(self._pending))
+
+    def post_run(self, until: float | None = None):
+        gen = self.restarts
+        try:
+            slot = self.host.post_run(until)
+        except (ServiceDiedError, TimeoutError, RuntimeError):
+            self._heal(gen)
+            slot = self.host.post_run(until)
+        return (self.restarts, self.host, slot, until)
+
+    def collect_run(self, token, timeout: float = 600.0) -> float:
+        gen, host, slot, until = token
+        try:
+            clock = host.collect_run(slot, timeout)
+        except (ServiceDiedError, TimeoutError, RuntimeError):
+            # the worker died (or was already healed) under this drain —
+            # heal, then RE-RUN on the current generation: its replayed
+            # submits make the rerun cover everything the lost run did.
+            # RuntimeError also covers an in-band RpcError from a LIVE
+            # worker whose metadata ring died mid-drain; by the re-run
+            # it has drained the queued WCMD_ADOPT onto the fresh ring.
+            self._heal(gen)
+            clock = self.host.run(until, timeout)
+        self.clock = clock
+        return clock
+
+    def run(self, until: float | None = None, timeout: float = 600.0) -> float:
+        return self.collect_run(self.post_run(until), timeout)
+
+    def _with_heal(self, op, attempts: int = 3):
+        last: Exception | None = None
+        for _ in range(attempts):
+            gen = self.restarts
+            try:
+                return op(self.host)
+            except (ServiceDiedError, TimeoutError) as e:
+                last = e
+                self._heal(gen)
+        raise last
+
+    def fetch_results(self) -> list[tuple]:
+        return self._with_heal(lambda h: h.fetch_results())
+
+    def apply_results(self, requests: list[Request]) -> None:
+        for idx, ta, tf, td, tout, hit, state in self.fetch_results():
+            r = requests[idx]
+            r.t_admitted, r.t_first_token, r.t_done = ta, tf, td
+            r.tokens_out, r.hit_tokens, r.state = tout, hit, state
+            r.engine_id = self.engine_id
+            if state == "done":
+                self._pending.pop(idx, None)  # acked: out of the ledger
+
+    def stats_dict(self) -> dict:
+        d = self._with_heal(lambda h: h.stats_dict())
+        self.clock = d["clock"]
+        return d
+
+
+class _WorkerCutoverForwarder:
+    """Ring-generation cutover INTO a worker process.
+
+    Duck-typed like a registered RPC client: ``ShardSupervisor`` (and the
+    allocator rolling restart) call ``adopt_ring(ring, ...)`` on every
+    registered client after a respawn; this forwarder translates that
+    into a ``WCMD_ADOPT`` on the worker's command ring so the client
+    INSIDE the worker re-attaches the fresh segment itself.  Only names
+    cross the boundary — the handed producer-side doorbell handle is
+    closed here, the worker attaches its own.
+
+    A dead/mid-restart worker is tolerated (errors swallowed): its
+    respawn spec is built from the CURRENT ring names, so it boots
+    already cut over.
+    """
+
+    def __init__(self, worker, plane: int, shard: int = 0,
+                 timeout: float = 60.0):
+        self.worker = worker  # EngineWorkerHost or EngineWorkerSupervisor
+        self.plane = plane  # 0 = index shard, 1 = pool allocator
+        self.shard = shard
+        self.timeout = timeout
+
+    def adopt_ring(self, ring, liveness=None, doorbell=None) -> None:  # noqa: ARG002
+        db_path = ""
+        if doorbell is not None:
+            db_path = doorbell.path
+            doorbell.close()
+        msg = encode_adopt(
+            self.plane, self.shard, ring.n_slots, ring.payload_bytes,
+            ring.shm_name, db_path,
+        )
+        try:
+            self.worker.client.call(msg, timeout=self.timeout)
+        except Exception:  # noqa: BLE001
+            pass

@@ -64,10 +64,19 @@ class ClusterConfig:
     # HeartbeatMonitor, respawn on a fresh ring, GlobalIndex rebuilt from
     # the per-shard publish journal — while clients retry with bounded
     # backoff and the manager degrades (recompute instead of raise) for
-    # the duration of an outage.
+    # the duration of an outage.  With engine_processes > 0 the DATA
+    # plane heals too: workers run under EngineWorkerSupervisors (lease
+    # reconciliation + un-acked submit replay on respawn) and shard /
+    # allocator ring-generation cutovers reach into the workers over the
+    # command ring (WCMD_ADOPT).
     selfheal: bool = False
     journal_capacity: int = 8192  # records per shard journal
     supervisor_probe_interval: float = 0.02  # crash-detection cadence (s)
+    # warm-snapshot cadence (selfheal only): every interval the
+    # supervisor pages the live shard's LRU-ordered entries + hit/miss
+    # counters; a respawned shard restores recency and counters instead
+    # of falling back to journal insertion order. None = journal-only.
+    snapshot_interval: float | None = None
     # service-child idle backoff (decoupled from the probe interval —
     # restart detection latency is bounded by the supervisor alone)
     service_idle_spin: int = 200  # empty ring passes before any sleep
@@ -119,6 +128,10 @@ class Cluster:
         self._pool_server = None  # allocator service thread (worker mode)
         self._pool_ring = None
         self._pool_doorbell = None
+        self._lease_ledger = None  # per-worker retained-block ledger
+        self._parent_index = None  # parent-side index view (worker mode)
+        self._meta_lock = None  # serializes parent index-client use
+        self.allocator_restarts = 0
         self.index = None
         self.migrator = None
         self.engines: list[EngineInstance] = []
@@ -179,11 +192,6 @@ class Cluster:
                 raise NotImplementedError(
                     "engine workers support policy='round_robin' only "
                     "(load/clock live inside the worker processes)"
-                )
-            if cfg.selfheal:
-                raise NotImplementedError(
-                    "selfheal + engine workers: ring-generation cutover "
-                    "is not plumbed into workers yet (ROADMAP)"
                 )
         if tcfg.enabled:
             spill = tcfg.spill_blocks or 4 * cfg.pool_blocks
@@ -249,6 +257,7 @@ class Cluster:
                         pool_spec,
                         journal_capacity=cfg.journal_capacity,
                         probe_interval=cfg.supervisor_probe_interval,
+                        snapshot_interval=cfg.snapshot_interval,
                         n_slots=cfg.index_rpc_slots,
                         payload_bytes=cfg.index_rpc_payload,
                         idle_spin_passes=cfg.service_idle_spin,
@@ -259,6 +268,7 @@ class Cluster:
                     client = CxlRpcClient(
                         sup.ring, liveness=sup.server.alive,
                         doorbell=sup.client_doorbell(),
+                        slot_range=parent_range,
                     )
                     sup.register_client(client)
                     self._rpc_clients.append(client)
@@ -328,17 +338,123 @@ class Cluster:
             for i in range(cfg.n_engines):
                 self.engines.append(self._make_engine(i))
 
+    def _make_pool_handler(self):
+        """Allocator-ring handler; in selfheal mode it is lease- and
+        journal-aware: pool traffic mirrors into the per-worker lease
+        ledger (keyed by the posting slot's partition) and journal-proxy
+        ops land in the parent-held shard journals."""
+        from repro.core.wire import make_pool_handler
+
+        cfg = self.cfg
+        if not cfg.selfheal:
+            return make_pool_handler(self.pool, max_reply=cfg.index_rpc_payload)
+        parts = self._pool_parts
+
+        def slot_owner(slot: int) -> int | None:
+            for w, (lo, hi) in enumerate(parts):
+                if lo <= slot < hi:
+                    return w
+            return None
+
+        return make_pool_handler(
+            self.pool, max_reply=cfg.index_rpc_payload,
+            ledger=self._lease_ledger, slot_owner=slot_owner,
+            journals=[s.journal for s in self._supervisors],
+        )
+
+    def _worker_spec_kwargs(self, i: int, data_spec: dict) -> dict:
+        """Worker attach spec from the CURRENT ring generations — called
+        at boot AND at every respawn (a metadata shard or the allocator
+        may have moved to a fresh ring while the worker was down)."""
+        cfg = self.cfg
+        if self._supervisors:
+            index_rings = tuple(s.ring.shm_name for s in self._supervisors)
+            index_dbs = tuple(
+                None if s.server.doorbell is None else s.server.doorbell.path
+                for s in self._supervisors
+            )
+        else:
+            index_rings = tuple(s.ring.shm_name for s in self._rpc_servers)
+            index_dbs = tuple(
+                None if s.doorbell is None else s.doorbell.path
+                for s in self._rpc_servers
+            )
+        db = self._pool_doorbell
+        retry = None
+        if cfg.selfheal:
+            from repro.core.rpc import RetryPolicy
+
+            retry = RetryPolicy()
+        return dict(
+            engine_id=i,
+            pool_spec=data_spec,
+            pool_ring_name=self._pool_ring.shm_name,
+            pool_slots=cfg.index_rpc_slots,
+            pool_payload=cfg.index_rpc_payload,
+            pool_doorbell_name=None if db is None else db.path,
+            pool_slot_range=self._pool_parts[i],
+            index_ring_names=index_rings,
+            index_slots=cfg.index_rpc_slots,
+            index_payload=cfg.index_rpc_payload,
+            index_doorbell_names=index_dbs,
+            index_slot_range=self._idx_parts[i + 1],
+            hbm_slots=cfg.hbm_slots_per_engine,
+            transfer_mode=cfg.transfer_mode,
+            super_block_tokens=cfg.super_block_tokens,
+            straggler_cutover=cfg.straggler_cutover,
+            runner=cfg.runner,
+            idle_spin_passes=cfg.service_idle_spin,
+            idle_backoff_s=cfg.service_idle_backoff,
+            selfheal=cfg.selfheal,
+            retry=retry,
+        )
+
+    def _reconcile_worker_leases(self, engine_id: int) -> dict:
+        """on_worker_death hook: release the dead worker's pool leases
+        exactly once, under the epoch-validity rule (published blocks
+        whose alloc-ref transferred to the index are kept)."""
+        with self._meta_lock:
+            return self._lease_ledger.reconcile(
+                engine_id, self.pool,
+                owners_of=self._parent_index.owners_of,
+            )
+
     def _build_workers(self, cfg: ClusterConfig, data_spec: dict) -> None:
         """Boot the allocator service + one engine worker per modeled GPU.
 
         The allocator stays HERE (the pool-owning interpreter) behind its
         own ring: free-stack mutation keeps exactly one owner while the
-        payload bytes live in the shared segment every worker maps."""
+        payload bytes live in the shared segment every worker maps.
+
+        selfheal mode stacks three recovery layers on top:
+          * each worker runs under an ``EngineWorkerSupervisor`` —
+            crash detection, lease reconciliation (the parent-held
+            ``WorkerLeaseLedger``), respawn on a fresh command ring and
+            replay of the un-acked request ledger;
+          * each metadata ``ShardSupervisor`` gets a cutover FORWARDER
+            per worker, so a shard respawn ADOPTs the worker's in-process
+            client onto the fresh ring (after the parent's own client);
+          * ``restart_allocator()`` drills the allocator-outage path with
+            the same forwarder machinery (plane 1)."""
+        import threading
+
         from repro.core.rpc import CxlRpcServer, ShmRing
         from repro.core.shm import Doorbell
-        from repro.core.wire import make_pool_handler
-        from repro.serving.engineproc import EngineWorkerHost, partition_slots
+        from repro.serving.engineproc import (
+            EngineWorkerHost,
+            EngineWorkerSupervisor,
+            _WorkerCutoverForwarder,
+            partition_slots,
+        )
 
+        n = cfg.engine_processes
+        self._idx_parts = partition_slots(cfg.index_rpc_slots, n + 1)
+        self._pool_parts = partition_slots(cfg.index_rpc_slots, n)
+        if cfg.selfheal:
+            from repro.core.shmpool import WorkerLeaseLedger
+
+            self._lease_ledger = WorkerLeaseLedger()
+            self._meta_lock = threading.Lock()
         ring = ShmRing.create_shared(cfg.index_rpc_slots, cfg.index_rpc_payload)
         self._pool_ring = ring
         self._shm_names.append(ring.shm_name)
@@ -346,53 +462,95 @@ class Cluster:
         self._pool_doorbell = db
         self._pool_server = CxlRpcServer(
             ring,
-            make_pool_handler(self.pool, max_reply=cfg.index_rpc_payload),
+            self._make_pool_handler(),
             doorbell=db,
             idle_spin_passes=cfg.service_idle_spin,
             idle_backoff_s=cfg.service_idle_backoff,
         ).start()
-        n = cfg.engine_processes
-        idx_parts = partition_slots(cfg.index_rpc_slots, n + 1)
-        pool_parts = partition_slots(cfg.index_rpc_slots, n)
-        index_rings = tuple(s.ring.shm_name for s in self._rpc_servers)
-        index_dbs = tuple(
-            None if s.doorbell is None else s.doorbell.path
-            for s in self._rpc_servers
-        )
+        if cfg.selfheal:
+            # parent-side index view for the reconcile owners_of probe
+            # (parent slot partition; shared with _index_stats, hence
+            # the _meta_lock)
+            self._parent_index = self._index_view()
         for i in range(n):
-            host = EngineWorkerHost(
-                dict(
-                    engine_id=i,
-                    pool_spec=data_spec,
-                    pool_ring_name=ring.shm_name,
-                    pool_slots=cfg.index_rpc_slots,
-                    pool_payload=cfg.index_rpc_payload,
-                    pool_doorbell_name=None if db is None else db.path,
-                    pool_slot_range=pool_parts[i],
-                    index_ring_names=index_rings,
-                    index_slots=cfg.index_rpc_slots,
-                    index_payload=cfg.index_rpc_payload,
-                    index_doorbell_names=index_dbs,
-                    index_slot_range=idx_parts[i + 1],
-                    hbm_slots=cfg.hbm_slots_per_engine,
-                    transfer_mode=cfg.transfer_mode,
-                    super_block_tokens=cfg.super_block_tokens,
-                    straggler_cutover=cfg.straggler_cutover,
-                    runner=cfg.runner,
-                    idle_spin_passes=cfg.service_idle_spin,
-                    idle_backoff_s=cfg.service_idle_backoff,
-                ),
-                use_doorbell=cfg.service_doorbell,
-            ).start()
-            self.workers.append(host)
-            self._shm_names.append(host.ring.shm_name)
-        for host in self.workers:
-            if not host.wait_ready(30):
+            if cfg.selfheal:
+                worker = EngineWorkerSupervisor(
+                    lambda i=i: self._worker_spec_kwargs(i, data_spec),
+                    use_doorbell=cfg.service_doorbell,
+                    probe_interval=cfg.supervisor_probe_interval,
+                    on_worker_death=self._reconcile_worker_leases,
+                ).start()
+            else:
+                worker = EngineWorkerHost(
+                    self._worker_spec_kwargs(i, data_spec),
+                    use_doorbell=cfg.service_doorbell,
+                ).start()
+                self._shm_names.append(worker.ring.shm_name)
+            self.workers.append(worker)
+        for worker in self.workers:
+            if not worker.wait_ready(30):
                 raise RuntimeError(
-                    f"engine worker {host.engine_id} failed to boot"
+                    f"engine worker {worker.engine_id} failed to boot"
                 )
+        if cfg.selfheal:
+            # shard-respawn cutover reaches INTO each worker: forwarders
+            # translate adopt_ring into WCMD_ADOPT on the command ring.
+            # Registered after the parent's own client so the parent is
+            # already on the fresh ring when the workers cut over.
+            for s, sup in enumerate(self._supervisors):
+                for worker in self.workers:
+                    sup.register_client(
+                        _WorkerCutoverForwarder(worker, plane=0, shard=s)
+                    )
         # scheduler surface: the hosts ARE the cluster's engines
         self.engines = self.workers
+
+    def restart_allocator(self) -> None:
+        """Allocator-outage recovery: rolling restart of the allocator
+        ring.  A fresh ring + service boot FIRST, every worker ADOPTs
+        onto it, then the old generation is stopped and retired — the
+        pool's free-stack state never leaves this interpreter, so no
+        rebuild is needed; only the transport moves."""
+        from repro.core.rpc import CTRL_STOP, CxlRpcServer, ShmRing
+        from repro.core.shm import Doorbell
+        from repro.serving.engineproc import _WorkerCutoverForwarder
+
+        cfg = self.cfg
+        if self._pool_ring is None:
+            raise RuntimeError("no allocator service to restart")
+        ring = ShmRing.create_shared(cfg.index_rpc_slots, cfg.index_rpc_payload)
+        self._shm_names.append(ring.shm_name)
+        db = Doorbell.create() if cfg.service_doorbell else None
+        server = CxlRpcServer(
+            ring,
+            self._make_pool_handler(),
+            doorbell=db,
+            idle_spin_passes=cfg.service_idle_spin,
+            idle_backoff_s=cfg.service_idle_backoff,
+        ).start()
+        old_server, old_ring = self._pool_server, self._pool_ring
+        old_db = self._pool_doorbell
+        # publish the new generation before the cutover so any worker
+        # respawn that races this restart attaches the fresh ring
+        self._pool_server, self._pool_ring, self._pool_doorbell = (
+            server, ring, db
+        )
+        for worker in self.workers:
+            fwd = _WorkerCutoverForwarder(worker, plane=1)
+            fwd.adopt_ring(
+                ring,
+                doorbell=None if db is None else Doorbell.attach(db.path),
+            )
+        self.allocator_restarts += 1
+        if old_server is not None:
+            old_server.stop()
+        if old_ring.ctrl is not None:
+            # any client that missed the cutover fails fast (CTRL_STOP
+            # liveness) instead of timing out against a dead ring
+            old_ring.ctrl[CTRL_STOP] = 1
+        old_ring.close()  # owner: unlinks (attached views stay mapped)
+        if old_db is not None:
+            old_db.close()
 
     def _make_index(self):
         if self.cfg.index_shards > 1:
@@ -438,6 +596,12 @@ class Cluster:
         when the plane lives in service processes (same dict shape)."""
         if self.index is not None:
             return self.index.stats()
+        if self._parent_index is not None:
+            # worker+selfheal mode: one parent view, shared with the
+            # lease-reconcile probe (which may run on a supervisor
+            # thread) — serialize slot use
+            with self._meta_lock:
+                return self._parent_index.stats()
         return self._index_view().stats()
 
     def shm_segment_names(self) -> list[str]:
@@ -449,6 +613,9 @@ class Cluster:
         names = list(self._shm_names)
         for sup in self._supervisors:
             names.extend(sup.segment_names())
+        for w in self.workers:
+            if hasattr(w, "segment_names"):  # supervised: every generation
+                names.extend(w.segment_names())
         return names
 
     def doorbell_paths(self) -> list[str]:
@@ -464,7 +631,9 @@ class Cluster:
         if self._pool_doorbell is not None:
             paths.append(self._pool_doorbell.path)
         for w in self.workers:
-            if w.doorbell is not None:
+            if hasattr(w, "doorbell_paths"):  # supervised: every generation
+                paths.extend(w.doorbell_paths())
+            elif w.doorbell is not None:
                 paths.append(w.doorbell.path)
         return paths
 
@@ -609,6 +778,17 @@ class Cluster:
         stats["pool_free"] = self.pool.free_blocks()
         stats["shard_occupancy_max"] = max(self.pool.shard_occupancy() or [0])
         if self._supervisors:
+            if self.workers:
+                # the managers live inside the worker processes: page
+                # their counters back over the command ring
+                mgr_degraded = sum(
+                    w.stats_dict()["manager"]["degraded_ops"]
+                    for w in self.workers
+                )
+            else:
+                mgr_degraded = sum(
+                    e.manager.stats.degraded_ops for e in self.engines
+                )
             stats["selfheal"] = {
                 "restarts": sum(s.restarts for s in self._supervisors),
                 "rpc_retries": sum(
@@ -617,10 +797,21 @@ class Cluster:
                 "rpc_degraded_ops": sum(
                     c.stats.degraded_ops for c in self._rpc_clients
                 ),
-                "manager_degraded_ops": sum(
-                    e.manager.stats.degraded_ops for e in self.engines
-                ),
+                "manager_degraded_ops": mgr_degraded,
             }
+            if self.workers:
+                stats["selfheal"]["worker_restarts"] = sum(
+                    getattr(w, "restarts", 0) for w in self.workers
+                )
+                stats["selfheal"]["allocator_restarts"] = (
+                    self.allocator_restarts
+                )
+                stats["selfheal"]["leases_released"] = sum(
+                    r["released"]
+                    for w in self.workers
+                    for r in getattr(w, "reconciled", [])
+                    if r is not None
+                )
         if self.migrator is not None:
             stats["tiering"] = self.pool.stats_dict()
             stats["tiering"]["migrator_steps"] = self.migrator.steps

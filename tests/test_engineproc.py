@@ -412,13 +412,69 @@ def test_data_plane_and_worker_config_gates():
                 index_transport="process", policy="cache_aware"),
             LAYOUT, backing="numpy",
         )
-    with pytest.raises(NotImplementedError, match="selfheal"):
-        Cluster(
-            cfg(engine_processes=1, data_plane="shared", index_rpc=True,
-                index_transport="process", policy="round_robin",
-                selfheal=True),
-            LAYOUT, backing="numpy",
+
+
+def test_selfheal_plus_workers_builds_and_tears_down_cleanly():
+    """The combined config — supervised metadata shards AND supervised
+    engine workers over the shared data plane — is legal (the PR-7 gate
+    is gone), serves traffic, and leaks neither segments nor FIFOs."""
+    cluster = Cluster(
+        ClusterConfig(
+            n_engines=2, engine_processes=2, policy="round_robin",
+            data_plane="shared", index_rpc=True, index_transport="process",
+            selfheal=True, pool_blocks=256, hbm_slots_per_engine=32,
+            journal_capacity=512,
+        ),
+        LAYOUT, backing="numpy",
+    )
+    names = cluster.shm_segment_names()
+    fifos = cluster.doorbell_paths()
+    with cluster:
+        from repro.serving.engineproc import EngineWorkerSupervisor
+
+        assert all(
+            isinstance(w, EngineWorkerSupervisor) for w in cluster.workers
         )
+        for i in range(4):
+            cluster.dispatch(Request(
+                req_id=f"r{i}", tokens=list(range(24)), n_output=4,
+                arrival=0.0,
+            ))
+        stats = cluster.run()
+        assert stats["n_done"] == 4
+        assert all(r.state == "done" for r in cluster.requests)
+        assert stats["selfheal"]["worker_restarts"] == 0
+    assert names and fifos
+    assert all(_segment_gone(n) for n in names)
+    assert all(not os.path.exists(p) for p in fifos)
+
+
+def test_parked_worker_wakes_on_stop_without_a_doorbell_ring():
+    """A worker parked on its command Doorbell whose POSTER dies can
+    never be rung awake — the park must be a bounded poll (the
+    ``doorbell_wait_s`` ceiling), so flipping CTRL_STOP alone, with no
+    FIFO write, still gets the worker to exit cleanly and promptly."""
+    cluster = Cluster(
+        ClusterConfig(
+            n_engines=1, engine_processes=1, policy="round_robin",
+            data_plane="shared", index_rpc=True, index_transport="process",
+            pool_blocks=256, hbm_slots_per_engine=32,
+        ),
+        LAYOUT, backing="numpy",
+    )
+    with cluster:
+        host = cluster.workers[0]
+        assert host.spec.doorbell_wait_s <= 0.1  # the wake bound's source
+        time.sleep(0.2)  # idle long enough to be parked on the FIFO
+        assert host.alive()
+        from repro.core.rpc import CTRL_STOP
+
+        t0 = time.perf_counter()
+        host.ring.ctrl[CTRL_STOP] = 1  # ... with NO doorbell write
+        host.proc.join(timeout=5.0)
+        woke = time.perf_counter() - t0
+        assert not host.alive(), "worker never woke from a dead doorbell"
+        assert woke < 2.0, f"wake took {woke:.2f}s — unbounded park?"
 
 
 # ---------------------------------------------------------------------------
@@ -528,13 +584,14 @@ def test_fault_injector_intercepts_pipelined_rounds():
 
 
 def test_exp14_procengine_smoke_under_hard_timeout():
-    """Runs the exp14 parity + sweep harness (tiny config) in a
+    """Runs the exp14 parity + sweep + chaos harness (tiny config) in a
     subprocess with a hard kill-timeout: a hung worker or service child
     fails this test in bounded time — the guard the CI smoke relies on."""
     code = (
         "from benchmarks.exp14_procengine import run\n"
         "rows = run(fast=True)\n"
         "assert any('bit_identical=True' in r[2] for r in rows), rows\n"
+        "assert any('restarts=1' in r[2] for r in rows), rows\n"
         "print('SMOKE-PASS')\n"
     )
     env = dict(os.environ)
@@ -543,7 +600,9 @@ def test_exp14_procengine_smoke_under_hard_timeout():
         [sys.executable, "-c", code],
         capture_output=True, text=True, env=env,
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        timeout=240,  # HARD guard: hung child == fast failure
+        timeout=300,  # HARD guard: hung child == fast failure
+        # (raised from 240: run() now also drives the chaos drill —
+        # worker kill + allocator rolling restart)
     )
     assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-3000:])
     assert "SMOKE-PASS" in out.stdout

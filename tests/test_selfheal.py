@@ -324,6 +324,52 @@ def test_supervisor_restarts_and_replays_journal():
         assert _segment_gone(n), n
 
 
+def test_warm_snapshot_restores_eviction_order_and_counters():
+    """Journal rebuild alone replays in INSERTION order — recency and
+    hit/miss counters die with the shard.  With a warm snapshot captured
+    pre-crash, the respawned shard restores the snapshot's LRU order
+    (so post-restart eviction picks the true LRU victim, not the oldest
+    insert) and re-seeds the cumulative counters."""
+    pool = BelugaPool(LAYOUT, n_blocks=256, n_shards=4, backing="meta")
+    spec = pool.share_meta()
+    sup = ShardSupervisor(
+        spec, journal_capacity=256, probe_interval=0.01,
+        n_slots=8, payload_bytes=1 << 14,
+    ).start()
+    try:
+        assert sup.wait_ready(10)
+        client = CxlRpcClient(sup.ring, liveness=sup.server.alive)
+        sup.register_client(client)
+        proxy = wire.RpcIndexClient(
+            client, block_tokens=16, journal=sup.journal, retry=FAST_RETRY,
+            on_freed=pool.release,
+        )
+        keys = [_key(9, i) for i in range(6)]
+        blocks = pool.allocate(6)
+        proxy.publish_many(keys, blocks, pool.write_blocks(blocks), 16)
+        # re-touch the FIRST half: recency order now differs from
+        # insertion order (3,4,5 are the LRU end, 0,1,2 the MRU end)
+        assert len(proxy.match_prefix_keys(keys[:3])) == 3
+        hits_before = proxy.stats()["hits"]
+        assert hits_before >= 3
+        assert sup.capture_snapshot()
+        sup.kill()
+        # the next op rides retry through respawn + journal rebuild +
+        # warm-snapshot restore
+        snap = proxy.snapshot_all()
+        assert sup.restarts == 1
+        assert [k for k, *_ in snap] == keys[3:] + keys[:3]
+        # counters survived the restart (OP_SEED_STATS)
+        assert proxy.stats()["hits"] == hits_before
+        # and the next eviction picks the true LRU victim — the entry
+        # insertion order would have spared
+        assert proxy.evict_lru(1) == [blocks[3]]
+        assert pool.free_blocks() == 256 - 5
+    finally:
+        sup.close()
+        pool.unshare_meta()
+
+
 def test_detection_latency_decoupled_from_idle_backoff():
     """The service child may idle-sleep arbitrarily long (satellite:
     configurable backoff ceiling) — crash DETECTION is the supervisor's
