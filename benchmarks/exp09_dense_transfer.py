@@ -11,7 +11,6 @@ the one-launch property (requests_issued == 1 per batch).
 
 import dataclasses
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.registry import get_config

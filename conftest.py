@@ -5,6 +5,11 @@ interpreter (no ``pip install -r requirements.txt``) that made COLLECTION
 fail for four test files.  When hypothesis is missing we install a stub
 into ``sys.modules`` whose ``@given`` marks the test as skipped — example
 tests still run, property tests skip cleanly.
+
+With ``BELUGA_SANITIZE=1`` (the nightly sanitizer job) a session-scoped
+guard additionally fails the run if the lock-order recorder in
+``repro.core.locks`` observed any acquisition-order inversion, and dumps
+the recorded graph for the post-run ``--check-lock-log`` gate.
 """
 
 from __future__ import annotations
@@ -13,10 +18,33 @@ import os
 import sys
 import types
 
-# make `import repro` work without PYTHONPATH=src
-_SRC = os.path.join(os.path.dirname(__file__), "src")
-if _SRC not in sys.path:
-    sys.path.insert(0, _SRC)
+import pytest
+
+_ROOT = os.path.dirname(__file__)
+# make `import repro` work without PYTHONPATH=src, and `import
+# tools.beluga_lint` work regardless of invocation directory
+_SRC = os.path.join(_ROOT, "src")
+for _p in (_SRC, _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _beluga_sanitize_guard():
+    """Under BELUGA_SANITIZE=1, a recorded lock-order inversion anywhere
+    in the session is a hard failure (the runtime half of beluga-lint's
+    lock-discipline pass)."""
+    yield
+    if os.environ.get("BELUGA_SANITIZE", "") in ("", "0"):
+        return
+    from repro.core import locks
+
+    log_dir = os.environ.get("BELUGA_SANITIZE_LOG", "")
+    if log_dir:
+        os.makedirs(log_dir, exist_ok=True)
+        locks.dump(os.path.join(log_dir, f"lock_order.{os.getpid()}.json"))
+    vs = locks.violations()
+    assert not vs, f"lock-order inversions recorded this session: {vs}"
 
 try:
     import hypothesis  # noqa: F401

@@ -30,6 +30,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.core import diag
+
 
 def _flatten_with_paths(tree: Any):
     # jax.tree.flatten_with_path only exists in jax >= 0.4.38; go through
@@ -202,10 +204,9 @@ def _from_savable(arr: np.ndarray, target_dtype) -> np.ndarray:
 
 def _np_dtype(leaf) -> np.dtype:
     try:
-        import jax.numpy as jnp
-
         return np.dtype(leaf.dtype)
-    except Exception:
+    except Exception:  # noqa: BLE001
+        diag.note("checkpointer.np_dtype_fallback")
         return np.asarray(leaf).dtype
 
 

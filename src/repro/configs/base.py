@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Any
 
 
 @dataclass(frozen=True)

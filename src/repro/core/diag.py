@@ -1,0 +1,41 @@
+"""Lightweight diagnostics counters for intentionally-tolerated failures.
+
+The exception-hygiene lint pass (``tools/beluga_lint``) fails any broad
+``except Exception`` handler that neither re-raises, logs, nor records
+the event.  Teardown and best-effort paths (idempotent double-close,
+atexit hygiene, dead-worker forwarding) must stay silent and cheap — but
+not *invisible*: they call ``note(event)`` here, which bumps a named
+counter that tests and operators can read back via ``counters()``.
+
+Counters, not log records, on purpose: several of these sites run inside
+``atexit`` during interpreter shutdown, where the logging machinery may
+already be torn down; a dict increment can never fail there.  The
+counters are process-local (each engine worker / shard service keeps its
+own) and are NOT thread-exact under contention — a lost increment on two
+racing teardowns is acceptable for a diagnostic, a crash is not.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+_counters: Counter[str] = Counter()
+
+
+def note(event: str) -> None:
+    """Record one occurrence of a tolerated failure (never raises)."""
+    _counters[event] += 1
+
+
+def counters() -> dict[str, int]:
+    """Snapshot of every recorded event count."""
+    return dict(_counters)
+
+
+def count(event: str) -> int:
+    return _counters.get(event, 0)
+
+
+def reset() -> None:
+    """Test hook: clear all counters."""
+    _counters.clear()

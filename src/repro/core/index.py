@@ -44,13 +44,13 @@ Hashing cost notes (the other half of the request hot path):
 from __future__ import annotations
 
 import hashlib
-import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.locks import make_lock
 from repro.core.pool import BelugaPool
 
 ROOT = b"ROOT"
@@ -148,7 +148,7 @@ class GlobalIndex:
         self.pool = pool
         self.block_tokens = pool.layout.block_tokens
         self.hasher = PrefixHasher(self.block_tokens)
-        self._lock = threading.Lock()
+        self._lock = make_lock("index.GlobalIndex._lock")
         # key -> row in the flat arrays below
         self._rows: dict[bytes, int] = {}
         cap = 1 << 10

@@ -1,0 +1,172 @@
+"""Declared locks + the ``BELUGA_SANITIZE=1`` lock-order sanitizer.
+
+Every lock in the concurrency surface of this repo is created through
+``make_lock(name, blocking_ok=...)`` instead of a bare
+``threading.Lock()`` — enforced by the lock-discipline pass in
+``tools/beluga_lint``.  The declaration buys two things:
+
+  * a stable cross-process NAME for each lock ("class role", not object
+    identity: every ``CxlRpcClient`` instance's slot lock is the same
+    node in the order graph), which is what both the static
+    lock-acquisition graph and the runtime recorder key on;
+  * a machine-readable ``blocking_ok`` annotation: supervision locks
+    whose entire purpose is serializing a blocking restart section
+    (probe/stop/join/replay under ``ShardSupervisor._lock``) declare it,
+    and the static pass then permits blocking calls under them — a
+    blocking call under any *undeclared* lock is a lint failure.
+
+In normal runs ``make_lock`` returns a plain ``threading.Lock`` — zero
+overhead beyond one call at construction.  With ``BELUGA_SANITIZE=1`` in
+the environment it returns a ``SanitizedLock`` that records every
+ACTUAL nested acquisition (lock A held while acquiring lock B → edge
+A→B) into a process-global edge set, flagging an inversion (both A→B
+and B→A observed) as a violation the test session fails on.  Edges are
+keyed by declared name, so orders observed in different processes and
+different object instances compose into one graph.
+
+Set ``BELUGA_SANITIZE_LOG=<dir>`` to have every participating process
+dump its recorded edges to ``<dir>/lock_order.<pid>.json`` at interpreter
+exit; ``python -m tools.beluga_lint src --check-lock-log <dir>`` then
+asserts the union of runtime edges is consistent (acyclic) with the
+statically derived graph.
+"""
+
+from __future__ import annotations
+
+import atexit
+import json
+import os
+import threading
+
+SANITIZE = os.environ.get("BELUGA_SANITIZE", "") not in ("", "0")
+
+# process-global recorder state (guarded by a raw lock, which is itself
+# exempt from sanitizing — it can never nest with a sanitized lock)
+_registry_lock = threading.Lock()
+_edges: set[tuple[str, str]] = set()
+_violations: list[dict] = []
+_declared: dict[str, bool] = {}  # name -> blocking_ok
+_held = threading.local()  # per-thread stack of held lock names
+
+
+def make_lock(name: str, *, blocking_ok: bool = False):
+    """Create a named lock (sanitized when ``BELUGA_SANITIZE=1``).
+
+    ``name`` should be the stable role of the lock, conventionally
+    ``"<module>.<Class>.<attr>"``.  ``blocking_ok=True`` declares that
+    blocking calls (joins, RPC round-trips, sleeps) under this lock are
+    intentional — the static lint pass reads the declaration straight
+    out of this call's AST.
+    """
+    with _registry_lock:
+        _declared.setdefault(name, blocking_ok)
+    if not SANITIZE:
+        return threading.Lock()
+    return SanitizedLock(name)
+
+
+class SanitizedLock:
+    """``threading.Lock`` wrapper that records acquisition order."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+
+    def _stack(self) -> list[str]:
+        st = getattr(_held, "stack", None)
+        if st is None:
+            st = _held.stack = []
+        return st
+
+    def _record(self) -> None:
+        st = self._stack()
+        if st:
+            outer = st[-1]
+            if outer != self.name:
+                edge = (outer, self.name)
+                with _registry_lock:
+                    if (self.name, outer) in _edges and edge not in _edges:
+                        _violations.append({
+                            "edge": list(edge),
+                            "conflicts_with": [self.name, outer],
+                            "thread": threading.current_thread().name,
+                        })
+                    _edges.add(edge)
+        st.append(self.name)
+
+    # -- threading.Lock surface -----------------------------------------
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        ok = self._lock.acquire(blocking, timeout)
+        if ok:
+            self._record()
+        return ok
+
+    def release(self) -> None:
+        st = self._stack()
+        # released out of acquisition order is legal for Lock: drop the
+        # most recent matching frame
+        for i in range(len(st) - 1, -1, -1):
+            if st[i] == self.name:
+                del st[i]
+                break
+        self._lock.release()
+
+    def locked(self) -> bool:
+        return self._lock.locked()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+# -- introspection (tests, conftest session hook, nightly artifact) ------
+def recorded_edges() -> list[tuple[str, str]]:
+    with _registry_lock:
+        return sorted(_edges)
+
+
+def violations() -> list[dict]:
+    with _registry_lock:
+        return list(_violations)
+
+
+def declared_locks() -> dict[str, bool]:
+    with _registry_lock:
+        return dict(_declared)
+
+
+def reset() -> None:
+    """Test hook: clear recorded edges and violations (declarations stay)."""
+    with _registry_lock:
+        _edges.clear()
+        _violations.clear()
+
+
+def dump(path: str) -> None:
+    """Write this process's recorded graph as JSON (one file per pid)."""
+    with _registry_lock:
+        payload = {
+            "pid": os.getpid(),
+            "edges": sorted(list(e) for e in _edges),
+            "violations": list(_violations),
+            "declared": dict(_declared),
+        }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+
+
+def _autodump() -> None:
+    log_dir = os.environ.get("BELUGA_SANITIZE_LOG", "")
+    if not log_dir:
+        return
+    try:
+        os.makedirs(log_dir, exist_ok=True)
+        dump(os.path.join(log_dir, f"lock_order.{os.getpid()}.json"))
+    except OSError:
+        pass  # best-effort artifact: a read-only dir must not fail exit
+
+
+if SANITIZE:
+    atexit.register(_autodump)

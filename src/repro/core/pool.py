@@ -30,13 +30,14 @@ epochs — see ``repro.core.coherence``.
 
 from __future__ import annotations
 
-import threading
 from collections import deque
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import diag
+from repro.core.locks import make_lock
 
 
 @dataclass(frozen=True)
@@ -98,7 +99,7 @@ class BelugaPool:
         self.n_shards = n_shards
         self.interleave = interleave
         self.backing = backing
-        self._lock = threading.Lock()
+        self._lock = make_lock("pool.BelugaPool._lock")
         # vectorized per-block metadata (re-homed into a named shared
         # segment by ``share_meta`` for cross-process metadata services)
         self.epochs = np.zeros(n_blocks, np.int64)
@@ -212,7 +213,7 @@ class BelugaPool:
         try:
             atexit.unregister(self.unshare_meta)
         except Exception:  # noqa: BLE001
-            pass
+            diag.note("pool.unshare_meta.unregister_failed")
 
     # ------------------------------------------------------------------
     # Cross-process DATA export (the paper's headline: the block payloads
@@ -286,7 +287,7 @@ class BelugaPool:
         try:
             atexit.unregister(self.unshare_data)
         except Exception:  # noqa: BLE001
-            pass
+            diag.note("pool.unshare_data.unregister_failed")
 
     # ------------------------------------------------------------------
     def shard_of(self, block_id: int) -> int:

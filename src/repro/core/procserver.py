@@ -37,6 +37,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import diag
+from repro.core.locks import make_lock
 from repro.core.pool import PoolLayout
 from repro.core.rpc import (
     CTRL_BUSY_NS,
@@ -335,7 +337,7 @@ class ProcessRpcServer:
             try:
                 atexit.unregister(self.close)
             except Exception:  # noqa: BLE001
-                pass
+                diag.note("procserver.server_close.unregister_failed")
 
 
 class ShardSupervisor:
@@ -398,7 +400,13 @@ class ShardSupervisor:
         self._retired: list[ProcessRpcServer] = []
         self._clients: list = []  # CxlRpcClient-shaped: has adopt_ring
         self._monitor = HeartbeatMonitor(n_hosts=1, timeout_s=self.grace)
-        self._lock = threading.Lock()
+        # blocking_ok: this lock EXISTS to serialize the blocking restart
+        # section (stop/join the corpse, boot + wait_ready the successor,
+        # warm-restore over RPC) against concurrent check()/close() —
+        # see the class docstring; data-plane traffic never takes it
+        self._lock = make_lock(
+            "procserver.ShardSupervisor._lock", blocking_ok=True
+        )
         self._stop = threading.Event()
         self._probe: threading.Thread | None = None
         self._closed = False
@@ -513,6 +521,7 @@ class ShardSupervisor:
                 client.call(wire.encode_stats())
             )
         except Exception:  # noqa: BLE001 — a failed capture keeps the old one
+            diag.note("procserver.capture_snapshot.failed")
             return False
         self._snapshot = (entries, hits, misses)
         return True
@@ -556,7 +565,7 @@ class ShardSupervisor:
                 ))
             client.call(wire.encode_seed_stats(hits, misses))
         except Exception:  # noqa: BLE001 — warmth is optional, healing is not
-            pass
+            diag.note("procserver.apply_snapshot.failed")
 
     def _restart_locked(self) -> None:
         if self.restarts >= self.max_restarts:
@@ -612,4 +621,4 @@ class ShardSupervisor:
         try:
             atexit.unregister(self.close)
         except Exception:  # noqa: BLE001
-            pass
+            diag.note("procserver.supervisor_close.unregister_failed")

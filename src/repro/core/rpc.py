@@ -58,6 +58,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.fabric import DEFAULT, FabricConstants
+from repro.core.locks import make_lock
 from repro.core.shm import attach_segment, close_segment, create_segment
 
 IDLE, REQ_READY, RESP_READY, RESP_ERROR = 0, 1, 2, 3
@@ -410,7 +411,7 @@ class CxlRpcClient:
             raise ValueError(f"slot_range {self._slot_range} outside ring "
                              f"of {ring.n_slots} slots")
         self.stats = RpcStats()
-        self._slot_lock = threading.Lock()
+        self._slot_lock = make_lock("rpc.CxlRpcClient._slot_lock")
         self._free = list(range(lo, hi))
         # slots whose caller timed out while the server still owed a
         # response; unsafe to reuse until the server flips them

@@ -20,11 +20,11 @@ history.
 from __future__ import annotations
 
 import hashlib
-import threading
 from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.locks import make_lock
 from repro.core.pool import OutOfPoolMemory, PoolLayout
 
 
@@ -52,7 +52,7 @@ class SeedPool:
         self.n_shards = n_shards
         self.interleave = interleave
         self.backing = backing
-        self._lock = threading.Lock()
+        self._lock = make_lock("seed_baseline.SeedPool._lock")
         self._free: list[int] = list(range(n_blocks))
         self.meta: list[SeedBlockMeta] = [SeedBlockMeta() for _ in range(n_blocks)]
         self.alloc_count = 0

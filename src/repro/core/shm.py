@@ -27,8 +27,10 @@ import secrets
 import select
 import struct
 import tempfile
-import threading
 from multiprocessing import shared_memory
+
+from repro.core import diag
+from repro.core.locks import make_lock
 
 
 def create_segment(size: int) -> shared_memory.SharedMemory:
@@ -79,14 +81,14 @@ def close_segment(seg: shared_memory.SharedMemory | None, *, unlink: bool) -> No
         except BufferError:
             pass
     except Exception:  # noqa: BLE001
-        pass
+        diag.note("shm.close_segment.close_failed")
     if unlink:
         try:
             seg.unlink()
         except FileNotFoundError:
             pass
         except Exception:  # noqa: BLE001
-            pass
+            diag.note("shm.close_segment.unlink_failed")
 
 
 # ---------------------------------------------------------------------------
@@ -306,7 +308,7 @@ class ShardJournal:
         self._owner = _owner
         self.capacity = capacity
         self.name = seg.name
-        self._lock = threading.Lock()
+        self._lock = make_lock("shm.ShardJournal._lock")
 
     @classmethod
     def segment_size(cls, capacity: int) -> int:

@@ -30,10 +30,9 @@ the committed-flag check backstops them.
 
 from __future__ import annotations
 
-import threading
-
 import numpy as np
 
+from repro.core.locks import make_lock
 from repro.core.pool import PoolLayout
 from repro.core.shm import attach_segment, close_segment
 
@@ -171,7 +170,7 @@ class WorkerLeaseLedger:
     reconcile (parent main thread)."""
 
     def __init__(self):
-        self.mutex = threading.Lock()
+        self.mutex = make_lock("shmpool.WorkerLeaseLedger.mutex")
         # worker -> {block_id: [ref_count, grant_epoch]}
         self._leases: dict[int, dict[int, list[int]]] = {}
 
@@ -222,20 +221,49 @@ class WorkerLeaseLedger:
         with self.mutex:
             self._leases.pop(worker, None)
 
-    def reconcile(self, worker: int, pool, owners_of=None) -> dict:
+    def reconcile(self, worker: int, pool: "BelugaPool",  # noqa: F821
+                  owners_of=None) -> dict:
         """Release a dead worker's leases exactly once (epoch-validated).
 
         The worker's entry is popped up front, so a second call (or a
         concurrent handler append from a not-actually-dead worker) finds
         nothing — exactly-once by construction.  Returns a summary:
-        refs released / skipped and the block ids involved."""
+        refs released / skipped and the block ids involved.
+
+        The ``owners_of`` probe is an RPC round-trip to the metadata
+        plane, so it runs OUTSIDE ``mutex`` — holding the allocator
+        serialization lock across a remote call would stall every live
+        worker's ALLOC/RELEASE for the probe's full latency (and a dead
+        index shard's full timeout).  Dropping the mutex around the
+        probe keeps the leak-not-corrupt bias: only the dead worker
+        could publish its own allocations, so ownership observed by the
+        probe can go stale in exactly one direction (an eviction/remap
+        lands after the probe), and every lease is RE-classified against
+        fresh pool state under the mutex before anything is released —
+        a stale probe answer can at worst keep (leak) a block, never
+        free one under a new owner."""
         with self.mutex:
             held = self._leases.pop(worker, {})
             if not held:
                 return {"released": 0, "skipped": 0, "blocks": [], "kept": []}
+            # probe candidates only (no releases yet): blocks the worker
+            # wrote exactly once — published-or-leaked is undecidable
+            # without asking the index
+            eps, committed, refcounts = pool.epochs, pool.committed, pool.refcounts
+            probe_ids = [
+                b for b, (_, grant) in held.items()
+                if int(refcounts[b]) > 0
+                and int(eps[b]) == grant + 1
+                and bool(committed[b])
+            ]
+        probe_set = set(probe_ids)
+        owned: set | None = None
+        if probe_ids and owners_of is not None:
+            keys, ids, owner_eps = owners_of(probe_ids)
+            owned = set(zip(ids, owner_eps))
+        with self.mutex:
             eps, committed, refcounts = pool.epochs, pool.committed, pool.refcounts
             to_release: list[int] = []
-            probe: list[tuple[int, int, int]] = []  # (bid, count, grant)
             kept: list[int] = []
             for b, (count, grant) in held.items():
                 rc = int(refcounts[b])
@@ -246,14 +274,12 @@ class WorkerLeaseLedger:
                 if ec == grant:
                     to_release.extend([b] * min(count, rc))
                 elif ec == grant + 1 and bool(committed[b]):
-                    probe.append((b, min(count, rc), grant))
-                else:
-                    kept.append(b)  # lease moved on: leak-not-corrupt
-            if probe and owners_of is not None:
-                keys, ids, owner_eps = owners_of([b for b, _, _ in probe])
-                owned = set(zip(ids, owner_eps))
-                for b, count, grant in probe:
-                    if (b, grant + 1) in owned:
+                    count = min(count, rc)
+                    if owned is None or b not in probe_set:
+                        # unprobed (no owners_of, or the block reached
+                        # this state after the probe): leak, don't guess
+                        kept.append(b)
+                    elif (b, grant + 1) in owned:
                         # publish applied before death: the index holds
                         # the alloc-ref now — it must survive the worker
                         if count > 1:
@@ -262,8 +288,8 @@ class WorkerLeaseLedger:
                             kept.append(b)
                     else:
                         to_release.extend([b] * count)
-            elif probe:
-                kept.extend(b for b, _, _ in probe)
+                else:
+                    kept.append(b)  # lease moved on: leak-not-corrupt
             if to_release:
                 pool.release(to_release)
             return {

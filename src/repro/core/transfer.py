@@ -27,7 +27,7 @@ import numpy as np
 
 from repro.core import fabric
 from repro.core.fabric import DEFAULT, FabricConstants
-from repro.core.pool import BelugaPool, PoolLayout
+from repro.core.pool import BelugaPool
 
 
 @dataclass

@@ -67,6 +67,7 @@ from repro.core.index import (
     partition_keys,
     shard_of_key,
 )
+from repro.core import diag
 from repro.core.pool import OutOfPoolMemory
 from repro.core.rpc import (
     CTRL_BUSY_NS,
@@ -724,7 +725,7 @@ class RpcIndexClient:
                 try:
                     rpc.collect(slot)
                 except Exception:  # noqa: BLE001
-                    pass
+                    diag.note("wire.pipelined_drain.collect_failed")
             if self.retry is None or not isinstance(
                 e, (ServiceDiedError, TimeoutError)
             ):
@@ -1513,7 +1514,10 @@ def handle_journal_request(buf: bytes, journals, ledger=None, worker=None) -> by
         eps, _ = _split_i64(buf, off, n)
         journals[shard].append_publish(keys, ids.tolist(), eps.tolist(), n_tokens)
         if ledger is not None and worker is not None:
-            ledger.on_publish(worker, ids.tolist())
+            # the lease mirror is shared with the supervisor's reconcile
+            # (parent main thread): every mutation goes under the mutex
+            with ledger.mutex:
+                ledger.on_publish(worker, ids.tolist())
         return _U32.pack(n)
     if op in (OP_JRNL_RETRACT, OP_JRNL_REMAP):
         _need(buf, _JRNL_HDR.size)
@@ -1532,7 +1536,7 @@ def handle_journal_request(buf: bytes, journals, ledger=None, worker=None) -> by
     raise WireError(f"unknown journal op {op}")
 
 
-def handle_pool_request(pool, buf: bytes) -> bytes:
+def handle_pool_request(pool: "BelugaPool", buf: bytes) -> bytes:  # noqa: F821
     """Dispatch one pool-allocator op against the OWNING pool."""
     _need(buf, _HDR.size)
     op, n = _HDR.unpack_from(buf)

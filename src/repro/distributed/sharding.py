@@ -14,7 +14,7 @@ large dimension.  The ``pod`` axis is pure data parallelism for activations.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

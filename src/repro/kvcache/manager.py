@@ -18,7 +18,7 @@ contended pool — bounding tail latency under pool pressure (§6.3 story).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

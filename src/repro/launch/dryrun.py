@@ -52,7 +52,6 @@ def attn_model_flops(cfg, shape) -> float:
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
              runtime_overrides: dict | None = None, tag: str = "") -> dict:
-    import jax
     from repro.configs.base import RuntimeConfig, SHAPES, shape_applicable
     from repro.configs.registry import get_config
     from repro.distributed.sharding import AxisRules

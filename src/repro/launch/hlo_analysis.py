@@ -20,7 +20,6 @@ All numbers are **per device** (the SPMD module is the per-device program).
 
 from __future__ import annotations
 
-import json
 import re
 from collections import defaultdict
 from dataclasses import dataclass, field

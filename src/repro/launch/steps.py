@@ -17,7 +17,6 @@ from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import (
     ModelConfig,

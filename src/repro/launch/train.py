@@ -45,7 +45,7 @@ def main() -> None:
     from repro.models import Model
     from repro.training import optimizer as opt_lib
     from repro.training.optimizer import OptimizerConfig
-    from repro.training.train_loop import TrainLoopConfig, make_train_step, run_train_loop
+    from repro.training.train_loop import TrainLoopConfig, run_train_loop
 
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
     rules = None

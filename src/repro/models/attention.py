@@ -13,7 +13,6 @@ Two decode strategies (RuntimeConfig.decode_kv):
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

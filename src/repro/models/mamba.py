@@ -12,7 +12,6 @@ TP sharding (Megatron-Mamba style): z/x/dt projections and heads sharded over
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ the same objects the multi-pod dry-run lowers against).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from dataclasses import dataclass
 from typing import Any
 
@@ -18,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RuntimeConfig, ShapeConfig
 from repro.distributed import sharding as shlib
-from repro.distributed.sharding import AxisRules, ParamSpec, constrain
+from repro.distributed.sharding import AxisRules
 from repro.models import transformer as stack_lib
 from repro.models.layers import embed_apply, norm_apply, norm_params, unembed_apply
 from repro.models.layers import embed_params

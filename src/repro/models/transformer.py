@@ -13,7 +13,6 @@ dim and consumed as scan xs — one compiled layer body regardless of depth
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

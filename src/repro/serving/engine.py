@@ -25,6 +25,7 @@ import heapq
 import itertools
 from dataclasses import dataclass
 
+from repro.core import diag
 from repro.kvcache.manager import KVCacheManager
 from repro.serving.request import Request
 
@@ -174,11 +175,12 @@ class EngineInstance:
             fetch_t = plan.fetch_latency  # includes RDMA sw staging (manager)
             try:
                 self.manager.fetch_into_hbm(req.req_id, plan)
-            except Exception:
+            except Exception:  # noqa: BLE001
                 # failed fetch (HBM pressure / epoch race): fall back to
                 # full recompute. The manager already rolled back and
                 # registered an empty sequence; keep a defensive register
                 # here so the table lookup below can never KeyError.
+                diag.note("engine.fetch_fallback_recompute")
                 fetch_t = 0.0
                 plan.n_miss_tokens = len(req.tokens)
                 req.hit_tokens = 0  # nothing was actually fetched

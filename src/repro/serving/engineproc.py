@@ -42,6 +42,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import diag
+from repro.core.locks import make_lock
 from repro.core.procserver import _mp_context
 from repro.core.rpc import (
     CTRL_DOORBELL,
@@ -451,7 +453,7 @@ def _engine_worker_main(spec: EngineWorkerSpec) -> None:
             try:
                 c.close()
             except Exception:  # noqa: BLE001
-                pass
+                diag.note("engineproc.worker_teardown.close_failed")
         cmd_ring.close()
 
 
@@ -564,7 +566,7 @@ class EngineWorkerHost:
             try:
                 atexit.unregister(self.close)
             except Exception:  # noqa: BLE001
-                pass
+                diag.note("engineproc.host_close.unregister_failed")
 
     # -- commands --------------------------------------------------------
     def submit_indexed(self, req: Request, req_idx: int) -> None:
@@ -735,7 +737,13 @@ class EngineWorkerSupervisor:
         self._pending: dict[int, Request] = {}
         self.clock = 0.0
         self._monitor = HeartbeatMonitor(n_hosts=1, timeout_s=self.grace)
-        self._lock = threading.Lock()
+        # blocking_ok: the supervisor lock's whole job is serializing the
+        # blocking heal section (stop/join the dead worker, wait_ready
+        # the successor, replay _pending) against check()/close(); the
+        # submit/run data path only takes it when healing
+        self._lock = make_lock(
+            "engineproc.EngineWorkerSupervisor._lock", blocking_ok=True
+        )
         self._halt = threading.Event()
         self._probe: threading.Thread | None = None
         self._closed = False
@@ -796,7 +804,7 @@ class EngineWorkerSupervisor:
         try:
             atexit.unregister(self.close)
         except Exception:  # noqa: BLE001
-            pass
+            diag.note("engineproc.supervisor_close.unregister_failed")
 
     # hygiene accounting spans every generation this supervisor created
     def segment_names(self) -> list[str]:
@@ -856,6 +864,7 @@ class EngineWorkerSupervisor:
             try:
                 self.reconciled.append(self.on_worker_death(self.engine_id))
             except Exception:  # noqa: BLE001
+                diag.note("engineproc.reconcile_hook.failed")
                 self.reconciled.append(None)  # best-effort: healing proceeds
         host = EngineWorkerHost(self._spec_factory(), **self._host_kwargs)
         host.start()
@@ -980,4 +989,7 @@ class _WorkerCutoverForwarder:
         try:
             self.worker.client.call(msg, timeout=self.timeout)
         except Exception:  # noqa: BLE001
-            pass
+            # dead/mid-restart worker: its respawn spec already carries
+            # the new ring names, so a lost ADOPT is recoverable — but
+            # count it so a silently-failing cutover is visible
+            diag.note("engineproc.cutover_forward.failed")

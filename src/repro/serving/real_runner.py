@@ -23,7 +23,6 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import RuntimeConfig
 from repro.configs.registry import reduced_config

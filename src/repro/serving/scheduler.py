@@ -436,8 +436,7 @@ class Cluster:
             client onto the fresh ring (after the parent's own client);
           * ``restart_allocator()`` drills the allocator-outage path with
             the same forwarder machinery (plane 1)."""
-        import threading
-
+        from repro.core.locks import make_lock
         from repro.core.rpc import CxlRpcServer, ShmRing
         from repro.core.shm import Doorbell
         from repro.serving.engineproc import (
@@ -454,7 +453,12 @@ class Cluster:
             from repro.core.shmpool import WorkerLeaseLedger
 
             self._lease_ledger = WorkerLeaseLedger()
-            self._meta_lock = threading.Lock()
+            # blocking_ok: serializes use of the one parent-side index
+            # client (stats vs the reconcile owners_of probe), so RPC
+            # round-trips under it are the point, not an accident
+            self._meta_lock = make_lock(
+                "scheduler.Cluster._meta_lock", blocking_ok=True
+            )
         ring = ShmRing.create_shared(cfg.index_rpc_slots, cfg.index_rpc_payload)
         self._pool_ring = ring
         self._shm_names.append(ring.shm_name)

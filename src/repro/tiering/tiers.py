@@ -26,7 +26,7 @@ Background demotion/promotion between the tiers is the migrator's job
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -16,9 +16,8 @@ Distributed-optimization features:
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,575 @@
+"""beluga-lint: the linter's own test suite (static-analysis PR).
+
+Two layers:
+
+  * acceptance — the merged tree is CLEAN (zero findings over ``src/``),
+    and each seeded mutation of a REAL source file is caught by the pass
+    that owns the invariant (the four mutation classes from the issue:
+    unhandled opcode, attach-side unlink, inverted lock pair, swallowed
+    exception);
+  * unit — each rule fires on a minimal synthetic module and stays quiet
+    on the conforming variant, plus the CLI surface (baselines,
+    --check-lock-log, exit codes).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if REPO not in sys.path:
+    sys.path.insert(0, REPO)
+
+from tools.beluga_lint import PASSES, load_all_passes  # noqa: E402
+from tools.beluga_lint.__main__ import main as lint_main  # noqa: E402
+from tools.beluga_lint.passes import lock_discipline  # noqa: E402
+from tools.beluga_lint.project import Project  # noqa: E402
+
+load_all_passes()
+
+
+def run_pass(name: str, paths: list[str]):
+    return PASSES[name].run(Project.load(paths))
+
+
+def run_all(paths: list[str]):
+    project = Project.load(paths)
+    out = []
+    for name in sorted(PASSES):
+        out.extend(PASSES[name].run(project))
+    return out
+
+
+def write(tmp_path, name: str, source: str) -> str:
+    p = tmp_path / name
+    p.write_text(source)
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: clean tree, dirty mutants
+# ---------------------------------------------------------------------------
+def test_merged_tree_is_clean():
+    findings = run_all([SRC])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_exits_zero_on_clean_tree(capsys):
+    assert lint_main([SRC]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+@pytest.fixture()
+def mutant_tree(tmp_path):
+    """A copy of the real core sources that mutations are applied to."""
+    root = tmp_path / "src"
+    shutil.copytree(os.path.join(SRC, "repro"), root / "repro")
+    return root
+
+
+def test_mutation_unhandled_opcode_is_caught(mutant_tree):
+    wire = mutant_tree / "repro" / "core" / "wire.py"
+    wire.write_text(wire.read_text() + "\nOP_SHINY = 21\n")
+    rules = {f.rule for f in run_pass("wire_protocol", [str(mutant_tree)])}
+    # no handler branch, no reply bound, no encoder
+    assert {"W002", "W003", "W005"} <= rules
+
+
+def test_mutation_attach_side_unlink_is_caught(mutant_tree):
+    sp = mutant_tree / "repro" / "core" / "shmpool.py"
+    sp.write_text(sp.read_text().replace(
+        "close_segment(self._data_segment, unlink=False)",
+        "close_segment(self._data_segment, unlink=True)",
+    ))
+    findings = run_pass("shm_lifecycle", [str(mutant_tree)])
+    assert any(f.rule == "S002" for f in findings)
+
+
+def test_mutation_inverted_lock_pair_is_caught(mutant_tree):
+    # the real tree orders index._lock -> pool._lock (evict_lru); a new
+    # code path nesting them the other way must trip the cycle detector
+    pool = mutant_tree / "repro" / "core" / "pool.py"
+    pool.write_text(pool.read_text() + '''
+
+def _mutant_reverse(pool: "BelugaPool", index: "GlobalIndex") -> None:
+    with pool._lock:
+        with index._lock:
+            pass
+''')
+    findings = run_pass("lock_discipline", [str(mutant_tree)])
+    cycles = [f for f in findings if f.rule == "L002"]
+    assert cycles and "index.GlobalIndex._lock" in cycles[0].message
+
+
+def test_mutation_swallowed_exception_is_caught(mutant_tree):
+    shm = mutant_tree / "repro" / "core" / "shm.py"
+    shm.write_text(shm.read_text() + '''
+
+def _mutant_swallow():
+    try:
+        raise ValueError("x")
+    except Exception:
+        pass
+''')
+    findings = run_pass("exception_hygiene", [str(mutant_tree)])
+    assert any(f.rule == "E001" for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# wire_protocol units
+# ---------------------------------------------------------------------------
+WIRE_OK = """
+OP_A = 1
+OP_B = 2
+
+def encode_a(keys):
+    return bytes([OP_A])
+
+def encode_b(ids):
+    return bytes([OP_B])
+
+def reply_bound(buf):
+    op = buf[0]
+    if op == OP_A:
+        return 4
+    if op == OP_B:
+        return 8
+    raise ValueError(op)
+
+def prevalidate(index, buf):
+    op = buf[0]
+    if op == OP_B:
+        pass
+
+def handle_request(index, buf):
+    op = buf[0]
+    if op == OP_A:
+        return b"a"
+    if op == OP_B:
+        return b"b"
+    raise ValueError(op)
+"""
+
+
+def test_wire_clean_module_passes(tmp_path):
+    write(tmp_path, "wire.py", WIRE_OK)
+    assert run_pass("wire_protocol", [str(tmp_path)]) == []
+
+
+def test_wire_duplicate_value(tmp_path):
+    write(tmp_path, "wire.py", WIRE_OK.replace("OP_B = 2", "OP_B = 1"))
+    assert any(
+        f.rule == "W001"
+        for f in run_pass("wire_protocol", [str(tmp_path)])
+    )
+
+
+def test_wire_ids_op_missing_prevalidate(tmp_path):
+    src = WIRE_OK.replace("    if op == OP_B:\n        pass\n", "    pass\n")
+    write(tmp_path, "wire.py", src)
+    findings = run_pass("wire_protocol", [str(tmp_path)])
+    assert [f.rule for f in findings] == ["W004"]
+
+
+def test_wire_literal_opcode_comparison(tmp_path):
+    src = WIRE_OK.replace("if op == OP_A:\n        return b\"a\"",
+                          "if op == 1:\n        return b\"a\"")
+    write(tmp_path, "wire.py", src)
+    rules = {f.rule for f in run_pass("wire_protocol", [str(tmp_path)])}
+    assert "W006" in rules
+
+
+def test_wire_wcmd_registry(tmp_path):
+    write(tmp_path, "eng.py", """
+WCMD_X, WCMD_Y = 1, 2
+
+def serve(cmd, hdr):
+    if cmd == WCMD_X:
+        return 1
+
+def post(hdr):
+    return hdr.pack(WCMD_X, 0)
+""")
+    rules = {f.rule for f in run_pass("wire_protocol", [str(tmp_path)])}
+    assert rules == {"W007", "W008"}  # WCMD_Y neither handled nor packed
+
+
+# ---------------------------------------------------------------------------
+# shm_lifecycle units
+# ---------------------------------------------------------------------------
+def test_shm_missing_unlink_kwarg(tmp_path):
+    write(tmp_path, "m.py", """
+from repro.core.shm import close_segment
+
+def teardown(seg):
+    close_segment(seg)
+""")
+    findings = run_pass("shm_lifecycle", [str(tmp_path)])
+    assert [f.rule for f in findings] == ["S001"]
+
+
+def test_shm_discarded_create_handle(tmp_path):
+    write(tmp_path, "m.py", """
+from repro.core.shm import create_segment
+
+def boot():
+    create_segment(64)
+""")
+    rules = [f.rule for f in run_pass("shm_lifecycle", [str(tmp_path)])]
+    assert "S004" in rules
+
+
+def test_shm_creator_attr_without_teardown(tmp_path):
+    write(tmp_path, "m.py", """
+from repro.core.shm import create_segment
+
+class Holder:
+    def __init__(self):
+        self._seg = create_segment(64)
+""")
+    findings = run_pass("shm_lifecycle", [str(tmp_path)])
+    assert [f.rule for f in findings] == ["S005"]
+    assert "Holder._seg" in findings[0].message
+
+
+def test_shm_creator_attr_with_teardown_is_clean(tmp_path):
+    write(tmp_path, "m.py", """
+from repro.core.shm import close_segment, create_segment
+
+class Holder:
+    def __init__(self):
+        self._seg = create_segment(64)
+
+    def close(self):
+        close_segment(self._seg, unlink=True)
+""")
+    assert run_pass("shm_lifecycle", [str(tmp_path)]) == []
+
+
+def test_shm_classmethod_constructor_flow_is_tracked(tmp_path):
+    write(tmp_path, "m.py", """
+from repro.core.shm import create_segment
+
+class Ring:
+    def __init__(self, seg):
+        self._seg = seg
+
+    @classmethod
+    def create(cls):
+        seg = create_segment(64)
+        return cls(seg)
+""")
+    findings = run_pass("shm_lifecycle", [str(tmp_path)])
+    assert [f.rule for f in findings] == ["S005"]
+
+
+def test_shm_local_leak(tmp_path):
+    write(tmp_path, "m.py", """
+from repro.core.shm import create_segment
+
+def boot():
+    seg = create_segment(64)
+    return None
+""")
+    findings = run_pass("shm_lifecycle", [str(tmp_path)])
+    assert [f.rule for f in findings] == ["S005"]
+
+
+def test_shm_raw_unlink_outside_close_segment(tmp_path):
+    write(tmp_path, "m.py", """
+def teardown(seg):
+    seg.unlink()
+""")
+    findings = run_pass("shm_lifecycle", [str(tmp_path)])
+    assert [f.rule for f in findings] == ["S003"]
+
+
+# ---------------------------------------------------------------------------
+# lock_discipline units
+# ---------------------------------------------------------------------------
+def test_lock_raw_threading_lock(tmp_path):
+    write(tmp_path, "m.py", """
+import threading
+
+class C:
+    def __init__(self):
+        self._lock = threading.Lock()
+""")
+    findings = run_pass("lock_discipline", [str(tmp_path)])
+    assert [f.rule for f in findings] == ["L001"]
+
+
+def test_lock_blocking_call_under_strict_lock(tmp_path):
+    write(tmp_path, "m.py", """
+import time
+from repro.core.locks import make_lock
+
+class C:
+    def __init__(self):
+        self._lock = make_lock("m.C._lock")
+
+    def step(self):
+        with self._lock:
+            time.sleep(0.5)
+""")
+    findings = run_pass("lock_discipline", [str(tmp_path)])
+    assert [f.rule for f in findings] == ["L003"]
+
+
+def test_lock_blocking_ok_declaration_permits_blocking(tmp_path):
+    write(tmp_path, "m.py", """
+import time
+from repro.core.locks import make_lock
+
+class C:
+    def __init__(self):
+        self._lock = make_lock("m.C._lock", blocking_ok=True)
+
+    def step(self):
+        with self._lock:
+            time.sleep(0.5)
+""")
+    assert run_pass("lock_discipline", [str(tmp_path)]) == []
+
+
+def test_lock_sleep_zero_is_a_yield_not_blocking(tmp_path):
+    write(tmp_path, "m.py", """
+import time
+from repro.core.locks import make_lock
+
+class C:
+    def __init__(self):
+        self._lock = make_lock("m.C._lock")
+
+    def step(self):
+        with self._lock:
+            time.sleep(0)
+""")
+    assert run_pass("lock_discipline", [str(tmp_path)]) == []
+
+
+def test_lock_transitive_blocking_through_callee(tmp_path):
+    write(tmp_path, "m.py", """
+import time
+from repro.core.locks import make_lock
+
+class C:
+    def __init__(self):
+        self._lock = make_lock("m.C._lock")
+
+    def _slow(self):
+        time.sleep(1.0)
+
+    def step(self):
+        with self._lock:
+            self._slow()
+""")
+    findings = run_pass("lock_discipline", [str(tmp_path)])
+    assert [f.rule for f in findings] == ["L003"]
+    assert "reaches blocking 'sleep'" in findings[0].message
+
+
+def test_lock_cycle_detected_across_classes(tmp_path):
+    write(tmp_path, "m.py", """
+from repro.core.locks import make_lock
+
+class A:
+    def __init__(self, b: "B"):
+        self._lock = make_lock("m.A._lock")
+        self.b = b
+
+    def fwd(self):
+        with self._lock:
+            with self.b._lock:
+                pass
+
+class B:
+    def __init__(self, a: "A"):
+        self._lock = make_lock("m.B._lock")
+        self.a = a
+
+    def rev(self):
+        with self._lock:
+            with self.a._lock:
+                pass
+""")
+    findings = run_pass("lock_discipline", [str(tmp_path)])
+    assert any(f.rule == "L002" for f in findings)
+
+
+def test_lock_graph_matches_known_topology():
+    decls, edges, findings = lock_discipline.build(Project.load([SRC]))
+    assert findings == []
+    names = {d.name for d in decls}
+    # every make_lock declaration in the tree is seen
+    assert {
+        "pool.BelugaPool._lock",
+        "index.GlobalIndex._lock",
+        "rpc.CxlRpcClient._slot_lock",
+        "shm.ShardJournal._lock",
+        "shmpool.WorkerLeaseLedger.mutex",
+        "scheduler.Cluster._meta_lock",
+        "procserver.ShardSupervisor._lock",
+        "engineproc.EngineWorkerSupervisor._lock",
+        "seed_baseline.SeedPool._lock",
+    } <= names
+    # the load-bearing edges of the plane
+    assert ("index.GlobalIndex._lock", "pool.BelugaPool._lock") in edges
+    assert ("shmpool.WorkerLeaseLedger.mutex", "pool.BelugaPool._lock") in edges
+    assert (
+        "scheduler.Cluster._meta_lock",
+        "shmpool.WorkerLeaseLedger.mutex",
+    ) in edges
+    assert lock_discipline.find_cycle(edges) is None
+
+
+# ---------------------------------------------------------------------------
+# exception_hygiene units
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("body,clean", [
+    ("pass", False),
+    ("return None", False),
+    ("raise", True),
+    ("x = 1\nraise RuntimeError('boom')", True),
+    ("print(e)", True),
+    ("stats.errors += 1", True),
+    ("diag.note('m.fallback')", True),
+    ("log.warning('fallback')", True),
+])
+def test_exception_hygiene_classification(tmp_path, body, clean):
+    indented = "\n".join("        " + line for line in body.splitlines())
+    write(tmp_path, "m.py", f"""
+def f(stats, diag, log):
+    try:
+        work()
+    except Exception as e:
+{indented}
+""")
+    findings = run_pass("exception_hygiene", [str(tmp_path)])
+    # "pass"/"return" bodies never reference e -> E001; the rest do leave
+    # a trace (note the bare 'print(e)' case references the bound var too)
+    assert (findings == []) == clean
+
+
+def test_exception_hygiene_specific_types_exempt(tmp_path):
+    write(tmp_path, "m.py", """
+def f():
+    try:
+        work()
+    except OSError:
+        pass
+    except (ValueError, KeyError):
+        pass
+""")
+    assert run_pass("exception_hygiene", [str(tmp_path)]) == []
+
+
+# ---------------------------------------------------------------------------
+# CLI: baselines, lock-log checking, JSON output
+# ---------------------------------------------------------------------------
+def test_baseline_suppresses_known_finding(tmp_path, capsys):
+    bad = tmp_path / "scan"
+    bad.mkdir()
+    (bad / "m.py").write_text("""
+def f():
+    try:
+        work()
+    except Exception:
+        pass
+""")
+    bdir = tmp_path / "baselines"
+    assert lint_main([str(bad), "--baseline-dir", str(bdir)]) == 1
+    assert lint_main([
+        str(bad), "--baseline-dir", str(bdir), "--update-baselines",
+    ]) == 0
+    capsys.readouterr()
+    assert lint_main([str(bad), "--baseline-dir", str(bdir)]) == 0
+    assert "1 baselined" in capsys.readouterr().out
+
+
+def test_shipped_baselines_are_empty():
+    bdir = os.path.join(REPO, "tools", "beluga_lint", "baselines")
+    for name in os.listdir(bdir):
+        if not name.endswith(".txt"):
+            continue
+        with open(os.path.join(bdir, name)) as f:
+            lines = [
+                ln for ln in f
+                if ln.strip() and not ln.strip().startswith("#")
+            ]
+        assert lines == [], f"baseline {name} must ship empty"
+
+
+def test_json_output_shape(tmp_path, capsys):
+    bad = tmp_path / "scan"
+    bad.mkdir()
+    (bad / "m.py").write_text("""
+def f():
+    try:
+        work()
+    except Exception:
+        pass
+""")
+    assert lint_main([str(bad), "--json"]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["findings"][0]["rule"] == "E001"
+    assert payload["findings"][0]["pass"] == "exception_hygiene"
+
+
+def test_check_lock_log_consistent_and_inverted(tmp_path, capsys):
+    log_dir = tmp_path / "logs"
+    log_dir.mkdir()
+    # consistent: a runtime observation of the static evict_lru edge
+    (log_dir / "lock_order.1.json").write_text(json.dumps({
+        "pid": 1,
+        "edges": [["index.GlobalIndex._lock", "pool.BelugaPool._lock"]],
+        "violations": [],
+    }))
+    assert lint_main([SRC, "--check-lock-log", str(log_dir)]) == 0
+    capsys.readouterr()
+    # inverted: runtime saw pool -> index, static graph has index -> pool
+    (log_dir / "lock_order.2.json").write_text(json.dumps({
+        "pid": 2,
+        "edges": [["pool.BelugaPool._lock", "index.GlobalIndex._lock"]],
+        "violations": [],
+    }))
+    assert lint_main([SRC, "--check-lock-log", str(log_dir)]) == 1
+    assert "cycle" in capsys.readouterr().out
+
+
+def test_check_lock_log_flags_undeclared_runtime_lock(tmp_path):
+    log_dir = tmp_path / "logs"
+    log_dir.mkdir()
+    (log_dir / "lock_order.9.json").write_text(json.dumps({
+        "pid": 9,
+        "edges": [["phantom.Lock", "pool.BelugaPool._lock"]],
+        "violations": [],
+    }))
+    assert lint_main([SRC, "--check-lock-log", str(log_dir)]) == 1
+
+
+def test_cli_list_names_all_passes(capsys):
+    assert lint_main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in (
+        "wire_protocol", "shm_lifecycle", "lock_discipline",
+        "exception_hygiene",
+    ):
+        assert name in out
+
+
+def test_cli_module_entrypoint_runs():
+    # the documented invocation shape, end to end as a subprocess
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.beluga_lint", "src", "--json"],
+        cwd=REPO, capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert json.loads(proc.stdout)["findings"] == []

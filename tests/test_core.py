@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.coherence import CoherenceError, CoherentReader, CoherentWriter
-from repro.core.index import GlobalIndex, ROOT, block_key
+from repro.core.index import GlobalIndex
 from repro.core.pool import BelugaPool, OutOfPoolMemory, PoolLayout
 from repro.core.rpc import CxlRpcClient, CxlRpcServer, ModeledRdmaRpc, ShmRing
 from repro.core.transfer import TransferEngine

@@ -1,7 +1,6 @@
 """Fabric cost model + roofline machinery: sanity and invariants."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import fabric
@@ -91,7 +90,6 @@ def test_cell_builder_covers_all_kinds():
     """build_cell produces lowerable specs for each shape kind (structure
     only — the full lowering is exercised by the dry-run artifacts)."""
     from repro.configs.base import SHAPES
-    from repro.configs.registry import get_config
     from repro.launch.steps import _decode_axes
     from repro.configs.base import RuntimeConfig
 

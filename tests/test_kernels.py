@@ -119,7 +119,7 @@ def test_sparse_gather_matches_oracle():
 # hypothesis property tests on kernel invariants
 # ---------------------------------------------------------------------------
 
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 
 @settings(max_examples=20, deadline=None)

@@ -392,3 +392,27 @@ def test_exp11_process_transport_smoke_under_hard_timeout():
     )
     assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-3000:])
     assert "SMOKE-PASS" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# diag counters: tolerated teardown failures are counted, not invisible
+# (the exception-hygiene contract of beluga-lint, PR 9)
+# ---------------------------------------------------------------------------
+def test_close_segment_failure_bumps_diag_counter():
+    from repro.core import diag
+    from repro.core.shm import close_segment
+
+    class ExplodingSeg:
+        def close(self):
+            raise RuntimeError("torn down twice")
+
+        def unlink(self):
+            raise RuntimeError("gone")
+
+    diag.reset()
+    close_segment(ExplodingSeg(), unlink=True)  # must not raise
+    assert diag.count("shm.close_segment.close_failed") == 1
+    assert diag.count("shm.close_segment.unlink_failed") == 1
+    # idempotent hygiene: None is a no-op, counters untouched
+    close_segment(None, unlink=True)
+    assert diag.count("shm.close_segment.close_failed") == 1

@@ -3,7 +3,6 @@
 import os
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

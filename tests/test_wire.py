@@ -712,3 +712,162 @@ def test_index_lru_eviction_matches_ordered_dict_model(touch_order, n_evict):
     for d in list(model)[:n_evict]:
         want.extend(chains[d][2])
     assert freed == want
+
+
+# ---------------------------------------------------------------------------
+# codec exhaustiveness: every OP_* in the registry round-trips (PR 9)
+# ---------------------------------------------------------------------------
+def _wire_registry() -> dict[str, int]:
+    return {
+        name: val
+        for name, val in vars(wire).items()
+        if name.startswith("OP_") and isinstance(val, int)
+    }
+
+
+def test_wire_registry_values_are_unique_and_dense():
+    ops = _wire_registry()
+    vals = sorted(ops.values())
+    assert len(set(vals)) == len(vals), "duplicate opcode values"
+    assert vals == list(range(1, len(vals) + 1)), "opcode space has holes"
+
+
+def test_every_opcode_round_trips_with_boundary_payloads():
+    """Exhaustiveness is DERIVED, not hand-maintained: the table below is
+    keyed by ``OP_*`` name and the test fails outright if the module's
+    registry grows an opcode the table doesn't exercise (the runtime
+    companion of the ``wire_protocol`` lint pass).  Each op ships at
+    least an empty/zero frame and a populated frame; every reply must
+    fit its declared ``reply_bound`` and decode cleanly."""
+    from repro.core.shm import ShardJournal
+
+    pool, idx, chains = _published(n_chains=2, chain_len=4)
+    tokens, keys, blocks = chains[0]
+    keys = list(keys)  # keys_for returns an immutable (cached) tuple
+    eps = [idx.lookup_many(keys)[i].epoch for i in range(len(keys))]
+    fresh = pool.allocate(len(keys))
+    fresh_eps = pool.write_blocks(fresh)
+    spare = pool.allocate(4)
+    jrnl = ShardJournal.create(capacity=64)
+    jkeys = [bytes([i]) * wire.KEY_BYTES for i in range(3)]
+
+    def index_route(frame: bytes) -> tuple[bytes, int]:
+        bound = wire.reply_bound(frame)
+        wire.prevalidate(idx, frame)
+        return wire.handle_request(idx, frame, _validated=True), bound
+
+    def pool_route(frame: bytes) -> tuple[bytes, int]:
+        return wire.handle_pool_request(pool, frame), wire.pool_reply_bound(frame)
+
+    def jrnl_route(frame: bytes) -> tuple[bytes, int]:
+        return (
+            wire.handle_journal_request(frame, [jrnl]),
+            wire.pool_reply_bound(frame),
+        )
+
+    def u32_resp(buf: bytes):
+        assert len(buf) == 4
+        return buf
+
+    # OP name -> (route, decoder, [boundary frames])
+    table = {
+        "OP_MATCH": (index_route, wire.decode_match_resp, [
+            wire.encode_match([]),
+            wire.encode_match(keys),
+        ]),
+        "OP_PUBLISH": (index_route, wire.decode_publish_resp, [
+            wire.encode_publish([], [], [], 0),
+            wire.encode_publish(keys, blocks, eps, 16),
+        ]),
+        "OP_LOOKUP": (index_route, wire.decode_lookup_resp, [
+            wire.encode_lookup([]),
+            wire.encode_lookup(keys + [b"\xff" * wire.KEY_BYTES]),
+        ]),
+        "OP_FILTER": (index_route, wire.decode_filter_resp, [
+            wire.encode_filter([]),
+            wire.encode_filter(keys + [b"\xfe" * wire.KEY_BYTES]),
+        ]),
+        "OP_EVICT": (index_route, wire.decode_evict_resp, [
+            wire.encode_evict(0),
+            wire.encode_evict(2),
+        ]),
+        "OP_BATCH": (index_route, wire.decode_batch_resp, [
+            wire.encode_batch([]),
+            wire.encode_batch([wire.encode_stats(), wire.encode_match(keys)]),
+        ]),
+        "OP_OWNERS": (index_route, wire.decode_owners_resp, [
+            wire.encode_owners([]),
+            wire.encode_owners(blocks + spare),  # spare: unindexed ids
+        ]),
+        "OP_REMAP": (index_route, wire.decode_remap_resp, [
+            wire.encode_remap([], [], [], [], []),
+            wire.encode_remap(keys, blocks, eps, fresh, fresh_eps),
+        ]),
+        "OP_EVICT_BLOCKS": (index_route, wire.decode_evict_resp, [
+            wire.encode_evict_blocks([]),
+            wire.encode_evict_blocks(spare),  # in range, nothing to evict
+        ]),
+        "OP_STATS": (index_route, wire.decode_stats_resp, [
+            wire.encode_stats(),
+        ]),
+        "OP_SNAPSHOT": (index_route, wire.decode_snapshot_resp, [
+            wire.encode_snapshot(0, 0),
+            wire.encode_snapshot(0, 64),
+        ]),
+        "OP_RESTORE": (index_route, wire.decode_restore_resp, [
+            wire.encode_restore([], [], [], []),
+            wire.encode_restore(keys, blocks, eps, [16] * len(keys)),
+        ]),
+        "OP_SEED_STATS": (index_route, u32_resp, [
+            wire.encode_seed_stats(0, 0),
+            wire.encode_seed_stats(2**40, 2**40),
+        ]),
+        "OP_POOL_ALLOC": (pool_route, wire.decode_pool_alloc_resp, [
+            wire.encode_pool_alloc(0),
+            wire.encode_pool_alloc(8),
+        ]),
+        "OP_POOL_RETAIN": (pool_route, u32_resp, [
+            wire.encode_pool_retain([]),
+            # published blocks: live refs regardless of table order
+            # (OP_POOL_RELEASE sorts earlier and frees `spare`)
+            wire.encode_pool_retain(blocks),
+        ]),
+        "OP_POOL_RELEASE": (pool_route, u32_resp, [
+            wire.encode_pool_release([]),
+            wire.encode_pool_release(spare),
+        ]),
+        "OP_POOL_FREE": (pool_route, wire.decode_pool_free_resp, [
+            wire.encode_pool_free(),
+        ]),
+        "OP_JRNL_PUBLISH": (jrnl_route, u32_resp, [
+            wire.encode_jrnl_publish(0, [], [], [], 0),
+            wire.encode_jrnl_publish(0, jkeys, [1, 2, 3], [7, 7, 7], 16),
+        ]),
+        "OP_JRNL_RETRACT": (jrnl_route, u32_resp, [
+            wire.encode_jrnl_retract(0, []),
+            wire.encode_jrnl_retract(0, [1, 2, 3]),
+        ]),
+        "OP_JRNL_REMAP": (jrnl_route, u32_resp, [
+            wire.encode_jrnl_remap(0, [], [], []),
+            wire.encode_jrnl_remap(0, jkeys, [4, 5, 6], [8, 8, 8]),
+        ]),
+    }
+
+    try:
+        registry = _wire_registry()
+        missing = set(registry) - set(table)
+        stale = set(table) - set(registry)
+        assert not missing, f"opcodes without codec coverage: {sorted(missing)}"
+        assert not stale, f"table entries for removed opcodes: {sorted(stale)}"
+
+        for name, (route, decoder, frames) in sorted(table.items()):
+            assert frames, f"{name}: no boundary frames"
+            for frame in frames:
+                assert frame[0] == registry[name], f"{name}: wrong op byte"
+                reply, bound = route(frame)
+                assert len(reply) <= bound, (
+                    f"{name}: reply {len(reply)} B exceeds bound {bound} B"
+                )
+                decoder(reply)  # must decode without raising
+    finally:
+        jrnl.close()

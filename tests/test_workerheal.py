@@ -383,3 +383,63 @@ def test_dead_ring_retries_cannot_exhaust_a_narrow_slot_partition():
         with pytest.raises(ServiceDiedError):
             client.call(b"\x01ping", timeout=1.0)
     assert client.free_slots() >= 2  # partition reclaimed, not bled dry
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline regressions surfaced by beluga-lint (PR 9)
+# ---------------------------------------------------------------------------
+def test_reconcile_probes_index_with_mutex_dropped():
+    """The ``owners_of`` probe is a metadata-plane RPC: holding
+    ``ledger.mutex`` across it would stall every live worker's
+    ALLOC/RELEASE for the probe's latency (the L003 finding this PR
+    fixed).  The probe callback must observe the mutex RELEASED."""
+    pool = BelugaPool(LAYOUT, n_blocks=32, n_shards=4, backing="meta")
+    idx = GlobalIndex(pool)
+    led = WorkerLeaseLedger()
+    blocks = pool.allocate(3)
+    led.on_alloc(0, blocks, pool)
+    [eb] = pool.write_blocks(blocks[:1])
+    idx.publish_many([b"r" * 16], blocks[:1], [eb], 8)
+
+    seen = {}
+
+    def probing_owners_of(ids):
+        seen["mutex_held"] = led.mutex.locked()
+        return idx.owners_of(ids)
+
+    summary = led.reconcile(0, pool, owners_of=probing_owners_of)
+    assert seen == {"mutex_held": False}, "probe ran under the mutex"
+    assert blocks[0] in summary["kept"]
+
+
+def test_journal_publish_clears_lease_under_ledger_mutex():
+    """``handle_journal_request`` runs on the allocator service thread
+    while reconcile mutates the same per-worker lease dict from the
+    parent main thread: the publish-side lease clear must hold
+    ``ledger.mutex`` (the race beluga-lint's graph review surfaced)."""
+    from repro.core import wire
+    from repro.core.shm import ShardJournal
+
+    pool = BelugaPool(LAYOUT, n_blocks=32, n_shards=4, backing="meta")
+    led = WorkerLeaseLedger()
+    blocks = pool.allocate(2)
+    led.on_alloc(0, blocks, pool)
+    jrnl = ShardJournal.create(capacity=16)
+    try:
+        held_at_clear = []
+        real = led.on_publish
+
+        def spying_on_publish(worker, ids):
+            held_at_clear.append(led.mutex.locked())
+            return real(worker, ids)
+
+        led.on_publish = spying_on_publish
+        frame = wire.encode_jrnl_publish(
+            0, [b"j" * 16] * 2, blocks, [1, 1], 8
+        )
+        wire.handle_journal_request(frame, [jrnl], ledger=led, worker=0)
+        assert held_at_clear == [True], "lease clear ran outside the mutex"
+        # and the lease is actually gone
+        assert not led.leases(0)
+    finally:
+        jrnl.close()

@@ -1,0 +1,70 @@
+"""beluga-lint: repo-specific static analysis for the Beluga repro.
+
+The invariants that keep this multi-process shared-memory plane correct
+— wire-protocol coverage, the creator-unlinks shm lifecycle, lock
+ordering, exception hygiene — are checked by AST passes registered
+here and run from one CLI:
+
+    python -m tools.beluga_lint src/
+
+Each pass is a function ``(Project) -> list[Finding]`` registered with
+``@register_pass``.  Baselines (``baselines/<pass>.txt``, one finding
+fingerprint per line) suppress known findings; the repo ships every
+baseline EMPTY and CI enforces zero findings — the mechanism exists so
+a future emergency can land with a documented, reviewable suppression
+instead of deleting the gate.
+
+The runtime companion is ``repro.core.locks`` (``BELUGA_SANITIZE=1``),
+which records actual lock-acquisition orders; ``--check-lock-log``
+asserts those against the static graph this package derives.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Finding:
+    pass_name: str  # registered pass name, e.g. "lock_discipline"
+    rule: str  # stable rule id, e.g. "L003"
+    file: str  # path relative to the scan root
+    line: int  # 1-based source line
+    message: str
+
+    def fingerprint(self) -> str:
+        """Line-number-free identity (baselines survive unrelated edits)."""
+        return f"{self.pass_name}:{self.rule}:{self.file}:{self.message}"
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class PassInfo:
+    name: str
+    run: object  # callable(Project) -> list[Finding]
+    doc: str = field(default="")
+
+
+PASSES: dict[str, PassInfo] = {}
+
+
+def register_pass(name: str):
+    """Decorator: register ``fn(project) -> list[Finding]`` under ``name``."""
+
+    def deco(fn):
+        PASSES[name] = PassInfo(name=name, run=fn, doc=(fn.__doc__ or "").strip())
+        return fn
+
+    return deco
+
+
+def load_all_passes() -> None:
+    """Import every pass module (side effect: registration)."""
+    from tools.beluga_lint.passes import (  # noqa: F401
+        exception_hygiene,
+        lock_discipline,
+        shm_lifecycle,
+        wire_protocol,
+    )

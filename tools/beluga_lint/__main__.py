@@ -1,0 +1,223 @@
+"""beluga-lint CLI.
+
+    python -m tools.beluga_lint src/                 # run every pass
+    python -m tools.beluga_lint --list               # pass catalog
+    python -m tools.beluga_lint --pass lock_discipline src/
+    python -m tools.beluga_lint --json src/          # machine output
+    python -m tools.beluga_lint --emit-lock-graph graph.json src/
+    python -m tools.beluga_lint --check-lock-log lock_logs/ src/
+
+Exit status: 0 when every non-baselined finding count is zero (and, with
+--check-lock-log, the combined static+runtime lock graph is acyclic and
+the runtime recorded no inversions); 1 otherwise.  Baselines live in
+``tools/beluga_lint/baselines/<pass>.txt`` (one fingerprint per line,
+``#`` comments allowed) and ship EMPTY: CI enforces zero findings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from tools.beluga_lint import PASSES, Finding, load_all_passes
+from tools.beluga_lint.project import Project
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE_DIR = os.path.join(_HERE, "baselines")
+
+
+def load_baseline(baseline_dir: str, pass_name: str) -> set[str]:
+    path = os.path.join(baseline_dir, f"{pass_name}.txt")
+    if not os.path.exists(path):
+        return set()
+    out = set()
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                out.add(line)
+    return out
+
+
+def write_baseline(baseline_dir: str, pass_name: str, findings) -> None:
+    os.makedirs(baseline_dir, exist_ok=True)
+    path = os.path.join(baseline_dir, f"{pass_name}.txt")
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(f"# beluga-lint baseline for pass '{pass_name}'\n")
+        f.write("# one finding fingerprint per line; keep EMPTY on main\n")
+        for fp in sorted({x.fingerprint() for x in findings}):
+            f.write(fp + "\n")
+
+
+def emit_lock_graph(project: Project, path: str) -> None:
+    from tools.beluga_lint.passes import lock_discipline
+
+    decls, edges, _ = lock_discipline.build(project)
+    payload = {
+        "locks": [
+            {
+                "name": d.name, "blocking_ok": d.blocking_ok,
+                "file": d.file, "line": d.line,
+            }
+            for d in decls
+        ],
+        "edges": sorted(list(e) for e in edges),
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"lock graph: {len(decls)} locks, {len(edges)} static edges "
+          f"-> {path}")
+
+
+def check_lock_log(project: Project, log_path: str) -> list[str]:
+    """Merge runtime-recorded edges into the static graph; any inversion
+    the sanitizer recorded, or a cycle in the combined graph, is an
+    error.  ``log_path`` is one ``lock_order.<pid>.json`` dump or a
+    directory of them (``BELUGA_SANITIZE_LOG``)."""
+    from tools.beluga_lint.passes import lock_discipline
+
+    paths = []
+    if os.path.isdir(log_path):
+        paths = [
+            os.path.join(log_path, n)
+            for n in sorted(os.listdir(log_path))
+            if n.startswith("lock_order.") and n.endswith(".json")
+        ]
+    elif os.path.exists(log_path):
+        paths = [log_path]
+    if not paths:
+        return [f"no lock-order logs found at {log_path}"]
+
+    decls, static_edges, _ = lock_discipline.build(project)
+    known = {d.name for d in decls}
+    errors: list[str] = []
+    combined = set(static_edges)
+    runtime_edges = 0
+    for p in paths:
+        with open(p, encoding="utf-8") as f:
+            dump = json.load(f)
+        for v in dump.get("violations", []):
+            errors.append(f"{os.path.basename(p)}: runtime inversion: {v}")
+        for outer, inner in dump.get("edges", []):
+            runtime_edges += 1
+            combined.add((outer, inner))
+            for n in (outer, inner):
+                if n not in known:
+                    errors.append(
+                        f"{os.path.basename(p)}: runtime lock '{n}' has no "
+                        "static declaration"
+                    )
+    cycle = lock_discipline.find_cycle(combined)
+    if cycle:
+        errors.append(
+            "combined static+runtime lock graph has a cycle: "
+            + " -> ".join(cycle)
+        )
+    print(
+        f"lock log check: {len(paths)} dump(s), {runtime_edges} runtime "
+        f"edge observation(s), {len(static_edges)} static edges, "
+        f"{len(errors)} error(s)"
+    )
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.beluga_lint",
+        description="repo-specific static analysis for the Beluga repro",
+    )
+    ap.add_argument("paths", nargs="*", help="files/directories to scan")
+    ap.add_argument("--pass", dest="passes", action="append", default=None,
+                    metavar="NAME", help="run only this pass (repeatable)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered passes and exit")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--baseline-dir", default=DEFAULT_BASELINE_DIR)
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="write current findings as the new baselines")
+    ap.add_argument("--emit-lock-graph", metavar="FILE", default=None,
+                    help="write the static lock graph (locks+edges) as JSON")
+    ap.add_argument("--check-lock-log", metavar="PATH", default=None,
+                    help="validate BELUGA_SANITIZE runtime dumps against "
+                         "the static lock graph")
+    args = ap.parse_args(argv)
+
+    load_all_passes()
+    if args.list:
+        for name, info in sorted(PASSES.items()):
+            first = info.doc.splitlines()[0] if info.doc else ""
+            print(f"{name:20s} {first}")
+        return 0
+
+    if not args.paths:
+        ap.error("no scan paths given (try: python -m tools.beluga_lint src/)")
+    selected = args.passes or sorted(PASSES)
+    for name in selected:
+        if name not in PASSES:
+            ap.error(f"unknown pass {name!r} (see --list)")
+
+    project = Project.load(args.paths)
+    all_findings: list[Finding] = []
+    new_findings: list[Finding] = []
+    baselined = 0
+    for name in selected:
+        findings = PASSES[name].run(project)
+        all_findings.extend(findings)
+        if args.update_baselines:
+            write_baseline(args.baseline_dir, name, findings)
+            continue
+        baseline = load_baseline(args.baseline_dir, name)
+        for f in findings:
+            if f.fingerprint() in baseline:
+                baselined += 1
+            else:
+                new_findings.append(f)
+
+    errors: list[str] = []
+    if args.emit_lock_graph:
+        emit_lock_graph(project, args.emit_lock_graph)
+    if args.check_lock_log:
+        errors = check_lock_log(project, args.check_lock_log)
+
+    if args.update_baselines:
+        print(f"baselines updated for {len(selected)} pass(es) in "
+              f"{args.baseline_dir}")
+        return 0
+
+    if args.json:
+        print(json.dumps(
+            {
+                "findings": [
+                    {
+                        "pass": f.pass_name, "rule": f.rule, "file": f.file,
+                        "line": f.line, "message": f.message,
+                    }
+                    for f in new_findings
+                ],
+                "baselined": baselined,
+                "lock_log_errors": errors,
+            },
+            indent=2,
+        ))
+    else:
+        for f in sorted(
+            new_findings, key=lambda x: (x.file, x.line, x.rule)
+        ):
+            print(f.render())
+        for e in errors:
+            print(f"lock-log: {e}")
+        note = f" ({baselined} baselined)" if baselined else ""
+        status = "clean" if not (new_findings or errors) else "FAILED"
+        print(
+            f"beluga-lint: {len(project.modules)} file(s), "
+            f"{len(selected)} pass(es), {len(new_findings)} finding(s)"
+            f"{note} — {status}"
+        )
+    return 1 if (new_findings or errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

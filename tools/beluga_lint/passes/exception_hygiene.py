@@ -1,0 +1,80 @@
+"""Exception hygiene (rule E001).
+
+Broad handlers (``except Exception`` / ``except BaseException`` / bare
+``except:``) are load-bearing in this codebase — teardown paths and ring
+service loops must survive anything — but a broad handler that silently
+discards the exception erases the only evidence of a real fault.  Every
+broad handler must leave a trace:
+
+  * re-raise (``raise`` / ``raise X``), or
+  * reference the bound exception variable (relay it in-band, log it), or
+  * bump a counter (``stats.errors += 1`` or a ``diag.note(...)`` /
+    logger call — any call whose name is in ``OK_CALLS``).
+
+Handlers for *specific* exception types (``BufferError``, ``OSError``,
+``FileNotFoundError``...) are exempt: naming the type IS the analysis of
+why swallowing is safe.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.beluga_lint import Finding, register_pass
+from tools.beluga_lint.project import Project, call_name
+
+PASS = "exception_hygiene"
+
+# Call names that count as "the exception left a trace"
+OK_CALLS = frozenset({
+    "debug", "info", "warning", "warn", "error", "exception", "critical",
+    "log", "print", "note", "record", "fail",
+})
+BROAD_TYPES = ("Exception", "BaseException")
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:  # bare except:
+        return True
+    if isinstance(t, ast.Name):
+        return t.id in BROAD_TYPES
+    if isinstance(t, ast.Tuple):
+        return any(
+            isinstance(e, ast.Name) and e.id in BROAD_TYPES for e in t.elts
+        )
+    return False
+
+
+def _leaves_trace(handler: ast.ExceptHandler) -> bool:
+    exc_var = handler.name
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Raise):
+            return True
+        if isinstance(node, ast.AugAssign):
+            return True  # counter bump (stats.errors += 1)
+        if exc_var and isinstance(node, ast.Name) and node.id == exc_var:
+            return True
+        if isinstance(node, ast.Call) and call_name(node) in OK_CALLS:
+            return True
+    return False
+
+
+@register_pass(PASS)
+def run(project: Project) -> list[Finding]:
+    """Broad except handlers must re-raise, log, or count the failure."""
+    out: list[Finding] = []
+    for mod in project.modules:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not _is_broad(node):
+                continue
+            if _leaves_trace(node):
+                continue
+            out.append(Finding(
+                PASS, "E001", mod.relpath, node.lineno,
+                "broad except swallows the exception — re-raise, use the "
+                "bound variable, log, or bump a diag/stats counter",
+            ))
+    return out

@@ -1,0 +1,502 @@
+"""Lock discipline (rules L001-L003) + the static lock-order graph.
+
+Every lock in the plane is declared through ``repro.core.locks.make_lock``
+with a globally unique name and an explicit blocking policy.  This pass
+reads those declarations, simulates held-lock stacks through each
+function (resolving callees through ``self``-methods, module functions,
+constructor-assigned attributes and parameter annotations, three levels
+deep) and derives the static acquisition-order graph the runtime
+sanitizer (``BELUGA_SANITIZE=1``) is checked against.
+
+  L001  raw ``threading.Lock()`` / ``RLock()`` outside ``locks.py`` —
+        undeclared locks are invisible to ordering analysis
+  L002  cycle in the lock-acquisition-order graph (deadlock shape)
+  L003  blocking call (sleep / join / collect / post / wait / poll /
+        select / call) reachable while a lock declared WITHOUT
+        ``blocking_ok=True`` is held
+
+``build(project)`` returns ``(decls, edges, findings)`` so the CLI can
+emit the graph (``--emit-lock-graph``) and merge in runtime-observed
+edges (``--check-lock-log``) without re-running the pass.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+
+from tools.beluga_lint import Finding, register_pass
+from tools.beluga_lint.project import (
+    Module,
+    Project,
+    annotation_name,
+    call_name,
+    dotted,
+    iter_functions,
+)
+
+PASS = "lock_discipline"
+
+# Callee names that park the calling thread (or can, under load).
+# ``time.sleep(0)`` — the GIL-yield idiom — is exempted at the call site.
+BLOCKING_NAMES = frozenset({
+    "sleep", "join", "collect", "post", "wait", "wait_ready",
+    "select", "poll", "call",
+})
+MAX_DEPTH = 3
+
+
+@dataclass(frozen=True)
+class LockDecl:
+    name: str  # make_lock() declared name (globally unique)
+    blocking_ok: bool
+    file: str
+    cls: str  # declaring class ("" for module level)
+    attr: str  # attribute the lock is bound to ("" if not self.X)
+    line: int
+
+
+def _finding(rule: str, file: str, line: int, msg: str) -> Finding:
+    return Finding(PASS, rule, file, line, msg)
+
+
+def _is_make_lock(node: ast.expr) -> ast.Call | None:
+    if isinstance(node, ast.Call) and call_name(node) == "make_lock":
+        return node
+    return None
+
+
+# ---------------------------------------------------------------------------
+# collection: declarations, class attr maps, type inference tables
+# ---------------------------------------------------------------------------
+class _World:
+    """Everything the simulation needs to resolve names across modules."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.decls: list[LockDecl] = []
+        self.findings: list[Finding] = []
+        # (class name, attr) -> decl ; attr -> [decls] for the unique-attr
+        # fallback (e.g. ``ledger.mutex`` with no type information)
+        self.class_attr: dict[tuple[str, str], LockDecl] = {}
+        self.attr_decls: dict[str, list[LockDecl]] = {}
+        self.classes = project.class_index()
+        # (class name, attr) -> type name, from ``self.X = ClassName(...)``
+        # or ``self.X = <param>`` with an annotated __init__ param
+        self.attr_types: dict[tuple[str, str], str] = {}
+        self._collect()
+
+    def _collect(self) -> None:
+        for mod in self.project.modules:
+            self._collect_module(mod)
+
+    def _collect_module(self, mod: Module) -> None:
+        in_locks_py = mod.name == "locks.py"
+        cls_of: dict[int, str] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                for sub in ast.walk(node):
+                    cls_of.setdefault(id(sub), node.name)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                recv = (
+                    dotted(node.func.value)
+                    if isinstance(node.func, ast.Attribute) else ""
+                )
+                if (
+                    name in ("Lock", "RLock")
+                    and recv in ("", "threading")
+                    and not in_locks_py
+                ):
+                    self.findings.append(_finding(
+                        "L001", mod.relpath, node.lineno,
+                        "raw threading lock — declare it via "
+                        "repro.core.locks.make_lock so ordering analysis "
+                        "and the sanitizer can see it",
+                    ))
+            if not isinstance(node, ast.Assign):
+                continue
+            cls_name = cls_of.get(id(node), "")
+            for target in node.targets:
+                attr = self._self_attr(target)
+                mk = _is_make_lock(node.value)
+                if mk is not None:
+                    self._add_decl(mod, cls_name, attr or "", node, mk)
+                elif attr and cls_name:
+                    t = self._value_type(node.value, mod, cls_name)
+                    if t:
+                        self.attr_types[(cls_name, attr)] = t
+
+    @staticmethod
+    def _self_attr(target: ast.expr) -> str | None:
+        if (
+            isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name)
+            and target.value.id == "self"
+        ):
+            return target.attr
+        return None
+
+    def _value_type(self, value: ast.expr, mod: Module, cls_name: str) -> str:
+        """Type of an assigned value: constructor call or annotated param."""
+        if isinstance(value, ast.Call):
+            n = call_name(value)
+            if n in self.classes:
+                return n
+        if isinstance(value, ast.Name):
+            # ``self.X = param``: look up the annotation on the enclosing
+            # __init__ (the only method whose params flow to attributes
+            # in this codebase's idiom)
+            entry = self.classes.get(cls_name)
+            if entry is not None:
+                _, cls_node = entry
+                for fn in iter_functions(cls_node):
+                    if fn.name != "__init__":
+                        continue
+                    for a in fn.args.args + fn.args.kwonlyargs:
+                        if a.arg == value.id:
+                            t = annotation_name(a.annotation)
+                            if t in self.classes:
+                                return t
+        return ""
+
+    def _add_decl(self, mod, cls_name: str, attr: str, assign, call) -> None:
+        if not (call.args and isinstance(call.args[0], ast.Constant)):
+            return
+        lock_name = str(call.args[0].value)
+        blocking_ok = any(
+            kw.arg == "blocking_ok"
+            and isinstance(kw.value, ast.Constant)
+            and kw.value.value is True
+            for kw in call.keywords
+        )
+        decl = LockDecl(
+            name=lock_name, blocking_ok=blocking_ok, file=mod.relpath,
+            cls=cls_name, attr=attr, line=assign.lineno,
+        )
+        self.decls.append(decl)
+        if cls_name and attr:
+            self.class_attr[(cls_name, attr)] = decl
+            self.attr_decls.setdefault(attr, []).append(decl)
+
+    # -- resolution ------------------------------------------------------
+    def lock_of_expr(
+        self, expr: ast.expr, cls_name: str,
+        local_types: dict[str, str] | None = None,
+        param_types: dict[str, str] | None = None,
+    ) -> LockDecl | None:
+        """Resolve a ``with`` subject to a declared lock, or None."""
+        if not isinstance(expr, ast.Attribute):
+            return None
+        attr = expr.attr
+        recv = dotted(expr.value)
+        if recv == "self" and (cls_name, attr) in self.class_attr:
+            return self.class_attr[(cls_name, attr)]
+        if recv.startswith("self.") and "." not in recv[5:]:
+            t = self.attr_types.get((cls_name, recv[5:]), "")
+            if (t, attr) in self.class_attr:
+                return self.class_attr[(t, attr)]
+        if recv and "." not in recv:
+            t = (local_types or {}).get(recv) or (param_types or {}).get(recv, "")
+            if (t, attr) in self.class_attr:
+                return self.class_attr[(t, attr)]
+        hits = self.attr_decls.get(attr, [])
+        if len(hits) == 1:
+            return hits[0]
+        return None
+
+    def resolve_callee(
+        self, call: ast.Call, mod: Module, cls_name: str,
+        local_types: dict[str, str], param_types: dict[str, str],
+    ) -> tuple[Module, str, ast.AST] | None:
+        """Map a call to (module, class name, FunctionDef) when possible."""
+        func = call.func
+        if isinstance(func, ast.Name):
+            fns = self.project.module_functions(mod)
+            if func.id in fns:
+                return (mod, "", fns[func.id])
+            return None
+        if not isinstance(func, ast.Attribute):
+            return None
+        meth = func.attr
+        recv = dotted(func.value)
+        if recv == "self" and cls_name:
+            return self._method(cls_name, meth)
+        type_name = ""
+        if recv.startswith("self.") and "." not in recv[5:]:
+            type_name = self.attr_types.get((cls_name, recv[5:]), "")
+        elif recv and "." not in recv:
+            type_name = local_types.get(recv) or param_types.get(recv, "")
+        if type_name:
+            return self._method(type_name, meth)
+        return None
+
+    def _method(self, cls_name: str, meth: str):
+        entry = self.classes.get(cls_name)
+        if entry is None:
+            return None
+        mod, cls_node = entry
+        for fn in iter_functions(cls_node):
+            if fn.name == meth:
+                return (mod, cls_name, fn)
+        # ``on_retain = on_alloc``-style method aliases
+        for node in cls_node.body:
+            if (
+                isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Name)
+                and any(
+                    isinstance(t, ast.Name) and t.id == meth
+                    for t in node.targets
+                )
+            ):
+                return self._method(cls_name, node.value.id)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# simulation: held-stack walk of every function
+# ---------------------------------------------------------------------------
+class _Simulator:
+    def __init__(self, world: _World):
+        self.world = world
+        self.edges: set[tuple[str, str]] = set()  # (outer, inner) by name
+        self.edge_sites: dict[tuple[str, str], tuple[str, int]] = {}
+        self.findings: list[Finding] = []
+        self._summary_cache: dict[tuple[int, int], tuple] = {}
+
+    # -- function summaries (for callee effects) -------------------------
+    def summary(self, mod, cls_name, fn, depth) -> tuple[set, list]:
+        """(locks acquired within, blocking call sites within), with
+        callee effects folded in down to ``depth`` more levels."""
+        key = (id(fn), depth)
+        hit = self._summary_cache.get(key)
+        if hit is not None:
+            return hit
+        self._summary_cache[key] = (set(), [])  # recursion guard
+        locks: set[str] = set()
+        blocking: list[tuple[str, int]] = []
+        param_types = self._param_types(fn)
+        local_types = self._local_types(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.With):
+                for item in node.items:
+                    d = self.world.lock_of_expr(
+                        item.context_expr, cls_name, local_types, param_types
+                    )
+                    if d is not None:
+                        locks.add(d.name)
+            elif isinstance(node, ast.Call):
+                name = call_name(node)
+                if name in BLOCKING_NAMES and not _is_yield_sleep(node):
+                    blocking.append((name, node.lineno))
+                elif depth > 0:
+                    resolved = self.world.resolve_callee(
+                        node, mod, cls_name, local_types, param_types
+                    )
+                    if resolved is not None:
+                        cl, cb = self.summary(*resolved, depth - 1)
+                        locks |= cl
+                        blocking.extend(cb)
+        self._summary_cache[key] = (locks, blocking)
+        return locks, blocking
+
+    def _param_types(self, fn) -> dict[str, str]:
+        out = {}
+        for a in fn.args.args + fn.args.kwonlyargs:
+            t = annotation_name(a.annotation)
+            if t in self.world.classes:
+                out[a.arg] = t
+        return out
+
+    def _local_types(self, fn) -> dict[str, str]:
+        out = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                n = call_name(node.value)
+                if n in self.world.classes:
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            out[t.id] = n
+        return out
+
+    # -- held-stack walk -------------------------------------------------
+    def run(self) -> None:
+        for mod in self.world.project.modules:
+            for fn in mod.tree.body:
+                if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._walk_fn(mod, "", fn)
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ClassDef):
+                    for fn in iter_functions(node):
+                        self._walk_fn(mod, node.name, fn)
+
+    def _walk_fn(self, mod, cls_name, fn) -> None:
+        ctx = {
+            "mod": mod, "cls": cls_name, "fn": fn,
+            "params": self._param_types(fn),
+            "locals": self._local_types(fn),
+        }
+        self._walk_stmts(fn.body, [], ctx)
+
+    def _walk_stmts(self, stmts, held: list[LockDecl], ctx) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, ast.With):
+                acquired = []
+                for item in stmt.items:
+                    d = self.world.lock_of_expr(
+                        item.context_expr, ctx["cls"],
+                        ctx["locals"], ctx["params"],
+                    )
+                    if d is not None:
+                        for h in held + acquired:
+                            self._edge(h, d, ctx["mod"], stmt.lineno)
+                        acquired.append(d)
+                self._walk_stmts(stmt.body, held + acquired, ctx)
+                continue
+            # non-with statements: scan calls in this statement's own
+            # expressions, then recurse into nested suites with the SAME
+            # held stack (if/for/while/try bodies don't change holding)
+            for expr in _stmt_exprs(stmt):
+                for node in ast.walk(expr):
+                    if isinstance(node, ast.Call):
+                        self._check_call(node, held, ctx)
+            for suite in _stmt_suites(stmt):
+                self._walk_stmts(suite, held, ctx)
+
+    def _edge(self, outer: LockDecl, inner: LockDecl, mod, line) -> None:
+        if outer.name == inner.name:
+            return
+        e = (outer.name, inner.name)
+        if e not in self.edges:
+            self.edges.add(e)
+            self.edge_sites[e] = (mod.relpath, line)
+
+    def _check_call(self, node: ast.Call, held, ctx) -> None:
+        if not held:
+            return
+        name = call_name(node)
+        strict = [h for h in held if not h.blocking_ok]
+        if name in BLOCKING_NAMES and not _is_yield_sleep(node):
+            if strict:
+                self.findings.append(_finding(
+                    "L003", ctx["mod"].relpath, node.lineno,
+                    f"blocking call '{name}' while holding "
+                    f"{strict[-1].name} (declared non-blocking)",
+                ))
+            return
+        resolved = self.world.resolve_callee(
+            node, ctx["mod"], ctx["cls"], ctx["locals"], ctx["params"]
+        )
+        if resolved is None:
+            return
+        locks, blocking = self.summary(*resolved, MAX_DEPTH - 1)
+        for lname in locks:
+            inner = next(
+                (d for d in self.world.decls if d.name == lname), None
+            )
+            if inner is not None:
+                for h in held:
+                    self._edge(h, inner, ctx["mod"], node.lineno)
+        if strict and blocking:
+            bname, bline = blocking[0]
+            self.findings.append(_finding(
+                "L003", ctx["mod"].relpath, node.lineno,
+                f"call '{name}' reaches blocking '{bname}' while holding "
+                f"{strict[-1].name} (declared non-blocking)",
+            ))
+
+
+def _is_yield_sleep(node: ast.Call) -> bool:
+    """``time.sleep(0)`` is a GIL yield, not a park."""
+    return (
+        call_name(node) == "sleep"
+        and len(node.args) == 1
+        and isinstance(node.args[0], ast.Constant)
+        and node.args[0].value == 0
+    )
+
+
+def _stmt_exprs(stmt: ast.stmt):
+    """Expressions belonging to ``stmt`` itself (not its nested suites)."""
+    for field_name, value in ast.iter_fields(stmt):
+        if field_name in ("body", "orelse", "finalbody", "handlers"):
+            continue
+        if isinstance(value, ast.expr):
+            yield value
+        elif isinstance(value, list):
+            for v in value:
+                if isinstance(v, ast.expr):
+                    yield v
+
+
+def _stmt_suites(stmt: ast.stmt):
+    for field_name in ("body", "orelse", "finalbody"):
+        suite = getattr(stmt, field_name, None)
+        if suite:
+            yield suite
+    for h in getattr(stmt, "handlers", None) or []:
+        yield h.body
+
+
+# ---------------------------------------------------------------------------
+# cycles
+# ---------------------------------------------------------------------------
+def find_cycle(edges: set[tuple[str, str]]) -> list[str] | None:
+    """One cycle as a node list (first == last), or None if acyclic."""
+    graph: dict[str, list[str]] = {}
+    for a, b in sorted(edges):
+        graph.setdefault(a, []).append(b)
+    WHITE, GREY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in graph}
+    stack: list[str] = []
+
+    def dfs(n: str) -> list[str] | None:
+        color[n] = GREY
+        stack.append(n)
+        for m in graph.get(n, []):
+            c = color.get(m, WHITE)
+            if c == GREY:
+                return stack[stack.index(m):] + [m]
+            if c == WHITE:
+                found = dfs(m)
+                if found:
+                    return found
+        stack.pop()
+        color[n] = BLACK
+        return None
+
+    for n in list(graph):
+        if color.get(n, 0) == WHITE:
+            found = dfs(n)
+            if found:
+                return found
+    return None
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+def build(project: Project):
+    """(decls, edges, findings) — reused by --emit-lock-graph and
+    --check-lock-log in the CLI."""
+    world = _World(project)
+    sim = _Simulator(world)
+    sim.run()
+    findings = list(world.findings) + list(sim.findings)
+    cycle = find_cycle(sim.edges)
+    if cycle:
+        e = (cycle[0], cycle[1])
+        file, line = sim.edge_sites.get(e, ("<graph>", 0))
+        findings.append(_finding(
+            "L002", file, line,
+            "lock-order cycle: " + " -> ".join(cycle),
+        ))
+    return world.decls, sim.edges, findings
+
+
+@register_pass(PASS)
+def run(project: Project) -> list[Finding]:
+    """Declared locks only; acyclic order; no blocking under strict locks."""
+    _decls, _edges, findings = build(project)
+    return findings

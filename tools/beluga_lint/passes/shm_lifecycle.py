@@ -1,0 +1,429 @@
+"""Shared-memory lifecycle (rules S001-S005).
+
+The plane's shm contract is *creator-unlinks, attacher-never-unlinks*:
+exactly one process (the creator of a named segment / FIFO) may remove
+the name; every attacher only drops its mapping.  Violations corrupt
+peers (early unlink) or leak ``/dev/shm`` entries (no unlink).  This
+pass proves the contract structurally:
+
+  S001  ``close_segment`` called without an explicit ``unlink=`` kwarg
+  S002  attach-derived segment closed with literal ``unlink=True``
+  S003  raw ``.unlink()`` outside ``close_segment`` / unguarded
+        ``os.unlink`` in an ``_owner``-discriminated class
+  S004  creator call's handle discarded (bare expression statement)
+  S005  created segment with no reachable teardown (attribute never
+        closed by any method; local that never escapes or closes)
+
+Creator calls: ``create_segment``, ``ShmRing.create_shared``,
+``<Class>.create`` (Doorbell, ShardJournal), ``SharedMemory(create=True)``.
+Attach calls: ``attach_segment``, ``<Class>.attach``.  Flow tracking is
+one-step on purpose — the repo's idiom is ``seg = create_segment(...)``
+followed immediately by ``self._seg = seg`` / ``return cls(..., seg)``,
+and keeping the analysis shallow keeps its verdicts explainable.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.beluga_lint import Finding, register_pass
+from tools.beluga_lint.project import Project, call_name, dotted, iter_functions
+
+PASS = "shm_lifecycle"
+
+CREATE, ATTACH = "create", "attach"
+
+
+def _finding(rule: str, mod, line: int, msg: str) -> Finding:
+    return Finding(PASS, rule, mod.relpath, line, msg)
+
+
+def _call_kind(node: ast.expr) -> str | None:
+    """CREATE/ATTACH when ``node`` is a recognized lifecycle call."""
+    if not isinstance(node, ast.Call):
+        return None
+    name = call_name(node)
+    recv = dotted(node.func.value) if isinstance(node.func, ast.Attribute) else ""
+    class_recv = bool(recv) and recv[:1].isupper()
+    if name in ("create_segment", "create_shared"):
+        return CREATE
+    if name == "create" and class_recv:
+        return CREATE
+    if name == "SharedMemory":
+        for kw in node.keywords:
+            if (
+                kw.arg == "create"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True
+            ):
+                return CREATE
+        return None
+    if name == "attach_segment" or (name == "attach" and class_recv):
+        return ATTACH
+    return None
+
+
+def _value_kinds(value: ast.expr) -> set[str]:
+    """Lifecycle kinds an assigned value may carry (IfExp checks arms)."""
+    kinds: set[str] = set()
+    if isinstance(value, ast.IfExp):
+        kinds |= _value_kinds(value.body)
+        kinds |= _value_kinds(value.orelse)
+        return kinds
+    k = _call_kind(value)
+    if k:
+        kinds.add(k)
+    return kinds
+
+
+def _assign_pairs(node: ast.Assign):
+    """Yield (target, value) pairs, unpacking parallel tuple assigns."""
+    for target in node.targets:
+        if (
+            isinstance(target, ast.Tuple)
+            and isinstance(node.value, ast.Tuple)
+            and len(target.elts) == len(node.value.elts)
+        ):
+            yield from zip(target.elts, node.value.elts)
+        else:
+            yield target, node.value
+
+
+def _self_attr(expr: ast.expr) -> str | None:
+    if (
+        isinstance(expr, ast.Attribute)
+        and isinstance(expr.value, ast.Name)
+        and expr.value.id == "self"
+    ):
+        return expr.attr
+    return None
+
+
+def _init_param_names(cls: ast.ClassDef) -> list[str]:
+    for fn in iter_functions(cls):
+        if fn.name == "__init__":
+            pos = [a.arg for a in fn.args.args[1:]]  # skip self
+            kw = [a.arg for a in fn.args.kwonlyargs]
+            return pos + kw
+    return []
+
+
+def _init_attr_of_param(cls: ast.ClassDef) -> dict[str, str]:
+    """``__init__`` flows ``param -> self.attr`` (direct assigns only)."""
+    out: dict[str, str] = {}
+    for fn in iter_functions(cls):
+        if fn.name != "__init__":
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            for tgt, val in _assign_pairs(node):
+                attr = _self_attr(tgt)
+                if attr and isinstance(val, ast.Name):
+                    out[val.id] = attr
+    return out
+
+
+class _ClassFacts:
+    """Per-class segment-attribute ledger: sources + teardowns."""
+
+    def __init__(self, mod, cls: ast.ClassDef):
+        self.mod = mod
+        self.cls = cls
+        self.attr_sources: dict[str, set[str]] = {}
+        self.attr_lines: dict[str, int] = {}
+        self.torn_down: set[str] = set()
+        self._collect()
+
+    def _note_attr(self, attr: str, kinds: set[str], line: int) -> None:
+        if not kinds:
+            return
+        self.attr_sources.setdefault(attr, set()).update(kinds)
+        self.attr_lines.setdefault(attr, line)
+
+    def _collect(self) -> None:
+        init_params = _init_param_names(self.cls)
+        param_attr = _init_attr_of_param(self.cls)
+        for fn in iter_functions(self.cls):
+            local_kinds: dict[str, set[str]] = {}
+            local_alias: dict[str, str] = {}  # local <- self.attr
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    for tgt, val in _assign_pairs(node):
+                        kinds = _value_kinds(val)
+                        if isinstance(val, ast.Name) and val.id in local_kinds:
+                            kinds = kinds | local_kinds[val.id]
+                        attr = _self_attr(tgt)
+                        if attr is not None:
+                            self._note_attr(attr, kinds, node.lineno)
+                            src_attr = _self_attr(val)
+                            if (
+                                isinstance(tgt, ast.Name)
+                                and src_attr is not None
+                            ):
+                                local_alias[tgt.id] = src_attr
+                        elif isinstance(tgt, ast.Name):
+                            if kinds:
+                                local_kinds[tgt.id] = kinds
+                            src_attr = _self_attr(val)
+                            if src_attr is not None:
+                                local_alias[tgt.id] = src_attr
+                if isinstance(node, ast.Call):
+                    self._scan_call(node, fn, init_params, param_attr,
+                                    local_kinds, local_alias)
+
+    def _scan_call(self, node, fn, init_params, param_attr,
+                   local_kinds, local_alias) -> None:
+        name = call_name(node)
+        # constructor flow: cls(seg, ...) / ClassName(seg, ...) inside a
+        # classmethod routes a created handle into an __init__ param
+        is_ctor = (
+            isinstance(node.func, ast.Name)
+            and node.func.id in ("cls", self.cls.name)
+        )
+        if is_ctor:
+            def arg_kinds(a: ast.expr) -> set[str]:
+                k = _value_kinds(a)
+                if isinstance(a, ast.Name):
+                    k = k | local_kinds.get(a.id, set())
+                return k
+
+            for i, a in enumerate(node.args):
+                if i < len(init_params):
+                    attr = param_attr.get(init_params[i])
+                    if attr:
+                        self._note_attr(attr, arg_kinds(a), node.lineno)
+            for kw in node.keywords:
+                attr = param_attr.get(kw.arg or "")
+                if attr:
+                    self._note_attr(attr, arg_kinds(kw.value), node.lineno)
+        # teardowns ----------------------------------------------------
+        if name == "close_segment" and node.args:
+            a0 = node.args[0]
+            attr = _self_attr(a0)
+            if attr is None and isinstance(a0, ast.Name):
+                attr = local_alias.get(a0.id)
+            if attr:
+                self.torn_down.add(attr)
+        elif name in ("close", "unshare_meta", "unshare_data"):
+            recv = (
+                node.func.value
+                if isinstance(node.func, ast.Attribute) else None
+            )
+            if recv is not None:
+                attr = _self_attr(recv)
+                if attr is None and isinstance(recv, ast.Name):
+                    attr = local_alias.get(recv.id)
+                if attr:
+                    self.torn_down.add(attr)
+
+
+def _attach_only_targets(mod, facts_by_class: dict) -> dict[str, set[str]]:
+    """class name -> attrs whose ONLY source is attach (S002 targets)."""
+    out: dict[str, set[str]] = {}
+    for cname, facts in facts_by_class.items():
+        out[cname] = {
+            a for a, srcs in facts.attr_sources.items() if srcs == {ATTACH}
+        }
+    return out
+
+
+def _check_module(mod, project: Project, out: list[Finding]) -> None:
+    facts_by_class: dict[str, _ClassFacts] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.ClassDef):
+            facts_by_class[node.name] = _ClassFacts(mod, node)
+
+    attach_only = _attach_only_targets(mod, facts_by_class)
+
+    class _Visitor(ast.NodeVisitor):
+        def __init__(self):
+            self.cls_stack: list[str] = []
+            self.fn_stack: list[ast.FunctionDef] = []
+            self.owner_guard = 0  # depth of `if ..._owner...:` ancestors
+            self.local_attach: dict[int, set[str]] = {}  # per-fn frame
+
+        # -- structure -------------------------------------------------
+        def visit_ClassDef(self, node):
+            self.cls_stack.append(node.name)
+            self.generic_visit(node)
+            self.cls_stack.pop()
+
+        def _visit_fn(self, node):
+            self.fn_stack.append(node)
+            frame: set[str] = set()
+            self.local_attach[id(node)] = frame
+            # pre-scan: locals assigned from attach calls
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Assign):
+                    for tgt, val in _assign_pairs(sub):
+                        if (
+                            isinstance(tgt, ast.Name)
+                            and ATTACH in _value_kinds(val)
+                        ):
+                            frame.add(tgt.id)
+            self.generic_visit(node)
+            self.fn_stack.pop()
+            del self.local_attach[id(node)]
+
+        visit_FunctionDef = _visit_fn
+        visit_AsyncFunctionDef = _visit_fn
+
+        def visit_If(self, node):
+            guarded = any(
+                isinstance(n, (ast.Name, ast.Attribute))
+                and (getattr(n, "id", "") or getattr(n, "attr", ""))
+                .endswith("_owner")
+                for n in ast.walk(node.test)
+            )
+            self.owner_guard += 1 if guarded else 0
+            self.generic_visit(node)
+            self.owner_guard -= 1 if guarded else 0
+
+        # -- statements ------------------------------------------------
+        def visit_Expr(self, node):
+            if _call_kind(node.value) == CREATE:
+                out.append(_finding(
+                    "S004", mod, node.lineno,
+                    "created segment handle is discarded; bind it so a "
+                    "teardown path can unlink it",
+                ))
+            self.generic_visit(node)
+
+        def visit_Call(self, node):
+            name = call_name(node)
+            if name == "close_segment":
+                self._check_close_segment(node)
+            elif name == "unlink":
+                self._check_unlink(node)
+            self.generic_visit(node)
+
+        # -- rules -----------------------------------------------------
+        def _check_close_segment(self, node: ast.Call) -> None:
+            unlink_kw = next(
+                (kw for kw in node.keywords if kw.arg == "unlink"), None
+            )
+            if unlink_kw is None:
+                out.append(_finding(
+                    "S001", mod, node.lineno,
+                    "close_segment without explicit unlink= — ownership "
+                    "must be stated at every teardown site",
+                ))
+                return
+            literal_true = (
+                isinstance(unlink_kw.value, ast.Constant)
+                and unlink_kw.value.value is True
+            )
+            if not (literal_true and node.args):
+                return
+            a0 = node.args[0]
+            target_attach = False
+            attr = _self_attr(a0)
+            if attr is not None and self.cls_stack:
+                target_attach = attr in attach_only.get(self.cls_stack[-1], ())
+            elif isinstance(a0, ast.Name) and self.fn_stack:
+                frame = self.local_attach[id(self.fn_stack[-1])]
+                target_attach = a0.id in frame
+            if target_attach:
+                out.append(_finding(
+                    "S002", mod, node.lineno,
+                    "attach-derived segment closed with unlink=True — only "
+                    "the creator may unlink a shared name",
+                ))
+
+        def _check_unlink(self, node: ast.Call) -> None:
+            recv = (
+                dotted(node.func.value)
+                if isinstance(node.func, ast.Attribute) else ""
+            )
+            in_fn = self.fn_stack[-1].name if self.fn_stack else ""
+            if recv == "os":
+                owner_classes = {
+                    c for c, f in facts_by_class.items()
+                    if any(
+                        fn.name == "__init__" and any(
+                            a.arg == "_owner"
+                            for a in fn.args.args + fn.args.kwonlyargs
+                        )
+                        for fn in iter_functions(f.cls)
+                    )
+                }
+                if (
+                    self.cls_stack
+                    and self.cls_stack[-1] in owner_classes
+                    and self.owner_guard == 0
+                ):
+                    out.append(_finding(
+                        "S003", mod, node.lineno,
+                        "os.unlink in an _owner-discriminated class must be "
+                        "guarded by the owner flag",
+                    ))
+            elif in_fn != "close_segment":
+                out.append(_finding(
+                    "S003", mod, node.lineno,
+                    "raw segment .unlink() outside close_segment — route "
+                    "teardown through close_segment(seg, unlink=...)",
+                ))
+
+    _Visitor().visit(mod.tree)
+
+    # S005: creator attributes need a reachable teardown -----------------
+    for cname, facts in facts_by_class.items():
+        for attr, srcs in sorted(facts.attr_sources.items()):
+            if CREATE in srcs and attr not in facts.torn_down:
+                out.append(_finding(
+                    "S005", mod, facts.attr_lines[attr],
+                    f"{cname}.{attr} is created but no method of "
+                    f"{cname} ever closes/unlinks it",
+                ))
+
+    # S005 (locals): created handle that never escapes the function ------
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        created: dict[str, int] = {}
+        escaped: set[str] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Assign):
+                for tgt, val in _assign_pairs(sub):
+                    if isinstance(tgt, ast.Name):
+                        if CREATE in _value_kinds(val):
+                            created[tgt.id] = sub.lineno
+                        elif isinstance(val, ast.Name):
+                            escaped.add(val.id)  # aliased onward
+                    else:
+                        for ref in ast.walk(val):
+                            if isinstance(ref, ast.Name):
+                                escaped.add(ref.id)
+            elif isinstance(sub, ast.Return) and sub.value is not None:
+                for ref in ast.walk(sub.value):
+                    if isinstance(ref, ast.Name):
+                        escaped.add(ref.id)
+            elif isinstance(sub, ast.Call):
+                if call_name(sub) in ("close", "close_segment", "unlink"):
+                    recv = (
+                        sub.func.value
+                        if isinstance(sub.func, ast.Attribute) else None
+                    )
+                    if isinstance(recv, ast.Name):
+                        escaped.add(recv.id)
+                for a in list(sub.args) + [kw.value for kw in sub.keywords]:
+                    for ref in ast.walk(a):
+                        if isinstance(ref, ast.Name):
+                            escaped.add(ref.id)
+        for name, line in sorted(created.items()):
+            if name not in escaped:
+                out.append(_finding(
+                    "S005", mod, line,
+                    f"created segment '{name}' neither escapes "
+                    f"{node.name} nor is closed — leaked /dev/shm entry",
+                ))
+
+
+@register_pass(PASS)
+def run(project: Project) -> list[Finding]:
+    """Creator-unlinks contract: every created segment has a teardown."""
+    out: list[Finding] = []
+    for mod in project.modules:
+        _check_module(mod, project, out)
+    return out

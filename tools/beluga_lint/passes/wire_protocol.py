@@ -1,0 +1,191 @@
+"""Wire-protocol conformance (rules W001-W008).
+
+Extracts the ``OP_*`` registry from any module that defines one (in this
+repo: ``repro/core/wire.py``) and the ``WCMD_*`` worker-command registry
+(``repro/serving/engineproc.py``) and proves every opcode is fully
+plumbed.  A new ``OP_FOO = 21`` without a handler branch, reply-bound
+entry, encoder — and, for ops that carry block ids, a ``prevalidate``
+branch — fails here before any test would notice.
+
+  W001  duplicate opcode value inside one registry
+  W002  op has no handler branch (no ``op == OP_X`` in any ``handle_*``)
+  W003  op missing from every ``*reply_bound`` sizing function
+  W004  index-plane op carries block ids but has no ``prevalidate`` branch
+  W005  op has no ``encode_*`` function packing it
+  W006  dispatcher compares the op against a bare integer literal
+  W007  worker command (WCMD) with no handler branch
+  W008  worker command never packed/encoded anywhere
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.beluga_lint import Finding, register_pass
+from tools.beluga_lint.project import (
+    Project,
+    compared_names,
+    const_int_assigns,
+    referenced_names,
+)
+
+PASS = "wire_protocol"
+
+
+def _finding(rule: str, mod, line: int, msg: str) -> Finding:
+    return Finding(PASS, rule, mod.relpath, line, msg)
+
+
+def _dup_values(consts: dict, mod, out: list, rule: str) -> None:
+    by_val: dict[int, list[str]] = {}
+    for name, (val, _line) in consts.items():
+        by_val.setdefault(val, []).append(name)
+    for val, names in sorted(by_val.items()):
+        if len(names) > 1:
+            line = min(consts[n][1] for n in names)
+            out.append(_finding(
+                rule, mod, line,
+                f"duplicate opcode value {val}: {', '.join(sorted(names))}",
+            ))
+
+
+def _functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    return {
+        n.name: n for n in tree.body
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+
+def _check_op_registry(mod, out: list[Finding]) -> None:
+    consts = const_int_assigns(mod.tree, "OP_")
+    if len(consts) < 2:
+        return
+    names = set(consts)
+    funcs = _functions(mod.tree)
+    handlers = {n: f for n, f in funcs.items() if n.startswith("handle_")}
+    bounds = {n: f for n, f in funcs.items() if n.endswith("reply_bound")}
+    prevalidate = funcs.get("prevalidate")
+    encoders = {n: f for n, f in funcs.items() if n.startswith("encode_")}
+
+    _dup_values(consts, mod, out, "W001")
+
+    handled: set[str] = set()
+    for f in handlers.values():
+        handled |= compared_names(f, names)
+    bounded: set[str] = set()
+    index_plane: set[str] = set()
+    for bname, f in bounds.items():
+        ops = compared_names(f, names)
+        bounded |= ops
+        if bname == "reply_bound":
+            index_plane |= ops
+    prechecked = (
+        compared_names(prevalidate, names) if prevalidate is not None else set()
+    )
+
+    # op -> encoder functions that reference it; and whether any encoder
+    # for the op takes an ids-shaped parameter (block ids cross the wire)
+    op_encoders: dict[str, list[ast.FunctionDef]] = {n: [] for n in names}
+    for f in encoders.values():
+        for op in referenced_names(f, names):
+            op_encoders[op].append(f)
+
+    for name in sorted(names):
+        _val, line = consts[name]
+        if name not in handled:
+            out.append(_finding(
+                "W002", mod, line,
+                f"{name} has no handler branch in any handle_* dispatcher",
+            ))
+        if name not in bounded:
+            out.append(_finding(
+                "W003", mod, line,
+                f"{name} missing from every reply_bound sizing function",
+            ))
+        if not op_encoders[name]:
+            out.append(_finding(
+                "W005", mod, line,
+                f"{name} has no encode_* function (orphaned opcode)",
+            ))
+        if name in index_plane and name not in prechecked:
+            carries_ids = any(
+                arg.arg == "ids" or arg.arg.endswith("_ids")
+                for f in op_encoders[name]
+                for arg in (f.args.args + f.args.kwonlyargs)
+            )
+            if carries_ids:
+                out.append(_finding(
+                    "W004", mod, line,
+                    f"{name} carries block ids but has no prevalidate "
+                    "range-check branch",
+                ))
+
+    # W006: dispatchers must compare against registry names, not literals
+    dispatchers = list(handlers.values()) + list(bounds.values())
+    if prevalidate is not None:
+        dispatchers.append(prevalidate)
+    known_values = {v for v, _l in consts.values()}
+    for f in dispatchers:
+        for node in ast.walk(f):
+            if not isinstance(node, ast.Compare):
+                continue
+            target = node.left
+            if not (isinstance(target, ast.Name) and target.id == "op"):
+                continue
+            for comp in node.comparators:
+                if (
+                    isinstance(comp, ast.Constant)
+                    and isinstance(comp.value, int)
+                ):
+                    tag = (
+                        "an unregistered" if comp.value not in known_values
+                        else "a bare"
+                    )
+                    out.append(_finding(
+                        "W006", mod, node.lineno,
+                        f"{f.name} compares op against {tag} integer "
+                        f"literal {comp.value}; use the OP_* constant",
+                    ))
+
+
+def _check_wcmd_registry(mod, out: list[Finding]) -> None:
+    consts = const_int_assigns(mod.tree, "WCMD_")
+    if len(consts) < 2:
+        return
+    names = set(consts)
+    _dup_values(consts, mod, out, "W001")
+
+    handled = compared_names(mod.tree, names)
+    # encoded: packed into a frame (``_HDR.pack(WCMD_X, ...)`` or any
+    # call argument) anywhere OUTSIDE a comparison
+    encoded: set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call):
+            for arg in node.args:
+                for ref in ast.walk(arg):
+                    if isinstance(ref, ast.Name) and ref.id in names:
+                        encoded.add(ref.id)
+
+    for name in sorted(names):
+        _val, line = consts[name]
+        if name not in handled:
+            out.append(_finding(
+                "W007", mod, line,
+                f"{name} has no worker-handler branch (no comparison "
+                "against it anywhere in the module)",
+            ))
+        if name not in encoded:
+            out.append(_finding(
+                "W008", mod, line,
+                f"{name} is never packed into a command frame",
+            ))
+
+
+@register_pass(PASS)
+def run(project: Project) -> list[Finding]:
+    """Opcode registries fully plumbed: handler, bound, codec, prevalidate."""
+    out: list[Finding] = []
+    for mod in project.modules:
+        _check_op_registry(mod, out)
+        _check_wcmd_registry(mod, out)
+    return out

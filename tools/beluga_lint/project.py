@@ -1,0 +1,187 @@
+"""Parsed-source model + shared AST helpers for beluga-lint passes.
+
+A ``Project`` is the set of parsed Python modules under the scan roots.
+Passes never import the scanned code — everything is derived from the
+AST — so the linter runs on a bare checkout with no dependencies and
+can analyze deliberately broken trees (its own mutation tests).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Module:
+    path: str  # absolute
+    relpath: str  # relative to the scan root (stable in findings)
+    tree: ast.Module
+    source: str
+
+    @property
+    def name(self) -> str:
+        return os.path.basename(self.path)
+
+
+@dataclass
+class Project:
+    modules: list[Module] = field(default_factory=list)
+
+    @classmethod
+    def load(cls, roots: list[str]) -> "Project":
+        proj = cls()
+        for root in roots:
+            root = os.path.abspath(root)
+            if os.path.isfile(root):
+                proj._add(root, os.path.basename(root))
+                continue
+            base = os.path.dirname(root.rstrip(os.sep))
+            for dirpath, dirnames, filenames in os.walk(root):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d != "__pycache__" and not d.startswith(".")
+                )
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        full = os.path.join(dirpath, fn)
+                        proj._add(full, os.path.relpath(full, base))
+        return proj
+
+    def _add(self, path: str, relpath: str) -> None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        self.modules.append(Module(
+            path=path, relpath=relpath,
+            tree=ast.parse(source, filename=path), source=source,
+        ))
+
+    # -- cross-module indexes -------------------------------------------
+    def classes(self):
+        """Yield (module, ClassDef) for every class in the project."""
+        for mod in self.modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.ClassDef):
+                    yield mod, node
+
+    def class_index(self) -> dict[str, tuple[Module, ast.ClassDef]]:
+        """Class name -> (module, node); later duplicates win (rare)."""
+        out = {}
+        for mod, cls in self.classes():
+            out[cls.name] = (mod, cls)
+        return out
+
+    def module_functions(self, mod: Module) -> dict[str, ast.FunctionDef]:
+        """Top-level function defs of one module, by name."""
+        return {
+            n.name: n for n in mod.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by passes
+# ---------------------------------------------------------------------------
+def call_name(call: ast.Call) -> str:
+    """Last path component of the called thing ('x.y.z(...)' -> 'z')."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def call_receiver(call: ast.Call) -> ast.expr | None:
+    """The object a method is called on, or None for bare calls."""
+    if isinstance(call.func, ast.Attribute):
+        return call.func.value
+    return None
+
+
+def dotted(expr: ast.expr) -> str:
+    """'self._pool_ring' / 'os.path' rendered as a dotted string ('' if
+    the expression is not a plain name/attribute chain)."""
+    parts = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        parts.append(expr.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def const_int_assigns(tree: ast.AST, prefix: str) -> dict[str, tuple[int, int]]:
+    """Module-level ``NAME = <int>`` (and tuple-unpack) constants whose
+    name starts with ``prefix``; returns name -> (value, lineno)."""
+    out: dict[str, tuple[int, int]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        for target in node.targets:
+            if (
+                isinstance(target, ast.Name)
+                and target.id.startswith(prefix)
+                and isinstance(node.value, ast.Constant)
+                and isinstance(node.value.value, int)
+            ):
+                out[target.id] = (node.value.value, node.lineno)
+            elif (
+                isinstance(target, ast.Tuple)
+                and isinstance(node.value, ast.Tuple)
+                and len(target.elts) == len(node.value.elts)
+            ):
+                for t, v in zip(target.elts, node.value.elts):
+                    if (
+                        isinstance(t, ast.Name)
+                        and t.id.startswith(prefix)
+                        and isinstance(v, ast.Constant)
+                        and isinstance(v.value, int)
+                    ):
+                        out[t.id] = (v.value, node.lineno)
+    return out
+
+
+def compared_names(func: ast.AST, names: set[str]) -> set[str]:
+    """Names from ``names`` used in ``x == NAME`` / ``x in (NAME, ...)``
+    comparisons anywhere under ``func``."""
+    hit: set[str] = set()
+    for node in ast.walk(func):
+        if not isinstance(node, ast.Compare):
+            continue
+        for comp in node.comparators:
+            for ref in ast.walk(comp):
+                if isinstance(ref, ast.Name) and ref.id in names:
+                    hit.add(ref.id)
+    return hit
+
+
+def referenced_names(node: ast.AST, names: set[str]) -> set[str]:
+    """Subset of ``names`` referenced as plain Names under ``node``."""
+    return {
+        n.id for n in ast.walk(node)
+        if isinstance(n, ast.Name) and n.id in names
+    }
+
+
+def annotation_name(ann: ast.expr | None) -> str:
+    """Class name out of a parameter annotation (Name, string constant,
+    or 'X | None' unions); '' when unresolvable."""
+    if ann is None:
+        return ""
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value.split("|")[0].strip()
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        left = annotation_name(ann.left)
+        return left or annotation_name(ann.right)
+    return ""
+
+
+def iter_functions(cls: ast.ClassDef):
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
