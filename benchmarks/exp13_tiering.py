@@ -18,6 +18,12 @@ advancing in lockstep windows) so routing sees live load signals.
 fast-forwarded every engine clock to the last pre-dispatched arrival;
 PR 3 removed it, so open-loop streams no longer inflate TTFT either way.)
 
+The **tier_chain** sweep compares chain DEPTHS at the same fast capacity
+and the same (constrained) RDMA-DRAM spill budget: destroy-on-evict
+(flat), the 2-tier chain, and the 3-level chain with a deep SSD-class
+tier hung below — at >=2x oversubscription the 3-tier chain must beat
+destroy-on-evict on avg TTFT (CI-gated from the emitted artifact).
+
 Also runs the **zero-cost check**: a ``tiering=off`` config must reproduce
 the PR-1 exp05-small summary stats bit-identically (captured below from
 the PR-1 code on this container) — the subsystem must cost nothing when
@@ -117,6 +123,59 @@ def _round_shards(n: int, shards: int) -> int:
     return max(shards, -(-n // shards) * shards)
 
 
+def _measure(
+    cfg: ClusterConfig,
+    layout,
+    skew: float,
+    n: int,
+    n_docs: int,
+    in_len: int,
+    out_len: int,
+    rate: float,
+) -> dict:
+    """Populate every doc once, then measure TTFT over a Zipf re-request
+    stream — one cluster config, the shared protocol of every sweep."""
+    c = Cluster(cfg, layout)
+    populate = [
+        Request(f"p{d}", _doc_tokens(d, in_len), out_len, arrival=0.1 * d)
+        for d in range(n_docs)
+    ]
+    run_stream(c, populate)
+    t0 = max(e.clock for e in c.engines)
+    rng = np.random.default_rng(17)
+    t = t0
+    stream = []
+    for i, d in enumerate(zipf_docs(n, n_docs, skew).tolist()):
+        stream.append(
+            Request(f"z{i}", _doc_tokens(d, in_len), out_len, arrival=t)
+        )
+        t += rng.exponential(1.0 / rate)
+    run_stream(c, stream)
+    finished = [r.t_done for r in stream if r.t_done is not None]
+    span = (max(finished) - t0) if finished else 0.0
+    s = summarize(stream, span)
+    out = {
+        "avg_ttft_s": s["avg_ttft_s"],
+        "p99_ttft_s": s["p99_ttft_s"],
+        "qps": s["qps"],
+        "hit_tokens": s["hit_tokens"],
+    }
+    if c.migrator is not None:
+        out["stats"] = c.pool.stats_dict()
+        out["stats"]["migrator_steps"] = c.migrator.steps
+    return out
+
+
+def _base_cfg(fast_blocks: int, shards: int, n_engines: int) -> dict:
+    return dict(
+        n_engines=n_engines,
+        transfer_mode="beluga",
+        pool_blocks=fast_blocks,
+        pool_shards=shards,
+        hbm_slots_per_engine=6750,
+    )
+
+
 def sweep_cell(
     oversub: float,
     skew: float,
@@ -133,13 +192,7 @@ def sweep_cell(
     shards = 32
     fast_blocks = _round_shards(int(working_set / oversub), shards)
     spill_blocks = _round_shards(4 * fast_blocks, shards)
-    base = dict(
-        n_engines=n_engines,
-        transfer_mode="beluga",
-        pool_blocks=fast_blocks,
-        pool_shards=shards,
-        hbm_slots_per_engine=6750,
-    )
+    base = _base_cfg(fast_blocks, shards, n_engines)
     configs = {
         "baseline": ClusterConfig(**base),
         "tiered": ClusterConfig(
@@ -155,36 +208,74 @@ def sweep_cell(
         "spill_blocks": spill_blocks,
     }
     for name, cfg in configs.items():
-        c = Cluster(cfg, layout)
-        populate = [
-            Request(f"p{d}", _doc_tokens(d, in_len), out_len, arrival=0.1 * d)
-            for d in range(n_docs)
-        ]
-        run_stream(c, populate)
-        t0 = max(e.clock for e in c.engines)
-        rng = np.random.default_rng(17)
-        t = t0
-        stream = []
-        for i, d in enumerate(zipf_docs(n, n_docs, skew).tolist()):
-            stream.append(
-                Request(f"z{i}", _doc_tokens(d, in_len), out_len, arrival=t)
-            )
-            t += rng.exponential(1.0 / rate)
-        run_stream(c, stream)
-        finished = [r.t_done for r in stream if r.t_done is not None]
-        span = (max(finished) - t0) if finished else 0.0
-        s = summarize(stream, span)
-        out[name] = {
-            "avg_ttft_s": s["avg_ttft_s"],
-            "p99_ttft_s": s["p99_ttft_s"],
-            "qps": s["qps"],
-            "hit_tokens": s["hit_tokens"],
-        }
-        if name == "tiered":
-            out[name]["stats"] = c.pool.stats_dict()
-            out[name]["stats"]["migrator_steps"] = c.migrator.steps
+        out[name] = _measure(
+            cfg, layout, skew, n, n_docs, in_len, out_len, rate
+        )
     out["ttft_ratio"] = out["baseline"]["avg_ttft_s"] / max(
         out["tiered"]["avg_ttft_s"], 1e-12
+    )
+    return out
+
+
+def tier_chain_cell(
+    oversub: float,
+    skew: float,
+    n: int,
+    n_docs: int,
+    in_len: int,
+    out_len: int = 8,
+    rate: float = 8.0,
+    n_engines: int = 4,
+) -> dict:
+    """2-tier vs 3-tier vs destroy-on-evict at the same fast capacity.
+
+    The RDMA-DRAM spill budget is held FIXED (1x fast — far-NUMA memory
+    is a constrained resource, it does not scale with demand); the
+    3-level chain then hangs a deep SSD-class tier below it (cheap
+    capacity).  At >=2x oversubscription the 2-tier chain must
+    evict-to-destroy from its bottom while the 3-tier chain demotes the
+    cold tail further down and keeps it fetchable at SSD latency — the
+    ITME-style hierarchy argument.
+    """
+    layout = qwen32b_layout()
+    working_set = n_docs * (in_len // layout.block_tokens)
+    shards = 32
+    fast_blocks = _round_shards(int(working_set / oversub), shards)
+    spill_blocks = _round_shards(fast_blocks, shards)
+    deep_blocks = _round_shards(4 * fast_blocks, shards)
+    base = _base_cfg(fast_blocks, shards, n_engines)
+    configs = {
+        "destroy": ClusterConfig(**base),  # flat: evict == destroy
+        "two_tier": ClusterConfig(
+            **base,
+            tiering=TieringConfig(enabled=True, spill_blocks=spill_blocks),
+        ),
+        "three_tier": ClusterConfig(
+            **base,
+            tiering=TieringConfig(
+                enabled=True,
+                spill_blocks=spill_blocks,
+                extra_tiers=((deep_blocks, "ssd"),),
+            ),
+        ),
+    }
+    out = {
+        "oversubscription": oversub,
+        "zipf_skew": skew,
+        "working_set_blocks": working_set,
+        "fast_blocks": fast_blocks,
+        "spill_blocks": spill_blocks,
+        "deep_blocks": deep_blocks,
+    }
+    for name, cfg in configs.items():
+        out[name] = _measure(
+            cfg, layout, skew, n, n_docs, in_len, out_len, rate
+        )
+    out["ttft_ratio_3t"] = out["destroy"]["avg_ttft_s"] / max(
+        out["three_tier"]["avg_ttft_s"], 1e-12
+    )
+    out["ttft_ratio_2t"] = out["destroy"]["avg_ttft_s"] / max(
+        out["two_tier"]["avg_ttft_s"], 1e-12
     )
     return out
 
@@ -216,12 +307,14 @@ def zero_cost_check() -> dict:
 def run(fast: bool = False) -> list[tuple]:
     if fast:
         cells = [(2.0, 1.1)]
+        chain_cells = [(2.0, 1.1)]
         n, n_docs, in_len = 64, 16, 1024
     else:
         cells = [(1.0, 1.1), (2.0, 0.8), (2.0, 1.1), (4.0, 1.1)]
+        chain_cells = [(2.0, 1.1), (4.0, 1.1)]
         n, n_docs, in_len = 96, 24, 2048
 
-    results: dict = {"fast": fast, "cells": []}
+    results: dict = {"fast": fast, "cells": [], "tier_chain": []}
     rows = []
     for oversub, skew in cells:
         cell = sweep_cell(oversub, skew, n=n, n_docs=n_docs, in_len=in_len)
@@ -237,6 +330,24 @@ def run(fast: bool = False) -> list[tuple]:
                 f"demotions={t.get('demotions', 0)};"
                 f"promotions={t.get('promotions', 0)};"
                 f"spill_hits={t.get('spill_hit_blocks', 0)}",
+            )
+        )
+    for oversub, skew in chain_cells:
+        cell = tier_chain_cell(
+            oversub, skew, n=n, n_docs=n_docs, in_len=in_len
+        )
+        results["tier_chain"].append(cell)
+        t3 = cell["three_tier"]["stats"]
+        rows.append(
+            (
+                f"exp13.tier_chain.os{oversub:g}.zipf{skew:g}",
+                f"{cell['three_tier']['avg_ttft_s'] * 1e6:.0f}",
+                f"ttft_destroy={cell['destroy']['avg_ttft_s'] * 1e3:.0f}ms;"
+                f"ttft_2t={cell['two_tier']['avg_ttft_s'] * 1e3:.0f}ms;"
+                f"ttft_3t={cell['three_tier']['avg_ttft_s'] * 1e3:.0f}ms;"
+                f"ratio_3t={cell['ttft_ratio_3t']:.2f}x;"
+                f"tier_writes={t3.get('tier_writes')};"
+                f"spill_evictions={t3.get('spill_evictions', 0)}",
             )
         )
 

@@ -87,9 +87,20 @@ class FabricConstants:
     spill_dram_rdma_bw: float = 20.0 * GB  # shared far-NUMA / RDMA fabric
     spill_ssd_latency: float = 80.0 * US  # NVMe read latency class
     spill_ssd_bw: float = 6.0 * GB  # PCIe4 x4 NVMe device
+    spill_hdd_latency: float = 4000.0 * US  # archival spindle/SMR class
+    spill_hdd_bw: float = 0.25 * GB
 
 
 DEFAULT = FabricConstants()
+
+# spill-media catalog: medium name -> (latency attr, bandwidth attr) on
+# ``FabricConstants``.  The tiered pool chain prices each boundary from
+# this table, so adding a medium is one row + two constants.
+SPILL_MEDIA: dict = {
+    "rdma_dram": ("spill_dram_rdma_latency", "spill_dram_rdma_bw"),
+    "ssd": ("spill_ssd_latency", "spill_ssd_bw"),
+    "hdd": ("spill_hdd_latency", "spill_hdd_bw"),
+}
 
 
 # ---------------------------------------------------------------------------
@@ -175,12 +186,13 @@ def local_dram_latency(size: int, c: FabricConstants = DEFAULT) -> float:
 def spill_transfer_latency(
     size: int, media: str = "rdma_dram", c: FabricConstants = DEFAULT
 ) -> float:
-    """Spill-tier (below-pool) media access: far DRAM over RDMA or SSD."""
-    if media == "rdma_dram":
-        return c.spill_dram_rdma_latency + size / c.spill_dram_rdma_bw
-    if media == "ssd":
-        return c.spill_ssd_latency + size / c.spill_ssd_bw
-    raise ValueError(media)
+    """Spill-tier (below-pool) media access, priced per medium from the
+    ``SPILL_MEDIA`` catalog (far DRAM over RDMA, NVMe SSD, archival HDD)."""
+    try:
+        lat_attr, bw_attr = SPILL_MEDIA[media]
+    except KeyError:
+        raise ValueError(media) from None
+    return getattr(c, lat_attr) + size / getattr(c, bw_attr)
 
 
 # ---------------------------------------------------------------------------

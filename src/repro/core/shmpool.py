@@ -372,3 +372,61 @@ class WorkerPoolView:
 
     def close(self) -> None:
         self._shared.close()
+
+
+class TieredWorkerPoolView(WorkerPoolView):
+    """Worker-side surface of a shared ``TieredPool``.
+
+    ``TieredPool.share_data`` exports ONE concatenated segment over the
+    global block-id space, so the zero-copy data plane is byte-identical
+    to the flat case — this subclass only adds the tiered *control*
+    surface ``KVCacheManager`` uses when ``is_tiered``:
+
+      * ``allocate(n, keys=...)`` forwards writeback keys over the ring
+        (``OP_POOL_ALLOC_KEYS``) so ghost-LRU admission runs where the
+        policy lives, in the pool-owning parent;
+      * ``touch_demand`` round-trips the demand signal
+        (``OP_POOL_TOUCH``) — heat decay, promotion enqueue and the
+        per-tier split all happen parent-side; the reply's per-tier
+        counts price the fetch locally;
+      * ``tick`` is a no-op: the hotness clock advances in the parent
+        on every touch, and a worker-local clock would race it;
+      * ``count_tier_hits`` books into a worker-local ``TierStats``
+        (classified against the exported tier boundaries) — actual-hit
+        accounting is observability, not policy, so it stays off the
+        ring.
+    """
+
+    is_tiered = True
+
+    def __init__(self, shared: SharedPoolData, alloc, tiering: dict):
+        super().__init__(shared, alloc)
+        from repro.tiering.stats import TierStats
+
+        self._starts = np.asarray(tiering["starts"], np.intp)
+        self.tier_media = tuple(tiering["media"])
+        self.spill_media = (
+            self.tier_media[1] if len(self.tier_media) > 1
+            else self.tier_media[0]
+        )
+        self.tier_stats = TierStats()
+
+    # -- tiered control plane (over the wire) ----------------------------
+    def allocate(self, n: int, keys=None) -> list[int]:
+        return self._alloc.allocate(n, keys=keys)
+
+    def touch_demand(self, block_ids, now: float) -> tuple[int, ...]:
+        return self._alloc.touch_demand(block_ids, now)
+
+    def tick(self, now: float) -> None:
+        pass  # hotness clock is parent-owned (advanced by every touch)
+
+    def count_tier_hits(self, block_ids) -> None:
+        ids = np.asarray(block_ids, np.intp)
+        if not len(ids):
+            return
+        n_fast = int((ids < self._starts[1]).sum()) if len(
+            self._starts
+        ) > 1 else len(ids)
+        self.tier_stats.fast_hit_blocks += n_fast
+        self.tier_stats.spill_hit_blocks += len(ids) - n_fast

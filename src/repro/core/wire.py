@@ -110,6 +110,12 @@ OP_JRNL_REMAP = 19
 # seed hit/miss counters into a freshly restarted shard (warm-snapshot
 # restore path; served by the index dispatcher)
 OP_SEED_STATS = 20
+# tiered-pool extensions of the pool allocator plane (engine workers ->
+# tiered-pool-owning parent): keyed allocation routes through the
+# ghost-LRU admission filter, TOUCH ships the fetch-path demand signal
+# so hotness/promotion state stays with the single pool owner
+OP_POOL_ALLOC_KEYS = 21
+OP_POOL_TOUCH = 22
 
 _HDR = struct.Struct("<BI")  # op, count
 _U32 = struct.Struct("<I")
@@ -290,6 +296,19 @@ def decode_evict_resp(buf: bytes) -> list[int]:
     return ids.tolist()
 
 
+def decode_evict_resp_keys(buf: bytes) -> tuple[list[int], list[bytes]]:
+    """Freed block ids + the destroyed keys the server-side ``on_evict``
+    hook saw — the tiered client re-arms the ghost-LRU admission filter
+    with them in the pool-owning process."""
+    _need(buf, 4)
+    (n,) = _U32.unpack_from(buf)
+    ids, off = _split_i64(buf, 4, n)
+    _need(buf, off + 4)
+    (k,) = _U32.unpack_from(buf, off)
+    keys, _ = _split_keys(buf, off + 4, k)
+    return ids.tolist(), keys
+
+
 def decode_owners_resp(buf: bytes) -> tuple[list[bytes], list[int], list[int]]:
     _need(buf, 4)
     (m,) = _U32.unpack_from(buf)
@@ -381,7 +400,8 @@ def reply_bound(buf: bytes, _depth: int = 0) -> int:
         _need(buf, _HDR.size + KEY_BYTES * n)
         return 4 + 4 * n
     if op == OP_EVICT:
-        return 4 + 8 * n
+        # ids (8 B) + destroyed keys (16 B) + the two u32 counters
+        return 8 + 24 * n
     if op == OP_OWNERS:
         _need(buf, _HDR.size + 8 * n)
         return 4 + 32 * n
@@ -390,7 +410,8 @@ def reply_bound(buf: bytes, _depth: int = 0) -> int:
         return 4 + n
     if op == OP_EVICT_BLOCKS:
         _need(buf, _HDR.size + 8 * n)
-        return 4 + 8 * n
+        # ids (8 B) + destroyed keys (16 B) + the two u32 counters
+        return 8 + 24 * n
     if op == OP_STATS:
         return _STATS.size
     if op == OP_SNAPSHOT:
@@ -466,6 +487,33 @@ def _check_block_ids(index, ids: np.ndarray, what: str) -> None:
         raise WireError(f"{what} block id out of pool range")
 
 
+def _evict_with_keys(index, fn) -> bytes:
+    """Run one eviction with the index's ``on_evict`` hook wrapped so the
+    destroyed keys ALSO travel back in the reply (ids, then keys).  A
+    tiered cluster over the process transport needs them client-side: the
+    ghost-LRU admission filter lives with the pool owner, not with the
+    metadata service that performed the eviction."""
+    collected: list[bytes] = []
+    prev = getattr(index, "on_evict", None)
+
+    def hook(keys):
+        collected.extend(keys)
+        if prev is not None:
+            prev(keys)
+
+    index.on_evict = hook
+    try:
+        freed = fn()
+    finally:
+        index.on_evict = prev
+    return (
+        _U32.pack(len(freed))
+        + np.asarray(freed, np.int64).tobytes()
+        + _U32.pack(len(collected))
+        + b"".join(collected)
+    )
+
+
 def handle_request(
     index, buf: bytes, _depth: int = 0, _validated: bool = False, ctrl=None
 ) -> bytes:
@@ -514,8 +562,7 @@ def handle_request(
         missing = index.filter_unpublished(keys)
         return _U32.pack(len(missing)) + np.asarray(missing, np.int32).tobytes()
     if op == OP_EVICT:
-        freed = index.evict_lru(n)
-        return _U32.pack(len(freed)) + np.asarray(freed, np.int64).tobytes()
+        return _evict_with_keys(index, lambda: index.evict_lru(n))
     if op == OP_OWNERS:
         ids, _ = _split_i64(buf, _HDR.size, n)
         if not _validated:
@@ -545,8 +592,9 @@ def handle_request(
         ids, _ = _split_i64(buf, _HDR.size, n)
         if not _validated:
             _check_block_ids(index, ids, "EVICT_BLOCKS")
-        freed = index.evict_blocks(ids.tolist())
-        return _U32.pack(len(freed)) + np.asarray(freed, np.int64).tobytes()
+        return _evict_with_keys(
+            index, lambda: index.evict_blocks(ids.tolist())
+        )
     if op == OP_STATS:
         s = index.stats()
         served = int(ctrl[CTRL_SERVED]) if ctrl is not None else 0
@@ -636,9 +684,13 @@ class RpcIndexClient:
 
     def __init__(self, rpc, block_tokens: int, max_payload: int | None = None,
                  hasher: PrefixHasher | None = None, on_freed=None,
-                 journal=None, retry: RetryPolicy | None = None):
+                 journal=None, retry: RetryPolicy | None = None,
+                 on_evict=None):
         self.rpc = rpc
         self.on_freed = on_freed
+        # tiered clusters: destroyed keys from server-side evictions are
+        # replayed into this hook (ghost-LRU arming in the pool owner)
+        self.on_evict = on_evict
         self.journal = journal
         self.retry = retry
         # hashing is pure computation, so clients on one host can share a
@@ -655,7 +707,8 @@ class RpcIndexClient:
         self._max_match = max(1, (max_payload - 16) // KEY_BYTES)
         self._max_publish = max(1, (max_payload - 16) // (KEY_BYTES + 16))
         self._max_lookup = max(1, (max_payload - 16) // max(KEY_BYTES, 20))
-        self._max_evict = max(1, (max_payload - 16) // 8)
+        # evict replies carry 8 B id + 16 B destroyed key per block
+        self._max_evict = max(1, (max_payload - 24) // 24)
         self._max_owners = max(1, (max_payload - 16) // 32)  # reply-bound
         self._max_remap = max(1, (max_payload - 16) // (KEY_BYTES + 32))
         self._max_snapshot = max(1, (max_payload - 24) // 36)  # reply-bound
@@ -800,12 +853,16 @@ class RpcIndexClient:
         freed: list[int] = []
         while n > 0:
             k = min(n, self._max_evict)
-            got = decode_evict_resp(self._call(encode_evict(k), idempotent=False))
+            got, gone = decode_evict_resp_keys(
+                self._call(encode_evict(k), idempotent=False)
+            )
             if got:
                 if self.journal is not None:
                     self.journal.append_retract(got)
                 if self.on_freed is not None:
                     self.on_freed(got)  # cross-process: reclaim pool blocks
+            if gone and self.on_evict is not None:
+                self.on_evict(gone)  # tiered: arm the admission filter
             freed.extend(got)
             if len(got) < k:
                 break
@@ -863,9 +920,9 @@ class RpcIndexClient:
 
     def evict_blocks(self, block_ids) -> list[int]:
         freed: list[int] = []
-        M = self._max_evict  # 8 B per id both ways: EVICT sizing applies
+        M = self._max_evict  # 24 B per id in the reply: EVICT sizing applies
         for off in range(0, len(block_ids), M):
-            got = decode_evict_resp(
+            got, gone = decode_evict_resp_keys(
                 self._call(
                     encode_evict_blocks(block_ids[off : off + M]),
                     idempotent=False,
@@ -876,6 +933,8 @@ class RpcIndexClient:
                     self.journal.append_retract(got)
                 if self.on_freed is not None:
                     self.on_freed(got)  # cross-process: reclaim pool blocks
+            if gone and self.on_evict is not None:
+                self.on_evict(gone)  # tiered: arm the admission filter
             freed.extend(got)
         return freed
 
@@ -979,7 +1038,7 @@ class ShardedRpcIndexClient:
     def __init__(self, rpcs, block_tokens: int, max_payload: int | None = None,
                  hasher: PrefixHasher | None = None, on_freed=None,
                  journals=None, retry: RetryPolicy | None = None,
-                 degrade: bool = False):
+                 degrade: bool = False, on_evict=None):
         if not rpcs:
             raise ValueError("need at least one rpc transport")
         self.rpcs = list(rpcs)
@@ -1004,6 +1063,7 @@ class ShardedRpcIndexClient:
             RpcIndexClient(
                 r, block_tokens, max_payload, hasher=self.hasher,
                 on_freed=on_freed, journal=self.journals[i], retry=retry,
+                on_evict=on_evict,
             )
             for i, r in enumerate(self.rpcs)
         ]
@@ -1399,6 +1459,31 @@ def encode_pool_alloc(n: int) -> bytes:
     return _HDR.pack(OP_POOL_ALLOC, n)
 
 
+# tiered extensions of the same plane:
+#     POOL_ALLOC_KEYS := n:u32  keys[n*16]          -> n:u32  ids[n*i64]
+#     POOL_TOUCH      := n:u32  now:f64  ids[n*i64] -> k:u32  counts[k*i32]
+# (keys feed the ghost-LRU admission filter; TOUCH returns the per-tier
+# block counts of the touched set so the worker can price the fetch)
+_POOL_TOUCH_HDR = struct.Struct("<BId")  # op, count, virtual now
+
+
+def encode_pool_alloc_keys(keys) -> bytes:
+    return _HDR.pack(OP_POOL_ALLOC_KEYS, len(keys)) + _join_keys(keys)
+
+
+def encode_pool_touch(block_ids, now: float) -> bytes:
+    return _POOL_TOUCH_HDR.pack(
+        OP_POOL_TOUCH, len(block_ids), now
+    ) + np.asarray(block_ids, np.int64).tobytes()
+
+
+def decode_pool_touch_resp(buf: bytes) -> tuple[int, ...]:
+    _need(buf, 4)
+    (k,) = _U32.unpack_from(buf)
+    counts, _ = _split_i32(buf, 4, k)
+    return tuple(int(c) for c in counts)
+
+
 def encode_pool_retain(block_ids) -> bytes:
     return _HDR.pack(OP_POOL_RETAIN, len(block_ids)) + np.asarray(
         block_ids, np.int64
@@ -1475,6 +1560,12 @@ def pool_reply_bound(buf: bytes) -> int:
     op, n = _HDR.unpack_from(buf)
     if op == OP_POOL_ALLOC:
         return 4 + 8 * n
+    if op == OP_POOL_ALLOC_KEYS:
+        _need(buf, _HDR.size + KEY_BYTES * n)
+        return 4 + 8 * n
+    if op == OP_POOL_TOUCH:
+        _need(buf, _POOL_TOUCH_HDR.size + 8 * n)
+        return 4 + 4 * 16  # k:u32 + per-tier i32 counts (chain cap 16)
     if op in (OP_POOL_RETAIN, OP_POOL_RELEASE):
         _need(buf, _HDR.size + 8 * n)
         return 4
@@ -1543,6 +1634,21 @@ def handle_pool_request(pool: "BelugaPool", buf: bytes) -> bytes:  # noqa: F821
     if op == OP_POOL_ALLOC:
         ids = pool.allocate(n)  # OutOfPoolMemory -> in-band RESP_ERROR
         return _U32.pack(len(ids)) + np.asarray(ids, np.int64).tobytes()
+    if op == OP_POOL_ALLOC_KEYS:
+        keys, _ = _split_keys(buf, _HDR.size, n)
+        # tiered parent: keys route through the ghost-LRU admission
+        # filter exactly as an in-process writeback allocation would
+        ids = pool.allocate(n, keys=keys)
+        return _U32.pack(len(ids)) + np.asarray(ids, np.int64).tobytes()
+    if op == OP_POOL_TOUCH:
+        _need(buf, _POOL_TOUCH_HDR.size)
+        _, n, now = _POOL_TOUCH_HDR.unpack_from(buf)
+        ids, _ = _split_i64(buf, _POOL_TOUCH_HDR.size, n)
+        _check_block_ids(pool_index_shim(pool), ids, "POOL_TOUCH")
+        counts = pool.touch_demand(ids.tolist(), now)
+        return _U32.pack(len(counts)) + np.asarray(
+            counts, np.int32
+        ).tobytes()
     if op in (OP_POOL_RETAIN, OP_POOL_RELEASE):
         ids, _ = _split_i64(buf, _HDR.size, n)
         what = "POOL_RETAIN" if op == OP_POOL_RETAIN else "POOL_RELEASE"
@@ -1603,7 +1709,7 @@ def make_pool_handler(pool, max_reply: int | None = None, *, ledger=None,
             return handle_pool_request(pool, payload)
         with ledger.mutex:
             reply = handle_pool_request(pool, payload)
-            if op == OP_POOL_ALLOC:
+            if op in (OP_POOL_ALLOC, OP_POOL_ALLOC_KEYS):
                 ledger.on_alloc(worker, decode_pool_alloc_resp(reply), pool)
             elif op == OP_POOL_RETAIN:
                 ids, _ = _split_i64(payload, _HDR.size, n)
@@ -1702,6 +1808,8 @@ class PoolRpcClient:
                 getattr(rpc, "ring", None), "payload_bytes", 1 << 20
             )
         self._max_ids = max(1, (max_payload - 16) // 8)
+        # keyed allocation ships 16 B per key in the request
+        self._max_keyed = max(1, (max_payload - 16) // KEY_BYTES)
 
     def _call(self, payload: bytes) -> bytes:
         try:
@@ -1715,19 +1823,39 @@ class PoolRpcClient:
                 raise OutOfPoolMemory(detail or msg) from e
             raise
 
-    def allocate(self, n: int) -> list[int]:
+    def allocate(self, n: int, keys=None) -> list[int]:
         out: list[int] = []
+        M = self._max_ids if keys is None else self._max_keyed
         try:
             while len(out) < n:
-                k = min(n - len(out), self._max_ids)
-                out.extend(decode_pool_alloc_resp(
-                    self._call(encode_pool_alloc(k))
-                ))
+                k = min(n - len(out), M)
+                if keys is None:
+                    msg = encode_pool_alloc(k)
+                else:  # tiered parent: ghost-LRU admission sees the keys
+                    msg = encode_pool_alloc_keys(
+                        keys[len(out) : len(out) + k]
+                    )
+                out.extend(decode_pool_alloc_resp(self._call(msg)))
         except OutOfPoolMemory:
             if out:
                 self.release(out)  # atomic: no partial allocation leaks
             raise
         return out
+
+    def touch_demand(self, block_ids, now: float) -> tuple[int, ...]:
+        """Ship the fetch-path demand signal to the tiered pool owner;
+        returns the summed per-tier counts of the touched blocks."""
+        totals: list[int] = []
+        M = self._max_ids
+        for off in range(0, len(block_ids), M):
+            counts = decode_pool_touch_resp(
+                self._call(encode_pool_touch(block_ids[off : off + M], now))
+            )
+            if len(counts) > len(totals):
+                totals.extend([0] * (len(counts) - len(totals)))
+            for i, c in enumerate(counts):
+                totals[i] += c
+        return tuple(totals) if totals else (0, 0)
 
     def retain(self, block_ids) -> None:
         for off in range(0, len(block_ids), self._max_ids):

@@ -155,20 +155,24 @@ class KVCacheManager:
 
     def _fetch_latency_tiered(self, block_ids: list[int], now: float) -> float:
         """Tier-aware fetch latency: fast-tier blocks ride the normal CXL
-        path; spill-tier blocks first pay the spill media (RDMA-DRAM/SSD)
-        plus the GPU-ingest bandwidth term. The access is also recorded as
-        heat (promotion signal) and, when a shared ``DeviceQueues`` is
-        wired, the transfer queues behind in-flight migration traffic."""
+        path; down-chain blocks first pay their tier's media (RDMA-DRAM/
+        SSD/...) plus the GPU-ingest bandwidth term, priced per tier. The
+        access is also recorded as heat (promotion signal) and, when a
+        shared ``DeviceQueues`` is wired, the transfer queues behind
+        in-flight migration traffic."""
         from repro.core import fabric
 
         pool = self.pool
-        n_fast, n_spill = pool.touch_demand(block_ids, now)
+        counts = pool.touch_demand(block_ids, now)
         lay = pool.layout
-        lat = self._fetch_latency(n_fast) if n_fast else 0.0
-        if n_spill:
-            size = n_spill * lay.block_bytes
+        media = getattr(pool, "tier_media", None) or ("cxl", pool.spill_media)
+        lat = self._fetch_latency(counts[0]) if counts[0] else 0.0
+        for t, n in enumerate(counts[1:], start=1):
+            if not n:
+                continue
+            size = n * lay.block_bytes
             lat += fabric.spill_transfer_latency(
-                size, pool.spill_media, self.transfer.constants
+                size, media[t], self.transfer.constants
             ) + size / self.transfer.constants.gpu_cxl_bw
         if self.queues is not None:
             # migration batches occupy the pool devices (the migrator

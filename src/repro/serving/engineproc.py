@@ -214,7 +214,11 @@ def _build_worker_stack(spec: EngineWorkerSpec):
     service's fresh ring; closing every closeable (views, rings,
     attach-side doorbells) is the worker's teardown duty."""
     from repro.core.index import PrefixHasher
-    from repro.core.shmpool import SharedPoolData, WorkerPoolView
+    from repro.core.shmpool import (
+        SharedPoolData,
+        TieredWorkerPoolView,
+        WorkerPoolView,
+    )
     from repro.core.transfer import TransferEngine
     from repro.core.wire import (
         PoolRpcClient,
@@ -247,7 +251,13 @@ def _build_worker_stack(spec: EngineWorkerSpec):
     alloc = PoolRpcClient(
         pool_rpc, spec.pool_spec["n_blocks"], max_payload=spec.pool_payload
     )
-    pool_view = WorkerPoolView(shared, alloc)
+    tiering = spec.pool_spec.get("tiering")
+    if tiering is not None:
+        # tiered parent pool: same concatenated data plane, plus the
+        # keyed-alloc/touch control ops over the allocator ring
+        pool_view = TieredWorkerPoolView(shared, alloc, tiering)
+    else:
+        pool_view = WorkerPoolView(shared, alloc)
     bt = spec.pool_spec["block_tokens"]
     hasher = PrefixHasher(bt)
     index_rpcs = []

@@ -153,20 +153,10 @@ class Cluster:
         process_mode = cfg.index_rpc and cfg.index_transport == "process"
         if cfg.index_transport == "process" and not cfg.index_rpc:
             raise ValueError("index_transport='process' requires index_rpc=True")
-        if process_mode and tcfg.enabled:
-            raise NotImplementedError(
-                "tiering + process transport: the TieredPool's two-pool "
-                "metadata is not shared-memory exportable yet (ROADMAP)"
-            )
         if cfg.data_plane not in ("private", "shared"):
             raise ValueError(
                 f"data_plane must be 'private' or 'shared', "
                 f"got {cfg.data_plane!r}"
-            )
-        if cfg.data_plane == "shared" and tcfg.enabled:
-            raise NotImplementedError(
-                "tiering + data_plane='shared': the TieredPool's two-tier "
-                "payload space is not shared-memory exportable yet (ROADMAP)"
             )
         if cfg.data_plane == "shared" and backing != "numpy":
             raise ValueError(
@@ -205,11 +195,19 @@ class Cluster:
                 backing=backing,
                 cfg=tcfg,
             )
-            self.index = self._make_index()
-            # destroyed keys arm the ghost-LRU admission filter (on EVERY
-            # metadata shard: ring-served evictions run against the shard
-            # objects, so the hook fires for them too)
-            self.index.on_evict = self.pool.policy.ghost_add
+            # process transport: the shard services build their indexes
+            # from the TieredPool's concatenated metadata segment (the
+            # spec shape is identical to a flat pool's) — same rule as
+            # the flat branch below, no in-process index exists at all
+            self.index = None if process_mode else self._make_index()
+            if self.index is not None:
+                # destroyed keys arm the ghost-LRU admission filter (on
+                # EVERY metadata shard: ring-served evictions run against
+                # the shard objects, so the hook fires for them too).
+                # In process transport the keys instead ride the eviction
+                # REPLIES and each client view arms the filter
+                # (``_index_view``).
+                self.index.on_evict = self.pool.policy.ghost_add
             self.queues = (
                 DeviceQueues(n_devices=DEFAULT.n_devices)
                 if tcfg.model_contention
@@ -576,6 +574,16 @@ class Cluster:
 
         bt = self.pool.layout.block_tokens
         on_freed = self.pool.release if self.index is None else None
+        # tiered + process transport: destroyed keys come back IN the
+        # eviction replies; the parent-side views arm the ghost-LRU
+        # admission filter from them.  With an in-process index the shard
+        # objects' own on_evict hook already fired (set in _build), so
+        # wiring the client too would double-count every key.
+        on_evict = (
+            self.pool.policy.ghost_add
+            if self.index is None and self.cfg.tiering.enabled
+            else None
+        )
         retry = None
         journals = None
         if self._supervisors:
@@ -586,12 +594,12 @@ class Cluster:
         if len(self._rpc_clients) > 1:
             return ShardedRpcIndexClient(
                 self._rpc_clients, block_tokens=bt, hasher=self.hasher,
-                on_freed=on_freed, journals=journals, retry=retry,
-                degrade=bool(self._supervisors),
+                on_freed=on_freed, on_evict=on_evict, journals=journals,
+                retry=retry, degrade=bool(self._supervisors),
             )
         return RpcIndexClient(
             self._rpc_clients[0], block_tokens=bt, hasher=self.hasher,
-            on_freed=on_freed,
+            on_freed=on_freed, on_evict=on_evict,
             journal=journals[0] if journals else None, retry=retry,
         )
 
@@ -770,6 +778,11 @@ class Cluster:
             end = until if until is not None else max(clocks, default=0.0)
             for w in self.workers:
                 w.apply_results(self.requests)
+            if self.migrator is not None:
+                # the migration daemon stays in the pool-owning parent
+                # (the workers only signal demand over the ring); drive
+                # it to the round's end between worker rounds
+                self.migrator.run_until(end)
         elif until is None:
             end = max(e.drain() for e in self.engines)
         else:

@@ -2,19 +2,22 @@
 
 Runs as a daemon on the cluster's virtual time line: every
 ``migrate_interval_s`` it takes one step, and each step moves at most
-``migrate_batch_blocks`` blocks — a bandwidth budget, not a sweep.
+``migrate_batch_blocks`` blocks per chain boundary — a bandwidth budget,
+not a sweep.
 
-  * **demotion** (ahead of pressure): when fast-tier occupancy crosses the
-    high watermark, the coldest unreferenced indexed blocks migrate to the
-    spill tier until occupancy is back at ``demote_target``.  Demoted
-    prefixes stay fetchable (at spill latency) instead of being destroyed
-    and recomputed — the whole point of the hierarchy.
-  * **promotion**: spill blocks whose decayed heat crosses
-    ``promote_min_heat`` (they keep getting fetched) migrate back to fast,
-    but never above the high watermark.
-  * **spill eviction** (last resort): when the spill tier itself is full,
-    its coldest blocks are destroyed via ``GlobalIndex.evict_blocks`` and
-    their keys enter the ghost list, arming the admission filter.
+  * **demotion** (ahead of pressure): when a tier's occupancy crosses its
+    watermark, its coldest unreferenced indexed blocks migrate one tier
+    down-chain until occupancy is back at the demote target.  Demoted
+    prefixes stay fetchable (at that medium's latency) instead of being
+    destroyed and recomputed — the whole point of the hierarchy.
+  * **promotion**: down-chain blocks whose decayed heat crosses
+    ``promote_min_heat`` (they keep getting fetched) migrate back to the
+    fast tier, but never above the high watermark.
+  * **last-tier eviction** (last resort): when the bottom of the chain is
+    full, its coldest blocks are destroyed via ``GlobalIndex.evict_blocks``
+    and their keys enter the ghost list, arming the admission filter.
+    Intermediate tiers never destroy — their own boundary pass drains them
+    further down-chain.
 
 Migration I/O is accounted through the shared ``fabric.DeviceQueues`` so
 it contends with foreground fetches on the pool devices, and every batch's
@@ -22,7 +25,8 @@ media time lands in ``TierStats.migration_busy_s``.
 
 The engine is driven from ``EngineInstance.advance`` between decode steps:
 each engine calls ``run_until(clock)``; steps fire once on the monotone
-max over all callers (one daemon, many clocks).
+max over all callers (one daemon, many clocks).  In engine-worker
+clusters the parent drives it the same way between worker rounds.
 
 ``index`` is anything speaking the ``GlobalIndex`` metadata surface the
 migrator needs (``owners_of`` / ``remap_many`` / ``evict_blocks``): the
@@ -69,35 +73,44 @@ class MigrationEngine:
     def _step(self, now: float) -> None:
         self.pool.tick(now)
         cfg = self.cfg
-        fast = self.pool.fast
-        used = fast.n_blocks - fast.free_blocks()
-        if used / fast.n_blocks >= cfg.high_watermark:
-            target = int(cfg.demote_target * fast.n_blocks)
+        pool = self.pool
+        fast = pool.tiers[0]
+        if pool.tier_occupancy(0) >= pool.watermark(0):
+            used = fast.n_blocks - fast.free_blocks()
+            target = int(pool.demote_target(0) * fast.n_blocks)
             k = min(cfg.migrate_batch_blocks, used - target)
             if k > 0:
-                self._demote(k, now)
+                self._demote(0, k, now)
         elif fast.free_blocks() > 0:
             self._promote(now)
-        # runs LAST so even a demote step (whose spill eviction can
+        # deeper boundaries drain independently (tier t -> t+1), each
+        # under its own watermark with its own per-step budget
+        for t in range(1, pool.n_tiers - 1):
+            if pool.tier_occupancy(t) < pool.watermark(t):
+                continue
+            tp = pool.tiers[t]
+            used = tp.n_blocks - tp.free_blocks()
+            target = int(pool.demote_target(t) * tp.n_blocks)
+            k = min(cfg.migrate_batch_blocks, used - target)
+            if k > 0:
+                self._demote(t, k, now)
+        # runs LAST so even a demote step (whose last-tier eviction can
         # destroy enqueued ids) leaves the pending set clean
         self._prune_pending()
 
     def _prune_pending(self) -> None:
         """Drop freed / re-referenced / no-longer-committed ids from
         ``promote_pending`` EVERY step, not just on promote passes: a
-        foreground eviction can free a pending spill block between steps,
-        and a demote-only step used to leave that stale id enqueued (the
-        block-conservation property test pins the invariant that after a
-        step the pending set only names live refcount-1 spill blocks)."""
+        foreground eviction can free a pending down-chain block between
+        steps, and a demote-only step used to leave that stale id enqueued
+        (the block-conservation property test pins the invariant that
+        after a step the pending set only names live refcount-1 blocks)."""
         pool = self.pool
         pending = pool.promote_pending
         if not pending:
             return
         cand = np.fromiter(pending, np.intp, len(pending))
-        local = cand - pool.offset
-        dead = ~(
-            (pool.spill.refcounts[local] == 1) & pool.spill.committed[local]
-        )
+        dead = ~((pool.refcounts[cand] == 1) & pool.committed[cand])
         if dead.any():
             pending.difference_update(cand[dead].tolist())
 
@@ -109,32 +122,42 @@ class MigrationEngine:
         blocks actually chosen (``_migrate`` skips unindexed stragglers)."""
         return np.where((pool.refcounts == 1) & pool.committed)[0] + offset
 
-    def _demote(self, k: int, now: float) -> None:
+    def _demote(self, src_t: int, k: int, now: float) -> None:
         pool = self.pool
-        cand = self._candidates(pool.fast, 0)
+        dst_t = src_t + 1
+        cand = self._candidates(
+            pool.tiers[src_t], int(pool._starts[src_t])
+        )
         if not len(cand):
             return
         chosen = pool.policy.coldest(cand, k, now)
-        # make room in spill by destroying its coldest blocks (true
-        # eviction: keys go to the ghost list via index.on_evict)
-        short = len(chosen) - pool.spill.free_blocks()
+        dst = pool.tiers[dst_t]
+        short = len(chosen) - dst.free_blocks()
         if short > 0:
-            sc = self._candidates(pool.spill, pool.offset)
-            victims = pool.policy.coldest(sc, short, now)
-            freed = self.index.evict_blocks(victims.tolist())
-            pool.tier_stats.spill_evictions += len(freed)
-            if len(chosen) > pool.spill.free_blocks():
-                chosen = chosen[: pool.spill.free_blocks()]
+            if dst_t == pool.n_tiers - 1:
+                # bottom of the chain: make room by destroying its coldest
+                # blocks (true eviction: keys reach the ghost list via
+                # index.on_evict, arming the admission filter)
+                sc = self._candidates(dst, int(pool._starts[dst_t]))
+                victims = pool.policy.coldest(sc, short, now)
+                freed = self.index.evict_blocks(victims.tolist())
+                pool.tier_stats.spill_evictions += len(freed)
+            # intermediate destination: its own boundary pass drains it
+            # down-chain — never destroy, just take what fits this step
+            if len(chosen) > dst.free_blocks():
+                chosen = chosen[: dst.free_blocks()]
         if not len(chosen):
             return
-        n = self._migrate(chosen.tolist(), to_fast=False)
-        pool.tier_stats.demotions += n
-        self._account(n, now, to_fast=False)
+        moved = self._migrate(chosen.tolist(), dst_t)
+        pool.tier_stats.demotions += len(moved)
+        self._account(
+            len(moved), now, pool.tier_media[dst_t], to_fast=False
+        )
 
     def _promote(self, now: float) -> None:
         """Promote from the pending set fed by ``TieredPool.touch_demand``
         (blocks whose heat crossed the threshold on access) — O(blocks
-        touched), never an every-step sweep of the whole spill tier."""
+        touched), never an every-step sweep of the whole chain."""
         pool, cfg = self.pool, self.cfg
         pending = pool.promote_pending
         if not pending:
@@ -142,19 +165,16 @@ class MigrationEngine:
         # promotion budget: stay STRICTLY under the high watermark — a
         # promotion landing exactly on it would trip the >= demote
         # trigger next step (promotion-induced demotion wave)
-        cap = int(cfg.high_watermark * pool.fast.n_blocks)
+        cap = int(pool.watermark(0) * pool.fast.n_blocks)
         used = pool.fast.n_blocks - pool.fast.free_blocks()
         budget = min(cfg.migrate_batch_blocks, cap - used - 1)
         if budget <= 0:
             return
         cand = np.fromiter(pending, np.intp, len(pending))
-        local = cand - pool.offset
         # drop stale entries (freed / re-referenced / already promoted)
         # and entries whose heat decayed back below the threshold while
         # they waited on budget — membership was decided at touch time
-        live = cand[
-            (pool.spill.refcounts[local] == 1) & pool.spill.committed[local]
-        ]
+        live = cand[(pool.refcounts[cand] == 1) & pool.committed[cand]]
         live = live[
             pool.policy.heat_at(live, now) >= cfg.promote_min_heat
         ]
@@ -164,26 +184,33 @@ class MigrationEngine:
         pending.difference_update(chosen.tolist())
         if not len(chosen):
             return
-        n = self._migrate(chosen.tolist(), to_fast=True)
-        pool.tier_stats.promotions += n
-        self._account(n, now, to_fast=True)
+        moved = self._migrate(chosen.tolist(), 0)
+        pool.tier_stats.promotions += len(moved)
+        if moved:
+            # promotion sources can sit in different media down-chain:
+            # each batch pays its own medium
+            _, tix = pool._split_tiers(moved)
+            for t in sorted(set(tix.tolist())):
+                self._account(
+                    int((tix == t).sum()),
+                    now,
+                    pool.tier_media[t],
+                    to_fast=True,
+                )
 
     # ------------------------------------------------------------------
-    def _migrate(self, src_ids: list[int], to_fast: bool) -> int:
-        """Copy payloads to the other tier, re-point the index, free the
-        sources. Returns the number of blocks actually migrated."""
+    def _migrate(self, src_ids: list[int], dst_t: int) -> list[int]:
+        """Copy payloads to tier ``dst_t``, re-point the index, free the
+        sources. Returns the global ids actually migrated (sources)."""
         pool, index = self.pool, self.index
         # one-lock row snapshot: (key, block, epoch) can't disagree the way
         # the old keys_of_blocks -> lookup_many two-call sequence could
         keys, src_ids, old_eps = index.owners_of(src_ids)
         if not keys:
-            return 0
-        dst_pool = pool.fast if to_fast else pool.spill
-        dst_off = 0 if to_fast else pool.offset
-        src_off = pool.offset if to_fast else 0
-        src_pool = pool.spill if to_fast else pool.fast
-        local_src = [b - src_off for b in src_ids]
-        payloads, _ = src_pool.read_blocks(local_src)
+            return []
+        dst_pool = pool.tiers[dst_t]
+        dst_off = int(pool._starts[dst_t])
+        payloads, _ = pool.read_blocks(src_ids)
         dst_local = dst_pool.allocate(len(src_ids))
         new_eps = dst_pool.write_blocks(dst_local, payloads)
         dst_ids = [b + dst_off for b in dst_local]
@@ -198,14 +225,16 @@ class MigrationEngine:
             # freeing the source bumps its epoch: in-flight readers that
             # matched the old entry fail validation and re-plan (§5.1)
             pool.release(moved_src)
-        return len(moved_src)
+        return moved_src
 
-    def _account(self, n_blocks: int, now: float, to_fast: bool) -> None:
+    def _account(
+        self, n_blocks: int, now: float, media: str, to_fast: bool
+    ) -> None:
         if not n_blocks:
             return
         c = self.pool.constants
         size = n_blocks * self.pool.layout.block_bytes
-        spill_t = fabric.spill_transfer_latency(size, self.pool.spill_media, c)
+        spill_t = fabric.spill_transfer_latency(size, media, c)
         fast_t = c.cxl_64b_latency + size / (
             c.cxl_adapter_write_bw if to_fast else c.cxl_adapter_read_bw
         )

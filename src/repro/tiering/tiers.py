@@ -1,27 +1,39 @@
-"""TieredPool: fast CXL tier + spill tier behind the BelugaPool API.
+"""TieredPool: an ordered chain of BelugaPool tiers behind the pool API.
 
-Composes two ``BelugaPool`` instances in one global block-id space:
+Composes N ``BelugaPool`` instances in one global block-id space:
 
-    fast tier (CXL pool media)     ids [0, fast_blocks)
-    spill tier (RDMA-DRAM / SSD)   ids [fast_blocks, fast_blocks + spill)
+    tier 0  fast CXL pool media       ids [0, fast_blocks)
+    tier 1  spill (RDMA-DRAM / SSD)   ids [fast_blocks, fast+spill)
+    tier 2+ optional deeper media     ids stacked after the spill tier
 
 so ``TransferEngine``, ``GlobalIndex``, ``KVCacheManager`` and
 ``CoherentReader/Writer`` work unchanged — every operation dispatches by id
-range and merges results in caller order.  The spill tier stores real
-payloads through the same allocator/epoch machinery; only its *modeled*
-latency differs (``fabric.spill_transfer_latency``).
+range and merges results in caller order.  Every tier stores real payloads
+through the same allocator/epoch machinery; only its *modeled* latency
+differs (``fabric.spill_transfer_latency`` priced per medium).
 
 Placement policy (write admission) lives here because allocation is where
 a block's tier is decided:
 
   * below the high watermark every fresh block lands in the fast tier;
-  * above it, fresh blocks go straight to spill — EXCEPT keys the
+  * above it, fresh blocks go straight down-chain — EXCEPT keys the
     ghost-LRU filter recognizes as recently-destroyed-and-returned, which
-    are forced fast (admission filter vs cache pollution);
-  * either tier overflows into the other before the pool reports OOM.
+    are forced fast (admission filter vs cache pollution), and the first
+    ``prefix_admit_blocks`` positions of a keyed allocation (the shared
+    chain prefix stays fast even under pressure);
+  * down-chain blocks fill tiers in chain order (nearest medium first),
+    and either end overflows into the other before the pool reports OOM.
 
-Background demotion/promotion between the tiers is the migrator's job
+Background demotion/promotion along the chain is the migrator's job
 (``repro.tiering.migrator``); hotness bookkeeping is O(blocks touched).
+
+Cross-process export mirrors ``BelugaPool.share_meta``/``share_data``: ONE
+named segment laid out over the *global* id space (epochs | refcounts |
+committed at the same offsets a flat pool would use; payload rows in
+global-id order), with each tier's arrays re-homed onto its slice.  An
+attacher (``SharedPoolMeta`` / ``SharedPoolData``) therefore needs no
+tier awareness at all — the fast/spill offset split is already baked into
+the ids it is handed.
 """
 
 from __future__ import annotations
@@ -30,6 +42,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import diag
 from repro.core.fabric import DEFAULT, FabricConstants
 from repro.core.pool import BelugaPool, OutOfPoolMemory, PoolLayout
 from repro.tiering.policy import HotnessTracker
@@ -51,40 +64,68 @@ class TieringConfig:
     promote_min_heat: float = 2.0  # spill block heat to earn promotion
     ghost_capacity: int = 8192  # admission-filter memory (keys)
     model_contention: bool = True  # migration contends via DeviceQueues
+    # -- 3-level chain ------------------------------------------------
+    # extra tiers BELOW the spill tier, ordered fast-to-slow:
+    # ((blocks, media), ...) e.g. ((65536, "ssd"),) for CXL->DRAM->SSD
+    extra_tiers: tuple = ()
+    # optional per-boundary high watermarks (tier k demotes into k+1 when
+    # its occupancy crosses watermark k); empty -> high_watermark for all
+    tier_watermarks: tuple = ()
+    # optional per-boundary demote targets; empty -> demote_target
+    tier_demote_targets: tuple = ()
+    # partial-prefix admission: under pressure the first k positions of a
+    # keyed allocation (the request chain's shared prefix) still go fast
+    prefix_admit_blocks: int = 0
+    # positional touch decay: position i of a touched chain earns weight
+    # 1 - decay*i/(n-1), so chain *suffixes* cool faster than the shared
+    # prefix and demotion naturally peels the cold tail.  0.0 = off.
+    suffix_touch_decay: float = 0.0
 
 
 class _TierView:
-    """Read-only per-block metadata view over both tiers (global ids).
+    """Read-only per-block metadata view over the chain (global ids).
 
     ``GlobalIndex`` pokes ``pool.refcounts[block_id]`` directly; this keeps
-    that O(1) without materializing a concatenated copy per access.
+    that O(1)/O(k) without materializing a concatenated copy per access.
+    Accepts scalars, fancy index arrays (including empty), and boolean
+    masks over the global id space — everything a flat ndarray would.
     """
 
-    __slots__ = ("_fast", "_spill", "_offset")
+    __slots__ = ("_arrays", "_starts")
 
-    def __init__(self, fast: np.ndarray, spill: np.ndarray, offset: int):
-        self._fast = fast
-        self._spill = spill
-        self._offset = offset
+    def __init__(self, arrays, starts):
+        self._arrays = list(arrays)
+        self._starts = np.asarray(starts, np.intp)  # first id of each tier
+
+    def _tier_of(self, i: int) -> int:
+        return int(np.searchsorted(self._starts, i, side="right")) - 1
 
     def __getitem__(self, i):
         if isinstance(i, (int, np.integer)):
-            if i < self._offset:
-                return self._fast[i]
-            return self._spill[i - self._offset]
-        ids = np.asarray(i, np.intp)
-        out = np.empty(len(ids), self._fast.dtype)
-        fm = ids < self._offset
-        out[fm] = self._fast[ids[fm]]
-        out[~fm] = self._spill[ids[~fm] - self._offset]
+            t = self._tier_of(i)
+            return self._arrays[t][i - self._starts[t]]
+        ids = np.asarray(i)
+        if ids.dtype == np.bool_:
+            # a mask over the global id space selects, never indexes
+            ids = np.flatnonzero(ids)
+        elif ids.ndim == 0:
+            t = self._tier_of(int(ids))
+            return self._arrays[t][int(ids) - self._starts[t]]
+        ids = ids.astype(np.intp, copy=False)
+        out = np.empty(len(ids), self._arrays[0].dtype)
+        t = np.searchsorted(self._starts, ids, side="right") - 1
+        for k, arr in enumerate(self._arrays):
+            m = t == k
+            if m.any():
+                out[m] = arr[ids[m] - self._starts[k]]
         return out
 
     def __len__(self):
-        return len(self._fast) + len(self._spill)
+        return sum(len(a) for a in self._arrays)
 
 
 class TieredPool:
-    """Two-tier pool in one global block-id space (fast first)."""
+    """N-tier pool chain in one global block-id space (fast first)."""
 
     is_tiered = True
 
@@ -102,13 +143,27 @@ class TieredPool:
         self.layout = layout
         self.cfg = cfg or TieringConfig(enabled=True)
         self.constants = constants
-        self.fast = BelugaPool(layout, fast_blocks, n_shards, backing, interleave)
-        self.spill = BelugaPool(layout, spill_blocks, n_shards, backing, interleave)
-        self.offset = fast_blocks
-        self.n_blocks = fast_blocks + spill_blocks
+        sizes = [fast_blocks, spill_blocks]
+        media = ["cxl", self.cfg.spill_media]
+        for eb, em in self.cfg.extra_tiers:
+            # deep-tier capacities are modeling knobs: round up to the
+            # shard multiple the BelugaPool allocator requires
+            sizes.append(-(-int(eb) // n_shards) * n_shards)
+            media.append(em)
+        self.tiers = [
+            BelugaPool(layout, nb, n_shards, backing, interleave)
+            for nb in sizes
+        ]
+        self.tier_media = tuple(media)
+        self._starts = np.cumsum([0] + sizes[:-1]).astype(np.intp)
+        self.n_blocks = int(sum(sizes))
         self.n_shards = n_shards
         self.interleave = interleave
         self.backing = backing
+        # 2-tier compatibility aliases (tests, migrator fast paths)
+        self.fast = self.tiers[0]
+        self.spill = self.tiers[1]
+        self.offset = fast_blocks
         self.spill_media = self.cfg.spill_media
         self.policy = HotnessTracker(
             self.n_blocks,
@@ -116,44 +171,219 @@ class TieredPool:
             ghost_capacity=self.cfg.ghost_capacity,
         )
         self.tier_stats = TierStats()
+        self.tier_writes = [0] * len(self.tiers)
         self.now = 0.0  # virtual time high-water mark (hotness decay clock)
-        # spill blocks whose heat crossed the promotion threshold (fed by
-        # touch_demand, drained by the migrator): keeps promotion O(blocks
-        # touched) instead of an every-step O(spill) sweep
+        # down-chain blocks whose heat crossed the promotion threshold (fed
+        # by touch_demand, drained by the migrator): keeps promotion
+        # O(blocks touched) instead of an every-step O(chain) sweep
         self.promote_pending: set[int] = set()
-        self.refcounts = _TierView(self.fast.refcounts, self.spill.refcounts, fast_blocks)
-        self.epochs = _TierView(self.fast.epochs, self.spill.epochs, fast_blocks)
-        self.committed = _TierView(self.fast.committed, self.spill.committed, fast_blocks)
+        self._meta_segment = None
+        self._meta_spec: dict | None = None
+        self._data_segment = None
+        self._data_spec: dict | None = None
+        self._rebuild_views()
+
+    def _rebuild_views(self) -> None:
+        self.refcounts = _TierView(
+            [t.refcounts for t in self.tiers], self._starts
+        )
+        self.epochs = _TierView([t.epochs for t in self.tiers], self._starts)
+        self.committed = _TierView(
+            [t.committed for t in self.tiers], self._starts
+        )
+
+    # ------------------------------------------------------------------
+    # Cross-process export (share_meta/share_data over the global space)
+    # ------------------------------------------------------------------
+    def share_meta(self) -> dict:
+        """Re-home every tier's epochs/refcounts/committed into ONE named
+        segment laid out over the global id space — byte-identical layout
+        to a flat ``BelugaPool.share_meta`` of ``self.n_blocks`` blocks,
+        so ``SharedPoolMeta`` attachers (metadata shard children) resolve
+        global ids with zero tier awareness.  Idempotent; returns the
+        attach spec (plain data, picklable)."""
+        if self._meta_spec is not None:
+            return self._meta_spec
+        from repro.core.shm import create_segment
+
+        n = self.n_blocks
+        seg = create_segment(13 * n)  # 8 B epoch + 4 B refcount + 1 B flag
+        eps = np.frombuffer(seg.buf, np.int64, n, 0)
+        rcs = np.frombuffer(seg.buf, np.int32, n, 8 * n)
+        com = np.frombuffer(seg.buf, np.bool_, n, 12 * n)
+        for t, o in zip(self.tiers, self._starts.tolist()):
+            tn = t.n_blocks
+            with t._lock:
+                eps[o : o + tn] = t.epochs
+                rcs[o : o + tn] = t.refcounts
+                com[o : o + tn] = t.committed
+                t.epochs = eps[o : o + tn]
+                t.refcounts = rcs[o : o + tn]
+                t.committed = com[o : o + tn]
+        # the pool-level views become the shared arrays themselves
+        self.epochs, self.refcounts, self.committed = eps, rcs, com
+        self._meta_segment = seg
+        self._meta_spec = {
+            "shm_name": seg.name,
+            "n_blocks": n,
+            "block_tokens": self.layout.block_tokens,
+        }
+        import atexit
+
+        atexit.register(self.unshare_meta)  # no leaked /dev/shm entries
+        return self._meta_spec
+
+    def unshare_meta(self) -> None:
+        """Copy metadata back to private per-tier arrays and unlink.
+
+        Safe to call repeatedly / when never shared; the pool stays fully
+        functional afterwards (values preserved)."""
+        seg = self._meta_segment
+        if seg is None:
+            return
+        from repro.core.shm import close_segment
+
+        for t in self.tiers:
+            with t._lock:
+                t.epochs = np.array(t.epochs, np.int64)
+                t.refcounts = np.array(t.refcounts, np.int32)
+                t.committed = np.array(t.committed, bool)
+        self._rebuild_views()
+        self._meta_segment = None
+        self._meta_spec = None
+        close_segment(seg, unlink=True)
+        import atexit
+
+        try:
+            atexit.unregister(self.unshare_meta)
+        except Exception:  # noqa: BLE001
+            diag.note("tiers.unshare_meta.unregister_failed")
+
+    def share_data(self) -> dict:
+        """Re-home every tier's payload rows into ONE named segment in
+        global-id order — shape-identical to a flat pool's ``share_data``,
+        so ``SharedPoolData`` attachers (engine workers) scatter/gather by
+        global id with no per-tier segments to juggle.  The spec carries a
+        ``"tiering"`` sub-dict (tier starts + media) the worker-side view
+        uses for tier accounting.  Implies ``share_meta``.  Idempotent."""
+        if self._data_spec is not None:
+            return self._data_spec
+        if self.backing != "numpy":
+            raise ValueError(
+                f"share_data requires backing='numpy', not {self.backing!r}"
+            )
+        meta = self.share_meta()
+        from repro.core.shm import create_segment
+
+        lay = self.layout
+        seg = create_segment(self.n_blocks * lay.block_bytes)
+        view = np.frombuffer(seg.buf, np.uint8).reshape(
+            self.n_blocks, lay.block_bytes
+        )
+        for t, o in zip(self.tiers, self._starts.tolist()):
+            tn = t.n_blocks
+            with t._lock:
+                view[o : o + tn] = t.data
+                t.data = view[o : o + tn]
+        self._data_segment = seg
+        self._data_spec = {
+            "data_shm_name": seg.name,
+            "meta": meta,
+            "n_blocks": self.n_blocks,
+            "block_tokens": lay.block_tokens,
+            "n_layers_kv": lay.n_layers_kv,
+            "n_kv_heads": lay.n_kv_heads,
+            "head_dim": lay.head_dim,
+            "dtype_bytes": lay.dtype_bytes,
+            "tiering": {
+                "starts": self._starts.tolist(),
+                "media": list(self.tier_media),
+            },
+        }
+        import atexit
+
+        atexit.register(self.unshare_data)  # no leaked /dev/shm entries
+        return self._data_spec
+
+    def unshare_data(self) -> None:
+        """Copy payloads back to private per-tier arrays and unlink.
+
+        Safe to call repeatedly / when never shared; leaves ``share_meta``
+        as-is (its own unshare handles it)."""
+        seg = self._data_segment
+        if seg is None:
+            return
+        from repro.core.shm import close_segment
+
+        for t in self.tiers:
+            with t._lock:
+                t.data = np.array(t.data, np.uint8)
+        self._data_segment = None
+        self._data_spec = None
+        close_segment(seg, unlink=True)
+        import atexit
+
+        try:
+            atexit.unregister(self.unshare_data)
+        except Exception:  # noqa: BLE001
+            diag.note("tiers.unshare_data.unregister_failed")
 
     # ------------------------------------------------------------------
     @property
     def data(self):
         """Backing-kind probe only (``pool.data is None`` == meta); block
         payloads must go through read/write methods, which dispatch."""
-        return self.fast.data
+        return self.tiers[0].data
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tiers)
 
     @property
     def alloc_count(self) -> int:
-        return self.fast.alloc_count + self.spill.alloc_count
+        return sum(t.alloc_count for t in self.tiers)
 
     def tier_of(self, block_id: int) -> int:
-        return 0 if block_id < self.offset else 1
+        return int(np.searchsorted(self._starts, block_id, side="right")) - 1
 
     def tick(self, now: float) -> None:
         self.now = max(self.now, now)
 
     def free_blocks(self) -> int:
-        return self.fast.free_blocks() + self.spill.free_blocks()
+        return sum(t.free_blocks() for t in self.tiers)
 
     def shard_occupancy(self) -> list[int]:
-        return self.fast.shard_occupancy() + self.spill.shard_occupancy()
+        out: list[int] = []
+        for t in self.tiers:
+            out += t.shard_occupancy()
+        return out
+
+    def tier_occupancy(self, t: int) -> float:
+        p = self.tiers[t]
+        if p.n_blocks == 0:  # empty tier: occupancy 0, never ZeroDivision
+            return 0.0
+        return (p.n_blocks - p.free_blocks()) / p.n_blocks
 
     def fast_occupancy(self) -> float:
-        return (self.fast.n_blocks - self.fast.free_blocks()) / self.fast.n_blocks
+        return self.tier_occupancy(0)
+
+    def watermark(self, t: int) -> float:
+        w = self.cfg.tier_watermarks
+        return float(w[t]) if t < len(w) else self.cfg.high_watermark
+
+    def demote_target(self, t: int) -> float:
+        w = self.cfg.tier_demote_targets
+        return float(w[t]) if t < len(w) else self.cfg.demote_target
 
     def _split(self, block_ids) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, fast-mask) — the 2-tier split kept for compatibility."""
         ids = np.asarray(block_ids, np.intp)
         return ids, ids < self.offset
+
+    def _split_tiers(self, block_ids) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, per-id tier index) over the whole chain."""
+        ids = np.asarray(block_ids, np.intp)
+        return ids, np.searchsorted(self._starts, ids, side="right") - 1
 
     # ------------------------------------------------------------------
     # Allocation (write admission)
@@ -163,14 +393,14 @@ class TieredPool:
 
         ``keys`` (optional, from the writeback path) feeds the ghost-LRU
         admission filter; without keys the policy is purely watermark-based.
+        Down-chain blocks fill tiers in chain order (nearest medium first).
         """
-        fast_free = self.fast.free_blocks()
-        spill_free = self.spill.free_blocks()
-        if fast_free + spill_free < n:
+        frees = [t.free_blocks() for t in self.tiers]
+        if sum(frees) < n:
             raise OutOfPoolMemory(
-                f"need {n}, have {fast_free} fast + {spill_free} spill"
+                f"need {n}, have {frees[0]} fast + {sum(frees[1:])} spill"
             )
-        pressured = self.fast_occupancy() >= self.cfg.high_watermark
+        pressured = self.fast_occupancy() >= self.watermark(0)
         ghost_hot = [False] * n
         if keys is not None and pressured:
             # peek only: the entry is consumed below, and only for blocks
@@ -178,13 +408,17 @@ class TieredPool:
             # returning key must not lose its one-shot admission to a
             # full fast tier it never reached
             ghost_hot = [self.policy.ghost_contains(k) for k in keys]
-        # tier per position: fast unless pressured (ghost-hot always fast)
-        want_fast = [(not pressured) or ghost_hot[i] for i in range(n)]
+        # tier per position: fast unless pressured (ghost-hot always fast;
+        # the first prefix_admit_blocks of a keyed chain also stay fast)
+        pa = self.cfg.prefix_admit_blocks if keys is not None else 0
+        want_fast = [
+            (not pressured) or ghost_hot[i] or i < pa for i in range(n)
+        ]
         n_fast = sum(want_fast)
-        # clamp to capacity, overflowing into the other tier (non-ghost
-        # fast-wishers yield their fast slot before ghost-hot ones do)
-        if n_fast > fast_free:
-            flip = n_fast - fast_free
+        # clamp to capacity, overflowing down-chain (non-ghost fast-wishers
+        # yield their fast slot before ghost-hot ones do, tail first)
+        if n_fast > frees[0]:
+            flip = n_fast - frees[0]
             for only_ghost in (False, True):
                 for i in range(n - 1, -1, -1):
                     if not flip:
@@ -192,89 +426,103 @@ class TieredPool:
                     if want_fast[i] and ghost_hot[i] == only_ghost:
                         want_fast[i] = False
                         flip -= 1
-            n_fast = fast_free
-        n_spill = n - n_fast
-        if n_spill > spill_free:
-            flip = n_spill - spill_free  # overflow back into fast
+            n_fast = frees[0]
+        n_rest = n - n_fast
+        if n_rest > sum(frees[1:]):
+            flip = n_rest - sum(frees[1:])  # overflow back into fast
             for i in range(n):
                 if not flip:
                     break
                 if not want_fast[i]:
                     want_fast[i] = True
                     flip -= 1
-            n_fast, n_spill = n - spill_free, spill_free
-        fast_ids = iter(self.fast.allocate(n_fast) if n_fast else [])
-        spill_ids = iter(
-            [b + self.offset for b in self.spill.allocate(n_spill)]
-            if n_spill
-            else []
-        )
-        out = [next(fast_ids) if wf else next(spill_ids) for wf in want_fast]
+            n_fast, n_rest = n - sum(frees[1:]), sum(frees[1:])
+        # assign down-chain positions to tiers 1..k in chain order: the
+        # earlier (prefix) positions land on the nearest medium
+        counts = [n_fast] + [0] * (len(self.tiers) - 1)
+        tier_at = [0] * n
+        j, avail = 1, frees[1] if len(frees) > 1 else 0
+        for i in range(n):
+            if want_fast[i]:
+                continue
+            while avail == 0:
+                j += 1
+                avail = frees[j]
+            tier_at[i] = j
+            counts[j] += 1
+            avail -= 1
+        its = []
+        for k, (t, c) in enumerate(zip(self.tiers, counts)):
+            base = int(self._starts[k])
+            its.append(
+                iter([b + base for b in t.allocate(c)]) if c else iter([])
+            )
+        out = [next(its[tier_at[i]]) for i in range(n)]
         n_ghost = 0
         if keys is not None:
             for i, wf in enumerate(want_fast):
                 if wf and ghost_hot[i] and self.policy.admit_hot(keys[i]):
                     n_ghost += 1
         self.tier_stats.fast_writes += n_fast
-        self.tier_stats.spill_writes += n_spill
+        self.tier_stats.spill_writes += n_rest
         self.tier_stats.ghost_admits += n_ghost
+        for k, c in enumerate(counts):
+            self.tier_writes[k] += c
         self.policy.reset(out)  # recycled blocks start cold
         return out
 
     def retain(self, block_ids: list[int]) -> None:
         if not len(block_ids):
             return
-        ids, fm = self._split(block_ids)
-        if fm.any():
-            self.fast.retain(ids[fm].tolist())
-        if not fm.all():
-            self.spill.retain((ids[~fm] - self.offset).tolist())
+        ids, tix = self._split_tiers(block_ids)
+        for k, t in enumerate(self.tiers):
+            m = tix == k
+            if m.any():
+                t.retain((ids[m] - self._starts[k]).tolist())
 
     def release(self, block_ids: list[int]) -> None:
         if not len(block_ids):
             return
-        ids, fm = self._split(block_ids)
-        if fm.any():
-            self.fast.release(ids[fm].tolist())
-        if not fm.all():
-            self.spill.release((ids[~fm] - self.offset).tolist())
+        ids, tix = self._split_tiers(block_ids)
+        for k, t in enumerate(self.tiers):
+            m = tix == k
+            if m.any():
+                t.release((ids[m] - self._starts[k]).tolist())
 
     # ------------------------------------------------------------------
     # Data plane + epochs (dispatch, merge in caller order)
     # ------------------------------------------------------------------
     def write_block(self, block_id: int, payload: np.ndarray | None) -> int:
         self.policy.touch([block_id], self.now)
-        if block_id < self.offset:
-            return self.fast.write_block(block_id, payload)
-        return self.spill.write_block(block_id - self.offset, payload)
+        t = self.tier_of(block_id)
+        return self.tiers[t].write_block(
+            block_id - int(self._starts[t]), payload
+        )
 
     def write_blocks(
         self, block_ids: list[int], payloads: np.ndarray | None = None
     ) -> list[int]:
-        ids, fm = self._split(block_ids)
+        ids, tix = self._split_tiers(block_ids)
         self.policy.touch(ids, self.now)
         eps = np.empty(len(ids), np.int64)
-        if fm.any():
-            sub = payloads[fm] if payloads is not None else None
-            eps[fm] = self.fast.write_blocks(ids[fm].tolist(), sub)
-        if not fm.all():
-            sub = payloads[~fm] if payloads is not None else None
-            eps[~fm] = self.spill.write_blocks(
-                (ids[~fm] - self.offset).tolist(), sub
-            )
+        for k, t in enumerate(self.tiers):
+            m = tix == k
+            if not m.any():
+                continue
+            sub = payloads[m] if payloads is not None else None
+            eps[m] = t.write_blocks((ids[m] - self._starts[k]).tolist(), sub)
         return eps.tolist()
 
     def read_block(self, block_id: int) -> tuple[np.ndarray, int]:
-        if block_id < self.offset:
-            return self.fast.read_block(block_id)
-        return self.spill.read_block(block_id - self.offset)
+        t = self.tier_of(block_id)
+        return self.tiers[t].read_block(block_id - int(self._starts[t]))
 
     def read_blocks(
         self, block_ids, out: np.ndarray | None = None
     ) -> tuple[np.ndarray | None, np.ndarray]:
-        ids, fm = self._split(block_ids)
+        ids, tix = self._split_tiers(block_ids)
         eps = np.empty(len(ids), np.int64)
-        meta = self.fast.data is None
+        meta = self.data is None
         dst = None
         if not meta:
             dst = (
@@ -282,60 +530,67 @@ class TieredPool:
                 if out is not None
                 else np.empty((len(ids), self.layout.block_bytes), np.uint8)
             )
-        if fm.any():
-            p, e = self.fast.read_blocks(ids[fm])
-            eps[fm] = e
+        for k, t in enumerate(self.tiers):
+            m = tix == k
+            if not m.any():
+                continue
+            p, e = t.read_blocks(ids[m] - self._starts[k])
+            eps[m] = e
             if dst is not None:
-                dst[fm] = p
-        if not fm.all():
-            p, e = self.spill.read_blocks(ids[~fm] - self.offset)
-            eps[~fm] = e
-            if dst is not None:
-                dst[~fm] = p
+                dst[m] = p
         return dst, eps
 
     def read_fragments(self, block_id: int, frag_ids: list[int]) -> np.ndarray:
-        if block_id < self.offset:
-            return self.fast.read_fragments(block_id, frag_ids)
-        return self.spill.read_fragments(block_id - self.offset, frag_ids)
+        t = self.tier_of(block_id)
+        return self.tiers[t].read_fragments(
+            block_id - int(self._starts[t]), frag_ids
+        )
 
     def validate_epoch(self, block_id: int, epoch: int) -> bool:
-        if block_id < self.offset:
-            return self.fast.validate_epoch(block_id, epoch)
-        return self.spill.validate_epoch(block_id - self.offset, epoch)
+        t = self.tier_of(block_id)
+        return self.tiers[t].validate_epoch(
+            block_id - int(self._starts[t]), epoch
+        )
 
     def validate_epochs(self, block_ids, epochs) -> np.ndarray:
-        ids, fm = self._split(block_ids)
+        ids, tix = self._split_tiers(block_ids)
         exp = np.asarray(epochs)
         out = np.empty(len(ids), bool)
-        if fm.any():
-            out[fm] = self.fast.validate_epochs(ids[fm], exp[fm])
-        if not fm.all():
-            out[~fm] = self.spill.validate_epochs(ids[~fm] - self.offset, exp[~fm])
+        for k, t in enumerate(self.tiers):
+            m = tix == k
+            if m.any():
+                out[m] = t.validate_epochs(ids[m] - self._starts[k], exp[m])
         return out
 
     # ------------------------------------------------------------------
     # Hotness hooks (manager fetch path)
     # ------------------------------------------------------------------
-    def touch_demand(self, block_ids, now: float) -> tuple[int, int]:
+    def touch_demand(self, block_ids, now: float) -> tuple[int, ...]:
         """Bump heat for a *planned* access (demand signal: fires even
-        when the cutover later recomputes, so spill blocks that keep
+        when the cutover later recomputes, so down-chain blocks that keep
         getting planned-over can still earn promotion and escape a
-        permanent-cutover loop). Spill blocks whose heat crosses the
+        permanent-cutover loop). Down-chain blocks whose heat crosses the
         promotion threshold enter ``promote_pending`` — the migrator
-        consumes that set instead of sweeping the whole tier.
+        consumes that set instead of sweeping the whole chain.
 
-        Returns (n_fast, n_spill) so the caller can model latency."""
+        Returns per-tier counts ``(n_tier0, n_tier1, ...)`` so the caller
+        can model latency; a 2-tier chain unpacks as (n_fast, n_spill)."""
         self.tick(now)
-        ids, fm = self._split(block_ids)
-        self.policy.touch(ids, self.now)
-        spill_ids = ids[~fm]
-        if len(spill_ids):
-            hot = spill_ids[
-                self.policy.heat[spill_ids] >= self.cfg.promote_min_heat
-            ]
+        ids, tix = self._split_tiers(block_ids)
+        w = 1.0
+        decay = self.cfg.suffix_touch_decay
+        if decay > 0.0 and len(ids) > 1:
+            # chain position i cools faster toward the tail: the shared
+            # prefix accumulates full heat, the suffix only a fraction
+            w = np.maximum(
+                1.0 - decay * np.arange(len(ids)) / (len(ids) - 1), 0.0
+            )
+        self.policy.touch(ids, self.now, weight=w)
+        rest = ids[tix > 0]
+        if len(rest):
+            hot = rest[self.policy.heat[rest] >= self.cfg.promote_min_heat]
             self.promote_pending.update(hot.tolist())
-        return int(fm.sum()), len(ids) - int(fm.sum())
+        return tuple(int((tix == k).sum()) for k in range(len(self.tiers)))
 
     def count_tier_hits(self, block_ids) -> None:
         """Account an *actual* fetch (after scatter_read succeeds) —
@@ -347,11 +602,23 @@ class TieredPool:
 
     def stats_dict(self) -> dict:
         d = self.tier_stats.as_dict()
-        d["fast_blocks"] = self.fast.n_blocks
-        d["spill_blocks"] = self.spill.n_blocks
+        rest_blocks = sum(t.n_blocks for t in self.tiers[1:])
+        rest_used = sum(
+            t.n_blocks - t.free_blocks() for t in self.tiers[1:]
+        )
+        d["fast_blocks"] = self.tiers[0].n_blocks
+        d["spill_blocks"] = rest_blocks
         d["fast_occupancy"] = self.fast_occupancy()
+        # aggregate over every down-chain tier; 0.0 when the chain is all
+        # fast (never ZeroDivisionError on an empty tier)
         d["spill_occupancy"] = (
-            self.spill.n_blocks - self.spill.free_blocks()
-        ) / self.spill.n_blocks
+            rest_used / rest_blocks if rest_blocks else 0.0
+        )
         d["ghost_entries"] = self.policy.ghost_len()
+        d["tier_blocks"] = [t.n_blocks for t in self.tiers]
+        d["tier_occupancy"] = [
+            self.tier_occupancy(k) for k in range(len(self.tiers))
+        ]
+        d["tier_media"] = list(self.tier_media)
+        d["tier_writes"] = list(self.tier_writes)
         return d

@@ -15,8 +15,8 @@ What is pinned here:
     bit-identical to the private reference, stats dict for stats dict;
   * lifecycle hygiene — segments + doorbell FIFOs all unlinked on
     close/__exit__/mid-construction failure/worker kill -9;
-  * config gates — tiering + shared data plane, worker-mode
-    prerequisites;
+  * config gates — worker-mode prerequisites (and the LIFTED tiering
+    gates: the tiered pool now rides the full production stack);
   * ``FaultInjector`` delay/drop now intercepts the pipelined
     post/collect split, not just serial ``call``.
 """
@@ -366,21 +366,43 @@ def test_worker_mode_elastic_scaling_gated():
 # ---------------------------------------------------------------------------
 
 
-def test_tiering_plus_shared_data_plane_is_gated():
+def test_tiering_rides_the_full_production_stack():
+    """Gate lifted (both PR-7 NotImplementedError walls are gone): the
+    tiered pool is a first-class citizen of the cross-process planes.
+    tiering + sharded process metadata + shared data plane + engine
+    workers + selfheal is ONE legal cluster — it builds, serves traffic
+    through worker processes (keyed alloc + demand touches over the
+    allocator ring), migrates in the parent, and tears down leak-free."""
     from repro.tiering import TieringConfig
 
-    with pytest.raises(
-        NotImplementedError,
-        match="tiering \\+ data_plane='shared': the TieredPool's two-tier "
-              "payload space is not shared-memory exportable yet",
-    ):
-        Cluster(
-            ClusterConfig(
-                n_engines=1, data_plane="shared",
-                tiering=TieringConfig(enabled=True),
-            ),
-            LAYOUT, backing="numpy",
-        )
+    cluster = Cluster(
+        ClusterConfig(
+            n_engines=2, engine_processes=2, policy="round_robin",
+            data_plane="shared", index_rpc=True, index_transport="process",
+            index_shards=4, selfheal=True, pool_blocks=256, pool_shards=4,
+            hbm_slots_per_engine=32, block_tokens=8, journal_capacity=512,
+            tiering=TieringConfig(enabled=True, spill_blocks=256),
+        ),
+        LAYOUT, backing="numpy",
+    )
+    try:
+        assert cluster.migrator is not None
+        assert "tiering" in cluster.pool.share_data()  # concatenated spec
+        for rid, toks, nout, arr in _workload():
+            cluster.dispatch(Request(rid, toks, nout, arrival=arr))
+        stats = cluster.run()
+        assert stats["n_done"] == 16
+        tiering = stats["tiering"]
+        assert tiering["fast_writes"] + tiering["spill_writes"] > 0
+        assert stats["index"]["hits"] > 0  # prefix reuse across workers
+        names, paths = cluster.shm_segment_names(), cluster.doorbell_paths()
+        assert names and paths
+    finally:
+        cluster.close()
+    for n in names:
+        assert _segment_gone(n), n
+    for p in paths:
+        assert not os.path.exists(p), p
 
 
 def test_data_plane_and_worker_config_gates():

@@ -57,11 +57,40 @@ def _key(doc: int, i: int) -> bytes:
 # backends
 # ---------------------------------------------------------------------------
 class Backend:
-    """One (kind, n_shards) metadata plane over its own private pool."""
+    """One (kind, n_shards) metadata plane over its own private pool.
 
-    def __init__(self, kind: str, n_shards: int):
+    ``pool_kind`` selects the pool under the plane:
+
+      * ``flat``    — ``BelugaPool`` (the reference);
+      * ``tiered0`` — ``TieredPool`` with ZERO spill capacity: tiering
+        machinery engaged but with nowhere to spill, which must be
+        bit-identical to the flat pool on every transport;
+      * ``tiered``  — a small fast tier over a large spill tier, so op
+        streams cross the tier boundary and the metadata plane serves
+        global ids spanning sub-pools (over the concatenated shared
+        segment in process transport).
+    """
+
+    def __init__(self, kind: str, n_shards: int, pool_kind: str = "flat"):
+        from repro.tiering import TieredPool, TieringConfig
+
         self.kind = kind
-        self.pool = BelugaPool(LAYOUT, n_blocks=4096, n_shards=8, backing="meta")
+        if pool_kind == "flat":
+            self.pool = BelugaPool(
+                LAYOUT, n_blocks=4096, n_shards=8, backing="meta"
+            )
+        elif pool_kind == "tiered0":
+            self.pool = TieredPool(
+                LAYOUT, 4096, 0, n_shards=8, backing="meta",
+                cfg=TieringConfig(enabled=True),
+            )
+        elif pool_kind == "tiered":
+            self.pool = TieredPool(
+                LAYOUT, 32, 4064, n_shards=8, backing="meta",
+                cfg=TieringConfig(enabled=True, high_watermark=0.5),
+            )
+        else:
+            raise ValueError(pool_kind)
         self._servers: list = []
         if kind == "inproc":
             self.view = (
@@ -331,6 +360,42 @@ def test_differential_eviction_pressure_stream():
         ops.append(("publish", rng.randrange(4), rng.randint(1, MAX_LEN)))
         ops.append(("match", rng.randrange(4), MAX_LEN))
     _within_group(ops, n_shards=3)
+
+
+# ---------------------------------------------------------------------------
+# tiered pools join the differential groups (gates lifted: the TieredPool
+# exports its metadata like a flat pool, so EVERY transport serves it)
+# ---------------------------------------------------------------------------
+def test_differential_tiering_off_is_bit_identical_to_flat_pool():
+    """A chain with zero spill capacity IS the flat pool: observations
+    and stats match the flat twin bit for bit on all four backends."""
+    ops = make_ops(random.Random(19), 24)
+    for kind, s in (
+        ("inproc", 1), ("inproc", 3), ("thread", 3), ("process", 3),
+    ):
+        with Backend(kind, s, pool_kind="flat") as fb:
+            ref = (replay(fb, ops), fb.view.stats())
+        with Backend(kind, s, pool_kind="tiered0") as tb:
+            got = (replay(tb, ops), tb.view.stats())
+        assert got == ref, (kind, s)
+
+
+def test_differential_tiered_chain_agrees_across_transports():
+    """Tiered pool, streams crossing the tier boundary: in-process,
+    thread-ring and process-ring (metadata children resolving global ids
+    against the CONCATENATED shared segment) must be bit-identical."""
+    for seed in (5, 13):
+        ops = make_ops(random.Random(seed), 24)
+        results = {}
+        for kind in ("inproc", "thread", "process"):
+            with Backend(kind, 3, pool_kind="tiered") as b:
+                results[kind] = (replay(b, ops), b.view.stats())
+                # the stream really spilled: rows point past the fast tier
+                assert any(
+                    b.pool.tier_writes[1:]
+                ), "stream never crossed the tier boundary"
+        assert results["thread"] == results["inproc"], seed
+        assert results["process"] == results["inproc"], seed
 
 
 # ---------------------------------------------------------------------------

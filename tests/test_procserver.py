@@ -298,16 +298,34 @@ def test_cluster_process_transport_config_validation():
             ClusterConfig(n_engines=1, index_rpc=True, index_transport="smoke"),
             LAYOUT,
         )
+def test_cluster_tiering_over_process_transport_runs_and_tears_down():
+    """Gate lifted: a tiered pool rides process transport like a flat one
+    — the concatenated metadata segment feeds the shard services, hits
+    land, and every segment is unlinked on exit."""
     from repro.tiering import TieringConfig
 
-    with pytest.raises(NotImplementedError, match="tiering"):
-        Cluster(
-            ClusterConfig(
-                n_engines=1, index_rpc=True, index_transport="process",
-                tiering=TieringConfig(enabled=True),
-            ),
-            LAYOUT,
-        )
+    c = Cluster(
+        ClusterConfig(
+            n_engines=1, pool_blocks=64, hbm_slots_per_engine=32,
+            index_rpc=True, index_shards=2, index_rpc_slots=8,
+            index_transport="process",
+            tiering=TieringConfig(enabled=True, spill_blocks=64),
+        ),
+        LAYOUT,
+    )
+    names = c.shm_segment_names()
+    assert len(names) == 3  # concatenated pool meta + one ring per shard
+    try:
+        base = list(range(64))
+        for i in range(4):
+            c.dispatch(Request(f"t{i}", base, 4, 0.05 * i))
+        stats = c.run()
+        assert stats["index"]["hits"] > 0
+        assert stats["tiering"]["fast_writes"] > 0
+    finally:
+        c.close()
+    for n in names:
+        assert _segment_gone(n), n
 
 
 def test_cluster_releases_every_segment_on_exit():

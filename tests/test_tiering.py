@@ -301,6 +301,175 @@ def test_migrator_churn_conserves_blocks(seed):
 
 
 # ---------------------------------------------------------------------------
+# 3-level chain: stats guards, _TierView reference semantics, allocate
+# conservation (property tests, seeded rng — same convention as above)
+# ---------------------------------------------------------------------------
+
+
+def test_stats_never_divide_by_zero_on_empty_tiers():
+    """Regression: ``fast_occupancy``/``spill_occupancy``/``stats_dict``
+    raised ZeroDivisionError the moment a tier had 0 blocks (legal config:
+    a chain being grown/shrunk, or destroy-on-evict expressed as
+    spill=0)."""
+    p = _tiered(fast=64, spill=0)
+    assert p.fast_occupancy() == 0.0
+    d = p.stats_dict()
+    assert d["spill_occupancy"] == 0.0 and d["spill_blocks"] == 0
+    ids = p.allocate(8)  # pressure check divides by spill capacity too
+    assert p.stats_dict()["fast_occupancy"] == 8 / 64
+    p.release(ids)
+    # all-empty fast is the dual hazard (occupancy of a 0-block tier)
+    q = _tiered(fast=0, spill=64)
+    assert q.fast_occupancy() == 0.0
+    assert q.stats_dict()["fast_occupancy"] == 0.0
+    got = q.allocate(4)
+    assert all(b >= q.offset for b in got)
+    q.release(got)
+    # a 0-block tier deep in the chain reports occupancy 0.0 as well
+    r = _tiered(fast=32, spill=32, extra_tiers=((0, "ssd"),))
+    assert r.tier_occupancy(2) == 0.0
+    assert r.stats_dict()["tier_occupancy"][2] == 0.0
+
+
+def _chain_pool():
+    """3-tier chain with live cross-tier state for the view tests."""
+    p = _tiered(fast=32, spill=32, extra_tiers=((40, "ssd"),))
+    assert p.n_tiers == 3 and p.n_blocks == 32 + 32 + 64  # 40 rounds up
+    held = p.allocate(80)  # spans all three tiers
+    p.retain(held[::3])  # uneven refcounts
+    p.write_blocks(held[::2])  # uneven epochs/committed
+    return p, held
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_tier_view_matches_concatenated_reference(seed):
+    """``_TierView.__getitem__`` must be indistinguishable from indexing
+    one flat concatenated array: scalars (int and np.integer), 0-d
+    arrays, empty + duplicate + unsorted fancy indices across tier
+    boundaries, and boolean masks over the global id space."""
+    rng = np.random.default_rng(seed)
+    p, _ = _chain_pool()
+    n = p.n_blocks
+    views = [p.refcounts, p.epochs, p.committed]
+    refs = [
+        np.concatenate([np.asarray(t.refcounts) for t in p.tiers]),
+        np.concatenate([np.asarray(t.epochs) for t in p.tiers]),
+        np.concatenate([np.asarray(t.committed) for t in p.tiers]),
+    ]
+    for view, ref in zip(views, refs):
+        assert len(view) == n
+        for i in (0, 31, 32, 63, 64, n - 1, int(rng.integers(0, n))):
+            assert view[i] == ref[i]  # python int scalar
+            assert view[np.intp(i)] == ref[np.intp(i)]  # np.integer
+            assert view[np.array(i)] == ref[np.array(i)]  # 0-d array
+        fancies = [
+            np.array([], dtype=np.intp),  # empty fancy index
+            rng.integers(0, n, size=int(rng.integers(1, 3 * n))),
+            np.array([31, 32, 63, 64, 64, 31]),  # boundaries + dups
+            np.flip(rng.permutation(n)),  # every id, unsorted
+        ]
+        for ids in fancies:
+            np.testing.assert_array_equal(view[ids], ref[ids])
+        mask = rng.random(n) < rng.random()  # bool mask, varying density
+        np.testing.assert_array_equal(view[mask], ref[mask])
+        np.testing.assert_array_equal(
+            view[np.zeros(n, bool)], ref[np.zeros(n, bool)]
+        )
+
+
+def test_ghost_admission_survives_capacity_clamp_to_spill():
+    """A returning (ghost-hot) key whose block the capacity clamp pushed
+    down-chain must NOT consume its one-shot admission — it never reached
+    the fast tier it was promised."""
+    p = _tiered(fast=32, spill=32, high_watermark=0.5)
+    held = p.allocate(31)  # fast pressured AND nearly full (1 slot left)
+    p.policy.ghost_add([b"k1", b"k2"])
+    out = p.allocate(2, keys=[b"k1", b"k2"])
+    assert out[0] < p.offset and out[1] >= p.offset  # tail yielded first
+    assert p.tier_stats.ghost_admits == 1
+    assert not p.policy.ghost_contains(b"k1")  # admitted: consumed
+    assert p.policy.ghost_contains(b"k2")  # clamped to spill: preserved
+    p.release(held + out)
+
+
+def test_double_overflow_flips_back_into_fast_head_first():
+    """Pressured writes target spill; when spill cannot hold them all the
+    overflow flips BACK into fast from the head — the shared prefix stays
+    on the fastest medium that has room."""
+    p = _tiered(fast=32, spill=32, high_watermark=0.5)
+    a = p.allocate(20)  # unpressured: all fast (occupancy now 0.625)
+    b = p.allocate(30)  # pressured: all spill (spill free now 2)
+    assert all(x >= p.offset for x in b)
+    out = p.allocate(10)  # wants spill, only 2 fit: head 8 go fast
+    assert [x < p.offset for x in out] == [True] * 8 + [False] * 2
+    p.release(a + b + out)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 5, 11, 29])
+def test_allocate_conserves_blocks_and_tier_accounting(seed):
+    """Seed-swept allocate churn over a 3-tier chain: every call returns
+    exactly n distinct, never-double-allocated ids; the per-tier split
+    always matches the ``fast_writes``/``spill_writes``/``tier_writes``
+    deltas; ghost one-shot entries are consumed ONLY for blocks that
+    really landed fast."""
+    rng = np.random.default_rng(seed)
+    p = _tiered(
+        fast=32, spill=32, extra_tiers=((32, "ssd"),), high_watermark=0.5
+    )
+    held: list[int] = []
+    for step in range(60):
+        if held and rng.random() < 0.4:
+            k = int(rng.integers(1, len(held) + 1))
+            rng.shuffle(held)
+            p.release(held[:k])
+            del held[:k]
+        n = int(rng.integers(1, 16))
+        keys = None
+        ghosted: list[bytes] = []
+        if rng.random() < 0.7:
+            keys = [f"{seed}/{step}/{i}".encode() for i in range(n)]
+            ghosted = [k for k in keys if rng.random() < 0.3]
+            p.policy.ghost_add(ghosted)
+        free_before = p.free_blocks()
+        pressured = p.fast_occupancy() >= p.watermark(0)
+        writes_before = (
+            p.tier_stats.fast_writes,
+            p.tier_stats.spill_writes,
+            tuple(p.tier_writes),
+        )
+        try:
+            out = p.allocate(n, keys=keys)
+        except OutOfPoolMemory:
+            assert p.free_blocks() < n  # only a genuinely full chain raises
+            assert p.free_blocks() == free_before  # nothing leaked
+            continue
+        # conservation: n distinct fresh ids, books balance exactly
+        assert len(out) == n and len(set(out)) == n
+        assert not set(out) & set(held)
+        assert p.free_blocks() == free_before - n
+        # accounting: stats deltas == the realized per-tier split
+        _, tix = p._split_tiers(out)
+        per_tier = [int((tix == k).sum()) for k in range(p.n_tiers)]
+        assert p.tier_stats.fast_writes - writes_before[0] == per_tier[0]
+        assert p.tier_stats.spill_writes - writes_before[1] == sum(
+            per_tier[1:]
+        )
+        for k in range(p.n_tiers):
+            assert p.tier_writes[k] - writes_before[2][k] == per_tier[k]
+        # ghost one-shot: the filter only runs under pressure, and an
+        # entry is consumed iff its keyed block actually went fast
+        if keys is not None and pressured:
+            for key, blk in zip(keys, out):
+                if key in ghosted:
+                    assert p.policy.ghost_contains(key) == (
+                        blk >= p.offset
+                    ), (key, blk)
+        held += out
+    p.release(held)
+    assert p.free_blocks() == p.n_blocks
+
+
+# ---------------------------------------------------------------------------
 # Cluster integration
 # ---------------------------------------------------------------------------
 

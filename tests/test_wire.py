@@ -759,6 +759,21 @@ def test_every_opcode_round_trips_with_boundary_payloads():
     def pool_route(frame: bytes) -> tuple[bytes, int]:
         return wire.handle_pool_request(pool, frame), wire.pool_reply_bound(frame)
 
+    # the keyed-alloc / touch ops only exist on tiered parents
+    from repro.tiering.tiers import TieredPool, TieringConfig
+
+    tpool = TieredPool(
+        LAYOUT, fast_blocks=16, spill_blocks=16, n_shards=4,
+        backing="meta", cfg=TieringConfig(enabled=True),
+    )
+    tblocks = tpool.allocate(4)
+
+    def tiered_route(frame: bytes) -> tuple[bytes, int]:
+        return (
+            wire.handle_pool_request(tpool, frame),
+            wire.pool_reply_bound(frame),
+        )
+
     def jrnl_route(frame: bytes) -> tuple[bytes, int]:
         return (
             wire.handle_journal_request(frame, [jrnl]),
@@ -838,6 +853,14 @@ def test_every_opcode_round_trips_with_boundary_payloads():
         ]),
         "OP_POOL_FREE": (pool_route, wire.decode_pool_free_resp, [
             wire.encode_pool_free(),
+        ]),
+        "OP_POOL_ALLOC_KEYS": (tiered_route, wire.decode_pool_alloc_resp, [
+            wire.encode_pool_alloc_keys([]),
+            wire.encode_pool_alloc_keys(jkeys),
+        ]),
+        "OP_POOL_TOUCH": (tiered_route, wire.decode_pool_touch_resp, [
+            wire.encode_pool_touch([], 0.0),
+            wire.encode_pool_touch(tblocks, 1.0),
         ]),
         "OP_JRNL_PUBLISH": (jrnl_route, u32_resp, [
             wire.encode_jrnl_publish(0, [], [], [], 0),
